@@ -1,0 +1,103 @@
+//! Intra-cascade partitioning study: BERT-large (paper §II-B, §V-A and
+//! the Fig 6 utilisation zoom).
+//!
+//! Shows why the homogeneous machine wins the encoder workload: the
+//! dependency graph only lets V-generation overlap the logit BMM, so a
+//! heterogeneous split leaves the high-reuse unit idle during the
+//! attention block while its GEMMs are starved of bandwidth.
+//!
+//! Run: `cargo run --release --example bert_intra_cascade`
+
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::util::table::Table;
+use harp::workload::transformer;
+
+fn main() {
+    let wl = transformer::bert_large();
+    let cascade = transformer::encoder_cascade(&wl);
+    let opts = EvalOptions { samples: 400, ..EvalOptions::default() };
+
+    println!("workload: {} (intra-cascade partitioning)\n", wl.name);
+    println!("{}", cascade.describe());
+
+    // Where each op lands on the cross-node machine, and what it costs.
+    let class = HarpClass::from_id("leaf+xnode").unwrap();
+    let params = HardwareParams::default();
+    let r = evaluate_cascade_on_config(&class, &params, &cascade, &opts).unwrap();
+    let mut t = Table::new(&["op", "sub-accelerator", "cycles", "bound", "PE util"]);
+    for m in &r.mapped {
+        let op = &cascade.ops[m.op_index];
+        let sub = &r.machine.sub_accels[m.sub_accel];
+        t.row(&[
+            op.name.clone(),
+            format!("{} ({})", sub.spec.name, sub.role.name()),
+            format!("{:.3e}", m.stats.cycles * op.count as f64),
+            m.stats.bound.name(),
+            format!("{:.0}%", m.stats.utilization * 100.0),
+        ]);
+    }
+    println!("operation placement on leaf+cross-node:\n{}", t.render());
+
+    // Homogeneous vs heterogeneous at both bandwidth points.
+    let mut cmp = Table::new(&["machine", "bw b/cyc", "latency", "speedup vs homo", "energy µJ"]);
+    for bw in [2048.0, 512.0] {
+        let params = HardwareParams { dram_bw_bits: bw, ..HardwareParams::default() };
+        let base = evaluate_cascade_on_config(
+            &HarpClass::from_id("leaf+homo").unwrap(),
+            &params,
+            &cascade,
+            &opts,
+        )
+        .unwrap();
+        for id in ["leaf+homo", "leaf+xnode", "leaf+intra", "hier+xdepth"] {
+            let r = evaluate_cascade_on_config(
+                &HarpClass::from_id(id).unwrap(),
+                &params,
+                &cascade,
+                &opts,
+            )
+            .unwrap();
+            cmp.row(&[
+                id.into(),
+                format!("{bw}"),
+                format!("{:.3e}", r.stats.latency_cycles),
+                format!("{:.3}", base.stats.latency_cycles / r.stats.latency_cycles),
+                format!("{:.1}", r.stats.energy_pj * 1e-6),
+            ]);
+        }
+    }
+    println!("{}", cmp.render());
+
+    // The utilisation-over-time zoom (Fig 6 inset): homo keeps the whole
+    // array busy through the GEMMs but idles in the attention block; the
+    // heterogeneous machine's high-reuse unit waits on the low-reuse one.
+    for id in ["leaf+homo", "leaf+xnode"] {
+        let r = evaluate_cascade_on_config(
+            &HarpClass::from_id(id).unwrap(),
+            &params,
+            &cascade,
+            &opts,
+        )
+        .unwrap();
+        let tl = &r.stats.utilization_timeline;
+        print!("{id:<12} |");
+        for v in tl.iter() {
+            let c = match (v * 8.0) as u32 {
+                0 => ' ',
+                1 => '▁',
+                2 => '▂',
+                3 => '▃',
+                4 => '▄',
+                5 => '▅',
+                6 => '▆',
+                7 => '▇',
+                _ => '█',
+            };
+            print!("{c}");
+        }
+        println!("| PE-weighted utilisation over time");
+    }
+    println!("\nbert_intra_cascade OK");
+}

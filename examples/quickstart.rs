@@ -1,0 +1,38 @@
+//! Quickstart: classify an accelerator, build a machine from the
+//! taxonomy, and evaluate a workload on it — the 30-second tour of the
+//! public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use harp::arch::partition::{HardwareParams, MachineConfig};
+use harp::arch::taxonomy::{classify, HarpClass};
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::workload::transformer;
+
+fn main() {
+    // 1. The taxonomy: classify a known accelerator.
+    let w = classify("neupim").expect("NeuPIM is in Table I");
+    println!("{} is {} — {}\n", w.name, w.class, w.remark);
+
+    // 2. Build a machine for a taxonomy point under Table III resources.
+    let class = HarpClass::from_id("hier+xdepth").unwrap();
+    let params = HardwareParams::default();
+    let machine = MachineConfig::build(&class, &params).unwrap();
+    println!("{}", machine.describe());
+
+    // 3. Evaluate the BERT-large encoder cascade on two taxonomy points.
+    let cascade = transformer::encoder_cascade(&transformer::bert_large());
+    println!("{}", cascade.describe());
+    let opts = EvalOptions { samples: 300, ..EvalOptions::default() };
+    for id in ["leaf+homo", "hier+xdepth"] {
+        let class = HarpClass::from_id(id).unwrap();
+        let r = evaluate_cascade_on_config(&class, &params, &cascade, &opts).unwrap();
+        println!(
+            "{id:<14} latency {:>10.3e} cycles   energy {:>9.1} µJ   {:>9.3e} mults/J",
+            r.stats.latency_cycles,
+            r.stats.energy_pj * 1e-6,
+            r.stats.mults_per_joule()
+        );
+    }
+    println!("\nquickstart OK");
+}

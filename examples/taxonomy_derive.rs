@@ -1,0 +1,94 @@
+//! Deriving NEW accelerator classes from the taxonomy (paper §IV,
+//! Table I rows (e), (g), (h) — combinations no prior work exhibits).
+//!
+//! Builds and evaluates:
+//! - hierarchical + homogeneous (e): the same sub-accelerator type
+//!   replicated at the leaf and at the LLB;
+//! - hierarchical + intra-node (g): a shared-FSM pair spanning depths;
+//! - compound (h): cross-node heterogeneity at the leaves combined with
+//!   a cross-depth near-LLB unit (three sub-accelerators);
+//! - hierarchical + clustered cross-node (f, Symphony-like).
+//!
+//! Run: `cargo run --release --example taxonomy_derive`
+
+use harp::arch::partition::{HardwareParams, MachineConfig};
+use harp::arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::util::table::Table;
+use harp::workload::transformer;
+
+fn main() {
+    let params = HardwareParams::default();
+    let derived: Vec<(&str, HarpClass)> = vec![
+        (
+            "(e) hier+homogeneous",
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::Homogeneous),
+        ),
+        (
+            "(f) hier+cross-node (clustered)",
+            HarpClass::new(
+                ComputePlacement::Hierarchical,
+                HeterogeneityLoc::CrossNode { clustered: true },
+            ),
+        ),
+        (
+            "(g) hier+intra-node",
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::IntraNode),
+        ),
+        (
+            "(h) compound (cross-node + cross-depth)",
+            HarpClass::new(
+                ComputePlacement::Hierarchical,
+                HeterogeneityLoc::Compound(vec![
+                    HeterogeneityLoc::cross_node(),
+                    HeterogeneityLoc::CrossDepth,
+                ]),
+            ),
+        ),
+    ];
+
+    // Validity: the taxonomy rejects the impossible leaf+cross-depth point.
+    let invalid = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth);
+    println!(
+        "leaf+cross-depth validity: {:?} (cross-depth needs ≥2 compute levels)\n",
+        invalid.validate().unwrap_err()
+    );
+
+    for (label, class) in &derived {
+        class.validate().unwrap();
+        let m = MachineConfig::build(class, &params).unwrap();
+        println!("{label}\n{}", m.describe());
+    }
+
+    // Evaluate the derived classes on the Llama-2 decoder workload
+    // against the four paper points.
+    let wl = transformer::llama2();
+    let cascade = transformer::cascade_for(&wl);
+    let opts = EvalOptions { samples: 300, ..EvalOptions::default() };
+    let base = evaluate_cascade_on_config(
+        &HarpClass::from_id("leaf+homo").unwrap(),
+        &params,
+        &cascade,
+        &opts,
+    )
+    .unwrap();
+    let mut t = Table::new(&["class", "latency", "speedup", "energy µJ", "mults/J"]);
+    let paper_points: Vec<(String, HarpClass)> = HarpClass::eval_points()
+        .into_iter()
+        .map(|(c, k)| (format!("({c}) {}", k.id()), k))
+        .collect();
+    for (label, class) in paper_points.iter().map(|(l, c)| (l.as_str(), c)).chain(
+        derived.iter().map(|(l, c)| (*l, c)),
+    ) {
+        let r = evaluate_cascade_on_config(class, &params, &cascade, &opts).unwrap();
+        t.row(&[
+            label.to_string(),
+            format!("{:.3e}", r.stats.latency_cycles),
+            format!("{:.3}", base.stats.latency_cycles / r.stats.latency_cycles),
+            format!("{:.1}", r.stats.energy_pj * 1e-6),
+            format!("{:.3e}", r.stats.mults_per_joule()),
+        ]);
+    }
+    println!("Llama-2 across all eight taxonomy points:\n{}", t.render());
+    println!("taxonomy_derive OK");
+}

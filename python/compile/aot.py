@@ -1,0 +1,161 @@
+"""AOT build step: lower the L2 model (+ L1 kernels) to HLO text.
+
+Run via `make artifacts` (python -m compile.aot --out ../artifacts).
+
+Emits one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+input shapes and golden output statistics on the deterministic input
+pattern shared with the Rust runtime (`rust/src/runtime/mod.rs`):
+
+    val(i) = ((i mod 251) - 125) / 251        (exact in f32)
+    input j uses indices offset by j · 1_000_003
+
+HLO *text* (never `.serialize()`): jax ≥ 0.5 emits protos with 64-bit
+instruction ids that the crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.attention import attention
+from .kernels.gemm import gemm
+from .kernels import ref
+
+INPUT_STRIDE = 1_000_003
+
+
+def input_array(idx: int, shape) -> np.ndarray:
+    """Deterministic input j for an artifact (matches the Rust side)."""
+    n = int(np.prod(shape))
+    i = np.arange(n, dtype=np.uint64) + np.uint64(idx * INPUT_STRIDE)
+    vals = ((i % 251).astype(np.float32) - 125.0) / 251.0
+    return vals.reshape(shape)
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """jit → lower → stablehlo → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Artifact-friendly model dimensions: small enough to compile and run in
+# seconds under interpret-mode lowering, large enough to exercise every
+# block of the kernels (multiple grid steps in each dimension).
+D_MODEL = 256
+HEADS = 4
+SEQ = 128
+KV = 96
+D_FF = 512
+
+
+def artifact_defs():
+    """(name, fn, input shapes) for every artifact."""
+    d, s, f, kv = D_MODEL, SEQ, D_FF, KV
+    dh = d // HEADS
+    sq = lambda: (d, d)
+    return [
+        (
+            "gemm",
+            lambda x, w: gemm(x, w),
+            [(s, d), (d, f)],
+        ),
+        (
+            "attention",
+            lambda q, k, v: attention(q, k, v),
+            [(HEADS, s, dh), (HEADS, kv, dh), (HEADS, kv, dh)],
+        ),
+        (
+            "encoder_layer",
+            model.encoder_layer_flat,
+            [(s, d), sq(), sq(), sq(), sq(), (d, f), (f, d)],
+        ),
+        (
+            "decode_step",
+            model.decode_step_flat,
+            [(1, d), (kv, d), (kv, d), sq(), sq(), sq(), sq(), (d, f), (f, d)],
+        ),
+    ]
+
+
+def reference_output(name, inputs):
+    """Golden output via the pure-jnp oracles (independent of Pallas)."""
+    if name == "gemm":
+        return ref.gemm_ref(*inputs)
+    if name == "attention":
+        return ref.attention_ref(*inputs)
+    if name == "encoder_layer":
+        x, wq, wk, wv, wo, w1, w2 = inputs
+        s, d = x.shape
+        dh = d // HEADS
+        q, k, v = ref.gemm_ref(x, wq), ref.gemm_ref(x, wk), ref.gemm_ref(x, wv)
+        split = lambda t: t.reshape(s, HEADS, dh).transpose(1, 0, 2)
+        ctx = ref.attention_ref(split(q), split(k), split(v))
+        ctx = ctx.transpose(1, 0, 2).reshape(s, d)
+        return ref.gemm_ref(ref.gemm_ref(ref.gemm_ref(ctx, wo), w1), w2)
+    if name == "decode_step":
+        x, kc, vc, wq, wk, wv, wo, w1, w2 = inputs
+        _, d = x.shape
+        dh = d // HEADS
+        q = ref.gemm_ref(x, wq)
+        k_all = jnp.concatenate([kc, ref.gemm_ref(x, wk)], axis=0)
+        v_all = jnp.concatenate([vc, ref.gemm_ref(x, wv)], axis=0)
+        t = k_all.shape[0]
+        split_kv = lambda m: m.reshape(t, HEADS, dh).transpose(1, 0, 2)
+        ctx = ref.attention_ref(
+            q.reshape(1, HEADS, dh).transpose(1, 0, 2), split_kv(k_all), split_kv(v_all)
+        )
+        ctx = ctx.transpose(1, 0, 2).reshape(1, d)
+        return ref.gemm_ref(ref.gemm_ref(ref.gemm_ref(ctx, wo), w1), w2)
+    raise ValueError(name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="HARP AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for name, fn, shapes in artifact_defs():
+        inputs = [jnp.asarray(input_array(j, s)) for j, s in enumerate(shapes)]
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        text = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+
+        golden = np.asarray(reference_output(name, inputs), dtype=np.float64)
+        # Also check the kernel path agrees with the oracle at build time
+        # (the core L1-vs-ref correctness gate of the AOT pipeline).
+        kernel_out = np.asarray(fn(*inputs), dtype=np.float64)
+        np.testing.assert_allclose(kernel_out, golden, rtol=5e-4, atol=5e-4)
+
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [{"shape": list(s), "dtype": "f32"} for s in shapes],
+                "golden_sum": float(golden.sum()),
+                "golden_absmax": float(np.abs(golden).max()),
+            }
+        )
+        print(f"wrote {fname}: {len(text)} chars, golden_sum={golden.sum():.6f}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused logit→softmax→attend — the low-reuse operator.
+
+One grid step processes one (batch · head) slice: P = Q·Kᵀ/√dh,
+softmax over the KV axis, O = softmax(P)·V. Fusing the three einsums
+keeps the S×S logit tile in VMEM — the on-chip staging of intermediate
+tiles that inter-operator fusion papers (and HARP's low-reuse
+sub-accelerator) exploit. interpret=True for CPU-PJRT execution.
+
+TPU estimate (DESIGN.md §Hardware-Adaptation): with S = 128, dh = 64 at
+f32, per-step VMEM = Q + K + V + P + O ≈ (3·128·64 + 128·128 + 128·64)
+· 4 B ≈ 0.19 MB; the dh = 64 contraction half-fills a 128-lane MXU —
+the structural reason attention underuses big arrays, i.e. the paper's
+motivation for a separate narrow low-reuse unit.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0]  # [S, dh]
+    k = k_ref[0]  # [T, dh]
+    v = v_ref[0]  # [T, dh]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [S, T]
+    # Numerically-stable softmax over the KV axis.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def attention(q, k, v):
+    """Batched fused attention via a Pallas kernel (interpret mode).
+
+    q: [B, S, dh], k: [B, T, dh], v: [B, T, dh] → [B, S, dh], float32.
+    B is the (batch · head) axis; T the KV length.
+    """
+    b, s, dh = q.shape
+    _, t, _ = k.shape
+    scale = 1.0 / math.sqrt(dh)
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,23 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These define the semantics the kernels must match; pytest (and the AOT
+manifest goldens) compare against them.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+
+def gemm_ref(x, w):
+    """x: [M, K] @ w: [K, N] in float32."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def attention_ref(q, k, v):
+    """q: [B, S, dh], k/v: [B, T, dh] → [B, S, dh]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bsd,btd->bst", q, k) * scale
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bst,btd->bsd", p, v).astype(jnp.float32)

@@ -1,0 +1,81 @@
+"""L2: the transformer layers in JAX, composed from the L1 kernels.
+
+These are the *functional* twins of the analytical workloads in
+`rust/src/workload/transformer.rs` — the same einsum cascade
+(Q,K,V → logit → softmax → attend → deproj → FFN), at artifact-friendly
+sizes. `make artifacts` lowers them to HLO text; the Rust coordinator
+executes them through PJRT to validate that the cascades the cost model
+reasons about correspond to real, numerically-correct computation.
+
+Everything is pure f32 and built from the two Pallas kernels:
+`kernels.gemm` (high-reuse datapath) + `kernels.attention` (low-reuse).
+"""
+
+from .kernels.attention import attention
+from .kernels.gemm import gemm
+
+
+def encoder_layer(x, wq, wk, wv, wo, w1, w2, *, heads: int):
+    """One encoder attention + FFN layer (the BERT cascade).
+
+    x: [S, D]; wq/wk/wv/wo: [D, D]; w1: [D, F]; w2: [F, D] → [S, D].
+    """
+    s, d = x.shape
+    dh = d // heads
+
+    q = gemm(x, wq)  # q_gen
+    k = gemm(x, wk)  # k_gen
+    v = gemm(x, wv)  # v_gen
+
+    # [S, D] → [H, S, dh] for the batched attention kernel.
+    split = lambda t: t.reshape(s, heads, dh).transpose(1, 0, 2)
+    ctx = attention(split(q), split(k), split(v))  # logit+softmax+attend
+    ctx = ctx.transpose(1, 0, 2).reshape(s, d)
+
+    y = gemm(ctx, wo)  # deproj
+    h = gemm(y, w1)  # ffn1
+    return gemm(h, w2)  # ffn2
+
+
+def decode_step(x, k_cache, v_cache, wq, wk, wv, wo, w1, w2, *, heads: int):
+    """One autoregressive decode step with a KV cache (the low-reuse
+    phase of the GPT/Llama cascade).
+
+    x: [1, D] (current token), k_cache/v_cache: [T, D] (past keys/values).
+    Returns (y: [1, D], k_new: [T+1, D], v_new: [T+1, D]).
+    """
+    import jax.numpy as jnp
+
+    _, d = x.shape
+    dh = d // heads
+
+    q = gemm(x, wq)
+    k_tok = gemm(x, wk)
+    v_tok = gemm(x, wv)
+    k_all = jnp.concatenate([k_cache, k_tok], axis=0)  # [T+1, D]
+    v_all = jnp.concatenate([v_cache, v_tok], axis=0)
+
+    t = k_all.shape[0]
+    split_q = q.reshape(1, heads, dh).transpose(1, 0, 2)  # [H, 1, dh]
+    split_kv = lambda m: m.reshape(t, heads, dh).transpose(1, 0, 2)
+    ctx = attention(split_q, split_kv(k_all), split_kv(v_all))  # [H, 1, dh]
+    ctx = ctx.transpose(1, 0, 2).reshape(1, d)
+
+    y = gemm(ctx, wo)
+    h = gemm(y, w1)
+    out = gemm(h, w2)
+    return out, k_all, v_all
+
+
+def encoder_layer_flat(x, wq, wk, wv, wo, w1, w2):
+    """4-head encoder layer with a single tensor output (AOT target)."""
+    return encoder_layer(x, wq, wk, wv, wo, w1, w2, heads=4)
+
+
+def decode_step_flat(x, k_cache, v_cache, wq, wk, wv, wo, w1, w2):
+    """Decode step returning only the new token embedding (AOT target —
+    single output keeps the HLO interchange tuple trivial)."""
+    out, _, _ = decode_step(
+        x, k_cache, v_cache, wq, wk, wv, wo, w1, w2, heads=4
+    )
+    return out

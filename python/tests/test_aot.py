@@ -1,0 +1,59 @@
+"""AOT pipeline: deterministic inputs, HLO text lowering, manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+
+
+def test_input_pattern_matches_rust_formula():
+    """Must equal rust/src/runtime/mod.rs::input_value exactly."""
+    a = aot.input_array(0, (251,))
+    assert a.dtype == np.float32
+    assert a[0] == np.float32(-125.0 / 251.0)
+    assert a[125] == 0.0
+    assert a[250] == np.float32(125.0 / 251.0)
+    # Periodicity and offset behaviour.
+    b = aot.input_array(1, (4,))
+    off = (1 * aot.INPUT_STRIDE) % 251
+    assert b[0] == np.float32(((off % 251) - 125.0) / 251.0)
+
+
+def test_hlo_text_is_parseable_hlo():
+    text = aot.to_hlo_text(
+        lambda x, y: x @ y,
+        [jax.ShapeDtypeStruct((4, 4), jnp.float32)] * 2,
+    )
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+    # Single-output functions lower to a 1-tuple (return_tuple=True).
+    assert "ROOT tuple" in text
+
+
+def test_artifact_defs_cover_all_layers():
+    names = [n for n, _, _ in aot.artifact_defs()]
+    assert names == ["gemm", "attention", "encoder_layer", "decode_step"]
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` ran, the manifest must be consistent."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {"gemm", "attention", "encoder_layer", "decode_step"}
+    for a in manifest["artifacts"]:
+        hlo = os.path.join(os.path.dirname(path), a["file"])
+        assert os.path.exists(hlo), a["file"]
+        assert np.isfinite(a["golden_sum"])
+        assert all(len(i["shape"]) >= 1 for i in a["inputs"])

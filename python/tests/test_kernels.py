@@ -1,0 +1,106 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and block configurations for the GEMM) —
+the CORE correctness signal for the AOT pipeline.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.gemm import gemm, pick_block
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- GEMM
+
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 17, 32, 64, 96, 128, 256])
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_gemm_matches_ref(m, k, n, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1)
+    got = gemm(x, w)
+    want = ref.gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm=st.sampled_from([16, 32, 64, 128]),
+    bn=st.sampled_from([16, 32, 64, 128]),
+    bk=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_block_shape_invariant(bm, bn, bk, seed):
+    """The result must not depend on the BlockSpec tiling (the functional
+    twin of 'cost model statistics change, numerics do not')."""
+    x = rand((128, 256), seed)
+    w = rand((256, 64), seed + 1)
+    base = gemm(x, w)
+    tiled = gemm(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(base), rtol=2e-4, atol=2e-4)
+
+
+def test_gemm_rejects_bad_contraction():
+    with pytest.raises(AssertionError):
+        gemm(rand((4, 8), 0), rand((9, 4), 1))
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 96, 128, 3000]:
+        for target in [1, 16, 128, 512]:
+            b = pick_block(dim, target)
+            assert dim % b == 0
+            assert b <= max(target, 1)
+
+
+# ----------------------------------------------------------- Attention
+
+small = st.sampled_from([1, 2, 3, 4, 8])
+lens = st.sampled_from([1, 2, 5, 16, 33, 64, 96])
+hdims = st.sampled_from([4, 8, 16, 32, 64])
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=small, s=lens, t=lens, dh=hdims, seed=st.integers(0, 2**31 - 1))
+def test_attention_matches_ref(b, s, t, dh, seed):
+    q = rand((b, s, dh), seed)
+    k = rand((b, t, dh), seed + 1)
+    v = rand((b, t, dh), seed + 2)
+    got = attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Softmax weights sum to 1 ⇒ each output row lies inside the convex
+    hull of the V rows (value-range sanity independent of the oracle)."""
+    q = rand((2, 8, 16), 0)
+    k = rand((2, 32, 16), 1)
+    v = rand((2, 32, 16), 2)
+    out = np.asarray(attention(q, k, v))
+    vmin = np.asarray(v).min(axis=1, keepdims=True)
+    vmax = np.asarray(v).max(axis=1, keepdims=True)
+    assert (out >= vmin - 1e-4).all()
+    assert (out <= vmax + 1e-4).all()
+
+
+def test_attention_is_permutation_invariant_over_kv():
+    """Softmax-attention is invariant to permuting KV positions."""
+    q = rand((1, 4, 8), 0)
+    k = rand((1, 16, 8), 1)
+    v = rand((1, 16, 8), 2)
+    perm = np.random.default_rng(3).permutation(16)
+    base = np.asarray(attention(q, k, v))
+    shuf = np.asarray(attention(q, k[:, perm], v[:, perm]))
+    np.testing.assert_allclose(shuf, base, rtol=1e-4, atol=1e-5)

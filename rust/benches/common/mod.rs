@@ -1,0 +1,26 @@
+//! Shared bench plumbing: evaluation budget from the environment.
+
+use harp::coordinator::experiment::EvalOptions;
+use harp::coordinator::figures::Evaluator;
+
+/// Mapper samples per unique shape (override: HARP_BENCH_SAMPLES).
+pub fn bench_samples() -> usize {
+    std::env::var("HARP_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400)
+}
+
+pub fn evaluator() -> Evaluator {
+    let mut opts = EvalOptions::default();
+    opts.samples = bench_samples();
+    Evaluator::new(opts)
+}
+
+pub fn banner(name: &str, paper: &str) {
+    println!("==============================================================");
+    println!("HARP bench: {name}");
+    println!("reproduces: {paper}");
+    println!("mapper samples/shape: {}", bench_samples());
+    println!("==============================================================\n");
+}

@@ -1,0 +1,11 @@
+//! Fig 10: bandwidth-partitioning sensitivity (75/25 vs naive 50/50).
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("fig10_bw_partition", "Fig 10 — 75/25 vs 50/50 DRAM bandwidth split");
+    let mut ev = common::evaluator();
+    figures::fig10_bw_partition(&mut ev).emit("fig10_bw_partition");
+}

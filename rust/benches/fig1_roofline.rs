@@ -1,0 +1,19 @@
+//! Fig 1: roofline partitioning across sub-accelerators.
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("fig1_roofline", "Fig 1 — compute roof + bandwidth split");
+    figures::fig1_roofline().emit("fig1_roofline");
+    // The structural claims of Fig 1, asserted:
+    let fig = figures::fig1_roofline();
+    let homo = &fig.series[0];
+    let high = &fig.series[1];
+    let low = &fig.series[2];
+    assert!(high.get("AI=1024").unwrap() > low.get("AI=1024").unwrap(), "high roof above low");
+    assert!(low.get("AI=1").unwrap() > high.get("AI=1").unwrap(), "low-reuse unit gets more bw");
+    assert!(homo.get("AI=1024").unwrap() >= high.get("AI=1024").unwrap(), "undivided roof");
+    println!("fig1 structural checks PASS");
+}

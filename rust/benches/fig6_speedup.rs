@@ -1,0 +1,14 @@
+//! Fig 6: speedup of configurations (a-d) vs leaf+homogeneous at the
+//! 2048/512 b-per-cycle bandwidth sweep, plus the BERT utilisation zoom.
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("fig6_speedup", "Fig 6 — speedup normalized to leaf+homogeneous");
+    let mut ev = common::evaluator();
+    let (fig, zoom) = figures::fig6_speedup(&mut ev);
+    fig.emit("fig6_speedup");
+    zoom.emit("fig6_zoom_utilization");
+}

@@ -1,0 +1,13 @@
+//! Fig 7: energy broken down across memory-hierarchy levels.
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("fig7_energy", "Fig 7 — energy by memory level per configuration");
+    let mut ev = common::evaluator();
+    for (i, fig) in figures::fig7_energy(&mut ev).into_iter().enumerate() {
+        fig.emit(&format!("fig7_energy_{i}"));
+    }
+}

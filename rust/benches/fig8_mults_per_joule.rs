@@ -1,0 +1,11 @@
+//! Fig 8: multiplications per joule (energy efficiency).
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("fig8_mults_per_joule", "Fig 8 — mults/J normalized to leaf+homogeneous");
+    let mut ev = common::evaluator();
+    figures::fig8_mults_per_joule(&mut ev).emit("fig8_mults_per_joule");
+}

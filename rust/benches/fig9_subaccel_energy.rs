@@ -1,0 +1,11 @@
+//! Fig 9: on-chip energy split between high- and low-reuse units.
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("fig9_subaccel_energy", "Fig 9 — on-chip energy by sub-accelerator role");
+    let mut ev = common::evaluator();
+    figures::fig9_subaccel_energy(&mut ev).emit("fig9_subaccel_energy");
+}

@@ -1,0 +1,84 @@
+//! §Perf: timing benchmarks for the framework's hot paths.
+//!
+//! - nest analysis (called O(10⁴-10⁵) times per mapper run)
+//! - map-space search for one op
+//! - whole-cascade blackbox mapping (parallel)
+//! - DAG scheduling
+//! - one full figure-grade evaluation
+//!
+//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+
+mod common;
+
+use harp::arch::partition::{HardwareParams, MachineConfig};
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::hhp::scheduler::{schedule, ScheduleOptions};
+use harp::mapper::blackbox::BlackboxMapper;
+use harp::mapper::search::{search_best, SearchBudget};
+use harp::mapping::loopnest::Mapping;
+use harp::model::nest::analyze;
+use harp::util::benchkit::bench_fn;
+use harp::workload::einsum::{Dim, Phase, TensorOp};
+use harp::workload::intensity::Classifier;
+use harp::workload::transformer;
+use std::time::Duration;
+
+fn main() {
+    common::banner("perf_hotpath", "framework hot-path throughput (§Perf)");
+    let budget = Duration::from_millis(600);
+
+    // --- nest analysis ---------------------------------------------------
+    let machine = MachineConfig::build(
+        &HarpClass::from_id("leaf+xnode").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap();
+    let spec = machine.sub_accels[0].spec.clone();
+    let op = TensorOp::gemm("ffn1", Phase::Encoder, 3000, 12288, 49152);
+    let mut m = Mapping::trivial(spec.levels.len(), &op);
+    m.spatial_row = (Dim::M, spec.rows.min(3000));
+    m.spatial_col = (Dim::N, spec.cols);
+    m.temporal[3] = [1, 24, 192, 12288];
+    let t = bench_fn("nest_analysis (GPT3 ffn1 mapping)", budget, 5000, || {
+        let _ = std::hint::black_box(analyze(&op, &spec, &m));
+    });
+    println!("  → {:.2} M analyses/s\n", 1e9 / t.median_ns / 1e6);
+
+    // --- single-op search --------------------------------------------------
+    let sb = SearchBudget { samples: 400, seed: 1 };
+    bench_fn("mapper search_best (400 samples)", budget, 200, || {
+        let _ = std::hint::black_box(search_best(&op, &spec, &sb));
+    });
+
+    // --- whole-cascade mapping ----------------------------------------------
+    let cascade = transformer::decoder_cascade(&transformer::gpt3());
+    let classifier = Classifier::new(machine.params.tipping_ai());
+    let assignment = harp::hhp::allocator::allocate(&cascade, &machine, &classifier);
+    let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 200, seed: 1 });
+    bench_fn("blackbox map_cascade (GPT3, 45 ops)", budget, 50, || {
+        let _ = std::hint::black_box(mapper.map_cascade(&cascade, &machine, &assignment));
+    });
+
+    // --- scheduler -----------------------------------------------------------
+    let mapped = mapper.map_cascade(&cascade, &machine, &assignment);
+    bench_fn("scheduler (GPT3 DAG)", budget, 5000, || {
+        let _ = std::hint::black_box(schedule(
+            &cascade,
+            &machine,
+            &mapped,
+            &ScheduleOptions { dynamic_bw: true },
+        ));
+    });
+
+    // --- full evaluation -------------------------------------------------------
+    let opts = EvalOptions { samples: 200, ..EvalOptions::default() };
+    bench_fn("full evaluation (GPT3 × hier+xdepth)", Duration::from_secs(2), 20, || {
+        let _ = std::hint::black_box(evaluate_cascade_on_config(
+            &HarpClass::from_id("hier+xdepth").unwrap(),
+            &HardwareParams::default(),
+            &cascade,
+            &opts,
+        ));
+    });
+}

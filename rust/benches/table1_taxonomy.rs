@@ -1,0 +1,11 @@
+//! Table I: classification of existing works, plus Tables II/III.
+
+mod common;
+
+use harp::coordinator::figures;
+
+fn main() {
+    common::banner("table1_taxonomy", "Table I — existing works under the HARP taxonomy");
+    println!("{}", figures::table1());
+    println!("{}", figures::table2_table3());
+}

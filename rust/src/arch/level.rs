@@ -1,0 +1,66 @@
+//! Storage levels of a memory hierarchy.
+//!
+//! Following the paper's tree view of the hierarchy (footnote 2): DRAM is
+//! the root, the last-level buffer (LLB) the intermediate node, L1 the
+//! per-array buffer, and the per-PE register file (RF) the leaf. A
+//! sub-accelerator's `ArchSpec` holds an *innermost-first* list of these.
+
+/// Kind of storage level. `Dram` is always outermost; `Rf` innermost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LevelKind {
+    Rf,
+    L1,
+    Llb,
+    Dram,
+}
+
+impl LevelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            LevelKind::Rf => "RF",
+            LevelKind::L1 => "L1",
+            LevelKind::Llb => "LLB",
+            LevelKind::Dram => "DRAM",
+        }
+    }
+
+    pub const ALL: [LevelKind; 4] = [LevelKind::Rf, LevelKind::L1, LevelKind::Llb, LevelKind::Dram];
+}
+
+/// One storage level of a sub-accelerator.
+#[derive(Debug, Clone)]
+pub struct StorageLevel {
+    pub kind: LevelKind,
+    /// Capacity in words (datawidth = 8 bits ⇒ 1 word = 1 byte).
+    /// `u64::MAX` for DRAM (unbounded).
+    pub size_words: u64,
+    /// Peak words per cycle this level can deliver to the level below
+    /// (toward compute). For DRAM this is the partitioned share of the
+    /// Table III sweep value.
+    pub bw_words_per_cycle: f64,
+    /// Access energy in pJ per word.
+    pub energy_pj_per_word: f64,
+}
+
+impl StorageLevel {
+    pub fn new(kind: LevelKind, size_words: u64, bw: f64, energy_pj: f64) -> StorageLevel {
+        StorageLevel { kind, size_words, bw_words_per_cycle: bw, energy_pj_per_word: energy_pj }
+    }
+
+    pub fn is_unbounded(&self) -> bool {
+        self.size_words == u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_unbounded() {
+        let d = StorageLevel::new(LevelKind::Dram, u64::MAX, 256.0, 160.0);
+        assert!(d.is_unbounded());
+        let l1 = StorageLevel::new(LevelKind::L1, 131072, 512.0, 2.0);
+        assert!(!l1.is_unbounded());
+    }
+}

@@ -1,0 +1,14 @@
+//! Architecture layer: storage hierarchies, sub-accelerator specs, the
+//! HARP taxonomy, energy tables, and the resource partitioner that turns
+//! a taxonomy point + Table III hardware budget into concrete machines.
+
+pub mod energy;
+pub mod level;
+pub mod partition;
+pub mod spec;
+pub mod taxonomy;
+
+pub use level::{LevelKind, StorageLevel};
+pub use partition::{HardwareParams, MachineConfig, SubAccel};
+pub use spec::ArchSpec;
+pub use taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};

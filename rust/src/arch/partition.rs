@@ -1,0 +1,515 @@
+//! Resource partitioning: taxonomy point + Table III budget → machines.
+//!
+//! Implements the paper's policies (§V-D):
+//! - PEs (compute roof) split `roof_ratio : 1` between high- and
+//!   low-reuse sub-accelerators (Table III: 4:1);
+//! - LLB capacity split in the ratio of compute roof — high-reuse ops
+//!   want on-chip space, low-reuse ops hit peak intensity with little;
+//! - DRAM bandwidth split by `bw_frac_low` (default 0.75 to the
+//!   low-reuse side for decoder workloads — Fig 10 sweeps this);
+//! - hierarchical points attach the low-reuse unit at the LLB (no
+//!   private L1), which is where its energy advantage comes from;
+//! - intra-node points share the FSM: both arrays get the same column
+//!   count and must parallelise the same dimension across columns.
+
+use super::spec::{ArchSpec, MappingConstraints};
+use super::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+use crate::workload::einsum::Dim;
+use crate::workload::intensity::ReuseClass;
+
+/// Table III hardware parameters.
+#[derive(Debug, Clone)]
+pub struct HardwareParams {
+    /// Total number of MACs across all sub-accelerators (Table III: 40960).
+    pub total_macs: u64,
+    /// Word width in bits (Table III: 8).
+    pub datawidth_bits: u64,
+    /// Shared DRAM bandwidth in bits per cycle (sweep: 2048, 512).
+    pub dram_bw_bits: f64,
+    /// LLB capacity in bytes (4 MB).
+    pub llb_bytes: u64,
+    /// L1 capacity per array in bytes (0.125 MB).
+    pub l1_bytes: u64,
+    /// Register file bytes per PE (64 B).
+    pub rf_bytes_per_pe: u64,
+    /// High : low compute-roof ratio (4:1).
+    pub roof_ratio: f64,
+    /// Fraction of DRAM bandwidth granted to the low-reuse side in
+    /// heterogeneous configurations.
+    pub bw_frac_low: f64,
+    /// LLB port bandwidth in words per cycle (on-chip, shared budget).
+    pub llb_bw_words: f64,
+}
+
+impl Default for HardwareParams {
+    fn default() -> HardwareParams {
+        HardwareParams {
+            total_macs: 40960,
+            datawidth_bits: 8,
+            dram_bw_bits: 2048.0,
+            llb_bytes: 4 << 20,
+            l1_bytes: 128 << 10,
+            rf_bytes_per_pe: 64,
+            roof_ratio: 4.0,
+            bw_frac_low: 0.75,
+            llb_bw_words: 1024.0,
+        }
+    }
+}
+
+impl HardwareParams {
+    /// DRAM bandwidth in words per cycle.
+    pub fn dram_bw_words(&self) -> f64 {
+        self.dram_bw_bits / self.datawidth_bits as f64
+    }
+
+    /// Roofline tipping point of the unpartitioned machine (MACs/word).
+    pub fn tipping_ai(&self) -> f64 {
+        self.total_macs as f64 / self.dram_bw_words()
+    }
+}
+
+/// Role a sub-accelerator plays in the HHP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Runs high-reuse operations.
+    High,
+    /// Runs low-reuse operations.
+    Low,
+    /// Homogeneous machine: runs everything.
+    Unified,
+}
+
+impl Role {
+    pub fn accepts(self, class: ReuseClass) -> bool {
+        match self {
+            Role::Unified => true,
+            Role::High => class == ReuseClass::High,
+            Role::Low => class == ReuseClass::Low,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::High => "high-reuse",
+            Role::Low => "low-reuse",
+            Role::Unified => "unified",
+        }
+    }
+}
+
+/// One sub-accelerator instance within a machine.
+#[derive(Debug, Clone)]
+pub struct SubAccel {
+    pub id: usize,
+    pub role: Role,
+    pub spec: ArchSpec,
+}
+
+/// A fully-partitioned machine: the realisation of one taxonomy point.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub class: HarpClass,
+    pub params: HardwareParams,
+    pub sub_accels: Vec<SubAccel>,
+}
+
+/// Pick a near-square `rows × cols = macs` factorisation (cols ≥ rows).
+pub fn array_shape(macs: u64) -> (u64, u64) {
+    let mut best = (1, macs);
+    let mut r = 1;
+    while r * r <= macs {
+        if macs % r == 0 {
+            best = (r, macs / r);
+        }
+        r += 1;
+    }
+    best
+}
+
+impl MachineConfig {
+    /// Build the machine for a taxonomy point under `params`.
+    pub fn build(class: &HarpClass, params: &HardwareParams) -> Result<MachineConfig, String> {
+        class.validate()?;
+        let p = params.clone();
+        let dram_w = p.dram_bw_words();
+        let frac_high_roof = p.roof_ratio / (p.roof_ratio + 1.0);
+        let high_macs = ((p.total_macs as f64) * frac_high_roof).round() as u64;
+        let low_macs = p.total_macs - high_macs;
+        // LLB capacity split ∝ compute roof (§V-D).
+        let llb_high = ((p.llb_bytes as f64) * frac_high_roof) as u64;
+        let llb_low = p.llb_bytes - llb_high;
+        // Bandwidth splits.
+        let bw_low = dram_w * p.bw_frac_low;
+        let bw_high = dram_w - bw_low;
+        let llbbw_high = p.llb_bw_words * frac_high_roof;
+        let llbbw_low = p.llb_bw_words - llbbw_high;
+
+        let mut subs: Vec<SubAccel> = Vec::new();
+        let push = |role: Role, spec: ArchSpec, subs: &mut Vec<SubAccel>| {
+            let id = subs.len();
+            subs.push(SubAccel { id, role, spec });
+        };
+
+        match (&class.placement, &class.heterogeneity) {
+            // (a) leaf + homogeneous: one machine, undivided resources.
+            (ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous) => {
+                let (r, c) = array_shape(p.total_macs);
+                let spec = ArchSpec::leaf(
+                    "unified",
+                    r,
+                    c,
+                    p.rf_bytes_per_pe,
+                    p.l1_bytes,
+                    p.llb_bytes,
+                    p.llb_bw_words,
+                    dram_w,
+                );
+                push(Role::Unified, spec, &mut subs);
+            }
+            // (b) leaf + cross-node: two leaf sub-accelerators, disjoint
+            // nodes, independent FSMs — no shared mapping constraints.
+            // The hierarchical unclustered variant attaches the low-reuse
+            // unit at the LLB (compute at two depths, different types at
+            // different nodes).
+            (placement, HeterogeneityLoc::CrossNode { clustered: false }) => {
+                let (rh, ch) = array_shape(high_macs);
+                let (rl, cl) = array_shape(low_macs);
+                push(
+                    Role::High,
+                    ArchSpec::leaf("high", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
+                    &mut subs,
+                );
+                let low = if *placement == ComputePlacement::Hierarchical {
+                    ArchSpec::near_llb("low", rl, cl, p.rf_bytes_per_pe, llb_low, llbbw_low, bw_low)
+                } else {
+                    ArchSpec::leaf("low", rl, cl, p.rf_bytes_per_pe, p.l1_bytes, llb_low, llbbw_low, bw_low)
+                };
+                push(Role::Low, low, &mut subs);
+            }
+            // (f) hierarchical + clustered cross-node (Symphony-like):
+            // the heterogeneous mix repeats per cluster. Two clusters,
+            // each holding half of each sub-accelerator; per-cluster
+            // arrays are smaller, which costs spatial utilisation on
+            // large ops — the modelling consequence of clustering.
+            (ComputePlacement::Hierarchical, HeterogeneityLoc::CrossNode { clustered: true })
+            | (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossNode { clustered: true }) => {
+                for cluster in 0..2u64 {
+                    let (rh, ch) = array_shape(high_macs / 2);
+                    let (rl, cl) = array_shape(low_macs / 2);
+                    push(
+                        Role::High,
+                        ArchSpec::leaf(
+                            &format!("high.c{cluster}"),
+                            rh,
+                            ch,
+                            p.rf_bytes_per_pe,
+                            p.l1_bytes / 2,
+                            llb_high / 2,
+                            llbbw_high / 2.0,
+                            bw_high / 2.0,
+                        ),
+                        &mut subs,
+                    );
+                    push(
+                        Role::Low,
+                        ArchSpec::leaf(
+                            &format!("low.c{cluster}"),
+                            rl,
+                            cl,
+                            p.rf_bytes_per_pe,
+                            p.l1_bytes / 2,
+                            llb_low / 2,
+                            llbbw_low / 2.0,
+                            bw_low / 2.0,
+                        ),
+                        &mut subs,
+                    );
+                }
+            }
+            // (c) leaf + intra-node: shared FSM. Arrays share the column
+            // count; the mapper must parallelise the same dimension
+            // across columns on both (forced to N).
+            (ComputePlacement::LeafOnly, HeterogeneityLoc::IntraNode)
+            | (ComputePlacement::Hierarchical, HeterogeneityLoc::IntraNode) => {
+                // Common columns: the widest divisor of the high-reuse
+                // PE count that the low-reuse budget can still fill with
+                // at least one full row (otherwise the shared-FSM column
+                // constraint would inflate the low unit past its share).
+                let (_, near_square_cols) = array_shape(high_macs);
+                let cols = (1..=near_square_cols.min(low_macs))
+                    .rev()
+                    .find(|c| high_macs % c == 0)
+                    .unwrap_or(1);
+                let rows_h = high_macs / cols;
+                let rows_l = (low_macs / cols).max(1);
+                let shared = MappingConstraints {
+                    forced_col_dim: Some(Dim::N),
+                    forced_col_factor: None,
+                    no_dram_psum: false,
+                };
+                let mut hi = ArchSpec::leaf(
+                    "high",
+                    rows_h,
+                    cols,
+                    p.rf_bytes_per_pe,
+                    p.l1_bytes,
+                    llb_high,
+                    llbbw_high,
+                    bw_high,
+                );
+                hi.constraints = shared.clone();
+                let low_is_hier = class.placement == ComputePlacement::Hierarchical;
+                let mut lo = if low_is_hier {
+                    ArchSpec::near_llb(
+                        "low",
+                        rows_l,
+                        cols,
+                        p.rf_bytes_per_pe,
+                        llb_low,
+                        llbbw_low,
+                        bw_low,
+                    )
+                } else {
+                    ArchSpec::leaf(
+                        "low",
+                        rows_l,
+                        cols,
+                        p.rf_bytes_per_pe,
+                        p.l1_bytes,
+                        llb_low,
+                        llbbw_low,
+                        bw_low,
+                    )
+                };
+                lo.constraints = shared;
+                push(Role::High, hi, &mut subs);
+                push(Role::Low, lo, &mut subs);
+            }
+            // (d) hierarchical + cross-depth: NPU at the leaves,
+            // bandwidth-oriented unit attached to the LLB (NeuPIM-like).
+            (ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth) => {
+                let (rh, ch) = array_shape(high_macs);
+                // The near-memory unit is wide and shallow (vector-like):
+                // few rows, many columns — built for streaming, not reuse.
+                let rl = (low_macs as f64).sqrt() as u64 / 2;
+                let rl = rl.max(1);
+                let cl = low_macs / rl;
+                push(
+                    Role::High,
+                    ArchSpec::leaf("npu", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
+                    &mut subs,
+                );
+                push(
+                    Role::Low,
+                    ArchSpec::near_llb("near-llb", rl, cl, p.rf_bytes_per_pe, llb_low, llbbw_low, bw_low),
+                    &mut subs,
+                );
+            }
+            // (e) hierarchical + homogeneous: the SAME sub-accelerator
+            // architecture replicated at two levels (no prior work —
+            // derived from the taxonomy). Leaf instance + LLB instance
+            // with identical aspect ratio.
+            (ComputePlacement::Hierarchical, HeterogeneityLoc::Homogeneous) => {
+                let (rh, ch) = array_shape(high_macs);
+                let (rl, cl) = array_shape(low_macs);
+                push(
+                    Role::High,
+                    ArchSpec::leaf("leaf", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
+                    &mut subs,
+                );
+                push(
+                    Role::Low,
+                    ArchSpec::near_llb("llb-level", rl, cl, p.rf_bytes_per_pe, llb_low, llbbw_low, bw_low),
+                    &mut subs,
+                );
+            }
+            // (h) compound: cross-node at the leaves + cross-depth.
+            // Three sub-accelerators: big leaf (high), small leaf (low),
+            // near-LLB streamer (low). Low-side resources split evenly
+            // between the two low units.
+            (placement, HeterogeneityLoc::Compound(_)) => {
+                let _ = placement;
+                let (rh, ch) = array_shape(high_macs);
+                let (rl1, cl1) = array_shape(low_macs / 2);
+                let (rl2, cl2) = array_shape(low_macs - low_macs / 2);
+                push(
+                    Role::High,
+                    ArchSpec::leaf("high", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
+                    &mut subs,
+                );
+                push(
+                    Role::Low,
+                    ArchSpec::leaf(
+                        "low-leaf",
+                        rl1,
+                        cl1,
+                        p.rf_bytes_per_pe,
+                        p.l1_bytes,
+                        llb_low / 2,
+                        llbbw_low / 2.0,
+                        bw_low / 2.0,
+                    ),
+                    &mut subs,
+                );
+                push(
+                    Role::Low,
+                    ArchSpec::near_llb(
+                        "low-nearllb",
+                        rl2,
+                        cl2,
+                        p.rf_bytes_per_pe,
+                        llb_low / 2,
+                        llbbw_low / 2.0,
+                        bw_low / 2.0,
+                    ),
+                    &mut subs,
+                );
+            }
+            (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth) => {
+                unreachable!("rejected by validate()")
+            }
+        }
+
+        Ok(MachineConfig { class: class.clone(), params: p, sub_accels: subs })
+    }
+
+    /// Total PEs across sub-accelerators (invariant: == params.total_macs,
+    /// up to the intra-node column-rounding remainder).
+    pub fn total_pes(&self) -> u64 {
+        self.sub_accels.iter().map(|s| s.spec.peak_macs()).sum()
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        self.sub_accels.len() > 1
+    }
+
+    /// Sub-accelerators that accept a reuse class.
+    pub fn accelerators_for(&self, class: ReuseClass) -> Vec<usize> {
+        self.sub_accels
+            .iter()
+            .filter(|s| s.role.accepts(class))
+            .map(|s| s.id)
+            .collect()
+    }
+
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "machine [{}]  total {} PEs, DRAM {:.0} w/cyc, tipping AI {:.0}\n",
+            self.class,
+            self.total_pes(),
+            self.params.dram_bw_words(),
+            self.params.tipping_ai()
+        );
+        for sub in &self.sub_accels {
+            s.push_str(&format!("  [{}] {}\n", sub.role.name(), sub.spec.describe()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::level::LevelKind;
+
+    fn params() -> HardwareParams {
+        HardwareParams::default()
+    }
+
+    #[test]
+    fn array_shape_near_square() {
+        assert_eq!(array_shape(40960), (160, 256));
+        assert_eq!(array_shape(32768), (128, 256));
+        assert_eq!(array_shape(8192), (64, 128));
+        assert_eq!(array_shape(7), (1, 7));
+    }
+
+    #[test]
+    fn homogeneous_is_undivided() {
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous);
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        assert_eq!(m.sub_accels.len(), 1);
+        assert_eq!(m.total_pes(), 40960);
+        assert_eq!(m.sub_accels[0].spec.dram().bw_words_per_cycle, 256.0);
+        assert_eq!(m.sub_accels[0].spec.level(LevelKind::Llb).unwrap().size_words, 4 << 20);
+    }
+
+    #[test]
+    fn cross_node_splits_match_policy() {
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node());
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        assert_eq!(m.sub_accels.len(), 2);
+        let hi = &m.sub_accels[0].spec;
+        let lo = &m.sub_accels[1].spec;
+        assert_eq!(hi.peak_macs(), 32768);
+        assert_eq!(lo.peak_macs(), 8192);
+        // LLB ∝ roof, BW 25/75.
+        assert_eq!(hi.level(LevelKind::Llb).unwrap().size_words, (4 << 20) * 4 / 5);
+        assert!((hi.dram().bw_words_per_cycle - 64.0).abs() < 1e-9);
+        assert!((lo.dram().bw_words_per_cycle - 192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn intra_node_shares_columns() {
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::IntraNode);
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        let hi = &m.sub_accels[0].spec;
+        let lo = &m.sub_accels[1].spec;
+        assert_eq!(hi.cols, lo.cols);
+        assert!(hi.constraints.forced_col_dim.is_some());
+        assert!(lo.constraints.forced_col_dim.is_some());
+    }
+
+    #[test]
+    fn cross_depth_low_has_no_l1() {
+        let c = HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth);
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        let lo = &m.sub_accels[1].spec;
+        assert!(lo.level(LevelKind::L1).is_none());
+        let hi = &m.sub_accels[0].spec;
+        assert!(hi.level(LevelKind::L1).is_some());
+    }
+
+    #[test]
+    fn invalid_point_rejected() {
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth);
+        assert!(MachineConfig::build(&c, &params()).is_err());
+    }
+
+    #[test]
+    fn total_pes_conserved_within_rounding() {
+        for (_, class) in HarpClass::eval_points() {
+            let m = MachineConfig::build(&class, &params()).unwrap();
+            let total = m.total_pes();
+            assert!(
+                total >= 40960 * 95 / 100 && total <= 40960,
+                "{class}: {total} PEs"
+            );
+        }
+    }
+
+    #[test]
+    fn compound_has_three_units() {
+        let c = HarpClass::new(
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::CrossDepth,
+            ]),
+        );
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        assert_eq!(m.sub_accels.len(), 3);
+        assert_eq!(m.accelerators_for(ReuseClass::Low).len(), 2);
+    }
+
+    #[test]
+    fn clustered_cross_node_builds_four() {
+        let c = HarpClass::new(
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::CrossNode { clustered: true },
+        );
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        assert_eq!(m.sub_accels.len(), 4);
+    }
+}

@@ -1,0 +1,180 @@
+//! Concrete sub-accelerator specification.
+
+use super::energy;
+use super::level::{LevelKind, StorageLevel};
+use crate::workload::einsum::Dim;
+
+/// Mapping constraints imposed by the hardware organisation (paper §V-C).
+///
+/// These are how the taxonomy point shows up in the map space:
+/// an intra-node pair shares an FSM, so the dimension parallelised
+/// across the (common) column dimension must match its sibling's and the
+/// column count is fixed; a cross-depth sub-accelerator has no such ties.
+#[derive(Debug, Clone, Default)]
+pub struct MappingConstraints {
+    /// If set, the mapper must parallelise exactly this dimension across
+    /// the array columns (shared-FSM / RaPiD-style coupling).
+    pub forced_col_dim: Option<Dim>,
+    /// If set, the spatial column factor must equal this value
+    /// (intra-node siblings share the column count of the wider array).
+    pub forced_col_factor: Option<u64>,
+    /// Disallow temporal K tiling above the LLB (useful ablation knob;
+    /// keeps partial sums on chip).
+    pub no_dram_psum: bool,
+}
+
+/// One sub-accelerator: a PE array plus its private/shared storage
+/// hierarchy, listed innermost (RF) to outermost (DRAM).
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    /// PE array rows (each PE = 1 MAC/cycle).
+    pub rows: u64,
+    /// PE array columns.
+    pub cols: u64,
+    pub levels: Vec<StorageLevel>,
+    pub mac_energy_pj: f64,
+    pub constraints: MappingConstraints,
+}
+
+impl ArchSpec {
+    /// Peak MACs per cycle.
+    pub fn peak_macs(&self) -> u64 {
+        self.rows * self.cols
+    }
+
+    /// Index of a level by kind.
+    pub fn level_index(&self, kind: LevelKind) -> Option<usize> {
+        self.levels.iter().position(|l| l.kind == kind)
+    }
+
+    pub fn level(&self, kind: LevelKind) -> Option<&StorageLevel> {
+        self.level_index(kind).map(|i| &self.levels[i])
+    }
+
+    /// The DRAM level (outermost). Panics if the spec has no DRAM.
+    pub fn dram(&self) -> &StorageLevel {
+        self.levels.last().expect("spec has levels")
+    }
+
+    /// Roofline tipping point (MACs/word) of this sub-accelerator.
+    pub fn tipping_ai(&self) -> f64 {
+        self.peak_macs() as f64 / self.dram().bw_words_per_cycle
+    }
+
+    /// Standard four-level leaf sub-accelerator:
+    /// RF(per-PE) → L1(per-array) → LLB share → DRAM share.
+    pub fn leaf(
+        name: &str,
+        rows: u64,
+        cols: u64,
+        rf_bytes_per_pe: u64,
+        l1_bytes: u64,
+        llb_bytes: u64,
+        llb_bw: f64,
+        dram_bw: f64,
+    ) -> ArchSpec {
+        let pes = rows * cols;
+        ArchSpec {
+            name: name.into(),
+            rows,
+            cols,
+            levels: vec![
+                StorageLevel::new(
+                    LevelKind::Rf,
+                    rf_bytes_per_pe * pes,
+                    pes as f64 * 2.0,
+                    energy::RF_PJ,
+                ),
+                StorageLevel::new(
+                    LevelKind::L1,
+                    l1_bytes,
+                    (pes as f64).sqrt() * 16.0,
+                    energy::sram_pj(l1_bytes),
+                ),
+                StorageLevel::new(LevelKind::Llb, llb_bytes, llb_bw, energy::sram_pj(llb_bytes)),
+                StorageLevel::new(LevelKind::Dram, u64::MAX, dram_bw, energy::DRAM_PJ),
+            ],
+            mac_energy_pj: energy::MAC_PJ,
+            constraints: MappingConstraints::default(),
+        }
+    }
+
+    /// Near-LLB sub-accelerator for hierarchical / cross-depth points:
+    /// compute attached directly to the LLB, skipping the L1 level
+    /// entirely (NeuPIM/Duplex-style, paper §V-B) — one fewer hop per
+    /// word is where its energy advantage comes from.
+    pub fn near_llb(
+        name: &str,
+        rows: u64,
+        cols: u64,
+        rf_bytes_per_pe: u64,
+        llb_bytes: u64,
+        llb_bw: f64,
+        dram_bw: f64,
+    ) -> ArchSpec {
+        let pes = rows * cols;
+        ArchSpec {
+            name: name.into(),
+            rows,
+            cols,
+            levels: vec![
+                StorageLevel::new(
+                    LevelKind::Rf,
+                    rf_bytes_per_pe * pes,
+                    pes as f64 * 2.0,
+                    energy::RF_PJ,
+                ),
+                StorageLevel::new(LevelKind::Llb, llb_bytes, llb_bw, energy::sram_pj(llb_bytes)),
+                StorageLevel::new(LevelKind::Dram, u64::MAX, dram_bw, energy::DRAM_PJ),
+            ],
+            mac_energy_pj: energy::MAC_PJ,
+            constraints: MappingConstraints::default(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        let lv: Vec<String> = self
+            .levels
+            .iter()
+            .map(|l| {
+                let size = if l.is_unbounded() {
+                    "∞".to_string()
+                } else {
+                    format!("{}", l.size_words)
+                };
+                format!("{}[{} w, {:.0} w/cyc]", l.kind.name(), size, l.bw_words_per_cycle)
+            })
+            .collect();
+        format!("{}: {}×{} PEs, {}", self.name, self.rows, self.cols, lv.join(" ← "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_spec_has_four_levels() {
+        let s = ArchSpec::leaf("hi", 256, 128, 64, 131072, 4 << 20, 512.0, 256.0);
+        assert_eq!(s.peak_macs(), 32768);
+        assert_eq!(s.levels.len(), 4);
+        assert_eq!(s.levels[0].kind, LevelKind::Rf);
+        assert_eq!(s.dram().kind, LevelKind::Dram);
+        assert!(s.tipping_ai() > 100.0);
+    }
+
+    #[test]
+    fn near_llb_skips_l1() {
+        let s = ArchSpec::near_llb("lo", 64, 128, 64, 1 << 20, 512.0, 192.0);
+        assert_eq!(s.levels.len(), 3);
+        assert!(s.level(LevelKind::L1).is_none());
+        assert!(s.level(LevelKind::Llb).is_some());
+    }
+
+    #[test]
+    fn rf_capacity_scales_with_pes() {
+        let s = ArchSpec::leaf("x", 2, 2, 64, 1024, 4096, 8.0, 8.0);
+        assert_eq!(s.level(LevelKind::Rf).unwrap().size_words, 64 * 4);
+    }
+}

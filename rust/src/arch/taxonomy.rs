@@ -1,0 +1,305 @@
+//! The HARP taxonomy (paper §IV).
+//!
+//! Two axes classify every hierarchical and/or heterogeneous processor:
+//!
+//! 1. **Compute placement** — leaf-only (compute only next to L1, the
+//!    leaves of the memory tree) vs hierarchical (compute at multiple
+//!    levels of the hierarchy).
+//! 2. **Heterogeneity location** — homogeneous, intra-node (sub-
+//!    accelerators under one FSM), cross-node (different nodes at the
+//!    same level), cross-depth (different levels of the hierarchy), or
+//!    compound (several of the above at once).
+//!
+//! `classify()` reproduces Table I; `HarpClass::validate()` encodes the
+//! structural rules the paper states (e.g. cross-depth is the one
+//! category with no leaf-only counterpart).
+
+use std::fmt;
+
+/// Axis 1: where compute sits in the memory tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputePlacement {
+    LeafOnly,
+    Hierarchical,
+}
+
+impl ComputePlacement {
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputePlacement::LeafOnly => "leaf-only",
+            ComputePlacement::Hierarchical => "hierarchical",
+        }
+    }
+}
+
+/// Axis 2: where heterogeneity (if any) occurs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum HeterogeneityLoc {
+    /// No heterogeneity (e.g. TPUv1).
+    Homogeneous,
+    /// Sub-accelerators share a node and an FSM (tensor core + SM,
+    /// RaPiD's MAC array + SFU row). Tightest coupling.
+    IntraNode,
+    /// Different sub-accelerators at different nodes of the same level
+    /// (Herald, AESPA, TPUv4). `clustered` marks Symphony-style layouts
+    /// where the heterogeneous mix repeats per cluster rather than
+    /// occupying disjoint regions.
+    CrossNode { clustered: bool },
+    /// Sub-accelerators at different levels of the hierarchy
+    /// (NeuPIM, Duplex). Coarsest coupling; implies hierarchical.
+    CrossDepth,
+    /// Multiple simultaneous sources of heterogeneity (paper Fig 4h).
+    Compound(Vec<HeterogeneityLoc>),
+}
+
+impl HeterogeneityLoc {
+    pub fn cross_node() -> HeterogeneityLoc {
+        HeterogeneityLoc::CrossNode { clustered: false }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            HeterogeneityLoc::Homogeneous => "homogeneous".into(),
+            HeterogeneityLoc::IntraNode => "intra-node".into(),
+            HeterogeneityLoc::CrossNode { clustered: false } => "cross-node".into(),
+            HeterogeneityLoc::CrossNode { clustered: true } => "cross-node (clustered)".into(),
+            HeterogeneityLoc::CrossDepth => "cross-depth".into(),
+            HeterogeneityLoc::Compound(parts) => {
+                let names: Vec<String> = parts.iter().map(|p| p.name()).collect();
+                format!("compound [{}]", names.join(" + "))
+            }
+        }
+    }
+}
+
+/// A point in the HARP taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct HarpClass {
+    pub placement: ComputePlacement,
+    pub heterogeneity: HeterogeneityLoc,
+}
+
+impl fmt::Display for HarpClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}+{}", self.placement.name(), self.heterogeneity.name())
+    }
+}
+
+impl HarpClass {
+    pub fn new(placement: ComputePlacement, heterogeneity: HeterogeneityLoc) -> HarpClass {
+        HarpClass { placement, heterogeneity }
+    }
+
+    /// Structural validity rules from the paper:
+    /// - cross-depth heterogeneity requires compute at ≥2 levels, so it
+    ///   cannot be leaf-only ("the only category that cannot have a
+    ///   leaf-only counterpart");
+    /// - a compound class must name ≥2 distinct sources, none of which
+    ///   is itself compound or homogeneous;
+    /// - a compound containing cross-depth must be hierarchical.
+    pub fn validate(&self) -> Result<(), String> {
+        fn check_part(p: &HeterogeneityLoc) -> Result<(), String> {
+            match p {
+                HeterogeneityLoc::Compound(_) => Err("nested compound".into()),
+                HeterogeneityLoc::Homogeneous => Err("homogeneous inside compound".into()),
+                _ => Ok(()),
+            }
+        }
+        match (&self.placement, &self.heterogeneity) {
+            (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth) => {
+                Err("cross-depth heterogeneity requires a hierarchical placement".into())
+            }
+            (placement, HeterogeneityLoc::Compound(parts)) => {
+                if parts.len() < 2 {
+                    return Err("compound needs ≥2 heterogeneity sources".into());
+                }
+                for p in parts {
+                    check_part(p)?;
+                }
+                let mut dedup = parts.clone();
+                dedup.dedup_by(|a, b| a == b);
+                if dedup.len() != parts.len() {
+                    return Err("compound sources must be distinct".into());
+                }
+                if parts.contains(&HeterogeneityLoc::CrossDepth)
+                    && *placement == ComputePlacement::LeafOnly
+                {
+                    return Err("compound containing cross-depth must be hierarchical".into());
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// The four evaluation configurations of the paper (Fig 4 a-d).
+    pub fn eval_points() -> Vec<(char, HarpClass)> {
+        vec![
+            ('a', HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous)),
+            ('b', HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node())),
+            ('c', HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::IntraNode)),
+            ('d', HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth)),
+        ]
+    }
+
+    /// Short machine-friendly id (used in figure labels / CLI).
+    pub fn id(&self) -> String {
+        let p = match self.placement {
+            ComputePlacement::LeafOnly => "leaf",
+            ComputePlacement::Hierarchical => "hier",
+        };
+        let h: String = match &self.heterogeneity {
+            HeterogeneityLoc::Homogeneous => "homo".into(),
+            HeterogeneityLoc::IntraNode => "intra".into(),
+            HeterogeneityLoc::CrossNode { clustered: false } => "xnode".into(),
+            HeterogeneityLoc::CrossNode { clustered: true } => "xnode-cl".into(),
+            HeterogeneityLoc::CrossDepth => "xdepth".into(),
+            HeterogeneityLoc::Compound(_) => "compound".into(),
+        };
+        format!("{p}+{h}")
+    }
+
+    /// Parse an id produced by [`HarpClass::id`].
+    pub fn from_id(id: &str) -> Option<HarpClass> {
+        let (p, h) = id.split_once('+')?;
+        let placement = match p {
+            "leaf" => ComputePlacement::LeafOnly,
+            "hier" => ComputePlacement::Hierarchical,
+            _ => return None,
+        };
+        let heterogeneity = match h {
+            "homo" => HeterogeneityLoc::Homogeneous,
+            "intra" => HeterogeneityLoc::IntraNode,
+            "xnode" => HeterogeneityLoc::cross_node(),
+            "xnode-cl" => HeterogeneityLoc::CrossNode { clustered: true },
+            "xdepth" => HeterogeneityLoc::CrossDepth,
+            "compound" => HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::CrossDepth,
+            ]),
+            _ => return None,
+        };
+        let class = HarpClass::new(placement, heterogeneity);
+        class.validate().ok()?;
+        Some(class)
+    }
+}
+
+/// A prior-work entry for the Table I reproduction.
+#[derive(Debug, Clone)]
+pub struct PriorWork {
+    pub name: &'static str,
+    pub class: HarpClass,
+    pub remark: &'static str,
+}
+
+/// The classification of existing works — paper Table I.
+pub fn prior_works() -> Vec<PriorWork> {
+    use ComputePlacement::*;
+    use HeterogeneityLoc::*;
+    let xn = HeterogeneityLoc::cross_node;
+    vec![
+        PriorWork { name: "TPUv1", class: HarpClass::new(LeafOnly, Homogeneous), remark: "fixed-dataflow systolic array" },
+        PriorWork { name: "MAERI", class: HarpClass::new(LeafOnly, Homogeneous), remark: "flexible interconnect, homogeneous PEs" },
+        PriorWork { name: "Eyeriss", class: HarpClass::new(LeafOnly, Homogeneous), remark: "row-stationary CNN accelerator" },
+        PriorWork { name: "Flexagon", class: HarpClass::new(LeafOnly, Homogeneous), remark: "multi-dataflow sparse-sparse accelerator" },
+        PriorWork { name: "Herald", class: HarpClass::new(LeafOnly, xn()), remark: "sub-accelerators for different CONV shapes" },
+        PriorWork { name: "AESPA", class: HarpClass::new(LeafOnly, xn()), remark: "heterogeneous SpGEMM accelerator" },
+        PriorWork { name: "TPUv4", class: HarpClass::new(LeafOnly, xn()), remark: "dense core + sparse embedding core" },
+        PriorWork { name: "NVIDIA B100", class: HarpClass::new(LeafOnly, IntraNode), remark: "SM + tensor core share one program counter" },
+        PriorWork { name: "VEGETA", class: HarpClass::new(LeafOnly, IntraNode), remark: "sparse/dense tile extensions in a CPU core" },
+        PriorWork { name: "RaPiD", class: HarpClass::new(LeafOnly, IntraNode), remark: "MAC array + high-precision SFU row, one FSM" },
+        PriorWork { name: "NeuPIM", class: HarpClass::new(Hierarchical, CrossDepth), remark: "NPU at leaves + processing-in-DRAM at root" },
+        PriorWork { name: "Duplex", class: HarpClass::new(Hierarchical, CrossDepth), remark: "LLM device with near-DRAM compute" },
+        PriorWork { name: "Symphony", class: HarpClass::new(Hierarchical, CrossNode { clustered: true }), remark: "clustered cross-node heterogeneity across levels" },
+    ]
+}
+
+/// Classify by name (the `classify` CLI verb).
+pub fn classify(name: &str) -> Option<PriorWork> {
+    let lower = name.to_ascii_lowercase();
+    prior_works().into_iter().find(|w| w.name.to_ascii_lowercase().contains(&lower))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_depth_requires_hierarchical() {
+        let bad = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth);
+        assert!(bad.validate().is_err());
+        let good = HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth);
+        assert!(good.validate().is_ok());
+    }
+
+    #[test]
+    fn compound_rules() {
+        let ok = HarpClass::new(
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::CrossDepth,
+            ]),
+        );
+        assert!(ok.validate().is_ok());
+        let too_few = HarpClass::new(
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::Compound(vec![HeterogeneityLoc::CrossDepth]),
+        );
+        assert!(too_few.validate().is_err());
+        let leaf_xdepth = HarpClass::new(
+            ComputePlacement::LeafOnly,
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::CrossDepth,
+            ]),
+        );
+        assert!(leaf_xdepth.validate().is_err());
+        let nested = HarpClass::new(
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::Compound(vec![]),
+            ]),
+        );
+        assert!(nested.validate().is_err());
+    }
+
+    #[test]
+    fn table_i_matches_paper() {
+        let works = prior_works();
+        let find = |n: &str| works.iter().find(|w| w.name == n).unwrap();
+        assert_eq!(find("TPUv1").class.id(), "leaf+homo");
+        assert_eq!(find("Herald").class.id(), "leaf+xnode");
+        assert_eq!(find("NVIDIA B100").class.id(), "leaf+intra");
+        assert_eq!(find("NeuPIM").class.id(), "hier+xdepth");
+        assert_eq!(find("Symphony").class.id(), "hier+xnode-cl");
+        for w in &works {
+            w.class.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn id_round_trips() {
+        for (_, c) in HarpClass::eval_points() {
+            assert_eq!(HarpClass::from_id(&c.id()), Some(c));
+        }
+        assert!(HarpClass::from_id("leaf+xdepth").is_none()); // invalid point
+        assert!(HarpClass::from_id("garbage").is_none());
+    }
+
+    #[test]
+    fn eval_points_cover_both_axes() {
+        let pts = HarpClass::eval_points();
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().any(|(_, c)| c.placement == ComputePlacement::Hierarchical));
+        assert!(pts.iter().any(|(_, c)| c.heterogeneity == HeterogeneityLoc::Homogeneous));
+    }
+
+    #[test]
+    fn classify_by_substring() {
+        assert_eq!(classify("neupim").unwrap().name, "NeuPIM");
+        assert!(classify("does-not-exist").is_none());
+    }
+}

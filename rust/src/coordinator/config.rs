@@ -1,0 +1,125 @@
+//! JSON experiment configuration (the CLI's `--config` input).
+//!
+//! Example:
+//! ```json
+//! {
+//!   "workload": "gpt3",
+//!   "machine": "hier+xdepth",
+//!   "dram_bw_bits": 2048,
+//!   "bw_frac_low": 0.75,
+//!   "samples": 400,
+//!   "dynamic_bw": false
+//! }
+//! ```
+
+use crate::arch::partition::HardwareParams;
+use crate::arch::taxonomy::HarpClass;
+use crate::coordinator::experiment::EvalOptions;
+use crate::util::json::Json;
+use crate::workload::transformer::{self, TransformerConfig};
+
+/// A parsed experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub workload: TransformerConfig,
+    pub class: HarpClass,
+    pub params: HardwareParams,
+    pub opts: EvalOptions,
+}
+
+impl ExperimentConfig {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<ExperimentConfig, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let workload_name = j
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .ok_or("missing 'workload' (bert|llama2|gpt3)")?;
+        let workload = transformer::by_name(workload_name)
+            .ok_or_else(|| format!("unknown workload '{workload_name}'"))?;
+        let machine_id =
+            j.get("machine").and_then(|v| v.as_str()).ok_or("missing 'machine' id")?;
+        let class = HarpClass::from_id(machine_id)
+            .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
+
+        let mut params = HardwareParams::default();
+        if let Some(v) = j.get("dram_bw_bits").and_then(|v| v.as_f64()) {
+            params.dram_bw_bits = v;
+        }
+        if let Some(v) = j.get("total_macs").and_then(|v| v.as_u64()) {
+            params.total_macs = v;
+        }
+        if let Some(v) = j.get("llb_bytes").and_then(|v| v.as_u64()) {
+            params.llb_bytes = v;
+        }
+        if let Some(v) = j.get("l1_bytes").and_then(|v| v.as_u64()) {
+            params.l1_bytes = v;
+        }
+        if let Some(v) = j.get("roof_ratio").and_then(|v| v.as_f64()) {
+            params.roof_ratio = v;
+        }
+
+        let mut opts = EvalOptions::default();
+        if let Some(v) = j.get("samples").and_then(|v| v.as_usize()) {
+            opts.samples = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_u64()) {
+            opts.seed = v;
+        }
+        if let Some(v) = j.get("dynamic_bw").and_then(|v| v.as_bool()) {
+            opts.dynamic_bw = v;
+        }
+        if let Some(v) = j.get("bw_frac_low").and_then(|v| v.as_f64()) {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("bw_frac_low {v} out of [0,1]"));
+            }
+            opts.bw_frac_low = Some(v);
+        }
+        Ok(ExperimentConfig { workload, class, params, opts })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        ExperimentConfig::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth","dram_bw_bits":512,
+                "bw_frac_low":0.6,"samples":99,"dynamic_bw":true}"#,
+        )
+        .unwrap();
+        assert_eq!(c.workload.d_model, 12288);
+        assert_eq!(c.class.id(), "hier+xdepth");
+        assert_eq!(c.params.dram_bw_bits, 512.0);
+        assert_eq!(c.opts.samples, 99);
+        assert_eq!(c.opts.bw_frac_low, Some(0.6));
+        assert!(c.opts.dynamic_bw);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(ExperimentConfig::parse(r#"{"machine":"leaf+homo"}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+xdepth"}"#)
+            .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"leaf+homo","bw_frac_low":1.5}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse("not json").is_err());
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
+        assert_eq!(c.params.total_macs, 40960);
+        assert_eq!(c.opts.bw_frac_low, None);
+    }
+}

@@ -1,0 +1,148 @@
+//! One full evaluation: taxonomy point + hardware budget + cascade →
+//! mapped, scheduled, aggregated statistics (the whole Fig 5 pipeline).
+
+use crate::arch::partition::{HardwareParams, MachineConfig};
+use crate::arch::taxonomy::HarpClass;
+use crate::hhp::allocator::allocate;
+use crate::hhp::scheduler::{schedule, ScheduleOptions, ScheduleResult};
+use crate::hhp::stats::CascadeStats;
+use crate::mapper::blackbox::{BlackboxMapper, MappedOp};
+use crate::mapper::search::SearchBudget;
+use crate::workload::cascade::Cascade;
+use crate::workload::einsum::Phase;
+use crate::workload::intensity::Classifier;
+
+/// Evaluation knobs.
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    /// Mapper random samples per unique (shape, sub-accelerator).
+    pub samples: usize,
+    /// Mapper seed (deterministic searches).
+    pub seed: u64,
+    /// Dynamic bandwidth re-granting in the scheduler (ablation).
+    pub dynamic_bw: bool,
+    /// Override the low-reuse bandwidth fraction; `None` applies the
+    /// paper's policy (0.75 for decoder workloads, 0.5 otherwise).
+    pub bw_frac_low: Option<f64>,
+    /// Mapper threads.
+    pub threads: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> EvalOptions {
+        EvalOptions {
+            samples: 400,
+            seed: 0x4841_5250,
+            // NeuPIM-style bandwidth reallocation: an idle unit's DRAM
+            // share is re-granted to the busy ones. The static partition
+            // (Fig 10) still applies whenever both units are busy.
+            dynamic_bw: true,
+            bw_frac_low: None,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+impl EvalOptions {
+    /// Fast settings for tests / CI.
+    pub fn quick() -> EvalOptions {
+        EvalOptions { samples: 60, ..EvalOptions::default() }
+    }
+}
+
+/// Full result of one evaluation.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub machine: MachineConfig,
+    pub assignment: Vec<usize>,
+    pub mapped: Vec<MappedOp>,
+    pub sched: ScheduleResult,
+    pub stats: CascadeStats,
+}
+
+/// The paper's bandwidth-partitioning policy (§V-D): decoder cascades
+/// grant 75% of DRAM bandwidth to the low-reuse side; encoder cascades
+/// split evenly (the "two conflicting forces" compromise).
+pub fn default_bw_frac_low(cascade: &Cascade) -> f64 {
+    let has_decode = cascade.ops.iter().any(|o| o.phase == Phase::Decode);
+    if has_decode {
+        0.75
+    } else {
+        0.5
+    }
+}
+
+/// Evaluate `cascade` on the machine for `class` under `params`.
+pub fn evaluate_cascade_on_config(
+    class: &HarpClass,
+    params: &HardwareParams,
+    cascade: &Cascade,
+    opts: &EvalOptions,
+) -> Result<EvalResult, String> {
+    let mut params = params.clone();
+    params.bw_frac_low = opts.bw_frac_low.unwrap_or_else(|| default_bw_frac_low(cascade));
+    let machine = MachineConfig::build(class, &params)?;
+
+    // Classify against the UNPARTITIONED machine's tipping point: the
+    // allocation question is "would this op saturate the whole datapath".
+    let classifier = Classifier::new(params.tipping_ai());
+    let assignment = allocate(cascade, &machine, &classifier);
+
+    let mapper = BlackboxMapper {
+        budget: SearchBudget { samples: opts.samples, seed: opts.seed },
+        threads: opts.threads,
+    };
+    let mapped = mapper.map_cascade(cascade, &machine, &assignment);
+    let sched = schedule(
+        cascade,
+        &machine,
+        &mapped,
+        &ScheduleOptions { dynamic_bw: opts.dynamic_bw },
+    );
+    let stats = CascadeStats::aggregate(cascade, &machine, &mapped, &sched);
+    Ok(EvalResult { machine, assignment, mapped, sched, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::taxonomy::{ComputePlacement, HeterogeneityLoc};
+    use crate::workload::transformer;
+
+    #[test]
+    fn bert_eval_pipeline_runs() {
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let class = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous);
+        let r = evaluate_cascade_on_config(
+            &class,
+            &HardwareParams::default(),
+            &g,
+            &EvalOptions::quick(),
+        )
+        .unwrap();
+        assert!(r.stats.latency_cycles > 0.0);
+        assert_eq!(r.assignment.len(), g.ops.len());
+        // Homogeneous machine keeps everything on unit 0.
+        assert!(r.assignment.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn bw_policy_follows_workload() {
+        let enc = transformer::encoder_cascade(&transformer::bert_large());
+        let dec = transformer::decoder_cascade(&transformer::llama2());
+        assert_eq!(default_bw_frac_low(&enc), 0.5);
+        assert_eq!(default_bw_frac_low(&dec), 0.75);
+    }
+
+    #[test]
+    fn override_bw_fraction() {
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let class = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node());
+        let mut opts = EvalOptions::quick();
+        opts.bw_frac_low = Some(0.5);
+        let r =
+            evaluate_cascade_on_config(&class, &HardwareParams::default(), &g, &opts).unwrap();
+        let lo_bw = r.machine.sub_accels[1].spec.dram().bw_words_per_cycle;
+        assert!((lo_bw - 128.0).abs() < 1e-9); // 50% of 256 w/cyc
+    }
+}

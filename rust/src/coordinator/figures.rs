@@ -1,0 +1,295 @@
+//! Figure drivers: one function per paper table/figure, each returning
+//! the rendered [`Figure`]/text that `cargo bench` and the CLI print.
+//!
+//! | Driver | Paper artifact |
+//! |---|---|
+//! | [`fig1_roofline`] | Fig 1 — roofline split across sub-accelerators |
+//! | [`table1`] | Table I — classification of existing works |
+//! | [`table2_table3`] | Tables II/III — workload + hardware parameters |
+//! | [`fig6_speedup`] | Fig 6 — speedup vs leaf+homogeneous (+ BERT utilisation zoom) |
+//! | [`fig7_energy`] | Fig 7 — energy by memory level |
+//! | [`fig8_mults_per_joule`] | Fig 8 — energy efficiency |
+//! | [`fig9_subaccel_energy`] | Fig 9 — on-chip energy by sub-accelerator role |
+//! | [`fig10_bw_partition`] | Fig 10 — 75/25 vs 50/50 bandwidth partitioning |
+
+use crate::arch::partition::HardwareParams;
+use crate::arch::taxonomy::{prior_works, HarpClass};
+use crate::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions, EvalResult};
+use crate::model::roofline::machine_rooflines;
+use crate::util::benchkit::{Figure, Series};
+use crate::util::table::Table;
+use crate::workload::transformer::{self, TransformerConfig};
+use std::collections::HashMap;
+
+/// Memoising evaluator shared by the figure drivers (several figures
+/// reuse the same (workload, config, bandwidth) evaluations).
+pub struct Evaluator {
+    pub opts: EvalOptions,
+    cache: HashMap<String, EvalResult>,
+}
+
+impl Evaluator {
+    pub fn new(opts: EvalOptions) -> Evaluator {
+        Evaluator { opts, cache: HashMap::new() }
+    }
+
+    /// Evaluate (workload, class) at `dram_bw_bits`, memoised.
+    pub fn eval(
+        &mut self,
+        wl: &TransformerConfig,
+        class: &HarpClass,
+        dram_bw_bits: f64,
+        bw_frac_low: Option<f64>,
+    ) -> &EvalResult {
+        let key = format!(
+            "{}|{}|{}|{:?}|{}",
+            wl.name,
+            class.id(),
+            dram_bw_bits,
+            bw_frac_low,
+            self.opts.dynamic_bw
+        );
+        if !self.cache.contains_key(&key) {
+            let cascade = transformer::cascade_for(wl);
+            let params = HardwareParams { dram_bw_bits, ..HardwareParams::default() };
+            let mut opts = self.opts.clone();
+            opts.bw_frac_low = bw_frac_low;
+            let r = evaluate_cascade_on_config(class, &params, &cascade, &opts)
+                .expect("valid eval point");
+            self.cache.insert(key.clone(), r);
+        }
+        &self.cache[&key]
+    }
+}
+
+/// Fig 1: rooflines of the homogeneous machine vs the heterogeneous
+/// split, sampled over an arithmetic-intensity sweep.
+pub fn fig1_roofline() -> Figure {
+    let params = HardwareParams::default();
+    let points = HarpClass::eval_points();
+    let homo = crate::arch::partition::MachineConfig::build(&points[0].1, &params).unwrap();
+    let het = crate::arch::partition::MachineConfig::build(&points[1].1, &params).unwrap();
+    let mut fig = Figure::new(
+        "Fig 1: roofline partitioning (attainable MACs/cycle)",
+        "attainable MACs/cycle at each arithmetic intensity",
+    );
+    let ais = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+    for r in machine_rooflines(&homo).into_iter().chain(machine_rooflines(&het)) {
+        let mut s = Series::new(&r.name);
+        for &ai in &ais {
+            s.push(&format!("AI={ai}"), r.attainable(ai));
+        }
+        fig.add(s);
+    }
+    fig
+}
+
+/// Table I: classification of existing works under the taxonomy.
+pub fn table1() -> String {
+    let mut t = Table::new(&["work", "hierarchical?", "heterogeneity location", "remarks"]);
+    for w in prior_works() {
+        t.row(&[
+            w.name.to_string(),
+            w.class.placement.name().to_string(),
+            w.class.heterogeneity.name(),
+            w.remark.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Tables II + III: workload and hardware parameters (printed as the
+/// header of every bench run, for provenance).
+pub fn table2_table3() -> String {
+    let mut t2 = Table::new(&["workload", "partitioning", "d_model", "seq (prefill/decode)"]);
+    for wl in transformer::paper_workloads() {
+        let part = if wl.decode_tokens > 0 { "inter-cascade" } else { "intra-cascade" };
+        let seq = if wl.decode_tokens > 0 {
+            format!("{}/{}", wl.seq, wl.decode_tokens)
+        } else {
+            format!("{}", wl.seq)
+        };
+        t2.row(&[wl.name.clone(), part.into(), wl.d_model.to_string(), seq]);
+    }
+    let p = HardwareParams::default();
+    let mut t3 = Table::new(&["parameter", "value"]);
+    t3.row_str(&["datawidth (bits/word)", "8"]);
+    t3.row(&["number of MACs".into(), p.total_macs.to_string()]);
+    t3.row_str(&["DRAM bandwidth (bits/cycle)", "sweep: 2048, 512"]);
+    t3.row(&["LLB size".into(), format!("{} MB", p.llb_bytes as f64 / (1 << 20) as f64)]);
+    t3.row(&["L1 size (per array)".into(), format!("{} MB", p.l1_bytes as f64 / (1 << 20) as f64)]);
+    t3.row(&["RF size (per PE)".into(), format!("{} B", p.rf_bytes_per_pe)]);
+    t3.row(&["high:low reuse compute roof".into(), format!("{}:1", p.roof_ratio)]);
+    format!("Table II (workloads)\n{}\nTable III (hardware)\n{}", t2.render(), t3.render())
+}
+
+/// Fig 6: speedup of every configuration vs leaf+homogeneous at both
+/// bandwidth sweep points, plus the BERT utilisation-over-time zoom.
+pub fn fig6_speedup(ev: &mut Evaluator) -> (Figure, Figure) {
+    let mut fig = Figure::new(
+        "Fig 6: speedup normalized to leaf+homogeneous",
+        "speedup (higher is better)",
+    );
+    for bw in [2048.0, 512.0] {
+        let mut s = Series::new(&format!("bw={bw} b/cyc"));
+        for wl in transformer::paper_workloads() {
+            let base = ev
+                .eval(&wl, &HarpClass::eval_points()[0].1, bw, None)
+                .stats
+                .latency_cycles;
+            for (tag, class) in HarpClass::eval_points() {
+                let lat = ev.eval(&wl, &class, bw, None).stats.latency_cycles;
+                s.push(&format!("{} ({tag}) {}", wl.name, class.id()), base / lat);
+            }
+        }
+        fig.add(s);
+    }
+
+    // Zoom: PE-weighted utilisation over time, BERT, homo vs cross-node.
+    let mut zoom = Figure::new(
+        "Fig 6 (zoom): BERT utilisation over time",
+        "fraction of total PEs busy per time slice",
+    );
+    let bert = transformer::bert_large();
+    for (tag, class) in [&HarpClass::eval_points()[0], &HarpClass::eval_points()[1]] {
+        let r = ev.eval(&bert, class, 2048.0, None);
+        let tl = r.stats.utilization_timeline.clone();
+        let mut s = Series::new(&format!("({tag}) {}", class.id()));
+        for (i, v) in tl.iter().enumerate().step_by(4) {
+            s.push(&format!("t{i:02}"), *v);
+        }
+        zoom.add(s);
+    }
+    (fig, zoom)
+}
+
+/// Fig 7: energy by memory hierarchy level for every configuration.
+pub fn fig7_energy(ev: &mut Evaluator) -> Vec<Figure> {
+    use crate::arch::level::LevelKind;
+    let mut out = Vec::new();
+    for wl in transformer::paper_workloads() {
+        let mut fig = Figure::new(
+            &format!("Fig 7: energy breakdown, {} (µJ)", wl.name),
+            "energy in µJ by level",
+        );
+        for (tag, class) in HarpClass::eval_points() {
+            let r = ev.eval(&wl, &class, 2048.0, None);
+            let mut s = Series::new(&format!("({tag}) {}", class.id()));
+            for k in LevelKind::ALL {
+                let e = r.stats.energy_by_level.get(&k).copied().unwrap_or(0.0);
+                s.push(k.name(), e * 1e-6); // pJ → µJ
+            }
+            s.push("MAC", r.stats.mac_energy_pj * 1e-6);
+            s.push("NoC", r.stats.noc_energy_pj * 1e-6);
+            s.push("TOTAL", r.stats.energy_pj * 1e-6);
+            fig.add(s);
+        }
+        out.push(fig);
+    }
+    out
+}
+
+/// Fig 8: multiplications per joule, normalised to leaf+homogeneous.
+pub fn fig8_mults_per_joule(ev: &mut Evaluator) -> Figure {
+    let mut fig = Figure::new(
+        "Fig 8: multiplications per joule (normalized to leaf+homogeneous)",
+        "relative energy efficiency",
+    );
+    for (tag, class) in HarpClass::eval_points() {
+        let mut s = Series::new(&format!("({tag}) {}", class.id()));
+        for wl in transformer::paper_workloads() {
+            let base =
+                ev.eval(&wl, &HarpClass::eval_points()[0].1, 2048.0, None).stats.mults_per_joule();
+            let v = ev.eval(&wl, &class, 2048.0, None).stats.mults_per_joule();
+            s.push(&wl.name, v / base);
+        }
+        fig.add(s);
+    }
+    fig
+}
+
+/// Fig 9: on-chip energy split between sub-accelerators running
+/// high- vs low-reuse operations (heterogeneous configs only).
+pub fn fig9_subaccel_energy(ev: &mut Evaluator) -> Figure {
+    let mut fig = Figure::new(
+        "Fig 9: on-chip memory-system energy by sub-accelerator role (µJ)",
+        "L1 + LLB + NoC energy in µJ (datapath excluded)",
+    );
+    let het_points: Vec<(char, HarpClass)> =
+        HarpClass::eval_points().into_iter().skip(1).collect(); // b, c, d
+    // Two decoder operating points: the serving batch used for the
+    // performance figures, and single-request decoding (batch = 1, the
+    // regime where decode is pure streaming and the paper's "low-reuse
+    // dominates on-chip energy" claim is most pronounced).
+    let mut workloads = transformer::paper_workloads();
+    for base in [transformer::llama2(), transformer::gpt3()] {
+        let mut wl = base;
+        wl.batch = 1;
+        wl.name = format!("{} (b=1)", wl.name);
+        workloads.push(wl);
+    }
+    for (tag, class) in het_points {
+        let mut s = Series::new(&format!("({tag}) {}", class.id()));
+        for wl in &workloads {
+            let r = ev.eval(wl, &class, 2048.0, None);
+            for role in ["high-reuse", "low-reuse"] {
+                let e = r.stats.buffer_energy_by_role.get(role).copied().unwrap_or(0.0);
+                s.push(&format!("{} {}", wl.name, role), e * 1e-6);
+            }
+        }
+        fig.add(s);
+    }
+    fig
+}
+
+/// Fig 10: the 75/25 vs 50/50 bandwidth-partition sensitivity study on
+/// the decoder workloads (cross-node config).
+pub fn fig10_bw_partition(ev: &mut Evaluator) -> Figure {
+    let mut fig = Figure::new(
+        "Fig 10: bandwidth partitioning sensitivity (decoder workloads)",
+        "speedup vs leaf+homogeneous",
+    );
+    let xnode = HarpClass::eval_points()[1].1.clone();
+    let homo = HarpClass::eval_points()[0].1.clone();
+    for (label, frac) in [("75% to low-reuse", Some(0.75)), ("50/50 naive", Some(0.5))] {
+        let mut s = Series::new(label);
+        for wl in [transformer::llama2(), transformer::gpt3()] {
+            let base = ev.eval(&wl, &homo, 2048.0, None).stats.latency_cycles;
+            let lat = ev.eval(&wl, &xnode, 2048.0, frac).stats.latency_cycles;
+            s.push(&wl.name, base / lat);
+        }
+        fig.add(s);
+    }
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_works() {
+        let t = table1();
+        for name in ["TPUv1", "NeuPIM", "Symphony", "RaPiD"] {
+            assert!(t.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn tables_render_parameters() {
+        let t = table2_table3();
+        assert!(t.contains("12288"));
+        assert!(t.contains("40960"));
+        assert!(t.contains("3000/1000"));
+    }
+
+    #[test]
+    fn fig1_has_tipping_structure() {
+        let fig = fig1_roofline();
+        assert_eq!(fig.series.len(), 3); // unified + high + low
+        // Homogeneous roofline saturates at its peak.
+        let uni = &fig.series[0];
+        assert_eq!(uni.get("AI=1024").unwrap(), 40960.0);
+        assert!(uni.get("AI=1").unwrap() < 300.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Coordinator: experiment configuration, end-to-end evaluation of
+//! (workload, taxonomy point) pairs, figure drivers for every paper
+//! artifact, and report output.
+
+pub mod config;
+pub mod experiment;
+pub mod figures;
+
+pub use experiment::{evaluate_cascade_on_config, EvalOptions, EvalResult};

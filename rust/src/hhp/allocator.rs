@@ -1,0 +1,122 @@
+//! Reuse-based operation allocation (paper §III, §V-D).
+//!
+//! Operations are classified high/low reuse and assigned to a
+//! sub-accelerator whose role accepts that class. When several
+//! sub-accelerators share a role (clustered cross-node, compound), the
+//! allocator balances accumulated MAC load greedily.
+
+use crate::arch::partition::MachineConfig;
+use crate::workload::cascade::Cascade;
+use crate::workload::intensity::Classifier;
+
+/// Assign each op of `cascade` to a sub-accelerator id.
+pub fn allocate(cascade: &Cascade, machine: &MachineConfig, classifier: &Classifier) -> Vec<usize> {
+    let mut load: Vec<f64> = vec![0.0; machine.sub_accels.len()];
+    cascade
+        .ops
+        .iter()
+        .map(|op| {
+            let class = classifier.classify(op);
+            let mut candidates = machine.accelerators_for(class);
+            if candidates.is_empty() {
+                // Homogeneous machine (or a role-less config): anything
+                // that accepts the op — fall back to all units.
+                candidates = (0..machine.sub_accels.len()).collect();
+            }
+            // Least-loaded candidate, weighted by its compute roof so a
+            // half-size cluster fills at half the rate.
+            let chosen = *candidates
+                .iter()
+                .min_by(|&&a, &&b| {
+                    let la = load[a] / machine.sub_accels[a].spec.peak_macs() as f64;
+                    let lb = load[b] / machine.sub_accels[b].spec.peak_macs() as f64;
+                    la.partial_cmp(&lb).unwrap()
+                })
+                .unwrap();
+            load[chosen] += op.total_macs() as f64;
+            chosen
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::partition::{HardwareParams, MachineConfig};
+    use crate::arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+    use crate::workload::einsum::{Phase, TensorOp};
+    use crate::workload::transformer;
+
+    fn classifier() -> Classifier {
+        Classifier::new(HardwareParams::default().tipping_ai())
+    }
+
+    #[test]
+    fn homogeneous_gets_everything() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let a = allocate(&g, &m, &classifier());
+        assert!(a.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn bert_split_matches_paper() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let a = allocate(&g, &m, &classifier());
+        for (i, op) in g.ops.iter().enumerate() {
+            let expect_low = matches!(op.name.as_str(), "logit" | "softmax" | "attend");
+            assert_eq!(a[i] == 1, expect_low, "op {} on sub {}", op.name, a[i]);
+        }
+    }
+
+    #[test]
+    fn decoder_phases_split() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let a = allocate(&g, &m, &classifier());
+        for (i, op) in g.ops.iter().enumerate() {
+            match op.phase {
+                Phase::Prefill => assert_eq!(a[i], 0, "{} should be high", op.name),
+                Phase::Decode => assert_eq!(a[i], 1, "{} should be low", op.name),
+                Phase::Encoder => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn multiple_low_units_balance() {
+        let m = MachineConfig::build(
+            &HarpClass::new(
+                ComputePlacement::Hierarchical,
+                HeterogeneityLoc::Compound(vec![
+                    HeterogeneityLoc::cross_node(),
+                    HeterogeneityLoc::CrossDepth,
+                ]),
+            ),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let mut g = Cascade::new("lows");
+        for i in 0..6 {
+            g.push(TensorOp::gemm(&format!("v{i}"), Phase::Decode, 1, 512, 512));
+        }
+        let a = allocate(&g, &m, &classifier());
+        // Both low units (ids 1, 2) receive work.
+        assert!(a.contains(&1));
+        assert!(a.contains(&2));
+        assert!(!a.contains(&0));
+    }
+}

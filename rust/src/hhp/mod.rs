@@ -1,0 +1,12 @@
+//! The HHP wrapper — the paper's system contribution (§VI-A, Fig 5):
+//! allocate operations to sub-accelerators by reuse, schedule the
+//! cascade DAG with overlap across sub-accelerators, and aggregate
+//! per-operation Timeloop statistics into cascade-level results.
+
+pub mod allocator;
+pub mod scheduler;
+pub mod stats;
+
+pub use allocator::allocate;
+pub use scheduler::{schedule, ScheduleOptions, ScheduleResult};
+pub use stats::CascadeStats;

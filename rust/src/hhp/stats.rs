@@ -1,0 +1,190 @@
+//! Cascade-level statistics aggregation (the "wrapper" box of Fig 5).
+
+use crate::arch::level::LevelKind;
+use crate::arch::partition::{MachineConfig, Role};
+use crate::hhp::scheduler::ScheduleResult;
+use crate::mapper::blackbox::MappedOp;
+use crate::util::json::Json;
+use crate::workload::cascade::Cascade;
+use crate::workload::einsum::Phase;
+use std::collections::HashMap;
+
+/// Aggregated results for one (cascade, machine) evaluation.
+#[derive(Debug, Clone)]
+pub struct CascadeStats {
+    pub workload: String,
+    pub machine: String,
+    /// Cascade latency in cycles (scheduler makespan).
+    pub latency_cycles: f64,
+    /// Total energy in pJ.
+    pub energy_pj: f64,
+    /// Energy by storage level (RF / L1 / LLB / DRAM).
+    pub energy_by_level: HashMap<LevelKind, f64>,
+    /// MAC (datapath) energy.
+    pub mac_energy_pj: f64,
+    /// NoC hop energy.
+    pub noc_energy_pj: f64,
+    /// On-chip energy split by the role of the executing unit.
+    pub onchip_energy_by_role: HashMap<&'static str, f64>,
+    /// Memory-system (buffer) on-chip energy by role: L1 + LLB + NoC,
+    /// excluding the datapath (MAC + RF). This is the Fig 9 metric —
+    /// the datapath energy is the same work wherever it runs; the
+    /// interesting split is what the memory system pays per role.
+    pub buffer_energy_by_role: HashMap<&'static str, f64>,
+    /// Total real MACs.
+    pub macs: f64,
+    /// Busy fraction per sub-accelerator.
+    pub busy_fraction: Vec<f64>,
+    /// PE-weighted utilisation timeline (Fig 6 zoom), 48 buckets.
+    pub utilization_timeline: Vec<f64>,
+    /// Energy per phase (prefill/decode/encoder).
+    pub energy_by_phase: HashMap<&'static str, f64>,
+}
+
+impl CascadeStats {
+    /// Multiplications per joule (Fig 8's metric).
+    pub fn mults_per_joule(&self) -> f64 {
+        self.macs / (self.energy_pj * 1e-12)
+    }
+
+    /// On-chip energy (excludes DRAM).
+    pub fn onchip_energy_pj(&self) -> f64 {
+        self.energy_pj - self.energy_by_level.get(&LevelKind::Dram).copied().unwrap_or(0.0)
+    }
+
+    /// Aggregate mapped-op stats + schedule into cascade stats.
+    pub fn aggregate(
+        cascade: &Cascade,
+        machine: &MachineConfig,
+        mapped: &[MappedOp],
+        sched: &ScheduleResult,
+    ) -> CascadeStats {
+        let mut energy_by_level: HashMap<LevelKind, f64> = HashMap::new();
+        let mut onchip_energy_by_role: HashMap<&'static str, f64> = HashMap::new();
+        let mut buffer_energy_by_role: HashMap<&'static str, f64> = HashMap::new();
+        let mut energy_by_phase: HashMap<&'static str, f64> = HashMap::new();
+        let mut energy = 0.0;
+        let mut mac_e = 0.0;
+        let mut noc_e = 0.0;
+        let mut macs = 0.0;
+
+        for m in mapped {
+            let op = &cascade.ops[m.op_index];
+            let s = m.stats.scaled(op.count);
+            energy += s.energy_pj;
+            mac_e += s.mac_energy_pj;
+            noc_e += s.noc_energy_pj;
+            macs += s.macs;
+            for lv in &s.levels {
+                *energy_by_level.entry(lv.kind).or_insert(0.0) += lv.energy_pj;
+            }
+            let role: Role = machine.sub_accels[m.sub_accel].role;
+            *onchip_energy_by_role.entry(role.name()).or_insert(0.0) +=
+                s.onchip_energy_pj();
+            let buffers: f64 = s
+                .levels
+                .iter()
+                .filter(|l| matches!(l.kind, LevelKind::L1 | LevelKind::Llb))
+                .map(|l| l.energy_pj)
+                .sum::<f64>()
+                + s.noc_energy_pj;
+            *buffer_energy_by_role.entry(role.name()).or_insert(0.0) += buffers;
+            *energy_by_phase.entry(phase_name(op.phase)).or_insert(0.0) += s.energy_pj;
+        }
+
+        let busy_fraction =
+            (0..machine.sub_accels.len()).map(|s| sched.busy_fraction(s)).collect();
+        CascadeStats {
+            workload: cascade.name.clone(),
+            machine: machine.class.id(),
+            latency_cycles: sched.makespan,
+            energy_pj: energy,
+            energy_by_level,
+            mac_energy_pj: mac_e,
+            noc_energy_pj: noc_e,
+            onchip_energy_by_role,
+            buffer_energy_by_role,
+            macs,
+            busy_fraction,
+            utilization_timeline: sched.utilization_timeline(machine, 48),
+            energy_by_phase,
+        }
+    }
+
+    /// Machine-readable report.
+    pub fn to_json(&self) -> Json {
+        let mut levels = Json::obj();
+        for k in LevelKind::ALL {
+            if let Some(e) = self.energy_by_level.get(&k) {
+                levels = levels.with(k.name(), *e);
+            }
+        }
+        let mut roles = Json::obj();
+        for (k, v) in &self.onchip_energy_by_role {
+            roles = roles.with(k, *v);
+        }
+        Json::obj()
+            .with("workload", self.workload.as_str())
+            .with("machine", self.machine.as_str())
+            .with("latency_cycles", self.latency_cycles)
+            .with("energy_pj", self.energy_pj)
+            .with("mults_per_joule", self.mults_per_joule())
+            .with("macs", self.macs)
+            .with("energy_by_level", levels)
+            .with("onchip_energy_by_role", roles)
+            .with(
+                "busy_fraction",
+                Json::Arr(self.busy_fraction.iter().map(|&b| Json::Num(b)).collect()),
+            )
+    }
+}
+
+fn phase_name(p: Phase) -> &'static str {
+    match p {
+        Phase::Encoder => "encoder",
+        Phase::Prefill => "prefill",
+        Phase::Decode => "decode",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::partition::HardwareParams;
+    use crate::arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+    use crate::hhp::scheduler::{schedule, ScheduleOptions};
+    use crate::mapper::blackbox::BlackboxMapper;
+    use crate::mapper::search::SearchBudget;
+    use crate::workload::intensity::Classifier;
+    use crate::workload::transformer;
+
+    #[test]
+    fn aggregates_bert_on_cross_node() {
+        let machine = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let assign = crate::hhp::allocator::allocate(&g, &machine, &classifier);
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 40, seed: 1 });
+        let mapped = mapper.map_cascade(&g, &machine, &assign);
+        let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
+        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched);
+
+        assert!(stats.latency_cycles > 0.0);
+        assert!(stats.energy_pj > 0.0);
+        assert_eq!(stats.macs, g.total_macs() as f64);
+        // Both roles consumed on-chip energy.
+        assert!(stats.onchip_energy_by_role["high-reuse"] > 0.0);
+        assert!(stats.onchip_energy_by_role["low-reuse"] > 0.0);
+        // Level energies sum (with MAC + NoC) to the total.
+        let level_sum: f64 = stats.energy_by_level.values().sum();
+        let total = level_sum + stats.mac_energy_pj + stats.noc_energy_pj;
+        assert!((total - stats.energy_pj).abs() < 1e-6 * stats.energy_pj);
+        // JSON round-trips.
+        let j = stats.to_json();
+        assert!(j.get("mults_per_joule").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

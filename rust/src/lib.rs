@@ -1,0 +1,42 @@
+//! # HARP — Heterogeneous and HierARchical Processors
+//!
+//! A from-scratch reproduction of the HARP evaluation framework
+//! (Garg, Pellauer, Krishna — *"HARP: A Taxonomy for Heterogeneous and
+//! Hierarchical Processors for Mixed-reuse Workloads"*, CS.DC 2025):
+//! a Timeloop-like analytical cost model and mapper, the HARP taxonomy
+//! for hierarchical/heterogeneous processors (HHPs), a resource
+//! partitioner, and an overlap-aware cascade scheduler — driven by a
+//! Rust coordinator that also executes the AOT-compiled JAX/Pallas
+//! transformer workloads through PJRT for functional validation.
+//!
+//! ## Layer map
+//!
+//! - [`util`] — substrates built from scratch for the offline image
+//!   (JSON, CLI parsing, PRNG, property testing, bench harness, pool).
+//! - [`workload`] — einsum operations, arithmetic intensity, cascade
+//!   dependency graphs, transformer generators (paper Table II).
+//! - [`arch`] — storage hierarchies, sub-accelerator specs, the HARP
+//!   taxonomy itself, resource partitioning, energy tables (Table III).
+//! - [`mapping`] — loop-nest mappings and taxonomy-derived constraints.
+//! - [`model`] — the Timeloop-like nest analysis: per-level access
+//!   counts, latency (compute vs bandwidth bound), energy.
+//! - [`mapper`] — map-space enumeration and seeded black-box search.
+//! - [`hhp`] — the paper's wrapper: operation allocation, overlap
+//!   scheduling with shared-bandwidth contention, cascade statistics.
+//! - [`coordinator`] — experiment configs, sweeps, figure drivers.
+//! - [`runtime`] — PJRT client that loads `artifacts/*.hlo.txt` and
+//!   executes the real transformer layers for end-to-end validation.
+
+pub mod util;
+pub mod workload;
+pub mod arch;
+pub mod mapping;
+pub mod model;
+pub mod mapper;
+pub mod hhp;
+pub mod coordinator;
+pub mod runtime;
+
+pub use arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+pub use coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+pub use workload::cascade::Cascade;

@@ -1,0 +1,235 @@
+//! `harp` — CLI for the HARP evaluation framework.
+//!
+//! Subcommands:
+//! - `taxonomy`                       print Table I (prior works classified)
+//! - `classify <name>`                classify one prior work
+//! - `eval …`                         evaluate one (workload, machine) point
+//! - `figures …`                      regenerate every paper figure
+//! - `roofline`                       print the Fig 1 roofline split
+//! - `sweep …`                        bandwidth/partition sweep for a workload
+//! - `validate [--artifacts DIR]`     run the AOT artifacts through PJRT
+
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::{classify, HarpClass};
+use harp::coordinator::config::ExperimentConfig;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::coordinator::figures;
+use harp::runtime::validate::{render_reports, validate_all};
+use harp::util::cli::ArgSpec;
+use harp::util::table::Table;
+use harp::workload::transformer;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "taxonomy" => cmd_taxonomy(),
+        "classify" => cmd_classify(rest),
+        "eval" => cmd_eval(rest),
+        "figures" => cmd_figures(rest),
+        "roofline" => cmd_roofline(),
+        "sweep" => cmd_sweep(rest),
+        "validate" => cmd_validate(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "harp — taxonomy + evaluation framework for heterogeneous/hierarchical processors\n\
+     \n\
+     USAGE: harp <command> [options]\n\
+     \n\
+     COMMANDS:\n\
+       taxonomy                 print Table I (existing works classified)\n\
+       classify <name>          classify a prior work (e.g. 'neupim')\n\
+       eval [--config F | --workload W --machine M] [--bw BITS] [--samples N]\n\
+       figures [--samples N]    regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
+       roofline                 print the Fig 1 roofline partitioning\n\
+       sweep --workload W       DRAM bandwidth × machine sweep\n\
+       validate [--artifacts D] execute AOT artifacts through PJRT + check numerics"
+        .to_string()
+}
+
+fn cmd_taxonomy() -> Result<(), String> {
+    println!("{}", figures::table1());
+    Ok(())
+}
+
+fn cmd_classify(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("harp classify", "classify a prior work").pos(
+        "name",
+        true,
+        "work name (substring match)",
+    );
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let name = args.positional(0).unwrap();
+    match classify(name) {
+        Some(w) => {
+            println!("{}: {} — {}", w.name, w.class, w.remark);
+            Ok(())
+        }
+        None => Err(format!("no prior work matching '{name}' (try 'harp taxonomy')")),
+    }
+}
+
+fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> {
+    let spec = ArgSpec::new("harp eval", "evaluate one (workload, machine) point")
+        .opt("config", None, "JSON experiment config path")
+        .opt("workload", None, "bert | llama2 | gpt3")
+        .opt(
+            "machine",
+            Some("leaf+homo"),
+            "taxonomy id (leaf+homo|leaf+xnode|leaf+intra|hier+xdepth|hier+homo|hier+xnode-cl|hier+intra|hier+compound)",
+        )
+        .opt("bw", Some("2048"), "DRAM bandwidth in bits/cycle")
+        .opt("bw-frac-low", None, "fraction of DRAM bandwidth to the low-reuse side")
+        .opt("samples", Some("400"), "mapper samples per unique shape")
+        .flag("dynamic-bw", "re-grant idle units' bandwidth (ablation)")
+        .flag("json", "emit machine-readable JSON");
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let json = args.has_flag("json");
+    if let Some(path) = args.get("config") {
+        return Ok((ExperimentConfig::load(path)?, json));
+    }
+    let wl_name = args.get("workload").ok_or("need --workload or --config")?;
+    let workload =
+        transformer::by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
+    let machine_id = args.get("machine").unwrap();
+    let class = HarpClass::from_id(machine_id)
+        .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
+    let mut params = HardwareParams::default();
+    params.dram_bw_bits = args.get_f64("bw").map_err(|e| e.to_string())?;
+    let mut opts = EvalOptions::default();
+    opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    opts.dynamic_bw = args.has_flag("dynamic-bw");
+    if args.get("bw-frac-low").is_some() {
+        opts.bw_frac_low = Some(args.get_f64("bw-frac-low").map_err(|e| e.to_string())?);
+    }
+    Ok((ExperimentConfig { workload, class, params, opts }, json))
+}
+
+fn cmd_eval(argv: &[String]) -> Result<(), String> {
+    let (cfg, json) = parse_eval_opts(argv)?;
+    let cascade = transformer::cascade_for(&cfg.workload);
+    let r = evaluate_cascade_on_config(&cfg.class, &cfg.params, &cascade, &cfg.opts)?;
+    if json {
+        println!("{}", r.stats.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!("{}", r.machine.describe());
+    println!("{}", cascade.describe());
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["latency (cycles)".into(), format!("{:.3e}", r.stats.latency_cycles)]);
+    t.row(&["energy (µJ)".into(), format!("{:.3}", r.stats.energy_pj * 1e-6)]);
+    t.row(&["mults/joule".into(), format!("{:.3e}", r.stats.mults_per_joule())]);
+    for (i, b) in r.stats.busy_fraction.iter().enumerate() {
+        let sub = &r.machine.sub_accels[i];
+        t.row(&[
+            format!("busy[{} {}]", sub.spec.name, sub.role.name()),
+            format!("{:.1}%", b * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn figure_opts(argv: &[String]) -> Result<EvalOptions, String> {
+    let spec = ArgSpec::new("harp figures", "regenerate the paper figures").opt(
+        "samples",
+        Some("400"),
+        "mapper samples per unique shape",
+    );
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let mut opts = EvalOptions::default();
+    opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    Ok(opts)
+}
+
+fn cmd_figures(argv: &[String]) -> Result<(), String> {
+    let opts = figure_opts(argv)?;
+    println!("{}", figures::table2_table3());
+    println!("{}", figures::table1());
+    figures::fig1_roofline().emit("fig1_roofline");
+    let mut ev = figures::Evaluator::new(opts);
+    let (f6, zoom) = figures::fig6_speedup(&mut ev);
+    f6.emit("fig6_speedup");
+    zoom.emit("fig6_zoom_utilization");
+    for (i, f) in figures::fig7_energy(&mut ev).into_iter().enumerate() {
+        f.emit(&format!("fig7_energy_{i}"));
+    }
+    figures::fig8_mults_per_joule(&mut ev).emit("fig8_mults_per_joule");
+    figures::fig9_subaccel_energy(&mut ev).emit("fig9_subaccel_energy");
+    figures::fig10_bw_partition(&mut ev).emit("fig10_bw_partition");
+    Ok(())
+}
+
+fn cmd_roofline() -> Result<(), String> {
+    figures::fig1_roofline().emit("fig1_roofline");
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("harp sweep", "bandwidth × machine sweep")
+        .opt("workload", Some("gpt3"), "bert | llama2 | gpt3")
+        .opt("samples", Some("200"), "mapper samples per unique shape");
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let wl_name = args.get("workload").unwrap();
+    let wl =
+        transformer::by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
+    let cascade = transformer::cascade_for(&wl);
+    let mut opts = EvalOptions::default();
+    opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    let mut t =
+        Table::new(&["machine", "bw (b/cyc)", "latency (cycles)", "energy (µJ)", "mults/J"]);
+    for bw in [2048.0, 1024.0, 512.0] {
+        for (_, class) in HarpClass::eval_points() {
+            let params = HardwareParams { dram_bw_bits: bw, ..HardwareParams::default() };
+            let r = evaluate_cascade_on_config(&class, &params, &cascade, &opts)?;
+            t.row(&[
+                class.id(),
+                format!("{bw}"),
+                format!("{:.3e}", r.stats.latency_cycles),
+                format!("{:.2}", r.stats.energy_pj * 1e-6),
+                format!("{:.3e}", r.stats.mults_per_joule()),
+            ]);
+        }
+    }
+    println!("workload: {}", wl.name);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_validate(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("harp validate", "execute AOT artifacts via PJRT").opt(
+        "artifacts",
+        Some("artifacts"),
+        "artifacts directory",
+    );
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let dir = args.get("artifacts").unwrap();
+    let reports = validate_all(Path::new(dir)).map_err(|e| format!("{e:#}"))?;
+    println!("{}", render_reports(&reports));
+    if reports.iter().all(|r| r.ok) {
+        println!("all {} artifacts PASS", reports.len());
+        Ok(())
+    } else {
+        Err("some artifacts FAILED numeric validation".into())
+    }
+}

@@ -1,0 +1,94 @@
+//! Factorisation utilities for tiling-factor enumeration.
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Candidate tiling factors for a dimension of size `n` under a `limit`:
+/// divisors of `n` plus powers of two (to allow modest padding), capped
+/// at `min(n, limit)`, deduplicated, ascending. Always contains 1.
+pub fn candidates(n: u64, limit: u64) -> Vec<u64> {
+    let cap = n.min(limit).max(1);
+    let mut out: Vec<u64> = divisors(n).into_iter().filter(|&d| d <= cap).collect();
+    let mut p = 1u64;
+    while p <= cap {
+        if !out.contains(&p) {
+            out.push(p);
+        }
+        p *= 2;
+    }
+    if !out.contains(&cap) {
+        out.push(cap);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+pub fn pow2_floor(n: u64) -> u64 {
+    debug_assert!(n >= 1);
+    1u64 << (63 - n.leading_zeros())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn candidates_capped_and_padded() {
+        let c = candidates(3000, 256);
+        assert!(c.contains(&1));
+        assert!(c.contains(&256)); // cap itself
+        assert!(c.contains(&128)); // power of two
+        assert!(c.contains(&250)); // divisor of 3000
+        assert!(c.iter().all(|&f| f <= 256));
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn candidates_of_one() {
+        assert_eq!(candidates(1, 64), vec![1]);
+    }
+
+    #[test]
+    fn ceil_div_works() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+    }
+
+    #[test]
+    fn pow2_floor_works() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(2), 2);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(192000), 131072);
+        assert_eq!(pow2_floor(u64::MAX), 1 << 63);
+    }
+}

@@ -1,0 +1,13 @@
+//! Map-space search (the "Timeloop mapper" role, paper §VI-A).
+//!
+//! HARP runs the mapper *per (operation, sub-accelerator)* — black-box
+//! mapping. Because the workload is partitioned operation-by-operation,
+//! the joint design space is additive (`O(High + Low)`), not
+//! multiplicative (paper §V-C).
+
+pub mod blackbox;
+pub mod factors;
+pub mod search;
+
+pub use blackbox::{BlackboxMapper, MappedOp};
+pub use search::{search_best, SearchBudget};

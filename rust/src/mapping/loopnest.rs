@@ -1,0 +1,292 @@
+//! Loop-nest mapping representation (Timeloop-style).
+//!
+//! A mapping assigns, for each storage level of a sub-accelerator, a
+//! *temporal tiling factor* per einsum dimension plus a per-level loop
+//! permutation, and two *spatial factors* (PE-array rows and columns).
+//!
+//! Level blocks are ordered innermost-first, matching
+//! `ArchSpec::levels`: block 0 iterates scalars within the RF tile,
+//! block `l` iterates level-`l-1` tiles within level `l`'s tile, and the
+//! outermost (DRAM) block iterates LLB tiles over the full tensors. The
+//! spatial fan-out sits between the RF and the first buffer level (the
+//! array is fed by L1 — or by the LLB for near-LLB sub-accelerators).
+//!
+//! Cumulative extent of dimension `d` at level `l`:
+//! `C(0,d) = t[0][d]`, and for `l ≥ 1`
+//! `C(l,d) = t[0][d] · s(d) · Π_{1≤j≤l} t[j][d]`.
+
+use crate::arch::spec::ArchSpec;
+use crate::workload::einsum::{Dim, TensorOp};
+use std::fmt;
+
+/// A complete mapping of one op onto one sub-accelerator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    /// Temporal factors `t[level][dim]`, innermost (RF) first; one entry
+    /// per storage level including DRAM. Indexed by `Dim::index()`.
+    pub temporal: Vec<[u64; 4]>,
+    /// Loop permutation per level block; `perms[l][0]` is the innermost
+    /// loop of block `l`.
+    pub perms: Vec<[Dim; 4]>,
+    /// Spatial mapping across PE-array rows: (dimension, factor).
+    pub spatial_row: (Dim, u64),
+    /// Spatial mapping across PE-array columns: (dimension, factor).
+    pub spatial_col: (Dim, u64),
+}
+
+/// Why a mapping is invalid for (op, spec).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum MapError {
+    #[error("mapping has {got} level blocks, spec has {want} levels")]
+    LevelMismatch { got: usize, want: usize },
+    #[error("dimension {dim} covers {got}, needs ≥ {want}")]
+    DimUncovered { dim: &'static str, got: u64, want: u64 },
+    #[error("spatial {axis} factor {got} exceeds array {axis} count {limit}")]
+    SpatialOverflow { axis: &'static str, got: u64, limit: u64 },
+    #[error("constraint: columns must parallelise {want}, mapping uses {got}")]
+    ForcedColDim { want: &'static str, got: &'static str },
+    #[error("constraint: column factor must be {want}, mapping uses {got}")]
+    ForcedColFactor { want: u64, got: u64 },
+    #[error("row and column spatial dims must differ (both {dim})")]
+    SpatialDimClash { dim: &'static str },
+    #[error("level {level} tile of {tile} words exceeds capacity {cap}")]
+    CapacityExceeded { level: &'static str, tile: u64, cap: u64 },
+    #[error("zero factor in mapping")]
+    ZeroFactor,
+}
+
+/// The canonical loop permutations the mapper samples from. Orders are
+/// innermost-first. These cover the classic stationarities:
+/// output-stationary (K inner), weight-stationary (M inner… weights held
+/// while M streams), input-stationary (N inner), plus batch-rotated
+/// variants for BMMs.
+pub const CANON_PERMS: [[Dim; 4]; 6] = [
+    [Dim::K, Dim::N, Dim::M, Dim::B], // output-stationary-ish
+    [Dim::M, Dim::K, Dim::N, Dim::B], // weight-stationary-ish
+    [Dim::N, Dim::K, Dim::M, Dim::B], // input-A-stationary-ish
+    [Dim::K, Dim::M, Dim::N, Dim::B],
+    [Dim::N, Dim::M, Dim::K, Dim::B],
+    [Dim::M, Dim::N, Dim::B, Dim::K],
+];
+
+impl Mapping {
+    /// The trivial mapping: everything in one DRAM-level loop, no tiling,
+    /// 1×1 spatial. Valid for any op that fits a single PE's RF.
+    pub fn trivial(levels: usize, op: &TensorOp) -> Mapping {
+        let mut temporal = vec![[1u64; 4]; levels];
+        let last = levels - 1;
+        for d in Dim::ALL {
+            temporal[last][d.index()] = op.dim(d);
+        }
+        Mapping {
+            temporal,
+            perms: vec![CANON_PERMS[0]; levels],
+            spatial_row: (Dim::M, 1),
+            spatial_col: (Dim::N, 1),
+        }
+    }
+
+    /// Spatial factor applied to dimension `d`.
+    pub fn spatial(&self, d: Dim) -> u64 {
+        let mut f = 1;
+        if self.spatial_row.0 == d {
+            f *= self.spatial_row.1;
+        }
+        if self.spatial_col.0 == d {
+            f *= self.spatial_col.1;
+        }
+        f
+    }
+
+    /// Cumulative extent of dim `d` at level `l` (see module docs).
+    pub fn extent(&self, l: usize, d: Dim) -> u64 {
+        let mut e = self.temporal[0][d.index()];
+        if l >= 1 {
+            e *= self.spatial(d);
+            for block in &self.temporal[1..=l] {
+                e *= block[d.index()];
+            }
+        }
+        e
+    }
+
+    /// Padded full extent of dim `d` (product of every factor).
+    pub fn padded_dim(&self, d: Dim) -> u64 {
+        self.extent(self.temporal.len() - 1, d)
+    }
+
+    /// Total temporal iterations = padded MACs / active PEs.
+    pub fn compute_cycles(&self) -> u64 {
+        let mut cycles: u64 = 1;
+        for block in &self.temporal {
+            for f in block {
+                cycles *= f;
+            }
+        }
+        cycles
+    }
+
+    /// Number of active PEs.
+    pub fn active_pes(&self) -> u64 {
+        self.spatial_row.1 * self.spatial_col.1
+    }
+
+    /// Structural validation (capacity checks live in the nest analysis,
+    /// which knows tile sizes).
+    pub fn validate(&self, op: &TensorOp, spec: &ArchSpec) -> Result<(), MapError> {
+        if self.temporal.len() != spec.levels.len() {
+            return Err(MapError::LevelMismatch {
+                got: self.temporal.len(),
+                want: spec.levels.len(),
+            });
+        }
+        for block in &self.temporal {
+            if block.iter().any(|&f| f == 0) {
+                return Err(MapError::ZeroFactor);
+            }
+        }
+        if self.spatial_row.1 == 0 || self.spatial_col.1 == 0 {
+            return Err(MapError::ZeroFactor);
+        }
+        for d in Dim::ALL {
+            let got = self.padded_dim(d);
+            let want = op.dim(d);
+            if got < want {
+                return Err(MapError::DimUncovered { dim: d.name(), got, want });
+            }
+        }
+        if self.spatial_row.1 > spec.rows {
+            return Err(MapError::SpatialOverflow {
+                axis: "row",
+                got: self.spatial_row.1,
+                limit: spec.rows,
+            });
+        }
+        if self.spatial_col.1 > spec.cols {
+            return Err(MapError::SpatialOverflow {
+                axis: "col",
+                got: self.spatial_col.1,
+                limit: spec.cols,
+            });
+        }
+        if self.spatial_row.0 == self.spatial_col.0 && self.spatial_row.1 > 1 && self.spatial_col.1 > 1
+        {
+            return Err(MapError::SpatialDimClash { dim: self.spatial_row.0.name() });
+        }
+        // Taxonomy-derived constraints (paper §V-C).
+        if let Some(want) = spec.constraints.forced_col_dim {
+            if self.spatial_col.1 > 1 && self.spatial_col.0 != want {
+                return Err(MapError::ForcedColDim {
+                    want: want.name(),
+                    got: self.spatial_col.0.name(),
+                });
+            }
+        }
+        if let Some(want) = spec.constraints.forced_col_factor {
+            if self.spatial_col.1 != want {
+                return Err(MapError::ForcedColFactor { want, got: self.spatial_col.1 });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Mapping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "spatial[{}:{} × {}:{}]",
+            self.spatial_row.0.name(),
+            self.spatial_row.1,
+            self.spatial_col.0.name(),
+            self.spatial_col.1
+        )?;
+        for (l, block) in self.temporal.iter().enumerate() {
+            write!(
+                f,
+                " L{l}[B{} M{} N{} K{}]",
+                block[0], block[1], block[2], block[3]
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::einsum::Phase;
+
+    fn spec() -> ArchSpec {
+        ArchSpec::leaf("t", 16, 16, 64, 16384, 1 << 20, 64.0, 32.0)
+    }
+
+    fn op() -> TensorOp {
+        TensorOp::gemm("g", Phase::Encoder, 64, 128, 32)
+    }
+
+    #[test]
+    fn trivial_mapping_validates() {
+        let m = Mapping::trivial(4, &op());
+        m.validate(&op(), &spec()).unwrap();
+        assert_eq!(m.padded_dim(Dim::M), 64);
+        assert_eq!(m.compute_cycles(), 64 * 128 * 32);
+        assert_eq!(m.active_pes(), 1);
+    }
+
+    #[test]
+    fn extent_composes_spatial_and_temporal() {
+        let mut m = Mapping::trivial(4, &op());
+        m.temporal[3] = [1, 16, 8, 32]; // B M N K at DRAM
+        m.temporal[0] = [1, 2, 1, 4];
+        m.spatial_row = (Dim::M, 2);
+        m.spatial_col = (Dim::N, 4);
+        assert_eq!(m.extent(0, Dim::M), 2);
+        assert_eq!(m.extent(1, Dim::M), 2 * 2); // spatial joins at level 1
+        assert_eq!(m.padded_dim(Dim::M), 2 * 2 * 16);
+        assert_eq!(m.padded_dim(Dim::N), 4 * 8);
+        assert_eq!(m.padded_dim(Dim::K), 4 * 32);
+    }
+
+    #[test]
+    fn undersized_mapping_rejected() {
+        let mut m = Mapping::trivial(4, &op());
+        m.temporal[3][Dim::M.index()] = 2; // covers 2 < 64
+        assert!(matches!(
+            m.validate(&op(), &spec()),
+            Err(MapError::DimUncovered { dim: "M", .. })
+        ));
+    }
+
+    #[test]
+    fn spatial_limits_enforced() {
+        let mut m = Mapping::trivial(4, &op());
+        m.spatial_row = (Dim::M, 32); // rows = 16
+        assert!(matches!(
+            m.validate(&op(), &spec()),
+            Err(MapError::SpatialOverflow { axis: "row", .. })
+        ));
+    }
+
+    #[test]
+    fn forced_col_dim_enforced() {
+        let mut s = spec();
+        s.constraints.forced_col_dim = Some(Dim::N);
+        let mut m = Mapping::trivial(4, &op());
+        m.spatial_col = (Dim::K, 4);
+        m.temporal[3][Dim::K.index()] = 32; // keep K = 4 × 32 = 128 covered
+        assert!(matches!(m.validate(&op(), &s), Err(MapError::ForcedColDim { .. })));
+        // A unit column factor is exempt (nothing is parallelised).
+        m.spatial_col = (Dim::K, 1);
+        m.temporal[3][Dim::K.index()] = 128;
+        m.validate(&op(), &s).unwrap();
+    }
+
+    #[test]
+    fn same_dim_both_axes_rejected() {
+        let mut m = Mapping::trivial(4, &op());
+        m.spatial_row = (Dim::M, 2);
+        m.spatial_col = (Dim::M, 2);
+        assert!(matches!(m.validate(&op(), &spec()), Err(MapError::SpatialDimClash { .. })));
+    }
+}

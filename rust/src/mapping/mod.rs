@@ -1,0 +1,7 @@
+//! Mapping layer: loop-nest mappings of one tensor operation onto one
+//! sub-accelerator, plus the structural validation rules (taxonomy
+//! constraints, factor products, spatial limits).
+
+pub mod loopnest;
+
+pub use loopnest::{Mapping, MapError};

@@ -1,0 +1,13 @@
+//! The analytical cost model (Timeloop-like).
+//!
+//! [`nest`] walks a [`Mapping`](crate::mapping::Mapping)'s loop nest and
+//! produces per-level access counts using the classic stationarity
+//! analysis; [`stats`] holds the resulting per-operation statistics;
+//! [`roofline`] provides the compute-roof/bandwidth split view of Fig 1.
+
+pub mod nest;
+pub mod roofline;
+pub mod stats;
+
+pub use nest::analyze;
+pub use stats::{Bound, LevelStats, OpStats};

@@ -1,0 +1,432 @@
+//! Loop-nest analysis: mapping + op + spec → access counts, latency,
+//! energy (the Timeloop cost-model equations, paper §VI-A).
+//!
+//! ## Method
+//!
+//! For each operand `T` and storage level `l`, the tile of `T` resident
+//! at `l` has `Π_{d ∈ rel(T)} C(l, d)` words. The number of times the
+//! child tile is (re)filled from level `l` follows the classic
+//! *stationarity walk*: scan the loops above the child block from
+//! innermost to outermost; loops over dimensions irrelevant to `T`
+//! contribute ×1 (the tile is stationary) until the first relevant loop
+//! is seen, after which every loop (relevant or not) multiplies.
+//!
+//! Outputs additionally generate partial-sum traffic: if a `K` loop with
+//! factor > 1 sits outside the first output-relevant loop above a
+//! boundary, evicted tiles are partial and must be read back, adding
+//! `fills·tile − |O|` words of down-traffic at that boundary.
+//!
+//! The PE array's spatial fan-out sits between the RF (level 0) and the
+//! first buffer: parent-side reads are multicast-discounted over spatial
+//! dims irrelevant to `T`, and the spatial-`K` reduction tree collapses
+//! output copies in the opposite direction.
+
+use crate::arch::energy::HOP_PJ;
+use crate::arch::level::LevelKind;
+use crate::arch::spec::ArchSpec;
+use crate::mapping::loopnest::{MapError, Mapping};
+use crate::model::stats::{Bound, LevelStats, OpStats};
+use crate::workload::einsum::{Dim, Operand, TensorOp};
+
+/// Words of operand `T`'s tile resident at level `l`.
+/// Level 0 (RF) is per-PE; higher levels include the spatial extent.
+fn tile_words(op: &TensorOp, m: &Mapping, t: Operand, l: usize) -> u64 {
+    Dim::ALL
+        .iter()
+        .filter(|&&d| op.relevant(t, d))
+        .map(|&d| m.extent(l, d))
+        .product()
+}
+
+/// The loops above child level `child`, innermost first:
+/// blocks `child+1 ..= last`, each block ordered by its permutation.
+fn loops_above<'a>(
+    m: &'a Mapping,
+    child: usize,
+) -> impl Iterator<Item = (Dim, u64)> + 'a {
+    (child + 1..m.temporal.len()).flat_map(move |l| {
+        m.perms[l].iter().map(move |&d| (d, m.temporal[l][d.index()]))
+    })
+}
+
+/// Stationarity walk: fills of operand `T`'s child-level tile.
+fn fills(op: &TensorOp, m: &Mapping, t: Operand, child: usize) -> f64 {
+    let mut seen_relevant = false;
+    let mut f = 1.0f64;
+    for (d, fac) in loops_above(m, child) {
+        if fac == 1 {
+            continue;
+        }
+        if op.relevant(t, d) {
+            seen_relevant = true;
+        }
+        if seen_relevant {
+            f *= fac as f64;
+        }
+    }
+    f
+}
+
+/// Does a K loop with factor > 1 sit outside the first output-relevant
+/// loop above `child`? (⇒ evicted output tiles are partial.)
+fn psums_cross(op: &TensorOp, m: &Mapping, child: usize) -> bool {
+    let mut seen_relevant = false;
+    for (d, fac) in loops_above(m, child) {
+        if fac == 1 {
+            continue;
+        }
+        if op.relevant(Operand::Output, d) {
+            seen_relevant = true;
+        } else if d == Dim::K && seen_relevant {
+            return true;
+        }
+    }
+    false
+}
+
+/// Spatial extent over dimensions relevant to `T` (distinct data across
+/// the array; irrelevant spatial dims are multicast/reduced by the NoC).
+fn spatial_relevant(op: &TensorOp, m: &Mapping, t: Operand) -> f64 {
+    let mut e = 1.0;
+    for (d, f) in [m.spatial_row, m.spatial_col] {
+        if op.relevant(t, d) {
+            e *= f as f64;
+        }
+    }
+    e
+}
+
+/// Analyze one op on one sub-accelerator under one mapping.
+///
+/// Returns an error if the mapping is structurally invalid or exceeds a
+/// buffer capacity.
+pub fn analyze(op: &TensorOp, spec: &ArchSpec, m: &Mapping) -> Result<OpStats, MapError> {
+    m.validate(op, spec)?;
+    let nlevels = spec.levels.len();
+    let last = nlevels - 1;
+
+    // ---- Capacity checks -------------------------------------------------
+    // RF is per-PE: the spec stores aggregate capacity.
+    let rf_per_pe = spec.levels[0].size_words / spec.peak_macs().max(1);
+    let rf_tile: u64 = Operand::ALL.iter().map(|&t| tile_words(op, m, t, 0)).sum();
+    if rf_tile > rf_per_pe {
+        return Err(MapError::CapacityExceeded {
+            level: spec.levels[0].kind.name(),
+            tile: rf_tile,
+            cap: rf_per_pe,
+        });
+    }
+    for l in 1..last {
+        let tile: u64 = Operand::ALL.iter().map(|&t| tile_words(op, m, t, l)).sum();
+        if tile > spec.levels[l].size_words {
+            return Err(MapError::CapacityExceeded {
+                level: spec.levels[l].kind.name(),
+                tile,
+                cap: spec.levels[l].size_words,
+            });
+        }
+    }
+
+    // ---- Traffic per boundary --------------------------------------------
+    let macs = op.macs() as f64;
+    let padded_macs = Dim::ALL.iter().map(|&d| m.padded_dim(d) as f64).product::<f64>();
+    let padded_out: f64 = Dim::ALL
+        .iter()
+        .filter(|&&d| op.relevant(Operand::Output, d))
+        .map(|&d| m.padded_dim(d) as f64)
+        .product();
+    let active = m.active_pes() as f64;
+
+    let mut level_reads = vec![0.0f64; nlevels];
+    let mut level_writes = vec![0.0f64; nlevels];
+    let mut noc_words_total = 0.0f64;
+    let mut boundary_words: Vec<(LevelKind, f64)> = Vec::with_capacity(last);
+
+    for child in 0..last {
+        let parent = child + 1;
+        let mut boundary = 0.0f64;
+
+        for t in [Operand::InputA, Operand::InputB] {
+            let tile = tile_words(op, m, t, child) as f64;
+            let nfills = fills(op, m, t, child);
+            let (parent_reads, noc, child_writes) = if child == 0 {
+                // Spatial fan-out boundary: multicast discount on the
+                // parent port; every PE still receives its copy.
+                let distinct = nfills * tile * spatial_relevant(op, m, t);
+                let copies = nfills * tile * active;
+                (distinct, copies, copies)
+            } else {
+                let w = nfills * tile;
+                (w, w, w)
+            };
+            level_reads[parent] += parent_reads;
+            level_writes[child] += child_writes;
+            noc_words_total += noc;
+            boundary += parent_reads;
+        }
+
+        // Output: updates flow child→parent; partial tiles also return.
+        let t = Operand::Output;
+        let tile = tile_words(op, m, t, child) as f64;
+        let nfills = fills(op, m, t, child);
+        let up = if child == 0 {
+            // Reduction tree collapses spatial-K copies.
+            nfills * tile * spatial_relevant(op, m, t)
+        } else {
+            nfills * tile
+        };
+        let down = if psums_cross(op, m, child) { (up - padded_out).max(0.0) } else { 0.0 };
+        level_writes[parent] += up;
+        level_reads[parent] += down;
+        level_reads[child] += up; // child reads its tile to send up
+        level_writes[child] += down; // …and rewrites it on read-back
+        noc_words_total += up + down;
+        boundary += up + down;
+
+        boundary_words.push((spec.levels[parent].kind, boundary));
+    }
+
+    // ---- Datapath-adjacent RF accesses ------------------------------------
+    // Each MAC reads A and W, reads the previous partial (except the
+    // first accumulation into a fresh output) and writes the new one.
+    level_reads[0] += 2.0 * padded_macs + (padded_macs - padded_out).max(0.0);
+    level_writes[0] += padded_macs;
+
+    // ---- Latency -----------------------------------------------------------
+    let compute_cycles = m.compute_cycles() as f64;
+    let mut cycles = compute_cycles;
+    let mut bound = Bound::Compute;
+    let mut onchip_bound = compute_cycles;
+    for (i, &(kind, words)) in boundary_words.iter().enumerate() {
+        let bw = spec.levels[i + 1].bw_words_per_cycle;
+        let c = words / bw;
+        if c > cycles {
+            cycles = c;
+            bound = Bound::Memory(kind);
+        }
+        if kind != LevelKind::Dram && c > onchip_bound {
+            onchip_bound = c;
+        }
+    }
+
+    // ---- Energy ------------------------------------------------------------
+    let mac_energy = macs * spec.mac_energy_pj;
+    let noc_energy = noc_words_total * HOP_PJ;
+    let mut levels = Vec::with_capacity(nlevels);
+    let mut energy = mac_energy + noc_energy;
+    for (l, lv) in spec.levels.iter().enumerate() {
+        let e = (level_reads[l] + level_writes[l]) * lv.energy_pj_per_word;
+        energy += e;
+        levels.push(LevelStats {
+            kind: lv.kind,
+            reads: level_reads[l],
+            writes: level_writes[l],
+            energy_pj: e,
+        });
+    }
+
+    let dram_words = boundary_words.last().map(|&(_, w)| w).unwrap_or(0.0);
+    let utilization = (active / (spec.rows * spec.cols) as f64) * (macs / padded_macs);
+
+    Ok(OpStats {
+        cycles,
+        compute_cycles,
+        macs,
+        energy_pj: energy,
+        mac_energy_pj: mac_energy,
+        noc_energy_pj: noc_energy,
+        levels,
+        boundary_words,
+        dram_words,
+        utilization,
+        bound,
+        onchip_bound_cycles: onchip_bound,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::einsum::Phase;
+
+    /// Tiny machine where everything is hand-checkable:
+    /// 2×2 PEs, RF 8 w/PE, L1 256 w, LLB 4096 w.
+    fn tiny() -> ArchSpec {
+        let mut s = ArchSpec::leaf("tiny", 2, 2, 8, 256, 4096, 16.0, 4.0);
+        // Make energies round numbers for assertions.
+        s.levels[0].energy_pj_per_word = 1.0;
+        s.levels[1].energy_pj_per_word = 2.0;
+        s.levels[2].energy_pj_per_word = 10.0;
+        s.levels[3].energy_pj_per_word = 100.0;
+        s.mac_energy_pj = 0.5;
+        s
+    }
+
+    fn op_8x8x8() -> TensorOp {
+        TensorOp::gemm("g", Phase::Encoder, 8, 8, 8)
+    }
+
+    /// All-DRAM trivial mapping: every operand streams at full size.
+    #[test]
+    fn trivial_mapping_traffic_matches_closed_form() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        let m = Mapping::trivial(4, &op);
+        let s = analyze(&op, &spec, &m).unwrap();
+        assert_eq!(s.macs, 512.0);
+        assert_eq!(s.compute_cycles, 512.0); // 1 PE
+        // With a single scalar "tile" at RF/L1/LLB and all loops at DRAM:
+        // walk above LLB = DRAM block [K,N,M,B] (innermost-first).
+        // A (rel M,K): K relevant → ×8, N irrelevant after seen → ×8,
+        // M ×8, B(1) → fills=512, tile=1 ⇒ DRAM reads A = 512 = MACs.
+        let dram = s.levels.iter().find(|l| l.kind == LevelKind::Dram).unwrap();
+        // A: 512 reads; W: K inner relevant ⇒ 512 reads;
+        // O: fills walk K(rel? no, K first, not relevant, not seen →1),
+        //    N rel ×8, M rel ×8 → 64 up;
+        //    psum: K outside first relevant O loop? K is INNERMOST, so no.
+        assert_eq!(dram.reads, 512.0 + 512.0);
+        assert_eq!(dram.writes, 64.0);
+    }
+
+    /// If K is outermost at DRAM, output partial sums round-trip.
+    #[test]
+    fn outer_k_generates_psum_traffic() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        let mut m = Mapping::trivial(4, &op);
+        // DRAM block perm [M,N,B,K]: M innermost … K outermost.
+        m.perms[3] = [Dim::M, Dim::N, Dim::B, Dim::K];
+        let s = analyze(&op, &spec, &m).unwrap();
+        let dram = s.levels.iter().find(|l| l.kind == LevelKind::Dram).unwrap();
+        // O fills: M rel ×8, N rel ×8, K after seen ×8 = 512 up.
+        // down = 512 − 64 = 448 read-backs.
+        assert_eq!(dram.writes, 512.0);
+        // A reads: walk M (rel) ×8, N ×8, K ×8 = 512; W: M irrelevant &
+        // first → 1, then N rel ×8, K ×8 = 64·tile(8? no tile=1)… W tile=1,
+        // fills = 64 ⇒ 64 reads. Total reads = 512 + 64 + 448 psum readback.
+        assert_eq!(dram.reads, 512.0 + 64.0 + 448.0);
+    }
+
+    /// Buffering the weight tile at LLB removes its DRAM refetches.
+    #[test]
+    fn llb_buffering_cuts_dram_traffic() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        let mut m = Mapping::trivial(4, &op);
+        // Move K,N inside the LLB: weight (K×N = 64 words) resident.
+        m.temporal[3] = [1, 8, 1, 1]; // DRAM iterates M only
+        m.temporal[2] = [1, 1, 8, 8]; // LLB holds K×N
+        let s = analyze(&op, &spec, &m).unwrap();
+        let dram = s.levels.iter().find(|l| l.kind == LevelKind::Dram).unwrap();
+        // W: loops above LLB = DRAM [K,N,M,B] with only M(8) ≠ 1.
+        // M irrelevant to W and no relevant loop above ⇒ fills = 1 ⇒
+        // DRAM reads W = tile = 64 (compulsory only).
+        // A: tile at LLB = M_llb(1)·K(8) = 8; fills: M rel ×8 ⇒ 64 reads.
+        // O: tile at LLB = M(1)·N(8) = 8; fills: M ×8 ⇒ 64 up, no psums.
+        assert_eq!(dram.reads, 64.0 + 64.0);
+        assert_eq!(dram.writes, 64.0);
+        assert!(s.dram_words < 512.0 + 512.0 + 64.0);
+    }
+
+    /// Spatial mapping: multicast discount and compute speedup.
+    #[test]
+    fn spatial_multicast_and_utilization() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        let mut m = Mapping::trivial(4, &op);
+        m.spatial_row = (Dim::M, 2);
+        m.spatial_col = (Dim::N, 2);
+        m.temporal[3] = [1, 4, 4, 8]; // remaining M,N after spatial
+        let s = analyze(&op, &spec, &m).unwrap();
+        assert_eq!(s.compute_cycles, 128.0); // 512 MACs / 4 PEs
+        assert_eq!(s.utilization, 1.0);
+        // L1 reads of A: per-PE tile 1, per-PE fills = walk above RF:
+        // (spatial skipped) L1(1,1,1,1), LLB(1..), DRAM [K,N,M,B] →
+        // K ×8, N ×4, M ×4 = 128; distinct across array: A relevant to
+        // M-row (×2) not N-col → 128·2 = 256 L1 reads (multicast ×2 on N).
+        let l1 = s.levels.iter().find(|l| l.kind == LevelKind::L1).unwrap();
+        // A: 256; W: fills: K×8 rel, N rel ×4, M after seen ×4 ⇒ 128;
+        //    W distinct: N-col rel (×2), M-row no ⇒ 256.
+        // O: fills: K first not rel →1? K relevant? no. Walk [K,N,M,B]:
+        //    K skip(not rel, not seen), N rel → seen ×4, M ×4 = 16;
+        //    wait K is innermost: contributes nothing before N.
+        //    O up = 16 · tile(1) · spatial_rel(M,N → 2·2=4) = 64.
+        //    psums: K inside first relevant ⇒ none.
+        // Plus the L1→LLB boundary: O tile at L1 (2·2=4 words, fills 16)
+        // is read out of L1 on its way up: +64 reads. A and W tiles are
+        // written into L1 from the LLB: 256 + 256 writes; O written into
+        // L1 from the array: +64.
+        // L1 reads = A 256 + W 256 + O-up 64 = 576.
+        assert_eq!(l1.reads, 576.0);
+        assert_eq!(l1.writes, 576.0);
+    }
+
+    #[test]
+    fn capacity_violation_detected() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        let mut m = Mapping::trivial(4, &op);
+        // Put a 64-word weight tile in an 8-word/PE RF.
+        m.temporal[0] = [1, 1, 8, 8];
+        m.temporal[3] = [1, 8, 1, 1];
+        let err = analyze(&op, &spec, &m).unwrap_err();
+        assert!(matches!(err, MapError::CapacityExceeded { level: "RF", .. }));
+    }
+
+    #[test]
+    fn bandwidth_bound_detected() {
+        let op = TensorOp::gemm("lowreuse", Phase::Decode, 1, 512, 512);
+        let spec = tiny();
+        let mut m = Mapping::trivial(4, &op);
+        m.spatial_row = (Dim::N, 2);
+        m.spatial_col = (Dim::K, 2);
+        m.temporal[3] = [1, 1, 256, 256];
+        let s = analyze(&op, &spec, &m).unwrap();
+        // GEMV: DRAM must stream ≥ 512·512 weight words at 4 w/cyc
+        // while compute needs only 65536 cycles.
+        assert!(matches!(s.bound, Bound::Memory(LevelKind::Dram)));
+        assert!(s.cycles > s.compute_cycles);
+    }
+
+    #[test]
+    fn near_llb_spec_has_fewer_boundaries() {
+        let op = op_8x8x8();
+        let leaf = tiny();
+        let near = ArchSpec::near_llb("n", 2, 2, 8, 4096, 16.0, 4.0);
+        let ml = Mapping::trivial(4, &op);
+        let mn = Mapping::trivial(3, &op);
+        let sl = analyze(&op, &leaf, &ml).unwrap();
+        let sn = analyze(&op, &near, &mn).unwrap();
+        assert_eq!(sl.boundary_words.len(), 3);
+        assert_eq!(sn.boundary_words.len(), 2);
+        // Same compulsory DRAM traffic, less NoC/hierarchy energy.
+        assert!(sn.noc_energy_pj < sl.noc_energy_pj);
+    }
+
+    #[test]
+    fn energy_accounts_all_levels() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        let m = Mapping::trivial(4, &op);
+        let s = analyze(&op, &spec, &m).unwrap();
+        let sum: f64 = s.levels.iter().map(|l| l.energy_pj).sum::<f64>()
+            + s.mac_energy_pj
+            + s.noc_energy_pj;
+        assert!((sum - s.energy_pj).abs() < 1e-6);
+        assert!(s.level_energy(LevelKind::Dram) > s.level_energy(LevelKind::Llb));
+    }
+
+    /// Total MACs and compulsory traffic are mapping-invariant lower
+    /// bounds: any valid mapping moves at least the footprint at DRAM.
+    #[test]
+    fn compulsory_traffic_lower_bound() {
+        let op = op_8x8x8();
+        let spec = tiny();
+        for perm in crate::mapping::loopnest::CANON_PERMS {
+            let mut m = Mapping::trivial(4, &op);
+            m.perms[3] = perm;
+            let s = analyze(&op, &spec, &m).unwrap();
+            assert!(s.dram_words >= op.footprint_words() as f64);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Roofline view (paper Fig 1): compute roof + bandwidth partitioning
+//! across sub-accelerators vs a homogeneous machine.
+
+use crate::arch::partition::MachineConfig;
+
+/// One roofline: attainable MACs/cycle as a function of arithmetic
+/// intensity for a (sub-)machine.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    pub name: String,
+    /// Compute roof in MACs per cycle.
+    pub peak_macs: f64,
+    /// Memory bandwidth in words per cycle.
+    pub bw_words: f64,
+}
+
+impl Roofline {
+    /// Attainable throughput at arithmetic intensity `ai` (MACs/word).
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (ai * self.bw_words).min(self.peak_macs)
+    }
+
+    /// The tipping point: AI at which the machine turns compute-bound.
+    pub fn tipping_ai(&self) -> f64 {
+        self.peak_macs / self.bw_words
+    }
+}
+
+/// Rooflines of every sub-accelerator in a machine.
+pub fn machine_rooflines(m: &MachineConfig) -> Vec<Roofline> {
+    m.sub_accels
+        .iter()
+        .map(|s| Roofline {
+            name: format!("{} ({})", s.spec.name, s.role.name()),
+            peak_macs: s.spec.peak_macs() as f64,
+            bw_words: s.spec.dram().bw_words_per_cycle,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::partition::HardwareParams;
+    use crate::arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+
+    #[test]
+    fn attainable_follows_roofline() {
+        let r = Roofline { name: "t".into(), peak_macs: 1000.0, bw_words: 10.0 };
+        assert_eq!(r.tipping_ai(), 100.0);
+        assert_eq!(r.attainable(50.0), 500.0); // memory-bound
+        assert_eq!(r.attainable(200.0), 1000.0); // compute-bound
+    }
+
+    /// Paper §III-A: the high-reuse sub-accelerator has a higher compute
+    /// roof but LOWER bandwidth than the low-reuse one; its tipping point
+    /// moves right, the low-reuse one's moves left.
+    #[test]
+    fn heterogeneous_split_shifts_tipping_points() {
+        let homo = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let het = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let rh = machine_rooflines(&homo);
+        let rt = machine_rooflines(&het);
+        let base = rh[0].tipping_ai();
+        let high = &rt[0];
+        let low = &rt[1];
+        assert!(high.tipping_ai() > base);
+        assert!(low.tipping_ai() < base);
+        assert!(high.peak_macs > low.peak_macs);
+        assert!(high.bw_words < low.bw_words);
+    }
+}

@@ -1,0 +1,231 @@
+//! PJRT client wrapper: manifest parsing, compilation, execution.
+
+use crate::runtime::{input_value, INPUT_STRIDE};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Shape + dtype of one tensor (dtype is always f32 in this build).
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact as described by `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    /// Golden statistics of the (single) output on the deterministic
+    /// inputs, recorded by the python oracle at AOT time.
+    pub golden_sum: f64,
+    pub golden_absmax: f64,
+}
+
+/// Result of executing an artifact once.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub name: String,
+    pub output_sum: f64,
+    pub output_absmax: f64,
+    pub elements: usize,
+    pub wall_us: f64,
+    /// Relative error of `sum` vs the golden.
+    pub sum_rel_err: f64,
+}
+
+impl RunOutcome {
+    /// Numerics match the python oracle within tolerance.
+    pub fn passed(&self) -> bool {
+        self.sum_rel_err < 1e-3
+    }
+}
+
+struct Loaded {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: a CPU client plus every compiled artifact.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    loaded: Vec<Loaded>,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut loaded = Vec::new();
+        for spec in specs {
+            let path: PathBuf = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            loaded.push(Loaded { spec, exe });
+        }
+        Ok(Runtime { client, loaded })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.loaded.iter().map(|l| l.spec.name.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.loaded.iter().find(|l| l.spec.name == name).map(|l| &l.spec)
+    }
+
+    /// Generate the deterministic inputs for an artifact.
+    pub fn make_inputs(spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
+        spec.inputs
+            .iter()
+            .enumerate()
+            .map(|(idx, t)| {
+                let offset = idx as u64 * INPUT_STRIDE;
+                let data: Vec<f32> =
+                    (0..t.elements() as u64).map(|i| input_value(i + offset)).collect();
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Execute an artifact once and compare against its golden stats.
+    pub fn run(&self, name: &str) -> Result<RunOutcome> {
+        let l = self
+            .loaded
+            .iter()
+            .find(|l| l.spec.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let inputs = Self::make_inputs(&l.spec)?;
+        let t0 = Instant::now();
+        let result = l.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let wall_us = t0.elapsed().as_nanos() as f64 / 1e3;
+        // Lowered with return_tuple=True → single-element tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        let output_sum: f64 = values.iter().map(|&v| v as f64).sum();
+        let output_absmax =
+            values.iter().map(|&v| (v as f64).abs()).fold(0.0f64, f64::max);
+        let denom = l.spec.golden_sum.abs().max(1e-6);
+        let sum_rel_err = (output_sum - l.spec.golden_sum).abs() / denom;
+        Ok(RunOutcome {
+            name: name.to_string(),
+            output_sum,
+            output_absmax,
+            elements: values.len(),
+            wall_us,
+            sum_rel_err,
+        })
+    }
+
+    /// Execute an artifact `iters` times, returning mean latency in µs
+    /// (the serving-metric measurement used by `examples/e2e_validate`).
+    pub fn bench(&self, name: &str, iters: usize) -> Result<f64> {
+        let l = self
+            .loaded
+            .iter()
+            .find(|l| l.spec.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let inputs = Self::make_inputs(&l.spec)?;
+        // Warm-up.
+        let _ = l.exe.execute::<xla::Literal>(&inputs)?;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let bufs = l.exe.execute::<xla::Literal>(&inputs)?;
+            // Force completion.
+            let _ = bufs[0][0].to_literal_sync()?;
+        }
+        Ok(t0.elapsed().as_nanos() as f64 / 1e3 / iters as f64)
+    }
+}
+
+/// Parse `manifest.json`.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+    let arts = j
+        .get("artifacts")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+    let mut out = Vec::new();
+    for a in arts {
+        let name = a
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("artifact missing name"))?
+            .to_string();
+        let file = a
+            .get("file")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+            .to_string();
+        let inputs_json = a
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?;
+        let mut inputs = Vec::new();
+        for i in inputs_json {
+            let shape: Vec<usize> = i
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("input missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?;
+            if shape.is_empty() {
+                bail!("artifact {name}: empty input shape");
+            }
+            inputs.push(TensorSpec { shape });
+        }
+        let golden_sum = a
+            .get("golden_sum")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("artifact {name} missing golden_sum"))?;
+        let golden_absmax =
+            a.get("golden_absmax").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        out.push(ArtifactSpec { name, file, inputs, golden_sum, golden_absmax });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let text = r#"{"artifacts":[
+            {"name":"gemm","file":"gemm.hlo.txt",
+             "inputs":[{"shape":[4,8]},{"shape":[8,4]}],
+             "golden_sum": 1.25, "golden_absmax": 0.5}]}"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].inputs[0].elements(), 32);
+        assert_eq!(specs[0].golden_sum, 1.25);
+    }
+
+    #[test]
+    fn rejects_malformed_manifest() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest(r#"{"artifacts":[{"name":"x"}]}"#).is_err());
+        assert!(parse_manifest(
+            r#"{"artifacts":[{"name":"x","file":"f","inputs":[{"shape":[]}],"golden_sum":0}]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT runtime: load AOT-compiled artifacts and execute them.
+//!
+//! The python build step (`make artifacts`) lowers the L2 JAX model
+//! (which calls the L1 Pallas kernels) to **HLO text** and writes a
+//! `manifest.json` describing each artifact's inputs and golden outputs.
+//! This module — the only place Rust touches XLA — loads the text with
+//! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//! client, and executes it with deterministically generated inputs,
+//! checking the results against the goldens the python oracle recorded.
+//!
+//! HLO *text* is the interchange format because jax ≥ 0.5 serialises
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod validate;
+
+pub use client::{Runtime, RunOutcome, TensorSpec};
+pub use validate::{validate_all, ValidationReport};
+
+/// Deterministic input pattern shared with `python/compile/aot.py`:
+/// `val(i) = ((i mod 251) - 125) / 251`, exactly representable in f32 on
+/// both sides.
+pub fn input_value(i: u64) -> f32 {
+    ((i % 251) as f32 - 125.0) / 251.0
+}
+
+/// Per-input index offset so each operand gets distinct data.
+pub const INPUT_STRIDE: u64 = 1_000_003;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_matches_python_formula() {
+        assert_eq!(input_value(0), -125.0 / 251.0);
+        assert_eq!(input_value(125), 0.0);
+        assert_eq!(input_value(251), -125.0 / 251.0); // periodic
+        assert!(input_value(1000) > -1.0 && input_value(1000) < 1.0);
+    }
+}

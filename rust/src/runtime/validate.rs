@@ -1,0 +1,50 @@
+//! End-to-end validation: execute every artifact and check numerics
+//! against the python oracle's goldens, plus consistency between the
+//! functional workload (real einsum shapes) and the analytical model.
+
+use crate::runtime::client::{Runtime, RunOutcome};
+use anyhow::Result;
+use std::path::Path;
+
+/// Outcome of validating one artifact.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub outcome: RunOutcome,
+    pub ok: bool,
+}
+
+/// Run every artifact in `dir` and validate numerics.
+pub fn validate_all(dir: &Path) -> Result<Vec<ValidationReport>> {
+    let rt = Runtime::load(dir)?;
+    let names: Vec<String> = rt.artifact_names().iter().map(|s| s.to_string()).collect();
+    let mut out = Vec::new();
+    for name in names {
+        let outcome = rt.run(&name)?;
+        let ok = outcome.passed();
+        out.push(ValidationReport { outcome, ok });
+    }
+    Ok(out)
+}
+
+/// Render validation reports as a table.
+pub fn render_reports(reports: &[ValidationReport]) -> String {
+    let mut t = crate::util::table::Table::new(&[
+        "artifact",
+        "elements",
+        "output sum",
+        "golden rel err",
+        "wall µs",
+        "status",
+    ]);
+    for r in reports {
+        t.row(&[
+            r.outcome.name.clone(),
+            r.outcome.elements.to_string(),
+            format!("{:.4}", r.outcome.output_sum),
+            format!("{:.2e}", r.outcome.sum_rel_err),
+            format!("{:.1}", r.outcome.wall_us),
+            if r.ok { "PASS".into() } else { "FAIL".into() },
+        ]);
+    }
+    t.render()
+}

@@ -1,0 +1,241 @@
+//! Bench harness (criterion replacement) for `harness = false` benches.
+//!
+//! Two roles:
+//!
+//! 1. **Timing**: [`bench_fn`] warm-ups, runs timed iterations until a
+//!    wall-clock budget or iteration cap is hit, and reports
+//!    median/mean/p95 with outlier-robust statistics.
+//! 2. **Figure output**: the paper-reproduction benches mostly *evaluate
+//!    models* rather than time code; [`Series`] collects labelled rows
+//!    and renders them as aligned text plus machine-readable JSON, so
+//!    `cargo bench` regenerates each paper table/figure.
+
+use super::json::Json;
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark target.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   median {:>12}   mean {:>12}   p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, printing and returning statistics.
+///
+/// Runs a short warm-up, then samples until `budget` elapses or
+/// `max_iters` samples are collected (min 10 samples).
+pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, max_iters: usize, mut f: F) -> Timing {
+    // Warm-up: a few calls, also used to size batches for fast functions.
+    let warm_start = Instant::now();
+    f();
+    let single = warm_start.elapsed().as_nanos().max(1) as f64;
+    let batch = if single < 1e4 { (1e5 / single).ceil() as usize } else { 1 }.max(1);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 10 || (start.elapsed() < budget && samples.len() < max_iters) {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let timing = Timing {
+        name: name.to_string(),
+        iters: n * batch,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        median_ns: samples[n / 2],
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_ns: samples[0],
+    };
+    println!("{}", timing.report());
+    timing
+}
+
+/// A labelled series of (row-label, value) pairs — one paper bar group /
+/// table column.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub rows: Vec<(String, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, label: &str, value: f64) {
+        self.rows.push((label.into(), value));
+    }
+
+    pub fn get(&self, label: &str) -> Option<f64> {
+        self.rows.iter().find(|(l, _)| l == label).map(|(_, v)| *v)
+    }
+}
+
+/// A figure: several series sharing row labels, rendered like the
+/// paper's grouped bar charts.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub value_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: &str, value_label: &str) -> Figure {
+        Figure { title: title.into(), value_label: value_label.into(), series: Vec::new() }
+    }
+
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    /// All row labels in first-appearance order.
+    fn labels(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for s in &self.series {
+            for (l, _) in &s.rows {
+                if !out.iter().any(|x| x == l) {
+                    out.push(l.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Render an aligned text table with a unicode bar per cell,
+    /// normalised to the figure max.
+    pub fn render(&self) -> String {
+        let labels = self.labels();
+        let max = self
+            .series
+            .iter()
+            .flat_map(|s| s.rows.iter().map(|(_, v)| *v))
+            .fold(0.0f64, f64::max)
+            .max(1e-300);
+        let lw = labels.iter().map(|l| l.len()).max().unwrap_or(4).max(8);
+        let mut out = format!("== {} ==  ({})\n", self.title, self.value_label);
+        out.push_str(&format!("{:<lw$}", ""));
+        for s in &self.series {
+            out.push_str(&format!("  {:>22}", s.name));
+        }
+        out.push('\n');
+        for l in &labels {
+            out.push_str(&format!("{l:<lw$}"));
+            for s in &self.series {
+                match s.get(l) {
+                    Some(v) => {
+                        let bar_len = ((v / max) * 10.0).round() as usize;
+                        let bar: String = "▇".repeat(bar_len.max(if v > 0.0 { 1 } else { 0 }));
+                        out.push_str(&format!("  {v:>10.4} {bar:<11}"));
+                    }
+                    None => out.push_str(&format!("  {:>10} {:<11}", "-", "")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable form, written next to the text rendering.
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|s| {
+                let rows: Vec<Json> = s
+                    .rows
+                    .iter()
+                    .map(|(l, v)| Json::obj().with("label", l.as_str()).with("value", *v))
+                    .collect();
+                Json::obj().with("name", s.name.as_str()).with("rows", rows)
+            })
+            .collect();
+        Json::obj()
+            .with("title", self.title.as_str())
+            .with("value_label", self.value_label.as_str())
+            .with("series", series)
+    }
+
+    /// Print the figure and persist JSON under `target/figures/`.
+    pub fn emit(&self, file_stem: &str) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("target/figures");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{file_stem}.json"));
+        if let Err(e) = std::fs::write(&path, self.to_json().to_string_pretty()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("[figure json: {}]\n", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_sane_stats() {
+        let t = bench_fn("noop-ish", Duration::from_millis(20), 50, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(t.iters >= 10);
+        assert!(t.min_ns <= t.median_ns);
+        assert!(t.median_ns <= t.p95_ns + 1.0);
+    }
+
+    #[test]
+    fn figure_renders_all_series() {
+        let mut fig = Figure::new("Fig X", "speedup");
+        let mut a = Series::new("bw=2048");
+        a.push("homogeneous", 1.0);
+        a.push("cross-node", 1.4);
+        let mut b = Series::new("bw=512");
+        b.push("homogeneous", 1.0);
+        fig.add(a);
+        fig.add(b);
+        let text = fig.render();
+        assert!(text.contains("homogeneous"));
+        assert!(text.contains("bw=2048"));
+        assert!(text.contains("cross-node"));
+        let j = fig.to_json();
+        assert_eq!(j.get("series").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,248 @@
+//! Declarative command-line parsing (clap replacement).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! auto-generated `--help`. Used by `harp` (the main binary), the
+//! examples and the bench binaries.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Argument specification for one command.
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    name: String,
+    about: String,
+    options: Vec<OptDef>,
+    positionals: Vec<PosDef>,
+}
+
+#[derive(Debug)]
+struct OptDef {
+    key: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+#[derive(Debug)]
+struct PosDef {
+    key: String,
+    help: String,
+    required: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl ArgSpec {
+    pub fn new(name: &str, about: &str) -> ArgSpec {
+        ArgSpec { name: name.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// A boolean `--flag`.
+    pub fn flag(mut self, key: &str, help: &str) -> Self {
+        self.options.push(OptDef {
+            key: key.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// A `--key <value>` option with optional default.
+    pub fn opt(mut self, key: &str, default: Option<&str>, help: &str) -> Self {
+        self.options.push(OptDef {
+            key: key.into(),
+            help: help.into(),
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// A positional argument.
+    pub fn pos(mut self, key: &str, required: bool, help: &str) -> Self {
+        self.positionals.push(PosDef { key: key.into(), help: help.into(), required });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            if p.required {
+                s.push_str(&format!(" <{}>", p.key));
+            } else {
+                s.push_str(&format!(" [{}]", p.key));
+            }
+        }
+        if !self.options.is_empty() {
+            s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+            for o in &self.options {
+                let head = if o.takes_value {
+                    format!("  --{} <value>", o.key)
+                } else {
+                    format!("  --{}", o.key)
+                };
+                let def = match &o.default {
+                    Some(d) => format!(" [default: {d}]"),
+                    None => String::new(),
+                };
+                s.push_str(&format!("{head:<28}{}{}\n", o.help, def));
+            }
+        } else {
+            s.push('\n');
+        }
+        for p in &self.positionals {
+            s.push_str(&format!("  {:<26}{}\n", format!("<{}>", p.key), p.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (not including the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        for o in &self.options {
+            if let Some(d) = &o.default {
+                out.values.insert(o.key.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let def = self
+                    .options
+                    .iter()
+                    .find(|o| o.key == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.help())))?;
+                if def.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} requires a value")))?
+                        }
+                    };
+                    out.values.insert(key, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{key} does not take a value")));
+                    }
+                    out.flags.push(key);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        let required = self.positionals.iter().filter(|p| p.required).count();
+        if out.positionals.len() < required {
+            return Err(CliError(format!(
+                "missing required positional argument(s)\n\n{}",
+                self.help()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        let raw = self.get(key).ok_or_else(|| CliError(format!("missing --{key}")))?;
+        raw.parse().map_err(|_| CliError(format!("--{key}: expected integer, got '{raw}'")))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        let raw = self.get(key).ok_or_else(|| CliError(format!("missing --{key}")))?;
+        raw.parse().map_err(|_| CliError(format!("--{key}: expected number, got '{raw}'")))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("bw", Some("2048"), "bandwidth")
+            .opt("workload", None, "workload name")
+            .flag("verbose", "chatty")
+            .pos("config", false, "config path")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("bw").unwrap(), 2048);
+        assert!(a.get("workload").is_none());
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = spec()
+            .parse(&argv(&["--bw", "512", "--workload=gpt3", "--verbose", "cfg.json"]))
+            .unwrap();
+        assert_eq!(a.get_usize("bw").unwrap(), 512);
+        assert_eq!(a.get("workload"), Some("gpt3"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(0), Some("cfg.json"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(spec().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_carrier() {
+        let err = spec().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("USAGE"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&argv(&["--bw"])).is_err());
+    }
+}

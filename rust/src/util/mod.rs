@@ -1,0 +1,26 @@
+//! Substrate utilities implemented from scratch.
+//!
+//! The build image is offline and only ships the `xla` crate's dependency
+//! closure, so the usual ecosystem crates are unavailable. Each submodule
+//! replaces one of them with a small, tested implementation:
+//!
+//! - [`json`] — parser + serializer (replaces `serde_json`), used for
+//!   experiment configs, artifact manifests and machine-readable reports.
+//! - [`cli`] — declarative flag/positional parser (replaces `clap`).
+//! - [`rng`] — xorshift64* seeded PRNG (replaces `rand`), used by the
+//!   mapper's random sampling so searches are reproducible.
+//! - [`prop`] — mini property-testing runner (replaces `proptest`) with
+//!   shrinking over integer-vector inputs.
+//! - [`benchkit`] — timing/statistics harness for `cargo bench` binaries
+//!   (replaces `criterion`).
+//! - [`threadpool`] — scoped worker pool for parallel map-space sweeps
+//!   (replaces `rayon`/`tokio` for this workload).
+//! - [`table`] — fixed-width text table renderer for paper-style output.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod threadpool;

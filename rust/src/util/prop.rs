@@ -1,0 +1,171 @@
+//! Mini property-based testing runner (proptest replacement).
+//!
+//! Generates random cases from a seeded [`Rng`](super::rng::Rng), runs a
+//! predicate, and on failure greedily shrinks the failing input before
+//! reporting. Inputs are modelled as `Vec<usize>` drawn from per-element
+//! ranges — enough to express dimension tuples, factor vectors and seeds,
+//! which is what HARP's invariants quantify over.
+
+use super::rng::Rng;
+
+/// Inclusive ranges for each generated element.
+pub struct Gen {
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Gen {
+    /// `n` elements, each uniform in `[lo, hi]`.
+    pub fn uniform(n: usize, lo: usize, hi: usize) -> Gen {
+        Gen { ranges: vec![(lo, hi); n] }
+    }
+
+    /// Explicit per-element ranges.
+    pub fn ranges(ranges: Vec<(usize, usize)>) -> Gen {
+        Gen { ranges }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        self.ranges.iter().map(|&(lo, hi)| rng.range(lo, hi)).collect()
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure {
+    pub input: Vec<usize>,
+    pub message: String,
+    pub shrunk_from: Vec<usize>,
+}
+
+/// Run `cases` random checks of `prop` over inputs from `gen`.
+///
+/// `prop` returns `Ok(())` on success, `Err(reason)` on violation.
+/// Panics with a readable report (including the shrunk counterexample)
+/// on the first failure — call it from `#[test]` functions.
+pub fn check<F>(name: &str, seed: u64, cases: usize, gen: &Gen, prop: F)
+where
+    F: Fn(&[usize]) -> Result<(), String>,
+{
+    if let Some(fail) = check_quiet(seed, cases, gen, &prop) {
+        panic!(
+            "property '{name}' failed\n  counterexample: {:?}\n  (shrunk from {:?})\n  reason: {}",
+            fail.input, fail.shrunk_from, fail.message
+        );
+    }
+}
+
+/// Like [`check`] but returns the failure instead of panicking (used to
+/// test the runner itself).
+pub fn check_quiet<F>(seed: u64, cases: usize, gen: &Gen, prop: &F) -> Option<Failure>
+where
+    F: Fn(&[usize]) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (shrunk, msg) = shrink(gen, input.clone(), msg, prop);
+            return Some(Failure { input: shrunk, message: msg, shrunk_from: input });
+        }
+    }
+    None
+}
+
+/// Per-element shrink: binary-search each element down toward its lower
+/// bound, keeping the smallest value that still fails. Repeats passes
+/// until a fixed point (elements can unlock each other).
+fn shrink<F>(
+    gen: &Gen,
+    mut input: Vec<usize>,
+    mut msg: String,
+    prop: &F,
+) -> (Vec<usize>, String)
+where
+    F: Fn(&[usize]) -> Result<(), String>,
+{
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for i in 0..input.len() {
+            let mut lo = gen.ranges[i].0;
+            let mut hi = input[i];
+            // Invariant: `hi` fails. Find the smallest failing value.
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                let mut candidate = input.clone();
+                candidate[i] = mid;
+                match prop(&candidate) {
+                    Err(m) => {
+                        hi = mid;
+                        msg = m;
+                    }
+                    Ok(()) => lo = mid + 1,
+                }
+            }
+            if hi < input[i] {
+                input[i] = hi;
+                progress = true;
+            }
+        }
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = Gen::uniform(3, 1, 100);
+        check("sum-positive", 1, 200, &gen, |v| {
+            if v.iter().sum::<usize>() >= 3 {
+                Ok(())
+            } else {
+                Err("sum too small".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let gen = Gen::uniform(1, 0, 1000);
+        let fail = check_quiet(7, 500, &gen, &|v: &[usize]| {
+            if v[0] < 50 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        })
+        .expect("must fail");
+        // Greedy halving should land exactly on the boundary value 50.
+        assert_eq!(fail.input, vec![50]);
+    }
+
+    #[test]
+    fn respects_ranges() {
+        let gen = Gen::ranges(vec![(2, 4), (10, 10)]);
+        check("in-range", 3, 100, &gen, |v| {
+            if (2..=4).contains(&v[0]) && v[1] == 10 {
+                Ok(())
+            } else {
+                Err(format!("out of range: {v:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_counterexample() {
+        let gen = Gen::uniform(2, 0, 99);
+        let p = |v: &[usize]| {
+            if v[0] + v[1] < 150 {
+                Ok(())
+            } else {
+                Err("sum".to_string())
+            }
+        };
+        let a = check_quiet(11, 300, &gen, &p).unwrap();
+        let b = check_quiet(11, 300, &gen, &p).unwrap();
+        assert_eq!(a.input, b.input);
+    }
+}

@@ -1,0 +1,89 @@
+//! Scoped parallel map over an index range (rayon/tokio replacement).
+//!
+//! The mapper evaluates thousands of independent candidate mappings per
+//! operation; [`parallel_map`] fans a work range out over OS threads with
+//! an atomic work-stealing cursor and collects results in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (respects `HARP_THREADS`, defaults to
+/// available parallelism, capped at 16).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("HARP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Apply `f` to every index in `0..n` on `threads` workers; returns the
+/// results ordered by index. `f` must be `Sync` (called concurrently).
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.into_inner().unwrap().expect("worker completed")).collect()
+}
+
+/// Parallel fold: map each index then reduce with `combine`, seeded by
+/// `init`. Reduction order is deterministic (index order).
+pub fn parallel_fold<T, A, F, C>(n: usize, threads: usize, f: F, init: A, combine: C) -> A
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    C: Fn(A, T) -> A,
+{
+    parallel_map(n, threads, f).into_iter().fold(init, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(1000, 8, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn fold_matches_serial() {
+        let total = parallel_fold(500, 4, |i| i as u64, 0u64, |a, b| a + b);
+        assert_eq!(total, (0..500u64).sum());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        assert_eq!(parallel_map(10, 1, |i| i), (0..10).collect::<Vec<_>>());
+    }
+}

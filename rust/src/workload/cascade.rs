@@ -1,0 +1,207 @@
+//! Cascades: DAGs of tensor operations with producer→consumer edges.
+//!
+//! The dependency structure is what distinguishes intra-cascade
+//! partitioning (BERT: logit may only overlap V-generation) from
+//! inter-cascade partitioning (GPT/Llama: the prefill and decode
+//! sub-cascades are independent at batch granularity) — paper §II-B, §III-B.
+
+use super::einsum::{Phase, TensorOp};
+
+/// A directed acyclic graph of tensor operations.
+#[derive(Debug, Clone, Default)]
+pub struct Cascade {
+    pub name: String,
+    pub ops: Vec<TensorOp>,
+    /// Edges as (producer index, consumer index).
+    pub deps: Vec<(usize, usize)>,
+}
+
+impl Cascade {
+    pub fn new(name: &str) -> Cascade {
+        Cascade { name: name.into(), ops: Vec::new(), deps: Vec::new() }
+    }
+
+    /// Append an operation, returning its index.
+    pub fn push(&mut self, op: TensorOp) -> usize {
+        self.ops.push(op);
+        self.ops.len() - 1
+    }
+
+    /// Add a dependency edge; panics on out-of-range indices.
+    pub fn dep(&mut self, producer: usize, consumer: usize) {
+        assert!(producer < self.ops.len() && consumer < self.ops.len());
+        self.deps.push((producer, consumer));
+    }
+
+    /// Indices of direct predecessors of `op`.
+    pub fn predecessors(&self, op: usize) -> Vec<usize> {
+        self.deps.iter().filter(|(_, c)| *c == op).map(|(p, _)| *p).collect()
+    }
+
+    /// Indices of direct successors of `op`.
+    pub fn successors(&self, op: usize) -> Vec<usize> {
+        self.deps.iter().filter(|(p, _)| *p == op).map(|(_, c)| *c).collect()
+    }
+
+    /// Kahn topological order; `Err` if the graph has a cycle.
+    pub fn topo_order(&self) -> Result<Vec<usize>, String> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        for &(_, c) in &self.deps {
+            indeg[c] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for s in self.successors(i) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if order.len() == n {
+            Ok(order)
+        } else {
+            Err(format!("cascade '{}' contains a cycle", self.name))
+        }
+    }
+
+    /// Validate: acyclic, no self-edges, no duplicate edges.
+    pub fn validate(&self) -> Result<(), String> {
+        for &(p, c) in &self.deps {
+            if p == c {
+                return Err(format!("self-dependency on op {p}"));
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.deps {
+            if !seen.insert(*e) {
+                return Err(format!("duplicate edge {e:?}"));
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Total MACs across all operations (incl. repetitions).
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.total_macs()).sum()
+    }
+
+    /// Critical-path length under a per-op latency function
+    /// (`latency(i)` must already include the op's `count` repetitions).
+    pub fn critical_path<F: Fn(usize) -> f64>(&self, latency: F) -> f64 {
+        let order = self.topo_order().expect("valid DAG");
+        let mut finish = vec![0.0f64; self.ops.len()];
+        // Forward pass in topological order.
+        for &i in &order {
+            let start = self
+                .predecessors(i)
+                .into_iter()
+                .map(|p| finish[p])
+                .fold(0.0f64, f64::max);
+            finish[i] = start + latency(i);
+        }
+        finish.into_iter().fold(0.0f64, f64::max)
+    }
+
+    /// Ops of a given phase.
+    pub fn ops_in_phase(&self, phase: Phase) -> Vec<usize> {
+        (0..self.ops.len()).filter(|&i| self.ops[i].phase == phase).collect()
+    }
+
+    /// Merge another cascade in (no cross-edges added); returns the index
+    /// offset applied to `other`'s ops. Used to join prefill + decode
+    /// sub-cascades into one inter-cascade workload.
+    pub fn merge(&mut self, other: &Cascade) -> usize {
+        let offset = self.ops.len();
+        self.ops.extend(other.ops.iter().cloned());
+        self.deps.extend(other.deps.iter().map(|&(p, c)| (p + offset, c + offset)));
+        offset
+    }
+
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "cascade '{}': {} ops, {} edges, {:.3e} MACs\n",
+            self.name,
+            self.ops.len(),
+            self.deps.len(),
+            self.total_macs() as f64
+        );
+        for op in &self.ops {
+            s.push_str("  ");
+            s.push_str(&op.describe());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::einsum::Phase;
+
+    fn diamond() -> Cascade {
+        // a → b, a → c, b → d, c → d
+        let mut g = Cascade::new("diamond");
+        let a = g.push(TensorOp::gemm("a", Phase::Encoder, 4, 4, 4));
+        let b = g.push(TensorOp::gemm("b", Phase::Encoder, 4, 4, 4));
+        let c = g.push(TensorOp::gemm("c", Phase::Encoder, 4, 4, 4));
+        let d = g.push(TensorOp::gemm("d", Phase::Encoder, 4, 4, 4));
+        g.dep(a, b);
+        g.dep(a, c);
+        g.dep(b, d);
+        g.dep(c, d);
+        g
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> =
+            (0..4).map(|i| order.iter().position(|&x| x == i).unwrap()).collect();
+        for &(p, c) in &g.deps {
+            assert!(pos[p] < pos[c], "edge ({p},{c}) violated in {order:?}");
+        }
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let mut g = diamond();
+        g.dep(3, 0);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn critical_path_on_diamond() {
+        let g = diamond();
+        // Unit latency each → path a→b→d = 3.
+        assert_eq!(g.critical_path(|_| 1.0), 3.0);
+        // Weighted: a=1, b=5, c=2, d=1 → a→b→d = 7.
+        let lat = [1.0, 5.0, 2.0, 1.0];
+        assert_eq!(g.critical_path(|i| lat[i]), 7.0);
+    }
+
+    #[test]
+    fn merge_offsets_edges() {
+        let mut g = diamond();
+        let other = diamond();
+        let off = g.merge(&other);
+        assert_eq!(off, 4);
+        assert_eq!(g.ops.len(), 8);
+        assert!(g.deps.contains(&(4, 5)));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn phase_filter() {
+        let mut g = Cascade::new("mixed");
+        g.push(TensorOp::gemm("p", Phase::Prefill, 2, 2, 2));
+        g.push(TensorOp::gemm("d", Phase::Decode, 2, 2, 2));
+        assert_eq!(g.ops_in_phase(Phase::Prefill), vec![0]);
+        assert_eq!(g.ops_in_phase(Phase::Decode), vec![1]);
+    }
+}

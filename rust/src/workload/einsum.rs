@@ -1,0 +1,252 @@
+//! Tensor operations as batched-GEMM-shaped einsums.
+//!
+//! Every operation HARP evaluates is expressed over four dimensions
+//! `B × M × N × K` (batch, output rows, output cols, reduction):
+//!
+//! - GEMM:        `O[m,n] += A[m,k] * W[k,n]`            (`b = 1`)
+//! - BMM:         `O[b,m,n] += A[b,m,k] * B[b,k,n]`      (per-head attention)
+//! - Vector ops (softmax, layernorm, residual adds) are modelled as
+//!   `k = 1` einsums — one multiply-accumulate per output element, which
+//!   matches their O(1) arithmetic intensity.
+//!
+//! This is the same workload abstraction Timeloop's `problem` spec uses
+//! for matrix workloads, specialised to the shapes in the paper.
+
+/// The four einsum dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    B,
+    M,
+    N,
+    K,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 4] = [Dim::B, Dim::M, Dim::N, Dim::K];
+
+    pub fn index(self) -> usize {
+        match self {
+            Dim::B => 0,
+            Dim::M => 1,
+            Dim::N => 2,
+            Dim::K => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::B => "B",
+            Dim::M => "M",
+            Dim::N => "N",
+            Dim::K => "K",
+        }
+    }
+}
+
+/// The three operand tensors of an einsum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// Input / activation: `A[b, m, k]`.
+    InputA,
+    /// Weight / second input: `W[b?, k, n]`.
+    InputB,
+    /// Output: `O[b, m, n]` (read-modify-write over `k`).
+    Output,
+}
+
+impl Operand {
+    pub const ALL: [Operand; 3] = [Operand::InputA, Operand::InputB, Operand::Output];
+}
+
+/// Kind of operation; affects operand relevance (weights are shared
+/// across batch in a GEMM but private per batch in a BMM) and how the
+/// workload generators tag reuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Dense GEMM with batch folded into `m` (weights reused across rows).
+    Gemm,
+    /// Batched matrix multiply (attention logit/attend); all operands
+    /// carry the batch dimension.
+    Bmm,
+    /// Elementwise / reduction vector op modelled as `k = 1`.
+    Vector,
+}
+
+/// Which phase of the workload the operation belongs to. Used by the
+/// inter-cascade partitioner (prefill → high-reuse sub-accelerator,
+/// decode → low-reuse) and by the figure drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Encoder,
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Encoder => "encoder",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// One tensor operation in a cascade.
+#[derive(Debug, Clone)]
+pub struct TensorOp {
+    pub name: String,
+    pub kind: OpKind,
+    pub phase: Phase,
+    pub b: u64,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Number of back-to-back serial repetitions of this op (used to
+    /// represent the per-token decode loop compactly: each decode chunk
+    /// op is one representative shape repeated `count` times).
+    pub count: u64,
+}
+
+impl TensorOp {
+    pub fn gemm(name: &str, phase: Phase, m: u64, k: u64, n: u64) -> TensorOp {
+        TensorOp { name: name.into(), kind: OpKind::Gemm, phase, b: 1, m, n, k, count: 1 }
+    }
+
+    pub fn bmm(name: &str, phase: Phase, b: u64, m: u64, k: u64, n: u64) -> TensorOp {
+        TensorOp { name: name.into(), kind: OpKind::Bmm, phase, b, m, n, k, count: 1 }
+    }
+
+    pub fn vector(name: &str, phase: Phase, b: u64, m: u64, n: u64) -> TensorOp {
+        TensorOp { name: name.into(), kind: OpKind::Vector, phase, b, m, n, k: 1, count: 1 }
+    }
+
+    pub fn repeated(mut self, count: u64) -> TensorOp {
+        self.count = count;
+        self
+    }
+
+    /// Size of a dimension.
+    pub fn dim(&self, d: Dim) -> u64 {
+        match d {
+            Dim::B => self.b,
+            Dim::M => self.m,
+            Dim::N => self.n,
+            Dim::K => self.k,
+        }
+    }
+
+    /// Multiply-accumulates for ONE repetition.
+    pub fn macs(&self) -> u64 {
+        self.b * self.m * self.n * self.k
+    }
+
+    /// MACs including the `count` repetitions.
+    pub fn total_macs(&self) -> u64 {
+        self.macs() * self.count
+    }
+
+    /// Footprint in words of one operand (one repetition).
+    pub fn operand_words(&self, t: Operand) -> u64 {
+        Dim::ALL
+            .iter()
+            .filter(|&&d| self.relevant(t, d))
+            .map(|&d| self.dim(d))
+            .product()
+    }
+
+    /// Total compulsory traffic in words (each operand touched once).
+    pub fn footprint_words(&self) -> u64 {
+        Operand::ALL.iter().map(|&t| self.operand_words(t)).sum()
+    }
+
+    /// Is dimension `d` an index of operand `t`?
+    ///
+    /// `A[b,m,k]`, `W[(b),k,n]`, `O[b,m,n]`. For a GEMM the weight is
+    /// shared across batch (and `b = 1` anyway); for a BMM each batch has
+    /// its own `B` matrix.
+    pub fn relevant(&self, t: Operand, d: Dim) -> bool {
+        match (t, d) {
+            (Operand::InputA, Dim::B) => true,
+            (Operand::InputA, Dim::M) => true,
+            (Operand::InputA, Dim::K) => true,
+            (Operand::InputA, Dim::N) => false,
+            (Operand::InputB, Dim::B) => self.kind == OpKind::Bmm,
+            (Operand::InputB, Dim::M) => false,
+            (Operand::InputB, Dim::K) => true,
+            (Operand::InputB, Dim::N) => true,
+            (Operand::Output, Dim::B) => true,
+            (Operand::Output, Dim::M) => true,
+            (Operand::Output, Dim::K) => false,
+            (Operand::Output, Dim::N) => true,
+        }
+    }
+
+    /// Arithmetic intensity in MACs per word of compulsory traffic.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.macs() as f64 / self.footprint_words() as f64
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{:<18} {:>7} B={} M={} N={} K={} ×{}  ({:.1} MACs/word)",
+            self.name,
+            match self.kind {
+                OpKind::Gemm => "GEMM",
+                OpKind::Bmm => "BMM",
+                OpKind::Vector => "VEC",
+            },
+            self.b,
+            self.m,
+            self.n,
+            self.k,
+            self.count,
+            self.arithmetic_intensity()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_macs_and_footprint() {
+        let op = TensorOp::gemm("ffn", Phase::Encoder, 256, 1024, 4096);
+        assert_eq!(op.macs(), 256 * 1024 * 4096);
+        assert_eq!(op.operand_words(Operand::InputA), 256 * 1024);
+        assert_eq!(op.operand_words(Operand::InputB), 1024 * 4096);
+        assert_eq!(op.operand_words(Operand::Output), 256 * 4096);
+    }
+
+    #[test]
+    fn bmm_weights_carry_batch() {
+        let op = TensorOp::bmm("logit", Phase::Encoder, 16, 256, 64, 256);
+        assert_eq!(op.operand_words(Operand::InputB), 16 * 64 * 256);
+        let g = TensorOp::gemm("g", Phase::Encoder, 256, 64, 256);
+        assert_eq!(g.operand_words(Operand::InputB), 64 * 256);
+    }
+
+    #[test]
+    fn vector_ops_have_unit_intensity_scale() {
+        let op = TensorOp::vector("softmax", Phase::Encoder, 16, 256, 256);
+        assert!(op.arithmetic_intensity() < 1.0);
+        assert_eq!(op.k, 1);
+    }
+
+    #[test]
+    fn decode_gemv_is_low_intensity() {
+        // Decode-stage QKV generation: M=1 GEMV, AI ≈ 1.
+        let op = TensorOp::gemm("q_gen_dec", Phase::Decode, 1, 4096, 4096);
+        assert!(op.arithmetic_intensity() < 1.01);
+        // Prefill counterpart: AI in the hundreds.
+        let p = TensorOp::gemm("q_gen_pre", Phase::Prefill, 3000, 4096, 4096);
+        assert!(p.arithmetic_intensity() > 100.0);
+    }
+
+    #[test]
+    fn repetition_scales_macs() {
+        let op = TensorOp::gemm("d", Phase::Decode, 1, 64, 64).repeated(1000);
+        assert_eq!(op.total_macs(), 1000 * 64 * 64);
+    }
+}

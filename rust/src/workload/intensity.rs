@@ -1,0 +1,112 @@
+//! Arithmetic-intensity classification (paper §II-B, §III-A).
+//!
+//! Operations are assigned to sub-accelerators by reuse: an operation is
+//! *high-reuse* when its arithmetic intensity clears the machine's
+//! roofline tipping point (MACs/cycle ÷ words/cycle), scaled by a margin.
+//! Decode-phase operations sit 1–2 orders of magnitude below the tipping
+//! point, prefill/encoder GEMMs well above — exactly the paper's premise.
+
+use super::einsum::{Phase, TensorOp};
+
+/// Reuse class of an operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseClass {
+    High,
+    Low,
+}
+
+impl ReuseClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReuseClass::High => "high-reuse",
+            ReuseClass::Low => "low-reuse",
+        }
+    }
+}
+
+/// Classifier configuration.
+#[derive(Debug, Clone)]
+pub struct Classifier {
+    /// The roofline tipping point of the *whole* (unpartitioned) machine
+    /// in MACs per word.
+    pub tipping_ai: f64,
+    /// Fraction of the tipping point above which an op counts as
+    /// high-reuse. The paper's examples put high- and low-reuse ops 1-2
+    /// orders of magnitude apart, so the result is insensitive to this
+    /// margin; 0.5 keeps borderline encoder BMMs on the low-reuse side.
+    pub margin: f64,
+    /// If true, classify by phase when available: decode ⇒ low-reuse,
+    /// prefill ⇒ high-reuse (the paper's inter-cascade policy maps the
+    /// ENTIRE decode stage to the low-reuse sub-accelerator, including
+    /// its nominally square GEMMs).
+    pub phase_override: bool,
+}
+
+impl Classifier {
+    pub fn new(tipping_ai: f64) -> Classifier {
+        Classifier { tipping_ai, margin: 0.5, phase_override: true }
+    }
+
+    /// Classify one operation.
+    pub fn classify(&self, op: &TensorOp) -> ReuseClass {
+        if self.phase_override {
+            match op.phase {
+                Phase::Decode => return ReuseClass::Low,
+                Phase::Prefill => return ReuseClass::High,
+                Phase::Encoder => {}
+            }
+        }
+        if op.arithmetic_intensity() >= self.tipping_ai * self.margin {
+            ReuseClass::High
+        } else {
+            ReuseClass::Low
+        }
+    }
+}
+
+/// Roofline tipping point for a machine: the arithmetic intensity at
+/// which compute and memory bounds meet.
+pub fn tipping_point(macs_per_cycle: f64, words_per_cycle: f64) -> f64 {
+    macs_per_cycle / words_per_cycle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::einsum::TensorOp;
+
+    #[test]
+    fn tipping_point_matches_table_iii() {
+        // 40960 MACs, 2048 bits/cycle at 8-bit words = 256 words/cycle.
+        let tp = tipping_point(40960.0, 256.0);
+        assert_eq!(tp, 160.0);
+    }
+
+    #[test]
+    fn encoder_gemm_high_bmm_low() {
+        let c = Classifier::new(160.0);
+        let qkv = TensorOp::gemm("q", Phase::Encoder, 256, 1024, 1024);
+        let logit = TensorOp::bmm("logit", Phase::Encoder, 16, 256, 64, 256);
+        assert_eq!(c.classify(&qkv), ReuseClass::High);
+        assert_eq!(c.classify(&logit), ReuseClass::Low);
+    }
+
+    #[test]
+    fn phase_override_sends_decode_low() {
+        let c = Classifier::new(160.0);
+        // A decode FFN GEMM is square-ish but still goes low-reuse by phase.
+        let dec_ffn = TensorOp::gemm("ffn_dec", Phase::Decode, 1, 4096, 16384);
+        assert_eq!(c.classify(&dec_ffn), ReuseClass::Low);
+        let pre = TensorOp::gemm("ffn_pre", Phase::Prefill, 3000, 4096, 16384);
+        assert_eq!(c.classify(&pre), ReuseClass::High);
+    }
+
+    #[test]
+    fn intensity_only_when_override_disabled() {
+        let mut c = Classifier::new(160.0);
+        c.phase_override = false;
+        // Decode GEMV: AI ≈ 1 ⇒ low regardless.
+        let gemv = TensorOp::gemm("gemv", Phase::Decode, 1, 4096, 4096);
+        assert_eq!(c.classify(&gemv), ReuseClass::Low);
+    }
+}

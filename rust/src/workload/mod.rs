@@ -1,0 +1,11 @@
+//! Workload representation: tensor operations, arithmetic intensity,
+//! cascade dependency graphs, and the paper's transformer workload
+//! generators (Table II).
+
+pub mod cascade;
+pub mod einsum;
+pub mod intensity;
+pub mod transformer;
+
+pub use cascade::Cascade;
+pub use einsum::{OpKind, Phase, TensorOp};

@@ -1,0 +1,322 @@
+//! Transformer workload generators — paper Table II.
+//!
+//! | Workload | Model      | Partitioning  | d_model | Seq length |
+//! |----------|------------|---------------|---------|------------|
+//! | Encoder  | BERT-large | Intra-cascade | 1024    | 256        |
+//! | Decoder  | Llama-2    | Inter-cascade | 4096    | 3000/1000  |
+//! | Decoder  | GPT-3      | Inter-cascade | 12288   | 3000/1000  |
+//!
+//! An encoder attention layer is emitted as the einsum cascade
+//! `Q,K,V → logit → softmax → attend → deproj → FFN1 → FFN2` with the
+//! dependency structure that limits intra-cascade overlap (only logit and
+//! V-generation are independent — paper §II-B).
+//!
+//! A decoder workload is the prefill cascade (same einsums at prefill
+//! sequence length) merged with the decode cascade: the autoregressive
+//! token loop, compressed into chunks of `count`-repeated representative
+//! shapes with the KV length taken at each chunk's midpoint. Prefill and
+//! decode sub-cascades carry no cross-edges — they are decoupled at batch
+//! granularity (paper §II-B), which is what inter-cascade partitioning
+//! exploits.
+
+use super::cascade::Cascade;
+use super::einsum::{Phase, TensorOp};
+
+/// Model hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub d_model: u64,
+    pub heads: u64,
+    /// KV heads (grouped-query attention; == `heads` for plain MHA).
+    /// Llama-2 serves with GQA — KV traffic shrinks by `heads/kv_heads`.
+    pub kv_heads: u64,
+    /// Feed-forward inner dimension (4 × d_model for the paper's models).
+    pub d_ff: u64,
+    /// Encoder / prefill sequence length.
+    pub seq: u64,
+    /// Number of generated tokens (decoder models only).
+    pub decode_tokens: u64,
+    /// Number of chunks the decode token loop is compressed into.
+    pub decode_chunks: u64,
+    /// Serving batch (continuous batching, as in the chatbot use-case of
+    /// Bambhaniya et al. [5] and NeuPIM): this many requests move through
+    /// prefill and decode together. Weights are shared across the batch
+    /// (folded into `M`); KV caches are per-request (batch multiplies the
+    /// BMM batch dimension). 1 for the encoder workload.
+    pub batch: u64,
+}
+
+impl TransformerConfig {
+    pub fn head_dim(&self) -> u64 {
+        self.d_model / self.heads
+    }
+
+    /// Query heads per KV group.
+    pub fn group_size(&self) -> u64 {
+        self.heads / self.kv_heads
+    }
+}
+
+/// BERT-large encoder workload (intra-cascade partitioning).
+pub fn bert_large() -> TransformerConfig {
+    TransformerConfig {
+        name: "BERT-large".into(),
+        d_model: 1024,
+        heads: 16,
+        kv_heads: 16,
+        d_ff: 4096,
+        seq: 256,
+        decode_tokens: 0,
+        decode_chunks: 0,
+        batch: 1,
+    }
+}
+
+/// Llama-2 decoder workload (inter-cascade partitioning, 3000/1000,
+/// chatbot serving batch with grouped-query attention).
+pub fn llama2() -> TransformerConfig {
+    TransformerConfig {
+        name: "Llama-2".into(),
+        d_model: 4096,
+        heads: 32,
+        kv_heads: 4, // GQA, group size 8 (the Llama-2-70B family grouping)
+        d_ff: 16384,
+        seq: 3000,
+        decode_tokens: 1000,
+        decode_chunks: 4,
+        batch: 64,
+    }
+}
+
+/// GPT-3 decoder workload (inter-cascade partitioning, 3000/1000,
+/// chatbot serving batch). Served with grouped KV heads (the serving
+/// configuration of the chatbot use-case [5]; Duplex evaluates the same
+/// GQA + continuous-batching regime): without KV grouping, batched
+/// decode is pure KV streaming and no bandwidth partition can beat a
+/// time-shared homogeneous machine — the prefill/decode balance the
+/// paper's Fig 6 exhibits requires it.
+pub fn gpt3() -> TransformerConfig {
+    TransformerConfig {
+        name: "GPT3".into(),
+        d_model: 12288,
+        heads: 96,
+        kv_heads: 12,
+        d_ff: 49152,
+        seq: 3000,
+        decode_tokens: 1000,
+        decode_chunks: 4,
+        batch: 64,
+    }
+}
+
+/// All three Table II workloads.
+pub fn paper_workloads() -> Vec<TransformerConfig> {
+    vec![bert_large(), llama2(), gpt3()]
+}
+
+/// Look a workload up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<TransformerConfig> {
+    let lower = name.to_ascii_lowercase();
+    match lower.as_str() {
+        "bert" | "bert-large" => Some(bert_large()),
+        "llama" | "llama2" | "llama-2" => Some(llama2()),
+        "gpt" | "gpt3" | "gpt-3" => Some(gpt3()),
+        _ => None,
+    }
+}
+
+/// One attention + FFN layer at sequence length `seq`, tagged `phase`.
+///
+/// Returns the cascade and the index of its final op (for chaining).
+fn attention_layer(
+    g: &mut Cascade,
+    cfg: &TransformerConfig,
+    phase: Phase,
+    seq: u64,
+    kv_len: u64,
+    suffix: &str,
+    count: u64,
+) -> (usize, usize) {
+    let d = cfg.d_model;
+    let dh = cfg.head_dim();
+    let nm = |base: &str| format!("{base}{suffix}");
+    // Serving batch: weights are shared across requests, so the batch
+    // folds into the GEMM row dimension; each request has its own KV
+    // cache, so the batch multiplies the BMM batch dimension. With GQA,
+    // `group_size` query heads share one KV head: the group folds into
+    // the BMM row dimension (K/V reuse across the group), and the BMM
+    // batch counts KV heads only.
+    let rows = seq * cfg.batch;
+    let bmm_b = cfg.kv_heads * cfg.batch;
+    let bmm_m = seq * cfg.group_size();
+
+    let q = g.push(TensorOp::gemm(&nm("q_gen"), phase, rows, d, d).repeated(count));
+    let k = g.push(TensorOp::gemm(&nm("k_gen"), phase, rows, d, d).repeated(count));
+    let v = g.push(TensorOp::gemm(&nm("v_gen"), phase, rows, d, d).repeated(count));
+    // logit: P[b,m,n] = Q[b,m,dh] · K^T[b,dh,n], n = kv length.
+    let logit =
+        g.push(TensorOp::bmm(&nm("logit"), phase, bmm_b, bmm_m, dh, kv_len).repeated(count));
+    let softmax =
+        g.push(TensorOp::vector(&nm("softmax"), phase, bmm_b, bmm_m, kv_len).repeated(count));
+    // attend: O[b,m,dh] = P[b,m,n] · V[b,n,dh].
+    let attend =
+        g.push(TensorOp::bmm(&nm("attend"), phase, bmm_b, bmm_m, kv_len, dh).repeated(count));
+    let deproj = g.push(TensorOp::gemm(&nm("deproj"), phase, rows, d, d).repeated(count));
+    let ffn1 = g.push(TensorOp::gemm(&nm("ffn1"), phase, rows, d, cfg.d_ff).repeated(count));
+    let ffn2 = g.push(TensorOp::gemm(&nm("ffn2"), phase, rows, cfg.d_ff, d).repeated(count));
+
+    // Dependency structure (paper §II-B): logit needs Q and K; attend
+    // needs softmax(P) and V. V-generation is therefore the only GEMM
+    // that can overlap logit — the limited intra-cascade opportunity.
+    g.dep(q, logit);
+    g.dep(k, logit);
+    g.dep(logit, softmax);
+    g.dep(softmax, attend);
+    g.dep(v, attend);
+    g.dep(attend, deproj);
+    g.dep(deproj, ffn1);
+    g.dep(ffn1, ffn2);
+
+    (q, ffn2)
+}
+
+/// Encoder cascade (BERT): one attention layer at `cfg.seq`.
+pub fn encoder_cascade(cfg: &TransformerConfig) -> Cascade {
+    let mut g = Cascade::new(&cfg.name);
+    attention_layer(&mut g, cfg, Phase::Encoder, cfg.seq, cfg.seq, "", 1);
+    g.validate().expect("encoder cascade is a DAG");
+    g
+}
+
+/// Decoder cascade (GPT-3 / Llama-2): prefill layer + compressed decode
+/// token loop. No cross-edges between prefill and decode — the scheduler
+/// may overlap them freely (inter-cascade decoupling).
+pub fn decoder_cascade(cfg: &TransformerConfig) -> Cascade {
+    assert!(cfg.decode_tokens > 0, "decoder cascade requires decode_tokens");
+    let mut g = Cascade::new(&cfg.name);
+    attention_layer(&mut g, cfg, Phase::Prefill, cfg.seq, cfg.seq, "_pre", 1);
+
+    // Decode: `decode_tokens` single-token steps, compressed into chunks.
+    // Chunk c covers tokens [c·T/C, (c+1)·T/C) with KV length sampled at
+    // the chunk midpoint; its ops repeat count times back-to-back.
+    let chunks = cfg.decode_chunks.max(1);
+    let per = cfg.decode_tokens / chunks;
+    let mut prev_tail: Option<usize> = None;
+    for c in 0..chunks {
+        let count = if c == chunks - 1 { cfg.decode_tokens - per * (chunks - 1) } else { per };
+        let kv_mid = cfg.seq + c * per + count / 2;
+        let (head, tail) = attention_layer(
+            &mut g,
+            cfg,
+            Phase::Decode,
+            1,
+            kv_mid,
+            &format!("_dec{c}"),
+            count,
+        );
+        // Tokens are generated serially: chain chunks.
+        if let Some(t) = prev_tail {
+            // Head here is q_gen; k_gen/v_gen of the chunk are head+1, head+2.
+            g.dep(t, head);
+            g.dep(t, head + 1);
+            g.dep(t, head + 2);
+        }
+        prev_tail = Some(tail);
+    }
+    g.validate().expect("decoder cascade is a DAG");
+    g
+}
+
+/// The cascade for a workload config (encoder or decoder shape).
+pub fn cascade_for(cfg: &TransformerConfig) -> Cascade {
+    if cfg.decode_tokens > 0 {
+        decoder_cascade(cfg)
+    } else {
+        encoder_cascade(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::einsum::{OpKind, Phase};
+
+    #[test]
+    fn bert_shapes_match_table_ii() {
+        let g = encoder_cascade(&bert_large());
+        assert_eq!(g.ops.len(), 9);
+        let q = &g.ops[0];
+        assert_eq!((q.m, q.k, q.n), (256, 1024, 1024));
+        let logit = g.ops.iter().find(|o| o.name == "logit").unwrap();
+        assert_eq!((logit.b, logit.m, logit.k, logit.n), (16, 256, 64, 256));
+        let ffn1 = g.ops.iter().find(|o| o.name == "ffn1").unwrap();
+        assert_eq!(ffn1.n, 4096);
+    }
+
+    #[test]
+    fn bert_v_overlaps_logit_only() {
+        let g = encoder_cascade(&bert_large());
+        let v = g.ops.iter().position(|o| o.name == "v_gen").unwrap();
+        let logit = g.ops.iter().position(|o| o.name == "logit").unwrap();
+        // v has no path to logit and vice versa: independent.
+        assert!(!g.predecessors(logit).contains(&v));
+        let attend = g.ops.iter().position(|o| o.name == "attend").unwrap();
+        assert!(g.predecessors(attend).contains(&v));
+    }
+
+    #[test]
+    fn decoder_has_decoupled_phases() {
+        let g = decoder_cascade(&llama2());
+        let pre = g.ops_in_phase(Phase::Prefill);
+        let dec = g.ops_in_phase(Phase::Decode);
+        assert_eq!(pre.len(), 9);
+        assert!(!dec.is_empty());
+        // No edge crosses the prefill/decode boundary.
+        for &(p, c) in &g.deps {
+            let cross = (pre.contains(&p) && dec.contains(&c))
+                || (dec.contains(&p) && pre.contains(&c));
+            assert!(!cross, "unexpected cross-phase edge ({p},{c})");
+        }
+    }
+
+    #[test]
+    fn decode_token_counts_sum() {
+        let cfg = gpt3();
+        let g = decoder_cascade(&cfg);
+        let total: u64 = g
+            .ops_in_phase(Phase::Decode)
+            .iter()
+            .filter(|&&i| g.ops[i].name.starts_with("q_gen"))
+            .map(|&i| g.ops[i].count)
+            .sum();
+        assert_eq!(total, cfg.decode_tokens);
+    }
+
+    #[test]
+    fn decode_kv_grows_across_chunks() {
+        let g = decoder_cascade(&llama2());
+        let kvs: Vec<u64> = g
+            .ops
+            .iter()
+            .filter(|o| o.phase == Phase::Decode && o.kind == OpKind::Bmm && o.name.starts_with("logit"))
+            .map(|o| o.n)
+            .collect();
+        assert!(kvs.windows(2).all(|w| w[0] < w[1]), "kv lengths {kvs:?}");
+        assert!(kvs[0] >= 3000);
+    }
+
+    #[test]
+    fn gpt3_macs_dwarf_bert() {
+        let bert = encoder_cascade(&bert_large()).total_macs();
+        let gpt = decoder_cascade(&gpt3()).total_macs();
+        assert!(gpt > 100 * bert);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("gpt3").unwrap().d_model, 12288);
+        assert_eq!(by_name("BERT").unwrap().seq, 256);
+        assert!(by_name("nope").is_none());
+    }
+}

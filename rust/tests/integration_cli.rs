@@ -1,0 +1,79 @@
+//! Integration: the `harp` binary's CLI surface.
+
+use std::process::Command;
+
+fn harp(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_harp"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn taxonomy_prints_table1() {
+    let (ok, stdout, _) = harp(&["taxonomy"]);
+    assert!(ok);
+    for name in ["TPUv1", "NeuPIM", "Symphony", "Herald"] {
+        assert!(stdout.contains(name), "missing {name}");
+    }
+}
+
+#[test]
+fn classify_known_work() {
+    let (ok, stdout, _) = harp(&["classify", "duplex"]);
+    assert!(ok);
+    assert!(stdout.contains("cross-depth"));
+}
+
+#[test]
+fn classify_unknown_fails() {
+    let (ok, _, stderr) = harp(&["classify", "not-an-accelerator"]);
+    assert!(!ok);
+    assert!(stderr.contains("no prior work"));
+}
+
+#[test]
+fn eval_emits_json() {
+    let (ok, stdout, stderr) = harp(&[
+        "eval",
+        "--workload",
+        "bert",
+        "--machine",
+        "leaf+xnode",
+        "--samples",
+        "60",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert!(v.get("latency_cycles").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(v.get("machine").unwrap().as_str(), Some("leaf+xnode"));
+}
+
+#[test]
+fn eval_rejects_invalid_machine() {
+    let (ok, _, stderr) = harp(&["eval", "--workload", "bert", "--machine", "leaf+xdepth"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown machine"));
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, stdout, _) = harp(&["help"]);
+    assert!(ok);
+    for cmd in ["taxonomy", "classify", "eval", "figures", "sweep", "validate"] {
+        assert!(stdout.contains(cmd));
+    }
+}
+
+#[test]
+fn no_args_prints_usage_and_fails() {
+    let (ok, _, stderr) = harp(&[]);
+    assert!(!ok);
+    assert!(stderr.contains("USAGE"));
+}

@@ -1,0 +1,203 @@
+//! Integration: the paper's headline TRENDS hold end-to-end through the
+//! full pipeline (partition → allocate → map → schedule → aggregate) at
+//! a reduced mapper budget.
+//!
+//! These are the §VII "Summary of Key Trends" bullets as assertions.
+
+use harp::arch::level::LevelKind;
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions, EvalResult};
+use harp::workload::transformer;
+
+fn eval(wl_name: &str, machine: &str, bw_bits: f64, frac_low: Option<f64>) -> EvalResult {
+    let wl = transformer::by_name(wl_name).unwrap();
+    let cascade = transformer::cascade_for(&wl);
+    let mut opts = EvalOptions { samples: 150, ..EvalOptions::default() };
+    opts.bw_frac_low = frac_low;
+    let params = HardwareParams { dram_bw_bits: bw_bits, ..HardwareParams::default() };
+    evaluate_cascade_on_config(&HarpClass::from_id(machine).unwrap(), &params, &cascade, &opts)
+        .unwrap()
+}
+
+/// Trend 1a: encoder-only (BERT) favours the homogeneous machine.
+#[test]
+fn bert_homogeneous_wins_latency() {
+    let homo = eval("bert", "leaf+homo", 2048.0, None);
+    for het in ["leaf+xnode", "leaf+intra", "hier+xdepth"] {
+        let r = eval("bert", het, 2048.0, None);
+        assert!(
+            r.stats.latency_cycles >= homo.stats.latency_cycles,
+            "{het}: {:.3e} should not beat homo {:.3e}",
+            r.stats.latency_cycles,
+            homo.stats.latency_cycles
+        );
+    }
+}
+
+/// Trend 1b: decoder workloads favour heterogeneous machines (overlap
+/// of prefill and decode).
+#[test]
+fn decoders_heterogeneous_wins_latency() {
+    for wl in ["llama2", "gpt3"] {
+        let homo = eval(wl, "leaf+homo", 2048.0, None);
+        let het = eval(wl, "leaf+xnode", 2048.0, None);
+        assert!(
+            het.stats.latency_cycles < homo.stats.latency_cycles * 1.001,
+            "{wl}: xnode {:.3e} vs homo {:.3e}",
+            het.stats.latency_cycles,
+            homo.stats.latency_cycles
+        );
+    }
+}
+
+/// Trend 2: heterogeneous machines need less energy than homogeneous
+/// (paper: ~10% encoder / ~20% decoder), and the homogeneous machine is
+/// the least energy-efficient.
+#[test]
+fn heterogeneous_saves_energy() {
+    for wl in ["bert", "llama2", "gpt3"] {
+        let homo = eval(wl, "leaf+homo", 2048.0, None);
+        let xnode = eval(wl, "leaf+xnode", 2048.0, None);
+        let xdepth = eval(wl, "hier+xdepth", 2048.0, None);
+        assert!(xnode.stats.energy_pj < homo.stats.energy_pj, "{wl}: xnode energy");
+        assert!(xdepth.stats.energy_pj < homo.stats.energy_pj, "{wl}: xdepth energy");
+        assert!(
+            xnode.stats.mults_per_joule() > homo.stats.mults_per_joule(),
+            "{wl}: homo must be least energy-efficient"
+        );
+    }
+}
+
+/// Trend 3: energy is DRAM-dominated for decoder models and
+/// RF-dominated for the encoder model.
+#[test]
+fn energy_breakdown_by_workload_type() {
+    let bert = eval("bert", "leaf+homo", 2048.0, None);
+    let rf = bert.stats.energy_by_level[&LevelKind::Rf];
+    let dram = bert.stats.energy_by_level[&LevelKind::Dram];
+    assert!(rf > dram, "BERT: RF {rf:.3e} should dominate DRAM {dram:.3e}");
+
+    let gpt = eval("gpt3", "leaf+homo", 2048.0, None);
+    let rf = gpt.stats.energy_by_level[&LevelKind::Rf];
+    let dram = gpt.stats.energy_by_level[&LevelKind::Dram];
+    assert!(dram > rf, "GPT3: DRAM {dram:.3e} should dominate RF {rf:.3e}");
+}
+
+/// Trend 4: 50/50 bandwidth partitioning erodes the decoder advantage
+/// relative to the 75/25 policy (Fig 10).
+#[test]
+fn naive_bandwidth_split_erodes_decoder_advantage() {
+    for wl in ["llama2", "gpt3"] {
+        let good = eval(wl, "leaf+xnode", 2048.0, Some(0.75));
+        let naive = eval(wl, "leaf+xnode", 2048.0, Some(0.5));
+        assert!(
+            naive.stats.latency_cycles > good.stats.latency_cycles,
+            "{wl}: 50/50 ({:.3e}) must be slower than 75/25 ({:.3e})",
+            naive.stats.latency_cycles,
+            good.stats.latency_cycles
+        );
+    }
+}
+
+/// Trend 5: on-chip (memory-system) energy is dominated by high-reuse
+/// operations for BERT, and by low-reuse operations for decoder models
+/// at the single-request operating point (Fig 9). At the serving batch
+/// used for the performance figures, prefill compute grows with batch
+/// and the balance tips to the high-reuse side — see EXPERIMENTS.md.
+#[test]
+fn onchip_energy_role_split() {
+    let bert = eval("bert", "leaf+xnode", 2048.0, None);
+    assert!(
+        bert.stats.buffer_energy_by_role["high-reuse"]
+            > bert.stats.buffer_energy_by_role["low-reuse"],
+        "BERT on-chip energy should be high-reuse dominated"
+    );
+    // Single-request decoding: decode is pure weight/KV streaming.
+    let mut wl = transformer::llama2();
+    wl.batch = 1;
+    let cascade = transformer::cascade_for(&wl);
+    let opts = EvalOptions { samples: 150, ..EvalOptions::default() };
+    let llama = evaluate_cascade_on_config(
+        &HarpClass::from_id("leaf+xnode").unwrap(),
+        &HardwareParams::default(),
+        &cascade,
+        &opts,
+    )
+    .unwrap();
+    assert!(
+        llama.stats.buffer_energy_by_role["low-reuse"]
+            > llama.stats.buffer_energy_by_role["high-reuse"],
+        "Llama (batch 1) on-chip energy should be low-reuse dominated: {:?}",
+        llama.stats.buffer_energy_by_role
+    );
+}
+
+/// Trend 6: the cross-depth point has the lowest energy of the
+/// heterogeneous configs for decoder workloads (skips a hierarchy
+/// level for the dominant low-reuse traffic).
+#[test]
+fn cross_depth_lowest_energy_decoder() {
+    let gpt_xd = eval("gpt3", "hier+xdepth", 2048.0, None);
+    for other in ["leaf+homo", "leaf+xnode", "leaf+intra"] {
+        let r = eval("gpt3", other, 2048.0, None);
+        assert!(
+            gpt_xd.stats.energy_pj <= r.stats.energy_pj,
+            "xdepth {:.3e} should have least energy vs {other} {:.3e}",
+            gpt_xd.stats.energy_pj,
+            r.stats.energy_pj
+        );
+    }
+}
+
+/// The BERT utilisation zoom (Fig 6): the homogeneous machine sustains
+/// higher PE-weighted utilisation than the cross-node machine.
+#[test]
+fn bert_utilization_zoom() {
+    let homo = eval("bert", "leaf+homo", 2048.0, None);
+    let het = eval("bert", "leaf+xnode", 2048.0, None);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(
+        mean(&homo.stats.utilization_timeline) > mean(&het.stats.utilization_timeline),
+        "homo should keep more of the machine busy on BERT"
+    );
+}
+
+/// Decoder phases land on the right units and actually overlap.
+#[test]
+fn decoder_phases_overlap_on_heterogeneous() {
+    let r = eval("gpt3", "leaf+xnode", 2048.0, None);
+    // Both units substantially busy (overlap happened).
+    assert!(r.stats.busy_fraction[0] > 0.3, "high unit busy {:?}", r.stats.busy_fraction);
+    assert!(r.stats.busy_fraction[1] > 0.3, "low unit busy {:?}", r.stats.busy_fraction);
+    // Makespan strictly below the serial sum of all op latencies: the
+    // machine genuinely ran prefill and decode concurrently.
+    let wl = transformer::by_name("gpt3").unwrap();
+    let cascade = transformer::cascade_for(&wl);
+    let serial: f64 = r
+        .mapped
+        .iter()
+        .map(|m| m.stats.cycles * cascade.ops[m.op_index].count as f64)
+        .sum();
+    assert!(
+        r.stats.latency_cycles < serial * 0.999,
+        "makespan {:.3e} should be under serial sum {serial:.3e}",
+        r.stats.latency_cycles
+    );
+}
+
+/// Bandwidth sweep: halving DRAM bandwidth must not speed anything up,
+/// and must slow bandwidth-bound decoders nearly proportionally.
+#[test]
+fn bandwidth_sweep_monotone() {
+    for wl in ["bert", "gpt3"] {
+        for machine in ["leaf+homo", "leaf+xnode"] {
+            let fast = eval(wl, machine, 2048.0, None);
+            let slow = eval(wl, machine, 512.0, None);
+            assert!(
+                slow.stats.latency_cycles >= fast.stats.latency_cycles,
+                "{wl}/{machine}: lower bw cannot be faster"
+            );
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Integration: the PJRT runtime against the built artifacts.
+//!
+//! Skips gracefully (with a notice) when `make artifacts` has not run —
+//! `make test` always builds them first.
+
+use harp::runtime::client::Runtime;
+use harp::runtime::validate::validate_all;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn artifacts_validate_against_goldens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reports = validate_all(&dir).expect("load + run artifacts");
+    assert_eq!(reports.len(), 4, "expected 4 artifacts");
+    for r in &reports {
+        assert!(
+            r.ok,
+            "{}: rel err {:.3e} vs golden",
+            r.outcome.name, r.outcome.sum_rel_err
+        );
+    }
+}
+
+#[test]
+fn runtime_exposes_manifest_metadata() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let names = rt.artifact_names();
+    for expected in ["gemm", "attention", "encoder_layer", "decode_step"] {
+        assert!(names.contains(&expected), "missing artifact {expected}");
+    }
+    let spec = rt.spec("encoder_layer").unwrap();
+    assert_eq!(spec.inputs.len(), 7); // x + 6 weight matrices
+    assert_eq!(spec.inputs[0].shape, vec![128, 256]);
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let a = rt.run("gemm").unwrap();
+    let b = rt.run("gemm").unwrap();
+    assert_eq!(a.output_sum, b.output_sum);
+    assert_eq!(a.elements, b.elements);
+}
+
+#[test]
+fn decode_step_artifact_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let out = rt.run("decode_step").unwrap();
+    assert_eq!(out.elements, 256); // [1, d_model]
+    assert!(out.passed());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    assert!(rt.run("nope").is_err());
+}

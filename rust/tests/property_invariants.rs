@@ -1,0 +1,249 @@
+//! Property-based invariants over the cost model, mapper, scheduler and
+//! substrates, via the from-scratch `util::prop` runner.
+
+use harp::arch::partition::{HardwareParams, MachineConfig};
+use harp::arch::spec::ArchSpec;
+use harp::arch::taxonomy::HarpClass;
+use harp::hhp::scheduler::{schedule, ScheduleOptions};
+use harp::mapper::blackbox::BlackboxMapper;
+use harp::mapper::search::{search_best, SearchBudget};
+use harp::model::nest::analyze;
+use harp::util::json::Json;
+use harp::util::prop::{check, Gen};
+use harp::util::rng::Rng;
+use harp::workload::cascade::Cascade;
+use harp::workload::einsum::{Phase, TensorOp};
+use harp::workload::intensity::Classifier;
+
+fn test_spec() -> ArchSpec {
+    ArchSpec::leaf("p", 16, 16, 64, 32768, 1 << 20, 128.0, 32.0)
+}
+
+/// The mapper always returns a structurally valid mapping whose DRAM
+/// traffic is at least the compulsory footprint, and never claims more
+/// active PEs than exist.
+#[test]
+fn prop_mapper_output_valid_and_traffic_bounded() {
+    let spec = test_spec();
+    let gen = Gen::ranges(vec![(1, 96), (1, 256), (1, 256), (1, 4)]);
+    check("mapper-valid", 0xA1, 12, &gen, |v| {
+        let op = TensorOp::bmm("p", Phase::Encoder, v[3] as u64, v[0] as u64, v[1] as u64, v[2] as u64);
+        let r = search_best(&op, &spec, &SearchBudget { samples: 40, seed: 7 });
+        r.mapping.validate(&op, &spec).map_err(|e| e.to_string())?;
+        if r.stats.dram_words + 1e-9 < op.footprint_words() as f64 {
+            return Err(format!(
+                "dram words {} below compulsory {}",
+                r.stats.dram_words,
+                op.footprint_words()
+            ));
+        }
+        if r.mapping.active_pes() > spec.rows * spec.cols {
+            return Err("too many active PEs".into());
+        }
+        Ok(())
+    });
+}
+
+/// Nest analysis: energy and cycles are positive, the energy components
+/// sum to the total, and utilisation stays in (0, 1].
+#[test]
+fn prop_nest_analysis_consistency() {
+    let spec = test_spec();
+    let gen = Gen::ranges(vec![(1, 128), (1, 128), (1, 128)]);
+    check("nest-consistency", 0xB2, 20, &gen, |v| {
+        let op = TensorOp::gemm("p", Phase::Encoder, v[0] as u64, v[1] as u64, v[2] as u64);
+        let r = search_best(&op, &spec, &SearchBudget { samples: 30, seed: 3 });
+        let s = &r.stats;
+        if s.cycles <= 0.0 || s.energy_pj <= 0.0 {
+            return Err("non-positive cost".into());
+        }
+        let sum: f64 = s.levels.iter().map(|l| l.energy_pj).sum::<f64>()
+            + s.mac_energy_pj
+            + s.noc_energy_pj;
+        if (sum - s.energy_pj).abs() > 1e-6 * s.energy_pj {
+            return Err(format!("energy components {sum} != total {}", s.energy_pj));
+        }
+        if !(s.utilization > 0.0 && s.utilization <= 1.0 + 1e-9) {
+            return Err(format!("utilisation {} out of range", s.utilization));
+        }
+        if s.cycles + 1e-9 < s.compute_cycles {
+            return Err("latency below compute bound".into());
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler: critical path ≤ makespan ≤ serial sum, for random DAGs
+/// with random assignments to a 2-unit machine.
+#[test]
+fn prop_scheduler_bounds() {
+    let machine = MachineConfig::build(
+        &HarpClass::from_id("leaf+xnode").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap();
+    let gen = Gen::ranges(vec![(2, 12), (0, u32::MAX as usize)]);
+    check("scheduler-bounds", 0xC3, 25, &gen, |v| {
+        let n = v[0];
+        let mut rng = Rng::new(v[1] as u64 + 1);
+        let mut g = Cascade::new("rand");
+        for i in 0..n {
+            g.push(TensorOp::gemm(&format!("o{i}"), Phase::Encoder, 8, 8, 8));
+        }
+        // Random forward edges (acyclic by construction).
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.3 {
+                    g.dep(i, j);
+                }
+            }
+        }
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 10, seed: 2 });
+        let assignment: Vec<usize> = (0..n).map(|_| rng.next_below(2)).collect();
+        let mapped = mapper.map_cascade(&g, &machine, &assignment);
+        let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
+        let lat = |i: usize| mapped[i].stats.cycles * g.ops[i].count as f64;
+        let cp = g.critical_path(lat);
+        let serial: f64 = (0..n).map(lat).sum();
+        if sched.makespan + 1e-6 < cp {
+            return Err(format!("makespan {} below critical path {cp}", sched.makespan));
+        }
+        if sched.makespan > serial + 1e-6 {
+            return Err(format!("makespan {} above serial sum {serial}", sched.makespan));
+        }
+        // Every op scheduled exactly once.
+        if sched.intervals.len() != n {
+            return Err("not all ops scheduled".into());
+        }
+        Ok(())
+    });
+}
+
+/// Machine building conserves resources for every valid taxonomy point:
+/// PEs within rounding of the budget, LLB shares never exceed the total.
+#[test]
+fn prop_partitioner_conserves_resources() {
+    use harp::arch::level::LevelKind;
+    let ids = ["leaf+homo", "leaf+xnode", "leaf+intra", "hier+xdepth", "hier+homo", "hier+xnode-cl", "hier+compound"];
+    let gen = Gen::ranges(vec![(0, ids.len() - 1), (256, 8192), (1, 3)]);
+    check("partitioner-conserves", 0xD4, 30, &gen, |v| {
+        let class = HarpClass::from_id(ids[v[0]]).unwrap();
+        let params = HardwareParams {
+            total_macs: (v[1] as u64) * 8, // keep factorisable
+            dram_bw_bits: [512.0, 1024.0, 2048.0][v[2] - 1],
+            ..HardwareParams::default()
+        };
+        let m = MachineConfig::build(&class, &params).map_err(|e| e)?;
+        let total = m.total_pes();
+        if total > params.total_macs {
+            return Err(format!("PEs {total} exceed budget {}", params.total_macs));
+        }
+        if (total as f64) < params.total_macs as f64 * 0.80 {
+            return Err(format!("PEs {total} lose >20% of budget {}", params.total_macs));
+        }
+        let llb_total: u64 = m
+            .sub_accels
+            .iter()
+            .filter_map(|s| s.spec.level(LevelKind::Llb).map(|l| l.size_words))
+            .sum();
+        if llb_total > params.llb_bytes {
+            return Err(format!("LLB {llb_total} exceeds {}", params.llb_bytes));
+        }
+        let bw_total: f64 =
+            m.sub_accels.iter().map(|s| s.spec.dram().bw_words_per_cycle).sum();
+        if bw_total > params.dram_bw_words() + 1e-6 {
+            return Err(format!("bw {bw_total} exceeds {}", params.dram_bw_words()));
+        }
+        Ok(())
+    });
+}
+
+/// Allocation: every op lands on a unit whose role accepts its class.
+#[test]
+fn prop_allocator_respects_roles() {
+    let machine = MachineConfig::build(
+        &HarpClass::from_id("hier+xdepth").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap();
+    let classifier = Classifier::new(HardwareParams::default().tipping_ai());
+    let gen = Gen::ranges(vec![(1, 512), (1, 512), (1, 512)]);
+    check("allocator-roles", 0xE5, 30, &gen, |v| {
+        let mut g = Cascade::new("a");
+        g.push(TensorOp::gemm("x", Phase::Encoder, v[0] as u64, v[1] as u64, v[2] as u64));
+        g.push(TensorOp::gemm("d", Phase::Decode, v[0] as u64, v[1] as u64, v[2] as u64));
+        g.push(TensorOp::gemm("p", Phase::Prefill, v[0] as u64, v[1] as u64, v[2] as u64));
+        let a = harp::hhp::allocator::allocate(&g, &machine, &classifier);
+        for (i, &sub) in a.iter().enumerate() {
+            let class = classifier.classify(&g.ops[i]);
+            if !machine.sub_accels[sub].role.accepts(class) {
+                return Err(format!("op {i} ({class:?}) on wrong unit {sub}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// JSON: round-trip over randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    let gen = Gen::ranges(vec![(0, u32::MAX as usize)]);
+    check("json-roundtrip", 0xF6, 100, &gen, |v| {
+        let mut rng = Rng::new(v[0] as u64 + 1);
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string_pretty();
+        let re = Json::parse(&text).map_err(|e| e.to_string())?;
+        if re != doc {
+            return Err(format!("round-trip mismatch for {text}"));
+        }
+        Ok(())
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_below(1_000_000) as f64) / 8.0),
+        3 => {
+            let n = rng.next_below(8);
+            Json::Str((0..n).map(|_| char::from(b'a' + rng.next_below(26) as u8)).collect())
+        }
+        4 => Json::Arr((0..rng.next_below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.next_below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Cascade: merging preserves validity and totals.
+#[test]
+fn prop_cascade_merge() {
+    let gen = Gen::ranges(vec![(1, 10), (1, 10)]);
+    check("cascade-merge", 0x17, 30, &gen, |v| {
+        let mk = |n: usize, tag: &str| {
+            let mut g = Cascade::new(tag);
+            for i in 0..n {
+                g.push(TensorOp::gemm(&format!("{tag}{i}"), Phase::Encoder, 4, 4, 4));
+                if i > 0 {
+                    g.dep(i - 1, i);
+                }
+            }
+            g
+        };
+        let mut a = mk(v[0], "a");
+        let b = mk(v[1], "b");
+        let macs = a.total_macs() + b.total_macs();
+        a.merge(&b);
+        a.validate().map_err(|e| e)?;
+        if a.total_macs() != macs {
+            return Err("MACs not conserved by merge".into());
+        }
+        if a.ops.len() != v[0] + v[1] {
+            return Err("ops lost".into());
+        }
+        Ok(())
+    });
+}
