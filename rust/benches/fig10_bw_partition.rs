@@ -6,6 +6,6 @@ use harp::coordinator::figures;
 
 fn main() {
     common::banner("fig10_bw_partition", "Fig 10 — 75/25 vs 50/50 DRAM bandwidth split");
-    let mut ev = common::evaluator();
-    figures::fig10_bw_partition(&mut ev).emit("fig10_bw_partition");
+    let ev = common::evaluator();
+    figures::fig10_bw_partition(&ev).emit("fig10_bw_partition");
 }

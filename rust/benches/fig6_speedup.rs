@@ -7,8 +7,8 @@ use harp::coordinator::figures;
 
 fn main() {
     common::banner("fig6_speedup", "Fig 6 — speedup normalized to leaf+homogeneous");
-    let mut ev = common::evaluator();
-    let (fig, zoom) = figures::fig6_speedup(&mut ev);
+    let ev = common::evaluator();
+    let (fig, zoom) = figures::fig6_speedup(&ev);
     fig.emit("fig6_speedup");
     zoom.emit("fig6_zoom_utilization");
 }

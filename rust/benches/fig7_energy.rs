@@ -6,8 +6,8 @@ use harp::coordinator::figures;
 
 fn main() {
     common::banner("fig7_energy", "Fig 7 — energy by memory level per configuration");
-    let mut ev = common::evaluator();
-    for (i, fig) in figures::fig7_energy(&mut ev).into_iter().enumerate() {
+    let ev = common::evaluator();
+    for (i, fig) in figures::fig7_energy(&ev).into_iter().enumerate() {
         fig.emit(&format!("fig7_energy_{i}"));
     }
 }

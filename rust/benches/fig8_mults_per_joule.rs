@@ -6,6 +6,6 @@ use harp::coordinator::figures;
 
 fn main() {
     common::banner("fig8_mults_per_joule", "Fig 8 — mults/J normalized to leaf+homogeneous");
-    let mut ev = common::evaluator();
-    figures::fig8_mults_per_joule(&mut ev).emit("fig8_mults_per_joule");
+    let ev = common::evaluator();
+    figures::fig8_mults_per_joule(&ev).emit("fig8_mults_per_joule");
 }

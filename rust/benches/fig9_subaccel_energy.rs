@@ -6,6 +6,6 @@ use harp::coordinator::figures;
 
 fn main() {
     common::banner("fig9_subaccel_energy", "Fig 9 — on-chip energy by sub-accelerator role");
-    let mut ev = common::evaluator();
-    figures::fig9_subaccel_energy(&mut ev).emit("fig9_subaccel_energy");
+    let ev = common::evaluator();
+    figures::fig9_subaccel_energy(&ev).emit("fig9_subaccel_energy");
 }

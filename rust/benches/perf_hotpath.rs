@@ -1,10 +1,11 @@
 //! §Perf: timing benchmarks for the framework's hot paths.
 //!
 //! - nest analysis (called O(10⁴-10⁵) times per mapper run)
-//! - map-space search for one op
+//! - map-space search for one op (serial vs batched-parallel)
 //! - whole-cascade blackbox mapping (parallel)
 //! - DAG scheduling
 //! - one full figure-grade evaluation
+//! - a fig6-style multi-config sweep, serial vs the shared thread pool
 //!
 //! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
 
@@ -13,16 +14,18 @@ mod common;
 use harp::arch::partition::{HardwareParams, MachineConfig};
 use harp::arch::taxonomy::HarpClass;
 use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::coordinator::figures::{self, Evaluator};
 use harp::hhp::scheduler::{schedule, ScheduleOptions};
 use harp::mapper::blackbox::BlackboxMapper;
-use harp::mapper::search::{search_best, SearchBudget};
+use harp::mapper::search::{search_best, search_best_threaded, SearchBudget};
 use harp::mapping::loopnest::Mapping;
 use harp::model::nest::analyze;
 use harp::util::benchkit::bench_fn;
+use harp::util::threadpool::default_threads;
 use harp::workload::einsum::{Dim, Phase, TensorOp};
 use harp::workload::intensity::Classifier;
 use harp::workload::transformer;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     common::banner("perf_hotpath", "framework hot-path throughput (§Perf)");
@@ -47,9 +50,18 @@ fn main() {
 
     // --- single-op search --------------------------------------------------
     let sb = SearchBudget { samples: 400, seed: 1 };
-    bench_fn("mapper search_best (400 samples)", budget, 200, || {
-        let _ = std::hint::black_box(search_best(&op, &spec, &sb));
+    let serial = bench_fn("mapper search_best (400 samples, serial)", budget, 200, || {
+        let _ = std::hint::black_box(search_best_threaded(&op, &spec, &sb, 1));
     });
+    let par = bench_fn(
+        &format!("mapper search_best (400 samples, {} threads)", default_threads()),
+        budget,
+        200,
+        || {
+            let _ = std::hint::black_box(search_best(&op, &spec, &sb));
+        },
+    );
+    println!("  → single-op search speedup: {:.2}×\n", serial.median_ns / par.median_ns);
 
     // --- whole-cascade mapping ----------------------------------------------
     let cascade = transformer::decoder_cascade(&transformer::gpt3());
@@ -81,4 +93,27 @@ fn main() {
             &opts,
         ));
     });
+
+    // --- parallel sweep throughput (fig6-style) ------------------------------
+    // The acceptance metric of the parallel-sweep work: one full fig6
+    // sweep (all workloads × taxonomy points × both bandwidths) with the
+    // engine pinned to one worker vs the shared pool. A fresh Evaluator
+    // per run keeps the cross-run cache from flattering either side; the
+    // outputs are byte-identical by construction (asserted).
+    let sweep = |threads: usize| -> (f64, String) {
+        let mut o = EvalOptions { samples: 150, ..EvalOptions::default() };
+        o.threads = threads;
+        let ev = Evaluator::new(o);
+        let t0 = Instant::now();
+        let (fig, zoom) = figures::fig6_speedup(&ev);
+        (t0.elapsed().as_secs_f64(), format!("{}{}", fig.render(), zoom.render()))
+    };
+    let threads = default_threads();
+    let (t_serial, out_serial) = sweep(1);
+    let (t_par, out_par) = sweep(threads);
+    assert_eq!(out_serial, out_par, "sweep output must be byte-identical across thread counts");
+    println!(
+        "fig6-style sweep: serial {t_serial:.2}s, {threads} threads {t_par:.2}s → {:.2}× speedup (byte-identical output)",
+        t_serial / t_par
+    );
 }

@@ -81,6 +81,8 @@ pub enum Role {
 }
 
 impl Role {
+    pub const ALL: [Role; 3] = [Role::High, Role::Low, Role::Unified];
+
     pub fn accepts(self, class: ReuseClass) -> bool {
         match self {
             Role::Unified => true,

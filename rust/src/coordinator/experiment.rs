@@ -12,6 +12,13 @@ use crate::workload::cascade::Cascade;
 use crate::workload::einsum::Phase;
 use crate::workload::intensity::Classifier;
 
+/// Version stamp of the evaluation pipeline baked into every cache
+/// fingerprint. **Bump this whenever the cost model, mapper, partition
+/// policy, scheduler, or workload generators change numerically** — it
+/// is what keeps a disk-spilled evaluation cache from silently serving
+/// results computed by an older model.
+pub const EVAL_MODEL_VERSION: u32 = 1;
+
 /// Evaluation knobs.
 #[derive(Debug, Clone)]
 pub struct EvalOptions {
@@ -47,6 +54,22 @@ impl EvalOptions {
     /// Fast settings for tests / CI.
     pub fn quick() -> EvalOptions {
         EvalOptions { samples: 60, ..EvalOptions::default() }
+    }
+
+    /// Canonical fingerprint of the knobs that can change evaluation
+    /// results. `threads` is deliberately excluded: the batched mapper
+    /// pipeline is bit-identical for every worker count, so cached
+    /// results are shareable across serial and parallel runs. Used by
+    /// the coordinator's cross-driver evaluation cache.
+    ///
+    /// The [`EVAL_MODEL_VERSION`] stamp invalidates disk-spilled caches
+    /// whenever the cost model changes — without it a reused `--cache`
+    /// file would silently serve stale numbers.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "m{EVAL_MODEL_VERSION}|s{}|r{:#018x}|dyn{}",
+            self.samples, self.seed, self.dynamic_bw
+        )
     }
 }
 

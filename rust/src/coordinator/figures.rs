@@ -11,55 +11,186 @@
 //! | [`fig8_mults_per_joule`] | Fig 8 — energy efficiency |
 //! | [`fig9_subaccel_energy`] | Fig 9 — on-chip energy by sub-accelerator role |
 //! | [`fig10_bw_partition`] | Fig 10 — 75/25 vs 50/50 bandwidth partitioning |
+//!
+//! Every driver first fans its evaluation points out over the shared
+//! thread pool (see [`Evaluator::warm`]) and then assembles the figure
+//! serially from cache hits, so the rendered output is byte-identical
+//! for any worker count while the wall-clock scales with the pool.
 
 use crate::arch::partition::HardwareParams;
 use crate::arch::taxonomy::{prior_works, HarpClass};
-use crate::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions, EvalResult};
+use crate::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use crate::hhp::stats::CascadeStats;
 use crate::model::roofline::machine_rooflines;
 use crate::util::benchkit::{Figure, Series};
+use crate::util::json::Json;
 use crate::util::table::Table;
+use crate::util::threadpool::parallel_map;
 use crate::workload::transformer::{self, TransformerConfig};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One evaluation point: (workload, machine class, DRAM bw bits,
+/// bandwidth-fraction override).
+pub type EvalPoint = (TransformerConfig, HarpClass, f64, Option<f64>);
+
+/// Canonical fingerprint of one evaluation point — every knob that can
+/// change the result. The worker count is deliberately excluded:
+/// results are bit-identical across `HARP_THREADS`, so cache entries
+/// are shareable between serial and parallel runs (and across
+/// processes, via the disk spill).
+pub fn eval_key(
+    workload: &str,
+    class: &HarpClass,
+    dram_bw_bits: f64,
+    bw_frac_low: Option<f64>,
+    opts: &EvalOptions,
+) -> String {
+    let frac = match bw_frac_low {
+        Some(v) => format!("{v}"),
+        None => "policy".to_string(),
+    };
+    format!("{workload}|{}|{dram_bw_bits}|{frac}|{}", class.id(), opts.fingerprint())
+}
 
 /// Memoising evaluator shared by the figure drivers (several figures
 /// reuse the same (workload, config, bandwidth) evaluations).
+///
+/// Thread-safe and cross-driver: the cache uses interior mutability so
+/// drivers can fan evaluation points out over the thread pool, and a
+/// per-key `OnceLock` guarantees each point is computed exactly once
+/// even when looked up concurrently — latecomers block on the winner's
+/// cell instead of recomputing. Entries persist for the evaluator's
+/// lifetime (all drivers of a `figures` run share one), and optionally
+/// spill to a JSON file so later *processes* start warm too.
 pub struct Evaluator {
     pub opts: EvalOptions,
-    cache: HashMap<String, EvalResult>,
+    cache: Mutex<HashMap<String, Arc<OnceLock<Arc<CascadeStats>>>>>,
+    spill: Option<PathBuf>,
+    dirty: AtomicBool,
 }
 
 impl Evaluator {
     pub fn new(opts: EvalOptions) -> Evaluator {
-        Evaluator { opts, cache: HashMap::new() }
+        Evaluator {
+            opts,
+            cache: Mutex::new(HashMap::new()),
+            spill: None,
+            dirty: AtomicBool::new(false),
+        }
     }
 
-    /// Evaluate (workload, class) at `dram_bw_bits`, memoised.
+    /// Evaluator backed by a JSON spill file: previously persisted
+    /// points load on construction (unreadable files or entries are
+    /// ignored — a cold cache, not an error); [`Evaluator::persist`]
+    /// writes new ones back.
+    pub fn with_cache_file(opts: EvalOptions, path: &Path) -> Evaluator {
+        let ev = Evaluator {
+            spill: Some(path.to_path_buf()),
+            ..Evaluator::new(opts)
+        };
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(Json::Obj(pairs)) = Json::parse(&text) {
+                let mut map = ev.cache.lock().unwrap();
+                for (k, v) in pairs {
+                    if let Some(stats) = CascadeStats::from_json(&v) {
+                        let cell = Arc::new(OnceLock::new());
+                        let _ = cell.set(Arc::new(stats));
+                        map.insert(k, cell);
+                    }
+                }
+            }
+        }
+        ev
+    }
+
+    /// Number of completed cached evaluation points.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().values().filter(|c| c.get().is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write every computed point to the spill file (no-op without one,
+    /// or when nothing new was computed). Keys are sorted so the file is
+    /// byte-stable for a given entry set.
+    pub fn persist(&self) -> std::io::Result<()> {
+        let Some(path) = &self.spill else { return Ok(()) };
+        if !self.dirty.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let map = self.cache.lock().unwrap();
+        let mut keys: Vec<&String> = map.keys().collect();
+        keys.sort();
+        let mut obj = Json::obj();
+        for k in keys {
+            if let Some(stats) = map[k.as_str()].get() {
+                obj = obj.with(k, stats.to_json());
+            }
+        }
+        drop(map);
+        std::fs::write(path, obj.to_string_pretty())
+    }
+
+    /// Evaluate (workload, class) at `dram_bw_bits`, memoised across
+    /// drivers, threads, and (with a spill file) processes.
     pub fn eval(
-        &mut self,
+        &self,
         wl: &TransformerConfig,
         class: &HarpClass,
         dram_bw_bits: f64,
         bw_frac_low: Option<f64>,
-    ) -> &EvalResult {
-        let key = format!(
-            "{}|{}|{}|{:?}|{}",
-            wl.name,
-            class.id(),
-            dram_bw_bits,
-            bw_frac_low,
-            self.opts.dynamic_bw
-        );
-        if !self.cache.contains_key(&key) {
+    ) -> Arc<CascadeStats> {
+        let key = eval_key(&wl.name, class, dram_bw_bits, bw_frac_low, &self.opts);
+        let cell = {
+            let mut map = self.cache.lock().unwrap();
+            map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        cell.get_or_init(|| {
             let cascade = transformer::cascade_for(wl);
             let params = HardwareParams { dram_bw_bits, ..HardwareParams::default() };
             let mut opts = self.opts.clone();
             opts.bw_frac_low = bw_frac_low;
             let r = evaluate_cascade_on_config(class, &params, &cascade, &opts)
                 .expect("valid eval point");
-            self.cache.insert(key.clone(), r);
-        }
-        &self.cache[&key]
+            self.dirty.store(true, Ordering::Release);
+            Arc::new(r.stats)
+        })
+        .clone()
     }
+
+    /// Fan a set of evaluation points out over the thread pool, warming
+    /// the cache. Duplicate points coalesce on their `OnceLock`; each
+    /// point's own mapper searches fan out underneath, bounded by the
+    /// shared pool budget.
+    pub fn warm(&self, points: &[EvalPoint]) {
+        parallel_map(points.len(), self.opts.threads, |i| {
+            let (wl, class, bw, frac) = &points[i];
+            self.eval(wl, class, *bw, *frac);
+        });
+    }
+}
+
+/// Cross-product of workloads × classes × bandwidths as warm-up points
+/// (the point list every grid-shaped driver feeds [`Evaluator::warm`]).
+fn cross_points(
+    wls: &[TransformerConfig],
+    classes: &[(char, HarpClass)],
+    bws: &[f64],
+) -> Vec<EvalPoint> {
+    let mut points = Vec::with_capacity(wls.len() * classes.len() * bws.len());
+    for &bw in bws {
+        for wl in wls {
+            for (_, class) in classes {
+                points.push((wl.clone(), class.clone(), bw, None));
+            }
+        }
+    }
+    points
 }
 
 /// Fig 1: rooflines of the homogeneous machine vs the heterogeneous
@@ -125,20 +256,21 @@ pub fn table2_table3() -> String {
 
 /// Fig 6: speedup of every configuration vs leaf+homogeneous at both
 /// bandwidth sweep points, plus the BERT utilisation-over-time zoom.
-pub fn fig6_speedup(ev: &mut Evaluator) -> (Figure, Figure) {
+pub fn fig6_speedup(ev: &Evaluator) -> (Figure, Figure) {
+    let classes = HarpClass::eval_points();
+    let wls = transformer::paper_workloads();
+    ev.warm(&cross_points(&wls, &classes, &[2048.0, 512.0]));
+
     let mut fig = Figure::new(
         "Fig 6: speedup normalized to leaf+homogeneous",
         "speedup (higher is better)",
     );
     for bw in [2048.0, 512.0] {
         let mut s = Series::new(&format!("bw={bw} b/cyc"));
-        for wl in transformer::paper_workloads() {
-            let base = ev
-                .eval(&wl, &HarpClass::eval_points()[0].1, bw, None)
-                .stats
-                .latency_cycles;
-            for (tag, class) in HarpClass::eval_points() {
-                let lat = ev.eval(&wl, &class, bw, None).stats.latency_cycles;
+        for wl in &wls {
+            let base = ev.eval(wl, &classes[0].1, bw, None).latency_cycles;
+            for (tag, class) in &classes {
+                let lat = ev.eval(wl, class, bw, None).latency_cycles;
                 s.push(&format!("{} ({tag}) {}", wl.name, class.id()), base / lat);
             }
         }
@@ -151,11 +283,10 @@ pub fn fig6_speedup(ev: &mut Evaluator) -> (Figure, Figure) {
         "fraction of total PEs busy per time slice",
     );
     let bert = transformer::bert_large();
-    for (tag, class) in [&HarpClass::eval_points()[0], &HarpClass::eval_points()[1]] {
+    for (tag, class) in [&classes[0], &classes[1]] {
         let r = ev.eval(&bert, class, 2048.0, None);
-        let tl = r.stats.utilization_timeline.clone();
         let mut s = Series::new(&format!("({tag}) {}", class.id()));
-        for (i, v) in tl.iter().enumerate().step_by(4) {
+        for (i, v) in r.utilization_timeline.iter().enumerate().step_by(4) {
             s.push(&format!("t{i:02}"), *v);
         }
         zoom.add(s);
@@ -164,24 +295,28 @@ pub fn fig6_speedup(ev: &mut Evaluator) -> (Figure, Figure) {
 }
 
 /// Fig 7: energy by memory hierarchy level for every configuration.
-pub fn fig7_energy(ev: &mut Evaluator) -> Vec<Figure> {
+pub fn fig7_energy(ev: &Evaluator) -> Vec<Figure> {
     use crate::arch::level::LevelKind;
+    let classes = HarpClass::eval_points();
+    let wls = transformer::paper_workloads();
+    ev.warm(&cross_points(&wls, &classes, &[2048.0]));
+
     let mut out = Vec::new();
-    for wl in transformer::paper_workloads() {
+    for wl in &wls {
         let mut fig = Figure::new(
             &format!("Fig 7: energy breakdown, {} (µJ)", wl.name),
             "energy in µJ by level",
         );
-        for (tag, class) in HarpClass::eval_points() {
-            let r = ev.eval(&wl, &class, 2048.0, None);
+        for (tag, class) in &classes {
+            let r = ev.eval(wl, class, 2048.0, None);
             let mut s = Series::new(&format!("({tag}) {}", class.id()));
             for k in LevelKind::ALL {
-                let e = r.stats.energy_by_level.get(&k).copied().unwrap_or(0.0);
+                let e = r.energy_by_level.get(&k).copied().unwrap_or(0.0);
                 s.push(k.name(), e * 1e-6); // pJ → µJ
             }
-            s.push("MAC", r.stats.mac_energy_pj * 1e-6);
-            s.push("NoC", r.stats.noc_energy_pj * 1e-6);
-            s.push("TOTAL", r.stats.energy_pj * 1e-6);
+            s.push("MAC", r.mac_energy_pj * 1e-6);
+            s.push("NoC", r.noc_energy_pj * 1e-6);
+            s.push("TOTAL", r.energy_pj * 1e-6);
             fig.add(s);
         }
         out.push(fig);
@@ -190,17 +325,20 @@ pub fn fig7_energy(ev: &mut Evaluator) -> Vec<Figure> {
 }
 
 /// Fig 8: multiplications per joule, normalised to leaf+homogeneous.
-pub fn fig8_mults_per_joule(ev: &mut Evaluator) -> Figure {
+pub fn fig8_mults_per_joule(ev: &Evaluator) -> Figure {
+    let classes = HarpClass::eval_points();
+    let wls = transformer::paper_workloads();
+    ev.warm(&cross_points(&wls, &classes, &[2048.0]));
+
     let mut fig = Figure::new(
         "Fig 8: multiplications per joule (normalized to leaf+homogeneous)",
         "relative energy efficiency",
     );
-    for (tag, class) in HarpClass::eval_points() {
+    for (tag, class) in &classes {
         let mut s = Series::new(&format!("({tag}) {}", class.id()));
-        for wl in transformer::paper_workloads() {
-            let base =
-                ev.eval(&wl, &HarpClass::eval_points()[0].1, 2048.0, None).stats.mults_per_joule();
-            let v = ev.eval(&wl, &class, 2048.0, None).stats.mults_per_joule();
+        for wl in &wls {
+            let base = ev.eval(wl, &classes[0].1, 2048.0, None).mults_per_joule();
+            let v = ev.eval(wl, class, 2048.0, None).mults_per_joule();
             s.push(&wl.name, v / base);
         }
         fig.add(s);
@@ -210,7 +348,7 @@ pub fn fig8_mults_per_joule(ev: &mut Evaluator) -> Figure {
 
 /// Fig 9: on-chip energy split between sub-accelerators running
 /// high- vs low-reuse operations (heterogeneous configs only).
-pub fn fig9_subaccel_energy(ev: &mut Evaluator) -> Figure {
+pub fn fig9_subaccel_energy(ev: &Evaluator) -> Figure {
     let mut fig = Figure::new(
         "Fig 9: on-chip memory-system energy by sub-accelerator role (µJ)",
         "L1 + LLB + NoC energy in µJ (datapath excluded)",
@@ -228,12 +366,14 @@ pub fn fig9_subaccel_energy(ev: &mut Evaluator) -> Figure {
         wl.name = format!("{} (b=1)", wl.name);
         workloads.push(wl);
     }
-    for (tag, class) in het_points {
+    ev.warm(&cross_points(&workloads, &het_points, &[2048.0]));
+
+    for (tag, class) in &het_points {
         let mut s = Series::new(&format!("({tag}) {}", class.id()));
         for wl in &workloads {
-            let r = ev.eval(wl, &class, 2048.0, None);
+            let r = ev.eval(wl, class, 2048.0, None);
             for role in ["high-reuse", "low-reuse"] {
-                let e = r.stats.buffer_energy_by_role.get(role).copied().unwrap_or(0.0);
+                let e = r.buffer_energy_by_role.get(role).copied().unwrap_or(0.0);
                 s.push(&format!("{} {}", wl.name, role), e * 1e-6);
             }
         }
@@ -244,18 +384,26 @@ pub fn fig9_subaccel_energy(ev: &mut Evaluator) -> Figure {
 
 /// Fig 10: the 75/25 vs 50/50 bandwidth-partition sensitivity study on
 /// the decoder workloads (cross-node config).
-pub fn fig10_bw_partition(ev: &mut Evaluator) -> Figure {
+pub fn fig10_bw_partition(ev: &Evaluator) -> Figure {
     let mut fig = Figure::new(
         "Fig 10: bandwidth partitioning sensitivity (decoder workloads)",
         "speedup vs leaf+homogeneous",
     );
     let xnode = HarpClass::eval_points()[1].1.clone();
     let homo = HarpClass::eval_points()[0].1.clone();
+    let mut points: Vec<EvalPoint> = Vec::new();
+    for wl in [transformer::llama2(), transformer::gpt3()] {
+        points.push((wl.clone(), homo.clone(), 2048.0, None));
+        points.push((wl.clone(), xnode.clone(), 2048.0, Some(0.75)));
+        points.push((wl, xnode.clone(), 2048.0, Some(0.5)));
+    }
+    ev.warm(&points);
+
     for (label, frac) in [("75% to low-reuse", Some(0.75)), ("50/50 naive", Some(0.5))] {
         let mut s = Series::new(label);
         for wl in [transformer::llama2(), transformer::gpt3()] {
-            let base = ev.eval(&wl, &homo, 2048.0, None).stats.latency_cycles;
-            let lat = ev.eval(&wl, &xnode, 2048.0, frac).stats.latency_cycles;
+            let base = ev.eval(&wl, &homo, 2048.0, None).latency_cycles;
+            let lat = ev.eval(&wl, &xnode, 2048.0, frac).latency_cycles;
             s.push(&wl.name, base / lat);
         }
         fig.add(s);
@@ -291,5 +439,70 @@ mod tests {
         let uni = &fig.series[0];
         assert_eq!(uni.get("AI=1024").unwrap(), 40960.0);
         assert!(uni.get("AI=1").unwrap() < 300.0);
+    }
+
+    #[test]
+    fn evaluator_caches_by_point() {
+        let ev = Evaluator::new(EvalOptions { samples: 10, ..EvalOptions::default() });
+        let wl = transformer::bert_large();
+        let class = HarpClass::eval_points()[0].1.clone();
+        assert!(ev.is_empty());
+        let a = ev.eval(&wl, &class, 2048.0, None);
+        assert_eq!(ev.len(), 1);
+        let b = ev.eval(&wl, &class, 2048.0, None);
+        // A cache hit returns the same allocation, not a recomputation.
+        assert!(Arc::ptr_eq(&a, &b));
+        // A different bandwidth is a different point.
+        let c = ev.eval(&wl, &class, 512.0, None);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(ev.len(), 2);
+    }
+
+    #[test]
+    fn eval_key_distinguishes_knobs() {
+        let class_a = HarpClass::eval_points()[0].1.clone();
+        let class_b = HarpClass::eval_points()[1].1.clone();
+        let opts = EvalOptions::default();
+        let base = eval_key("bert", &class_a, 2048.0, None, &opts);
+        assert_ne!(base, eval_key("gpt3", &class_a, 2048.0, None, &opts));
+        assert_ne!(base, eval_key("bert", &class_b, 2048.0, None, &opts));
+        assert_ne!(base, eval_key("bert", &class_a, 512.0, None, &opts));
+        assert_ne!(base, eval_key("bert", &class_a, 2048.0, Some(0.5), &opts));
+        let mut o2 = EvalOptions::default();
+        o2.samples += 1;
+        assert_ne!(base, eval_key("bert", &class_a, 2048.0, None, &o2));
+        // Threads must NOT change the key: results are thread-invariant.
+        let mut o3 = EvalOptions::default();
+        o3.threads = 1;
+        assert_eq!(base, eval_key("bert", &class_a, 2048.0, None, &o3));
+    }
+
+    #[test]
+    fn disk_spill_roundtrip() {
+        let dir = std::env::temp_dir().join("harp_evaluator_spill_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let _ = std::fs::remove_file(&path);
+
+        let opts = EvalOptions { samples: 10, ..EvalOptions::default() };
+        let wl = transformer::bert_large();
+        let class = HarpClass::eval_points()[0].1.clone();
+
+        let ev = Evaluator::with_cache_file(opts.clone(), &path);
+        assert!(ev.is_empty());
+        let fresh = ev.eval(&wl, &class, 2048.0, None);
+        ev.persist().unwrap();
+
+        // A new evaluator starts warm and returns identical numbers
+        // WITHOUT recomputing (seeding a different `samples` would
+        // change a fresh search, so a matching key must come from disk).
+        let ev2 = Evaluator::with_cache_file(opts, &path);
+        assert_eq!(ev2.len(), 1);
+        let cached = ev2.eval(&wl, &class, 2048.0, None);
+        assert_eq!(cached.latency_cycles, fresh.latency_cycles);
+        assert_eq!(cached.energy_pj, fresh.energy_pj);
+        assert_eq!(cached.utilization_timeline, fresh.utilization_timeline);
+
+        let _ = std::fs::remove_file(&path);
     }
 }

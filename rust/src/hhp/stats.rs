@@ -111,7 +111,10 @@ impl CascadeStats {
         }
     }
 
-    /// Machine-readable report.
+    /// Machine-readable report. Field order is deterministic (fixed key
+    /// lists, not hash order), so emitted caches and reports diff
+    /// cleanly; [`CascadeStats::from_json`] inverts it exactly — the
+    /// pair is what the coordinator's disk-spilled evaluation cache uses.
     pub fn to_json(&self) -> Json {
         let mut levels = Json::obj();
         for k in LevelKind::ALL {
@@ -120,8 +123,20 @@ impl CascadeStats {
             }
         }
         let mut roles = Json::obj();
-        for (k, v) in &self.onchip_energy_by_role {
-            roles = roles.with(k, *v);
+        let mut buffers = Json::obj();
+        for r in ROLE_NAMES {
+            if let Some(v) = self.onchip_energy_by_role.get(r) {
+                roles = roles.with(r, *v);
+            }
+            if let Some(v) = self.buffer_energy_by_role.get(r) {
+                buffers = buffers.with(r, *v);
+            }
+        }
+        let mut phases = Json::obj();
+        for p in PHASE_NAMES {
+            if let Some(v) = self.energy_by_phase.get(p) {
+                phases = phases.with(p, *v);
+            }
         }
         Json::obj()
             .with("workload", self.workload.as_str())
@@ -130,14 +145,85 @@ impl CascadeStats {
             .with("energy_pj", self.energy_pj)
             .with("mults_per_joule", self.mults_per_joule())
             .with("macs", self.macs)
+            .with("mac_energy_pj", self.mac_energy_pj)
+            .with("noc_energy_pj", self.noc_energy_pj)
             .with("energy_by_level", levels)
             .with("onchip_energy_by_role", roles)
+            .with("buffer_energy_by_role", buffers)
+            .with("energy_by_phase", phases)
             .with(
                 "busy_fraction",
                 Json::Arr(self.busy_fraction.iter().map(|&b| Json::Num(b)).collect()),
             )
+            .with(
+                "utilization_timeline",
+                Json::Arr(self.utilization_timeline.iter().map(|&b| Json::Num(b)).collect()),
+            )
+    }
+
+    /// Inverse of [`CascadeStats::to_json`]. Returns `None` on any
+    /// missing/malformed mandatory field (callers treat that as a cache
+    /// miss, not an error). Floats round-trip exactly: the JSON writer
+    /// emits the shortest representation that parses back bit-identical.
+    pub fn from_json(j: &Json) -> Option<CascadeStats> {
+        let f64_field = |key: &str| j.get(key).and_then(|v| v.as_f64());
+        let arr_field = |key: &str| -> Option<Vec<f64>> {
+            j.get(key)?.as_arr()?.iter().map(|v| v.as_f64()).collect()
+        };
+
+        let mut energy_by_level = HashMap::new();
+        if let Some(Json::Obj(pairs)) = j.get("energy_by_level") {
+            for (k, v) in pairs {
+                let kind = LevelKind::ALL.into_iter().find(|l| l.name() == k.as_str())?;
+                energy_by_level.insert(kind, v.as_f64()?);
+            }
+        }
+        let role_map = |key: &str| -> Option<HashMap<&'static str, f64>> {
+            let mut out = HashMap::new();
+            if let Some(Json::Obj(pairs)) = j.get(key) {
+                for (k, v) in pairs {
+                    if let Some(r) = ROLE_NAMES.into_iter().find(|r| *r == k.as_str()) {
+                        out.insert(r, v.as_f64()?);
+                    }
+                }
+            }
+            Some(out)
+        };
+        let mut energy_by_phase = HashMap::new();
+        if let Some(Json::Obj(pairs)) = j.get("energy_by_phase") {
+            for (k, v) in pairs {
+                if let Some(p) = PHASE_NAMES.into_iter().find(|p| *p == k.as_str()) {
+                    energy_by_phase.insert(p, v.as_f64()?);
+                }
+            }
+        }
+
+        Some(CascadeStats {
+            workload: j.get("workload")?.as_str()?.to_string(),
+            machine: j.get("machine")?.as_str()?.to_string(),
+            latency_cycles: f64_field("latency_cycles")?,
+            energy_pj: f64_field("energy_pj")?,
+            energy_by_level,
+            mac_energy_pj: f64_field("mac_energy_pj")?,
+            noc_energy_pj: f64_field("noc_energy_pj")?,
+            onchip_energy_by_role: role_map("onchip_energy_by_role")?,
+            buffer_energy_by_role: role_map("buffer_energy_by_role")?,
+            macs: f64_field("macs")?,
+            busy_fraction: arr_field("busy_fraction")?,
+            utilization_timeline: arr_field("utilization_timeline")?,
+            energy_by_phase,
+        })
     }
 }
+
+/// The role names [`Role::name`] can produce. Kept as a const so JSON
+/// field order is fixed; `role_phase_name_lists_are_exhaustive` fails
+/// the build's tests if `Role`/[`Phase`] ever drift from these lists
+/// (drift would silently drop entries from reports and the disk cache).
+const ROLE_NAMES: [&str; 3] = ["high-reuse", "low-reuse", "unified"];
+
+/// The phase names [`phase_name`] can produce (same drift guard).
+const PHASE_NAMES: [&str; 3] = ["encoder", "prefill", "decode"];
 
 fn phase_name(p: Phase) -> &'static str {
     match p {
@@ -186,5 +272,58 @@ mod tests {
         // JSON round-trips.
         let j = stats.to_json();
         assert!(j.get("mults_per_joule").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let machine = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let assign = crate::hhp::allocator::allocate(&g, &machine, &classifier);
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 20, seed: 1 });
+        let mapped = mapper.map_cascade(&g, &machine, &assign);
+        let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
+        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched);
+
+        let text = stats.to_json().to_string_pretty();
+        let back = CascadeStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.workload, stats.workload);
+        assert_eq!(back.machine, stats.machine);
+        assert_eq!(back.latency_cycles, stats.latency_cycles);
+        assert_eq!(back.energy_pj, stats.energy_pj);
+        assert_eq!(back.mac_energy_pj, stats.mac_energy_pj);
+        assert_eq!(back.noc_energy_pj, stats.noc_energy_pj);
+        assert_eq!(back.macs, stats.macs);
+        assert_eq!(back.energy_by_level, stats.energy_by_level);
+        assert_eq!(back.onchip_energy_by_role, stats.onchip_energy_by_role);
+        assert_eq!(back.buffer_energy_by_role, stats.buffer_energy_by_role);
+        assert_eq!(back.energy_by_phase, stats.energy_by_phase);
+        assert_eq!(back.busy_fraction, stats.busy_fraction);
+        assert_eq!(back.utilization_timeline, stats.utilization_timeline);
+
+        // Malformed documents are a cache miss, not a panic.
+        assert!(CascadeStats::from_json(&Json::parse("{}").unwrap()).is_none());
+    }
+
+    /// Drift guard: the hardcoded serialization key lists must cover
+    /// exactly the names the enums can produce, or (de)serialization
+    /// would silently drop entries.
+    #[test]
+    fn role_phase_name_lists_are_exhaustive() {
+        let roles: Vec<&str> = Role::ALL.into_iter().map(|r| r.name()).collect();
+        for r in roles.iter() {
+            assert!(ROLE_NAMES.contains(r), "Role name '{r}' missing from ROLE_NAMES");
+        }
+        assert_eq!(roles.len(), ROLE_NAMES.len());
+
+        let phases: Vec<&str> = Phase::ALL.into_iter().map(phase_name).collect();
+        for p in phases.iter() {
+            assert!(PHASE_NAMES.contains(p), "Phase name '{p}' missing from PHASE_NAMES");
+        }
+        assert_eq!(phases.len(), PHASE_NAMES.len());
     }
 }

@@ -12,7 +12,9 @@
 //! ## Layer map
 //!
 //! - [`util`] — substrates built from scratch for the offline image
-//!   (JSON, CLI parsing, PRNG, property testing, bench harness, pool).
+//!   (JSON, CLI parsing, PRNG, property testing, bench harness, errors,
+//!   and a thread pool with a shared global budget so nested fan-out
+//!   never oversubscribes; `HARP_THREADS` / `--threads` size it).
 //! - [`workload`] — einsum operations, arithmetic intensity, cascade
 //!   dependency graphs, transformer generators (paper Table II).
 //! - [`arch`] — storage hierarchies, sub-accelerator specs, the HARP
@@ -20,10 +22,15 @@
 //! - [`mapping`] — loop-nest mappings and taxonomy-derived constraints.
 //! - [`model`] — the Timeloop-like nest analysis: per-level access
 //!   counts, latency (compute vs bandwidth bound), energy.
-//! - [`mapper`] — map-space enumeration and seeded black-box search.
+//! - [`mapper`] — map-space enumeration and the seeded black-box
+//!   search, run as a batched generate → parallel-evaluate → reduce
+//!   pipeline that is bit-identical for every worker count.
 //! - [`hhp`] — the paper's wrapper: operation allocation, overlap
 //!   scheduling with shared-bandwidth contention, cascade statistics.
-//! - [`coordinator`] — experiment configs, sweeps, figure drivers.
+//! - [`coordinator`] — experiment configs, sweeps, figure drivers, and
+//!   the concurrent cross-driver evaluation cache (memoised by a
+//!   canonical (workload, class, bandwidth, budget) fingerprint, with
+//!   an optional JSON disk spill via `--cache`).
 //! - [`runtime`] — PJRT client that loads `artifacts/*.hlo.txt` and
 //!   executes the real transformer layers for end-to-end validation.
 

@@ -15,8 +15,9 @@ use harp::coordinator::config::ExperimentConfig;
 use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
 use harp::coordinator::figures;
 use harp::runtime::validate::{render_reports, validate_all};
-use harp::util::cli::ArgSpec;
+use harp::util::cli::{ArgSpec, Args};
 use harp::util::table::Table;
+use harp::util::threadpool;
 use harp::workload::transformer;
 use std::path::Path;
 use std::process::ExitCode;
@@ -59,8 +60,9 @@ fn usage() -> String {
      COMMANDS:\n\
        taxonomy                 print Table I (existing works classified)\n\
        classify <name>          classify a prior work (e.g. 'neupim')\n\
-       eval [--config F | --workload W --machine M] [--bw BITS] [--samples N]\n\
-       figures [--samples N]    regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
+       eval [--config F | --workload W --machine M] [--bw BITS] [--samples N] [--threads N]\n\
+       figures [--samples N] [--threads N] [--cache FILE]\n\
+                                regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
        roofline                 print the Fig 1 roofline partitioning\n\
        sweep --workload W       DRAM bandwidth × machine sweep\n\
        validate [--artifacts D] execute AOT artifacts through PJRT + check numerics"
@@ -89,6 +91,17 @@ fn cmd_classify(argv: &[String]) -> Result<(), String> {
     }
 }
 
+/// Parse an optional `--threads N`, apply it to the global pool budget,
+/// and return it (so per-eval options can pick it up too).
+fn apply_threads(args: &Args) -> Result<Option<usize>, String> {
+    if args.get("threads").is_none() {
+        return Ok(None);
+    }
+    let n = args.get_usize("threads").map_err(|e| e.to_string())?.max(1);
+    threadpool::set_global_threads(n);
+    Ok(Some(n))
+}
+
 fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> {
     let spec = ArgSpec::new("harp eval", "evaluate one (workload, machine) point")
         .opt("config", None, "JSON experiment config path")
@@ -101,12 +114,18 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
         .opt("bw", Some("2048"), "DRAM bandwidth in bits/cycle")
         .opt("bw-frac-low", None, "fraction of DRAM bandwidth to the low-reuse side")
         .opt("samples", Some("400"), "mapper samples per unique shape")
+        .opt("threads", None, "worker threads (default: HARP_THREADS or core count)")
         .flag("dynamic-bw", "re-grant idle units' bandwidth (ablation)")
         .flag("json", "emit machine-readable JSON");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let json = args.has_flag("json");
+    let threads = apply_threads(&args)?;
     if let Some(path) = args.get("config") {
-        return Ok((ExperimentConfig::load(path)?, json));
+        let mut cfg = ExperimentConfig::load(path)?;
+        if let Some(n) = threads {
+            cfg.opts.threads = n;
+        }
+        return Ok((cfg, json));
     }
     let wl_name = args.get("workload").ok_or("need --workload or --config")?;
     let workload =
@@ -119,6 +138,9 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
     let mut opts = EvalOptions::default();
     opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
     opts.dynamic_bw = args.has_flag("dynamic-bw");
+    if let Some(n) = threads {
+        opts.threads = n;
+    }
     if args.get("bw-frac-low").is_some() {
         opts.bw_frac_low = Some(args.get_f64("bw-frac-low").map_err(|e| e.to_string())?);
     }
@@ -150,33 +172,42 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn figure_opts(argv: &[String]) -> Result<EvalOptions, String> {
-    let spec = ArgSpec::new("harp figures", "regenerate the paper figures").opt(
-        "samples",
-        Some("400"),
-        "mapper samples per unique shape",
-    );
+fn cmd_figures(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("harp figures", "regenerate the paper figures")
+        .opt("samples", Some("400"), "mapper samples per unique shape")
+        .opt("threads", None, "worker threads for the sweep (default: HARP_THREADS or core count)")
+        .opt("cache", None, "JSON evaluation-cache file, reused across runs");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let mut opts = EvalOptions::default();
     opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
-    Ok(opts)
-}
-
-fn cmd_figures(argv: &[String]) -> Result<(), String> {
-    let opts = figure_opts(argv)?;
+    if let Some(n) = apply_threads(&args)? {
+        opts.threads = n;
+    }
+    let ev = match args.get("cache") {
+        Some(path) => {
+            let ev = figures::Evaluator::with_cache_file(opts, Path::new(path));
+            if !ev.is_empty() {
+                println!("[evaluation cache: {} point(s) loaded from {path}]", ev.len());
+            }
+            ev
+        }
+        None => figures::Evaluator::new(opts),
+    };
     println!("{}", figures::table2_table3());
     println!("{}", figures::table1());
     figures::fig1_roofline().emit("fig1_roofline");
-    let mut ev = figures::Evaluator::new(opts);
-    let (f6, zoom) = figures::fig6_speedup(&mut ev);
+    let (f6, zoom) = figures::fig6_speedup(&ev);
     f6.emit("fig6_speedup");
     zoom.emit("fig6_zoom_utilization");
-    for (i, f) in figures::fig7_energy(&mut ev).into_iter().enumerate() {
+    for (i, f) in figures::fig7_energy(&ev).into_iter().enumerate() {
         f.emit(&format!("fig7_energy_{i}"));
     }
-    figures::fig8_mults_per_joule(&mut ev).emit("fig8_mults_per_joule");
-    figures::fig9_subaccel_energy(&mut ev).emit("fig9_subaccel_energy");
-    figures::fig10_bw_partition(&mut ev).emit("fig10_bw_partition");
+    figures::fig8_mults_per_joule(&ev).emit("fig8_mults_per_joule");
+    figures::fig9_subaccel_energy(&ev).emit("fig9_subaccel_energy");
+    figures::fig10_bw_partition(&ev).emit("fig10_bw_partition");
+    if let Err(e) = ev.persist() {
+        eprintln!("warn: could not persist evaluation cache: {e}");
+    }
     Ok(())
 }
 
@@ -188,7 +219,8 @@ fn cmd_roofline() -> Result<(), String> {
 fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("harp sweep", "bandwidth × machine sweep")
         .opt("workload", Some("gpt3"), "bert | llama2 | gpt3")
-        .opt("samples", Some("200"), "mapper samples per unique shape");
+        .opt("samples", Some("200"), "mapper samples per unique shape")
+        .opt("threads", None, "worker threads (default: HARP_THREADS or core count)");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let wl_name = args.get("workload").unwrap();
     let wl =
@@ -196,6 +228,9 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let cascade = transformer::cascade_for(&wl);
     let mut opts = EvalOptions::default();
     opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    if let Some(n) = apply_threads(&args)? {
+        opts.threads = n;
+    }
     let mut t =
         Table::new(&["machine", "bw (b/cyc)", "latency (cycles)", "energy (µJ)", "mults/J"]);
     for bw in [2048.0, 1024.0, 512.0] {

@@ -7,7 +7,7 @@
 //! per-op searches run in parallel on the thread pool.
 
 use crate::arch::partition::MachineConfig;
-use crate::mapper::search::{search_best, shape_fingerprint, SearchBudget, SearchResult};
+use crate::mapper::search::{search_best_threaded, shape_fingerprint, SearchBudget, SearchResult};
 use crate::model::stats::OpStats;
 use crate::util::threadpool::{default_threads, parallel_map};
 use crate::workload::cascade::Cascade;
@@ -66,13 +66,15 @@ impl BlackboxMapper {
                 })
                 .push(i);
         }
-        // One search per unique group, in parallel.
+        // One search per unique group, in parallel; each search fans its
+        // own candidate batch out too — the shared pool budget keeps the
+        // two levels from oversubscribing.
         let results: Vec<SearchResult> = parallel_map(group_keys.len(), self.threads, |g| {
             let (_, sub) = group_keys[g];
             let rep_op_idx = groups[&group_keys[g]][0];
             let op = &cascade.ops[rep_op_idx];
             let spec = &machine.sub_accels[sub].spec;
-            search_best(op, spec, &self.budget)
+            search_best_threaded(op, spec, &self.budget, self.threads)
         });
         // Fan results back out to ops.
         let by_key: HashMap<(u64, usize), &SearchResult> =

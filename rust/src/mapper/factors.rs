@@ -78,6 +78,29 @@ mod tests {
     }
 
     #[test]
+    fn candidates_limit_exceeds_size() {
+        // Cap is the dimension size itself when the limit is larger.
+        let c = candidates(6, 64);
+        assert_eq!(c, vec![1, 2, 3, 4, 6]);
+    }
+
+    #[test]
+    fn candidates_limit_one() {
+        assert_eq!(candidates(3000, 1), vec![1]);
+    }
+
+    #[test]
+    fn candidates_prime_size() {
+        // Non-power-of-two prime: divisors {1, 7} plus padded powers.
+        assert_eq!(candidates(7, 7), vec![1, 2, 4, 7]);
+    }
+
+    #[test]
+    fn ceil_div_zero_numerator() {
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
     fn ceil_div_works() {
         assert_eq!(ceil_div(10, 3), 4);
         assert_eq!(ceil_div(9, 3), 3);

@@ -10,4 +10,4 @@ pub mod factors;
 pub mod search;
 
 pub use blackbox::{BlackboxMapper, MappedOp};
-pub use search::{search_best, SearchBudget};
+pub use search::{search_best, search_best_threaded, SearchBudget};

@@ -11,6 +11,17 @@
 //!
 //! Objective: minimise latency (cycles), tie-break on energy. Invalid
 //! mappings (capacity, constraints) are rejected by the nest analysis.
+//!
+//! ## Batched parallel pipeline
+//!
+//! [`search_best`] runs in three phases: (1) *generate* every candidate
+//! — heuristic seeds plus the seeded random factor tuples — serially, so
+//! the PRNG stream is identical no matter what; (2) *evaluate* the
+//! candidates in fixed-size chunks over the shared thread pool; (3)
+//! *reduce* in candidate-index order with the latency/energy tie-break.
+//! Because generation and reduction are order-deterministic and the nest
+//! analysis is pure, the result is **bit-identical to the serial path**
+//! for a fixed seed regardless of `HARP_THREADS`.
 
 use crate::arch::spec::ArchSpec;
 use crate::mapper::factors::{ceil_div, pow2_floor};
@@ -18,6 +29,7 @@ use crate::mapping::loopnest::{Mapping, CANON_PERMS};
 use crate::model::nest::analyze;
 use crate::model::stats::OpStats;
 use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, parallel_map};
 use crate::workload::einsum::{Dim, TensorOp};
 
 /// Search effort knobs.
@@ -55,7 +67,11 @@ fn spatial_choices(op: &TensorOp, limit: u64, forced: Option<Dim>) -> Vec<(Dim, 
         }
     }
     out.push((Dim::M, 1));
-    out.dedup();
+    // Full dedup (not just adjacent): size-1 dims and limit 1 produce the
+    // same (dim, 1) candidate from several sources, and the (M, 1)
+    // fallback may repeat an earlier entry non-adjacently.
+    let mut seen = std::collections::HashSet::new();
+    out.retain(|c| seen.insert(*c));
     out
 }
 
@@ -304,22 +320,16 @@ fn better(a: &OpStats, b: &OpStats) -> bool {
     }
 }
 
-/// Search the map space of `op` on `spec`.
-pub fn search_best(op: &TensorOp, spec: &ArchSpec, budget: &SearchBudget) -> SearchResult {
-    let mut best: Option<(Mapping, OpStats)> = None;
-    let mut evaluated = 0usize;
-    let mut valid = 0usize;
+/// Candidate-evaluation chunk size: big enough to amortise slot/cursor
+/// overhead, small enough to load-balance the ~600-candidate default
+/// budget across a 16-worker pool.
+const EVAL_CHUNK: usize = 32;
 
-    let consider = |m: Mapping, best: &mut Option<(Mapping, OpStats)>, valid: &mut usize| {
-        if let Ok(stats) = analyze(op, spec, &m) {
-            *valid += 1;
-            match best {
-                Some((_, b)) if !better(&stats, b) => {}
-                _ => *best = Some((m, stats)),
-            }
-        }
-    };
-
+/// Phase 1 of the pipeline: generate every candidate mapping, in the
+/// canonical order (heuristic seeds, then the seeded random samples).
+/// Serial on purpose — the PRNG stream must not depend on thread count.
+fn generate_candidates(op: &TensorOp, spec: &ArchSpec, budget: &SearchBudget) -> Vec<Mapping> {
+    let mut out = Vec::new();
     // Heuristic seeds: perms × spatial choices × buffer-fill orders.
     // (A fingerprint-dedup of seeds was tried during the perf pass and
     // reverted: hashing cost more than the duplicate analyses saved —
@@ -333,29 +343,68 @@ pub fn search_best(op: &TensorOp, spec: &ArchSpec, budget: &SearchBudget) -> Sea
                     continue;
                 }
                 for order in FILL_ORDERS {
-                    let m = heuristic_mapping(op, spec, perm, row, col, order);
-                    evaluated += 1;
-                    consider(m, &mut best, &mut valid);
+                    out.push(heuristic_mapping(op, spec, perm, row, col, order));
                 }
                 for grow in GROW_SETS {
-                    let m = balanced_mapping(op, spec, perm, row, col, grow);
-                    evaluated += 1;
-                    consider(m, &mut best, &mut valid);
+                    out.push(balanced_mapping(op, spec, perm, row, col, grow));
                 }
             }
         }
     }
-
     // Random exploration.
     let mut rng = Rng::new(budget.seed ^ shape_fingerprint(op));
     for _ in 0..budget.samples {
-        let m = random_mapping(op, spec, &mut rng);
-        evaluated += 1;
-        consider(m, &mut best, &mut valid);
+        out.push(random_mapping(op, spec, &mut rng));
+    }
+    out
+}
+
+/// Search the map space of `op` on `spec` using the shared thread pool
+/// (up to [`default_threads`] workers).
+pub fn search_best(op: &TensorOp, spec: &ArchSpec, budget: &SearchBudget) -> SearchResult {
+    search_best_threaded(op, spec, budget, default_threads())
+}
+
+/// Search with an explicit worker cap. The batched pipeline: generate
+/// serially, evaluate chunks in parallel, reduce in index order — so the
+/// outcome is bit-identical for every `threads` value.
+pub fn search_best_threaded(
+    op: &TensorOp,
+    spec: &ArchSpec,
+    budget: &SearchBudget,
+    threads: usize,
+) -> SearchResult {
+    let candidates = generate_candidates(op, spec, budget);
+    let evaluated = candidates.len();
+
+    // Phase 2: evaluate chunks concurrently. Each slot holds the chunk's
+    // analysis outcomes in candidate order.
+    let nchunks = evaluated.div_ceil(EVAL_CHUNK);
+    let outcomes: Vec<Vec<Option<OpStats>>> = parallel_map(nchunks, threads, |c| {
+        let lo = c * EVAL_CHUNK;
+        let hi = (lo + EVAL_CHUNK).min(evaluated);
+        candidates[lo..hi].iter().map(|m| analyze(op, spec, m).ok()).collect()
+    });
+
+    // Phase 3: deterministic index-order reduction, identical to the
+    // serial scan (first-best-wins under the latency/energy tie-break).
+    let mut best: Option<(usize, OpStats)> = None;
+    let mut valid = 0usize;
+    for (i, outcome) in outcomes.into_iter().flatten().enumerate() {
+        if let Some(stats) = outcome {
+            valid += 1;
+            let replace = match &best {
+                Some((_, b)) => better(&stats, b),
+                None => true,
+            };
+            if replace {
+                best = Some((i, stats));
+            }
+        }
     }
 
-    let (mapping, stats) = best.expect("trivial mapping is always valid");
-    SearchResult { mapping, stats, evaluated, valid }
+    let (best_idx, stats) = best.expect("at least one candidate mapping is valid");
+    SearchResult { mapping: candidates[best_idx].clone(), stats, evaluated, valid }
 }
 
 /// Deterministic fingerprint of an op's shape (search seeding / caching).
@@ -422,6 +471,67 @@ mod tests {
         let r = search_best(&op, &spec(), &SearchBudget { samples: 200, seed: 5 });
         // Cannot use M-parallelism: utilisation from N/K only.
         assert!(r.mapping.spatial_row.0 != Dim::M || r.mapping.spatial_row.1 == 1);
+    }
+
+    #[test]
+    fn threaded_search_bit_identical_to_serial() {
+        let op = TensorOp::gemm("g", Phase::Encoder, 96, 160, 224);
+        let b = SearchBudget { samples: 80, seed: 9 };
+        let serial = search_best_threaded(&op, &spec(), &b, 1);
+        for threads in [2usize, 4, 16] {
+            let r = search_best_threaded(&op, &spec(), &b, threads);
+            assert_eq!(r.mapping, serial.mapping, "mapping differs at {threads} threads");
+            assert_eq!(r.stats.cycles, serial.stats.cycles);
+            assert_eq!(r.stats.energy_pj, serial.stats.energy_pj);
+            assert_eq!(r.evaluated, serial.evaluated);
+            assert_eq!(r.valid, serial.valid);
+        }
+    }
+
+    fn assert_no_duplicates(c: &[(Dim, u64)]) {
+        let mut sorted = c.to_vec();
+        sorted.sort_by_key(|&(d, f)| (d.index(), f));
+        sorted.dedup();
+        assert_eq!(sorted.len(), c.len(), "duplicates in {c:?}");
+    }
+
+    #[test]
+    fn spatial_choices_size_one_dims() {
+        // Decode GEMV: M = 1 — every candidate for M collapses to (M, 1)
+        // and must appear exactly once despite the (M, 1) fallback push.
+        let op = TensorOp::gemm("gemv", Phase::Decode, 1, 64, 64);
+        let c = spatial_choices(&op, 32, None);
+        assert_eq!(c.iter().filter(|&&(d, f)| d == Dim::M && f == 1).count(), 1);
+        assert_no_duplicates(&c);
+    }
+
+    #[test]
+    fn spatial_choices_pe_limit_one() {
+        let op = TensorOp::gemm("g", Phase::Encoder, 8, 8, 8);
+        let c = spatial_choices(&op, 1, None);
+        assert!(c.iter().all(|&(_, f)| f == 1), "limit 1 allows only unit factors: {c:?}");
+        assert_no_duplicates(&c);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn spatial_choices_non_power_of_two() {
+        let op = TensorOp::gemm("g", Phase::Encoder, 3000, 12288, 49152);
+        let c = spatial_choices(&op, 160, None);
+        assert!(c.contains(&(Dim::M, 160))); // largest factor ≤ limit
+        assert!(c.contains(&(Dim::M, 80))); // half step
+        assert!(c.contains(&(Dim::M, 1))); // fallback
+        assert!(c.iter().all(|&(_, f)| (1..=160).contains(&f)));
+        assert_no_duplicates(&c);
+    }
+
+    #[test]
+    fn spatial_choices_forced_dim_only() {
+        let op = TensorOp::gemm("g", Phase::Encoder, 64, 128, 256);
+        let c = spatial_choices(&op, 16, Some(Dim::N));
+        assert!(c.iter().all(|&(d, f)| d == Dim::N || (d == Dim::M && f == 1)));
+        assert!(c.contains(&(Dim::N, 16)));
+        assert_no_duplicates(&c);
     }
 
     #[test]

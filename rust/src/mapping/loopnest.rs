@@ -35,25 +35,48 @@ pub struct Mapping {
 }
 
 /// Why a mapping is invalid for (op, spec).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MapError {
-    #[error("mapping has {got} level blocks, spec has {want} levels")]
     LevelMismatch { got: usize, want: usize },
-    #[error("dimension {dim} covers {got}, needs ≥ {want}")]
     DimUncovered { dim: &'static str, got: u64, want: u64 },
-    #[error("spatial {axis} factor {got} exceeds array {axis} count {limit}")]
     SpatialOverflow { axis: &'static str, got: u64, limit: u64 },
-    #[error("constraint: columns must parallelise {want}, mapping uses {got}")]
     ForcedColDim { want: &'static str, got: &'static str },
-    #[error("constraint: column factor must be {want}, mapping uses {got}")]
     ForcedColFactor { want: u64, got: u64 },
-    #[error("row and column spatial dims must differ (both {dim})")]
     SpatialDimClash { dim: &'static str },
-    #[error("level {level} tile of {tile} words exceeds capacity {cap}")]
     CapacityExceeded { level: &'static str, tile: u64, cap: u64 },
-    #[error("zero factor in mapping")]
     ZeroFactor,
 }
+
+impl fmt::Display for MapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MapError::LevelMismatch { got, want } => {
+                write!(f, "mapping has {got} level blocks, spec has {want} levels")
+            }
+            MapError::DimUncovered { dim, got, want } => {
+                write!(f, "dimension {dim} covers {got}, needs ≥ {want}")
+            }
+            MapError::SpatialOverflow { axis, got, limit } => {
+                write!(f, "spatial {axis} factor {got} exceeds array {axis} count {limit}")
+            }
+            MapError::ForcedColDim { want, got } => {
+                write!(f, "constraint: columns must parallelise {want}, mapping uses {got}")
+            }
+            MapError::ForcedColFactor { want, got } => {
+                write!(f, "constraint: column factor must be {want}, mapping uses {got}")
+            }
+            MapError::SpatialDimClash { dim } => {
+                write!(f, "row and column spatial dims must differ (both {dim})")
+            }
+            MapError::CapacityExceeded { level, tile, cap } => {
+                write!(f, "level {level} tile of {tile} words exceeds capacity {cap}")
+            }
+            MapError::ZeroFactor => write!(f, "zero factor in mapping"),
+        }
+    }
+}
+
+impl std::error::Error for MapError {}
 
 /// The canonical loop permutations the mapper samples from. Orders are
 /// innermost-first. These cover the classic stationarities:

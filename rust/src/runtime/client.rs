@@ -1,10 +1,16 @@
 //! PJRT client wrapper: manifest parsing, compilation, execution.
+//!
+//! Manifest parsing is always available. Compiling and executing HLO
+//! artifacts needs the vendored `xla` crate, which only the runtime
+//! container ships — that half is gated behind the `pjrt` cargo feature.
+//! Without the feature, [`Runtime::load`] still validates the manifest
+//! and exposes its metadata, but [`Runtime::run`]/[`Runtime::bench`]
+//! report the missing backend.
 
-use crate::runtime::{input_value, INPUT_STRIDE};
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+use crate::{anyhow, bail};
+use std::path::Path;
 
 /// Shape + dtype of one tensor (dtype is always f32 in this build).
 #[derive(Debug, Clone)]
@@ -49,111 +55,185 @@ impl RunOutcome {
     }
 }
 
-struct Loaded {
-    spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::*;
+    use crate::runtime::{input_value, INPUT_STRIDE};
+    use std::path::PathBuf;
+    use std::time::Instant;
 
-/// The PJRT runtime: a CPU client plus every compiled artifact.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    loaded: Vec<Loaded>,
-}
+    /// Wrap an xla-crate error into the local error type.
+    fn xe<T, E: std::fmt::Debug>(r: std::result::Result<T, E>) -> Result<T> {
+        r.map_err(|e| anyhow!("xla: {e:?}"))
+    }
 
-impl Runtime {
-    /// Load every artifact listed in `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let specs = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut loaded = Vec::new();
-        for spec in specs {
-            let path: PathBuf = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            loaded.push(Loaded { spec, exe });
+    struct Loaded {
+        spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT runtime: a CPU client plus every compiled artifact.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        loaded: Vec<Loaded>,
+    }
+
+    impl Runtime {
+        /// Load every artifact listed in `<dir>/manifest.json`.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?;
+            let specs = parse_manifest(&text)?;
+            let client = xe(xla::PjRtClient::cpu())?;
+            let mut loaded = Vec::new();
+            for spec in specs {
+                let path: PathBuf = dir.join(&spec.file);
+                let proto = xe(xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                ))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = xe(client.compile(&comp))?;
+                loaded.push(Loaded { spec, exe });
+            }
+            Ok(Runtime { client, loaded })
         }
-        Ok(Runtime { client, loaded })
-    }
 
-    pub fn artifact_names(&self) -> Vec<&str> {
-        self.loaded.iter().map(|l| l.spec.name.as_str()).collect()
-    }
+        pub fn artifact_names(&self) -> Vec<&str> {
+            self.loaded.iter().map(|l| l.spec.name.as_str()).collect()
+        }
 
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.loaded.iter().find(|l| l.spec.name == name).map(|l| &l.spec)
-    }
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.loaded.iter().find(|l| l.spec.name == name).map(|l| &l.spec)
+        }
 
-    /// Generate the deterministic inputs for an artifact.
-    pub fn make_inputs(spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
-        spec.inputs
-            .iter()
-            .enumerate()
-            .map(|(idx, t)| {
-                let offset = idx as u64 * INPUT_STRIDE;
-                let data: Vec<f32> =
-                    (0..t.elements() as u64).map(|i| input_value(i + offset)).collect();
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+        /// Generate the deterministic inputs for an artifact.
+        pub fn make_inputs(spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
+            spec.inputs
+                .iter()
+                .enumerate()
+                .map(|(idx, t)| {
+                    let offset = idx as u64 * INPUT_STRIDE;
+                    let data: Vec<f32> =
+                        (0..t.elements() as u64).map(|i| input_value(i + offset)).collect();
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    xe(xla::Literal::vec1(&data).reshape(&dims))
+                })
+                .collect()
+        }
+
+        /// Execute an artifact once and compare against its golden stats.
+        pub fn run(&self, name: &str) -> Result<RunOutcome> {
+            let l = self
+                .loaded
+                .iter()
+                .find(|l| l.spec.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let inputs = Self::make_inputs(&l.spec)?;
+            let t0 = Instant::now();
+            let bufs = xe(l.exe.execute::<xla::Literal>(&inputs))?;
+            let result = xe(bufs[0][0].to_literal_sync())?;
+            let wall_us = t0.elapsed().as_nanos() as f64 / 1e3;
+            // Lowered with return_tuple=True → single-element tuple.
+            let out = xe(result.to_tuple1())?;
+            let values = xe(out.to_vec::<f32>())?;
+            let output_sum: f64 = values.iter().map(|&v| v as f64).sum();
+            let output_absmax =
+                values.iter().map(|&v| (v as f64).abs()).fold(0.0f64, f64::max);
+            let denom = l.spec.golden_sum.abs().max(1e-6);
+            let sum_rel_err = (output_sum - l.spec.golden_sum).abs() / denom;
+            Ok(RunOutcome {
+                name: name.to_string(),
+                output_sum,
+                output_absmax,
+                elements: values.len(),
+                wall_us,
+                sum_rel_err,
             })
-            .collect()
-    }
-
-    /// Execute an artifact once and compare against its golden stats.
-    pub fn run(&self, name: &str) -> Result<RunOutcome> {
-        let l = self
-            .loaded
-            .iter()
-            .find(|l| l.spec.name == name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-        let inputs = Self::make_inputs(&l.spec)?;
-        let t0 = Instant::now();
-        let result = l.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let wall_us = t0.elapsed().as_nanos() as f64 / 1e3;
-        // Lowered with return_tuple=True → single-element tuple.
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        let output_sum: f64 = values.iter().map(|&v| v as f64).sum();
-        let output_absmax =
-            values.iter().map(|&v| (v as f64).abs()).fold(0.0f64, f64::max);
-        let denom = l.spec.golden_sum.abs().max(1e-6);
-        let sum_rel_err = (output_sum - l.spec.golden_sum).abs() / denom;
-        Ok(RunOutcome {
-            name: name.to_string(),
-            output_sum,
-            output_absmax,
-            elements: values.len(),
-            wall_us,
-            sum_rel_err,
-        })
-    }
-
-    /// Execute an artifact `iters` times, returning mean latency in µs
-    /// (the serving-metric measurement used by `examples/e2e_validate`).
-    pub fn bench(&self, name: &str, iters: usize) -> Result<f64> {
-        let l = self
-            .loaded
-            .iter()
-            .find(|l| l.spec.name == name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-        let inputs = Self::make_inputs(&l.spec)?;
-        // Warm-up.
-        let _ = l.exe.execute::<xla::Literal>(&inputs)?;
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            let bufs = l.exe.execute::<xla::Literal>(&inputs)?;
-            // Force completion.
-            let _ = bufs[0][0].to_literal_sync()?;
         }
-        Ok(t0.elapsed().as_nanos() as f64 / 1e3 / iters as f64)
+
+        /// Execute an artifact `iters` times, returning mean latency in
+        /// µs (the serving-metric measurement of `examples/e2e_validate`).
+        pub fn bench(&self, name: &str, iters: usize) -> Result<f64> {
+            let l = self
+                .loaded
+                .iter()
+                .find(|l| l.spec.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let inputs = Self::make_inputs(&l.spec)?;
+            // Warm-up.
+            let _ = xe(l.exe.execute::<xla::Literal>(&inputs))?;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let bufs = xe(l.exe.execute::<xla::Literal>(&inputs))?;
+                // Force completion.
+                let _ = xe(bufs[0][0].to_literal_sync())?;
+            }
+            Ok(t0.elapsed().as_nanos() as f64 / 1e3 / iters as f64)
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
+    use crate::runtime::{input_value, INPUT_STRIDE};
+
+    /// Stub runtime for builds without the `pjrt` feature (the offline
+    /// image): manifest loading and metadata work; execution reports the
+    /// missing backend.
+    pub struct Runtime {
+        specs: Vec<ArtifactSpec>,
+    }
+
+    impl Runtime {
+        /// Load and validate `<dir>/manifest.json` (no compilation).
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?;
+            let specs = parse_manifest(&text)?;
+            Ok(Runtime { specs })
+        }
+
+        pub fn artifact_names(&self) -> Vec<&str> {
+            self.specs.iter().map(|s| s.name.as_str()).collect()
+        }
+
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.specs.iter().find(|s| s.name == name)
+        }
+
+        /// Generate the deterministic inputs for an artifact (host-side
+        /// buffers; the stub has no device to upload them to).
+        pub fn make_inputs(spec: &ArtifactSpec) -> Result<Vec<Vec<f32>>> {
+            Ok(spec
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(idx, t)| {
+                    let offset = idx as u64 * INPUT_STRIDE;
+                    (0..t.elements() as u64).map(|i| input_value(i + offset)).collect()
+                })
+                .collect())
+        }
+
+        pub fn run(&self, name: &str) -> Result<RunOutcome> {
+            self.spec(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            Err(anyhow!(
+                "PJRT backend not built: rebuild with `--features pjrt` (requires the vendored `xla` crate) to execute '{name}'"
+            ))
+        }
+
+        pub fn bench(&self, name: &str, _iters: usize) -> Result<f64> {
+            self.spec(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            Err(anyhow!("PJRT backend not built (enable the `pjrt` feature)"))
+        }
+    }
+}
+
+pub use backend::Runtime;
 
 /// Parse `manifest.json`.
 pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
@@ -227,5 +307,26 @@ mod tests {
             r#"{"artifacts":[{"name":"x","file":"f","inputs":[{"shape":[]}],"golden_sum":0}]}"#
         )
         .is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_backend() {
+        let dir = std::env::temp_dir().join("harp_stub_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"name":"gemm","file":"gemm.hlo.txt",
+                "inputs":[{"shape":[2,2]}],"golden_sum":0.5}]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.artifact_names(), vec!["gemm"]);
+        assert_eq!(rt.spec("gemm").unwrap().inputs[0].elements(), 4);
+        let inputs = Runtime::make_inputs(rt.spec("gemm").unwrap()).unwrap();
+        assert_eq!(inputs[0].len(), 4);
+        let err = rt.run("gemm").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+        assert!(rt.run("nope").is_err());
     }
 }

@@ -11,6 +11,10 @@
 //! HLO *text* is the interchange format because jax ≥ 0.5 serialises
 //! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Execution requires the `pjrt` cargo feature (and the vendored `xla`
+//! crate); without it the [`client::Runtime`] stub still parses
+//! manifests but reports the missing backend on `run`/`bench`.
 
 pub mod client;
 pub mod validate;

@@ -3,7 +3,7 @@
 //! functional workload (real einsum shapes) and the analytical model.
 
 use crate::runtime::client::{Runtime, RunOutcome};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::path::Path;
 
 /// Outcome of validating one artifact.

@@ -1,0 +1,133 @@
+//! Minimal error type with context chaining (anyhow replacement).
+//!
+//! The offline image ships no ecosystem crates, so the runtime layer's
+//! fallible plumbing uses this instead of `anyhow`: a string-backed
+//! [`Error`], a defaulted [`Result`] alias, a [`Context`] extension
+//! trait, and the [`anyhow!`](crate::anyhow)/[`bail!`](crate::bail)
+//! macros with the familiar spelling.
+
+use std::fmt;
+
+/// A string-backed error. Context is prepended `outer: inner`, matching
+/// the `{:#}` rendering convention call sites already use.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    /// Prepend a context layer.
+    pub fn context(self, outer: impl fmt::Display) -> Error {
+        Error { msg: format!("{outer}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Result alias defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any displayable error.
+pub trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (anyhow's spelling).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Early-return an [`Error`] from a format string (anyhow's spelling).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(crate::anyhow!("inner {}", 42))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                crate::bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let e2 = Error::msg("x").context("outer");
+        assert_eq!(e2.to_string(), "outer: x");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let e = Err::<(), &str>("bad").with_context(|| "lazy".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "lazy: bad");
+    }
+}

@@ -6,6 +6,8 @@
 //!
 //! - [`json`] — parser + serializer (replaces `serde_json`), used for
 //!   experiment configs, artifact manifests and machine-readable reports.
+//! - [`error`] — string-backed error with context chaining (replaces
+//!   `anyhow`) for the runtime layer's fallible plumbing.
 //! - [`cli`] — declarative flag/positional parser (replaces `clap`).
 //! - [`rng`] — xorshift64* seeded PRNG (replaces `rand`), used by the
 //!   mapper's random sampling so searches are reproducible.
@@ -13,12 +15,14 @@
 //!   shrinking over integer-vector inputs.
 //! - [`benchkit`] — timing/statistics harness for `cargo bench` binaries
 //!   (replaces `criterion`).
-//! - [`threadpool`] — scoped worker pool for parallel map-space sweeps
-//!   (replaces `rayon`/`tokio` for this workload).
+//! - [`threadpool`] — scoped worker pool with a shared global thread
+//!   budget, so nested fan-out (per-config sweeps over per-op searches)
+//!   never oversubscribes (replaces `rayon`/`tokio` for this workload).
 //! - [`table`] — fixed-width text table renderer for paper-style output.
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,11 +1,30 @@
-//! Scoped parallel map over an index range (rayon/tokio replacement).
+//! Scoped parallel map with a shared global thread budget
+//! (rayon/tokio replacement).
 //!
 //! The mapper evaluates thousands of independent candidate mappings per
-//! operation; [`parallel_map`] fans a work range out over OS threads with
-//! an atomic work-stealing cursor and collects results in order.
+//! operation, and the coordinator sweeps many (workload, machine,
+//! bandwidth) configurations per figure; [`parallel_map`] fans a work
+//! range out over OS threads with an atomic work-stealing cursor and
+//! collects results in order.
+//!
+//! ## The shared pool budget
+//!
+//! Both layers fan out — per-config sweeps call `parallel_map`, and each
+//! evaluation's per-op searches call it again underneath. A process-wide
+//! budget of *extra* worker threads (the submitting thread always
+//! participates and is not counted) keeps the total number of live
+//! workers at the configured parallelism no matter how calls nest: a
+//! nested call whose lease comes back empty simply runs inline on its
+//! caller. Leases are returned when a call finishes, so sibling calls
+//! re-acquire workers as they free up.
+//!
+//! Results are **independent of the worker count**: the cursor only
+//! distributes *work*, every result lands in its index's slot, and
+//! reductions run in index order — so `HARP_THREADS=1` and
+//! `HARP_THREADS=16` produce bit-identical output.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// Number of worker threads to use (respects `HARP_THREADS`, defaults to
 /// available parallelism, capped at 16).
@@ -18,8 +37,62 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
-/// Apply `f` to every index in `0..n` on `threads` workers; returns the
-/// results ordered by index. `f` must be `Sync` (called concurrently).
+/// The global budget of EXTRA workers (total parallelism − 1, since the
+/// submitting thread always works too). Initialised lazily from
+/// [`default_threads`].
+fn extra_budget() -> &'static AtomicUsize {
+    static BUDGET: OnceLock<AtomicUsize> = OnceLock::new();
+    BUDGET.get_or_init(|| AtomicUsize::new(default_threads().saturating_sub(1)))
+}
+
+/// Override the global worker budget (the CLI's `--threads`). The total
+/// number of concurrently live threads across all nested `parallel_map`
+/// calls becomes `n` (the calling thread counts as one). Call before
+/// spawning parallel work: outstanding leases are not rebalanced.
+pub fn set_global_threads(n: usize) {
+    extra_budget().store(n.max(1) - 1, Ordering::SeqCst);
+}
+
+/// Extra workers currently available to new `parallel_map` calls
+/// (diagnostic; the submitting thread is always additional to this).
+pub fn available_workers() -> usize {
+    extra_budget().load(Ordering::Acquire)
+}
+
+/// A lease of extra workers from the global budget, returned on drop
+/// (including unwinds, so a panicking work item cannot leak budget).
+struct Lease(usize);
+
+impl Lease {
+    fn take(want: usize) -> Lease {
+        let b = extra_budget();
+        let mut cur = b.load(Ordering::Acquire);
+        loop {
+            let take = want.min(cur);
+            if take == 0 {
+                return Lease(0);
+            }
+            match b.compare_exchange_weak(cur, cur - take, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Lease(take),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.0 > 0 {
+            extra_budget().fetch_add(self.0, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Apply `f` to every index in `0..n` on up to `threads` workers
+/// (bounded by the shared global budget; the caller participates);
+/// returns the results ordered by index. `f` must be `Sync` (called
+/// concurrently). Nested calls are safe: when the budget is exhausted
+/// they degrade to an inline serial loop instead of oversubscribing.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -29,28 +102,33 @@ where
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
-    if threads == 1 {
+    let lease = if threads > 1 { Lease::take(threads - 1) } else { Lease(0) };
+    if lease.0 == 0 {
         return (0..n).map(f).collect();
     }
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = f(i);
-                *slots[i].lock().unwrap() = Some(out);
-            });
+    let work = || loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
+        let out = f(i);
+        *slots[i].lock().unwrap() = Some(out);
+    };
+    std::thread::scope(|scope| {
+        for _ in 0..lease.0 {
+            scope.spawn(&work);
+        }
+        work();
     });
+    drop(lease);
     slots.into_iter().map(|s| s.into_inner().unwrap().expect("worker completed")).collect()
 }
 
 /// Parallel fold: map each index then reduce with `combine`, seeded by
-/// `init`. Reduction order is deterministic (index order).
+/// `init`. Reduction order is deterministic (index order), so the result
+/// is identical for any worker count.
 pub fn parallel_fold<T, A, F, C>(n: usize, threads: usize, f: F, init: A, combine: C) -> A
 where
     T: Send,
@@ -85,5 +163,58 @@ mod tests {
     #[test]
     fn single_thread_path() {
         assert_eq!(parallel_map(10, 1, |i| i), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_calls_complete_without_deadlock() {
+        let out = parallel_map(6, 4, |i| {
+            parallel_map(10, 4, move |j| i * 10 + j).into_iter().sum::<usize>()
+        });
+        let expect: Vec<usize> =
+            (0..6).map(|i| (0..10).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn deeply_nested_degrades_to_serial() {
+        // Three levels of nesting: inner levels must still produce
+        // correct, ordered results even after the budget is exhausted.
+        let out = parallel_map(3, 3, |a| {
+            parallel_map(3, 3, move |b| {
+                parallel_map(3, 3, move |c| a * 9 + b * 3 + c).into_iter().sum::<usize>()
+            })
+            .into_iter()
+            .sum::<usize>()
+        });
+        let expect: Vec<usize> = (0..3)
+            .map(|a| {
+                (0..3)
+                    .map(|b| (0..3).map(|c| a * 9 + b * 3 + c).sum::<usize>())
+                    .sum::<usize>()
+            })
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let serial = parallel_map(257, 1, |i| (i as u64).wrapping_mul(0x9E3779B9));
+        for threads in [2, 4, 16] {
+            assert_eq!(parallel_map(257, threads, |i| (i as u64).wrapping_mul(0x9E3779B9)), serial);
+        }
+    }
+
+    #[test]
+    fn budget_is_restored_after_calls() {
+        // Whatever the ambient budget is (other tests run concurrently),
+        // finishing a parallel_map must not permanently consume it.
+        let before = available_workers();
+        for _ in 0..8 {
+            let _ = parallel_map(64, 8, |i| i);
+        }
+        // Eventually all leases return; allow concurrent tests to hold
+        // some transiently.
+        let after = available_workers();
+        assert!(after + 16 >= before, "budget leaked: {before} -> {after}");
     }
 }

@@ -83,6 +83,8 @@ pub enum Phase {
 }
 
 impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Encoder, Phase::Prefill, Phase::Decode];
+
     pub fn name(self) -> &'static str {
         match self {
             Phase::Encoder => "encoder",

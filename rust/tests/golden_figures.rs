@@ -1,0 +1,96 @@
+//! Golden regression + determinism tests for the figure drivers.
+//!
+//! Each driver is rendered at a small fixed budget and compared
+//! byte-for-byte against `tests/goldens/<name>.txt`:
+//!
+//! - A missing golden is written on first run (bootstrap) — the test
+//!   passes and later runs regress against it.
+//! - Intentional output changes are recorded by re-running with
+//!   `HARP_UPDATE_GOLDENS=1` (update-on-intent).
+//!
+//! Independent of the snapshots, the figure text must be byte-identical
+//! across worker counts — the parallel sweep engine's core guarantee —
+//! which `fig10_byte_identical_across_thread_counts` asserts by running
+//! the same driver against single- and multi-threaded evaluators.
+
+use harp::coordinator::experiment::EvalOptions;
+use harp::coordinator::figures::{self, Evaluator};
+use harp::util::threadpool::default_threads;
+use std::path::PathBuf;
+
+/// The small fixed budget all goldens are rendered at.
+fn golden_opts(threads: usize) -> EvalOptions {
+    let mut o = EvalOptions { samples: 12, ..EvalOptions::default() };
+    o.seed = 0xD00D_FEED;
+    o.threads = threads;
+    o
+}
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("goldens")
+}
+
+fn assert_golden(name: &str, rendered: &str) {
+    let dir = goldens_dir();
+    std::fs::create_dir_all(&dir).expect("create goldens dir");
+    let path = dir.join(format!("{name}.txt"));
+    let update = std::env::var("HARP_UPDATE_GOLDENS").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        // Bootstrapping on a fresh checkout provides no regression
+        // protection for THIS run — it only arms later ones. CI (or any
+        // environment that expects committed goldens) should set
+        // HARP_REQUIRE_GOLDENS=1 to turn a missing snapshot into a
+        // failure instead of a silent vacuous pass.
+        let require =
+            std::env::var("HARP_REQUIRE_GOLDENS").map(|v| v == "1").unwrap_or(false);
+        assert!(
+            update || !require,
+            "golden '{name}' missing at {} and HARP_REQUIRE_GOLDENS=1 — \
+             generate and commit it (run once with HARP_UPDATE_GOLDENS=1)",
+            path.display()
+        );
+        std::fs::write(&path, rendered).expect("write golden");
+        eprintln!(
+            "golden '{name}': wrote {} ({})",
+            path.display(),
+            if update { "HARP_UPDATE_GOLDENS=1" } else { "bootstrap" }
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    assert!(
+        rendered == want,
+        "golden '{name}' drifted from {} — rerun with HARP_UPDATE_GOLDENS=1 if intended\n\
+         --- got ---\n{rendered}\n--- want ---\n{want}",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_table1() {
+    assert_golden("table1", &figures::table1());
+}
+
+#[test]
+fn golden_fig6_and_fig7() {
+    // One evaluator shared by both drivers: fig7's points are a subset
+    // of fig6's, so the cross-driver cache makes the second render free.
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    let (fig, zoom) = figures::fig6_speedup(&ev);
+    assert_golden("fig6_speedup", &format!("{}\n{}", fig.render(), zoom.render()));
+    let fig7: Vec<String> = figures::fig7_energy(&ev).iter().map(|f| f.render()).collect();
+    assert_golden("fig7_energy", &fig7.join("\n"));
+}
+
+#[test]
+fn fig10_byte_identical_across_thread_counts() {
+    let ev_serial = Evaluator::new(golden_opts(1));
+    let serial = figures::fig10_bw_partition(&ev_serial).render();
+    let ev_par = Evaluator::new(golden_opts(4));
+    let par = figures::fig10_bw_partition(&ev_par).render();
+    assert_eq!(
+        serial, par,
+        "figure output must be byte-identical across worker counts"
+    );
+    assert_golden("fig10_bw_partition", &serial);
+}

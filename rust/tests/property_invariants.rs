@@ -4,9 +4,11 @@
 use harp::arch::partition::{HardwareParams, MachineConfig};
 use harp::arch::spec::ArchSpec;
 use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::coordinator::figures::Evaluator;
 use harp::hhp::scheduler::{schedule, ScheduleOptions};
 use harp::mapper::blackbox::BlackboxMapper;
-use harp::mapper::search::{search_best, SearchBudget};
+use harp::mapper::search::{search_best, search_best_threaded, SearchBudget};
 use harp::model::nest::analyze;
 use harp::util::json::Json;
 use harp::util::prop::{check, Gen};
@@ -14,6 +16,8 @@ use harp::util::rng::Rng;
 use harp::workload::cascade::Cascade;
 use harp::workload::einsum::{Phase, TensorOp};
 use harp::workload::intensity::Classifier;
+use harp::workload::transformer;
+use std::sync::Arc;
 
 fn test_spec() -> ArchSpec {
     ArchSpec::leaf("p", 16, 16, 64, 32768, 1 << 20, 128.0, 32.0)
@@ -42,6 +46,68 @@ fn prop_mapper_output_valid_and_traffic_bounded() {
         }
         Ok(())
     });
+}
+
+/// Tentpole invariant of the parallel sweep engine: for a fixed
+/// `SearchBudget.seed`, the batched pipeline returns an identical best
+/// mapping and bit-identical `OpStats` for every worker count
+/// (`HARP_THREADS` ∈ {1, 4, 16} — passed explicitly so the property
+/// holds regardless of the ambient environment).
+#[test]
+fn prop_search_identical_across_thread_counts() {
+    let spec = test_spec();
+    let gen = Gen::ranges(vec![(1, 128), (1, 192), (1, 192), (1, 3)]);
+    check("search-thread-determinism", 0x5D, 8, &gen, |v| {
+        let op = TensorOp::bmm(
+            "p",
+            Phase::Encoder,
+            v[3] as u64,
+            v[0] as u64,
+            v[1] as u64,
+            v[2] as u64,
+        );
+        let b = SearchBudget { samples: 50, seed: 0x5EED ^ v[0] as u64 };
+        let base = search_best_threaded(&op, &spec, &b, 1);
+        for threads in [4usize, 16] {
+            let r = search_best_threaded(&op, &spec, &b, threads);
+            if r.mapping != base.mapping {
+                return Err(format!("best mapping differs at {threads} threads"));
+            }
+            if r.stats.cycles != base.stats.cycles
+                || r.stats.energy_pj != base.stats.energy_pj
+                || r.stats.dram_words != base.stats.dram_words
+            {
+                return Err(format!("OpStats differ at {threads} threads"));
+            }
+            if r.evaluated != base.evaluated || r.valid != base.valid {
+                return Err(format!("search accounting differs at {threads} threads"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cross-run evaluation cache: a cache hit returns the same allocation,
+/// and its contents are bit-identical to a fresh, uncached evaluation.
+#[test]
+fn evaluator_cache_hits_equal_fresh_search() {
+    let opts = EvalOptions { samples: 40, ..EvalOptions::default() };
+    let ev = Evaluator::new(opts.clone());
+    let wl = transformer::bert_large();
+    let class = HarpClass::from_id("leaf+xnode").unwrap();
+
+    let first = ev.eval(&wl, &class, 2048.0, None);
+    let hit = ev.eval(&wl, &class, 2048.0, None);
+    assert!(Arc::ptr_eq(&first, &hit), "second lookup must be a cache hit");
+
+    let cascade = transformer::cascade_for(&wl);
+    let params = HardwareParams { dram_bw_bits: 2048.0, ..HardwareParams::default() };
+    let fresh = evaluate_cascade_on_config(&class, &params, &cascade, &opts).unwrap();
+    assert_eq!(first.latency_cycles, fresh.stats.latency_cycles);
+    assert_eq!(first.energy_pj, fresh.stats.energy_pj);
+    assert_eq!(first.macs, fresh.stats.macs);
+    assert_eq!(first.busy_fraction, fresh.stats.busy_fraction);
+    assert_eq!(first.utilization_timeline, fresh.stats.utilization_timeline);
 }
 
 /// Nest analysis: energy and cycles are positive, the energy components

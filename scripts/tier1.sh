@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: release build, full test suite, and a
+# smoke invocation of the CLI figure drivers at a tiny mapper budget.
+#
+# Knobs:
+#   HARP_THREADS        worker threads (default: core count, capped at 16)
+#   HARP_TIER1_SAMPLES  mapper samples for the figures smoke run (default 8)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+BIN=target/release/harp
+SAMPLES="${HARP_TIER1_SAMPLES:-8}"
+
+echo "== tier1: CLI smoke =="
+"$BIN" taxonomy > /dev/null
+"$BIN" classify neupim > /dev/null
+"$BIN" roofline > /dev/null
+"$BIN" eval --workload bert --machine leaf+xnode --samples 20 --json > /dev/null
+"$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
+    --cache target/tier1-eval-cache.json > /dev/null
+# Second figures run must be served from the disk-spilled cache.
+"$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
+    --cache target/tier1-eval-cache.json > /dev/null
+
+echo "tier1 OK"
