@@ -83,6 +83,58 @@ fn main() {
         ));
     });
 
+    // --- scheduler dependency queries: per-call scans vs CascadeAdj ---------
+    // The scheduler's hot loops (critical-path priorities, ready-set
+    // updates) used to call `Cascade::predecessors`/`successors`, each an
+    // O(E) scan allocating a fresh Vec — O(V·E) per schedule. They now
+    // index a `CascadeAdj` built once. The "before" below reimplements
+    // the old per-call-scan priority pass for comparison on a dense
+    // 400-op DAG (~30k edges).
+    let mut big = harp::workload::cascade::Cascade::new("dense");
+    let mut rng = harp::util::rng::Rng::new(0xAD7A);
+    for i in 0..400 {
+        big.push(TensorOp::gemm(&format!("n{i}"), Phase::Encoder, 8, 8, 8));
+    }
+    for i in 0..400 {
+        for j in (i + 1)..400 {
+            if rng.next_f64() < 0.4 {
+                big.dep(i, j);
+            }
+        }
+    }
+    let lats: Vec<f64> = (0..400).map(|i| (i % 17 + 1) as f64).collect();
+    let scan_priorities = |g: &harp::workload::cascade::Cascade| -> Vec<f64> {
+        let order = g.topo_order().expect("valid DAG");
+        let mut prio = vec![0.0f64; g.ops.len()];
+        for &i in order.iter().rev() {
+            let down =
+                g.successors(i).into_iter().map(|s| prio[s]).fold(0.0f64, f64::max);
+            prio[i] = lats[i] + down;
+        }
+        prio
+    };
+    let adj_priorities = |g: &harp::workload::cascade::Cascade| -> Vec<f64> {
+        let adj = harp::workload::cascade::CascadeAdj::new(g);
+        let order = g.topo_order_with(&adj).expect("valid DAG");
+        let mut prio = vec![0.0f64; g.ops.len()];
+        for &i in order.iter().rev() {
+            let down = adj.succs[i].iter().map(|&s| prio[s]).fold(0.0f64, f64::max);
+            prio[i] = lats[i] + down;
+        }
+        prio
+    };
+    assert_eq!(scan_priorities(&big), adj_priorities(&big));
+    let before = bench_fn("priorities, per-call edge scans (400 ops)", budget, 200, || {
+        let _ = std::hint::black_box(scan_priorities(&big));
+    });
+    let after = bench_fn("priorities, CascadeAdj (400 ops)", budget, 200, || {
+        let _ = std::hint::black_box(adj_priorities(&big));
+    });
+    println!(
+        "  → scheduler priority pass speedup: {:.1}× (identical output asserted)\n",
+        before.median_ns / after.median_ns
+    );
+
     // --- full evaluation -------------------------------------------------------
     let opts = EvalOptions { samples: 200, ..EvalOptions::default() };
     bench_fn("full evaluation (GPT3 × hier+xdepth)", Duration::from_secs(2), 20, || {

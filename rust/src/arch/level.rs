@@ -1,30 +1,71 @@
 //! Storage levels of a memory hierarchy.
 //!
 //! Following the paper's tree view of the hierarchy (footnote 2): DRAM is
-//! the root, the last-level buffer (LLB) the intermediate node, L1 the
+//! the root, the last-level buffer (LLB) an intermediate node, L1 the
 //! per-array buffer, and the per-PE register file (RF) the leaf. A
 //! sub-accelerator's `ArchSpec` holds an *innermost-first* list of these.
+//!
+//! A level's *kind* is an open, interned name rather than a closed enum:
+//! the four canonical kinds (`RF`, `L1`, `LLB`, `DRAM`) cover the paper's
+//! machines, and [`LevelKind::named`] mints additional kinds (`"L2"`,
+//! `"HBM"`, …) for deeper custom hierarchies described by a `--topology`
+//! JSON file. Identity is the name — two kinds compare equal iff their
+//! names match — so levels survive a JSON round-trip exactly. A level's
+//! *position* in the hierarchy is its index in the spec's level list (or
+//! its depth in the machine tree), never something inferred from the
+//! kind: the cost model walks levels by index.
 
-/// Kind of storage level. `Dram` is always outermost; `Rf` innermost.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum LevelKind {
-    Rf,
-    L1,
-    Llb,
-    Dram,
-}
+use std::sync::Mutex;
+
+/// Kind (identity) of a storage level: an interned name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LevelKind(&'static str);
+
+/// Interned custom level names (canonical kinds never land here). Leaked
+/// once per distinct name, bounded by the set of names a process sees.
+static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
 
 impl LevelKind {
+    /// Per-PE register file — the innermost level.
+    pub const RF: LevelKind = LevelKind("RF");
+    /// Per-array buffer.
+    pub const L1: LevelKind = LevelKind("L1");
+    /// Last-level buffer.
+    pub const LLB: LevelKind = LevelKind("LLB");
+    /// Off-chip memory — the outermost level (tree root).
+    pub const DRAM: LevelKind = LevelKind("DRAM");
+
+    /// The canonical four-level chain, innermost first. Custom kinds are
+    /// not listed here; serialization appends them after these.
+    pub const ALL: [LevelKind; 4] =
+        [LevelKind::RF, LevelKind::L1, LevelKind::LLB, LevelKind::DRAM];
+
     pub fn name(self) -> &'static str {
-        match self {
-            LevelKind::Rf => "RF",
-            LevelKind::L1 => "L1",
-            LevelKind::Llb => "LLB",
-            LevelKind::Dram => "DRAM",
-        }
+        self.0
     }
 
-    pub const ALL: [LevelKind; 4] = [LevelKind::Rf, LevelKind::L1, LevelKind::Llb, LevelKind::Dram];
+    /// Position of a canonical kind in the RF→DRAM chain; `None` for
+    /// custom kinds.
+    pub fn canonical_depth(self) -> Option<usize> {
+        LevelKind::ALL.iter().position(|k| *k == self)
+    }
+
+    /// A kind by name. Canonical names resolve to the canonical
+    /// constants; any other name is interned (first use leaks one copy).
+    pub fn named(name: &str) -> LevelKind {
+        for k in LevelKind::ALL {
+            if k.0 == name {
+                return k;
+            }
+        }
+        let mut pool = INTERNED.lock().unwrap();
+        if let Some(s) = pool.iter().find(|s| **s == name) {
+            return LevelKind(s);
+        }
+        let s: &'static str = Box::leak(name.to_string().into_boxed_str());
+        pool.push(s);
+        LevelKind(s)
+    }
 }
 
 /// One storage level of a sub-accelerator.
@@ -58,9 +99,31 @@ mod tests {
 
     #[test]
     fn dram_unbounded() {
-        let d = StorageLevel::new(LevelKind::Dram, u64::MAX, 256.0, 160.0);
+        let d = StorageLevel::new(LevelKind::DRAM, u64::MAX, 256.0, 160.0);
         assert!(d.is_unbounded());
         let l1 = StorageLevel::new(LevelKind::L1, 131072, 512.0, 2.0);
         assert!(!l1.is_unbounded());
+    }
+
+    #[test]
+    fn canonical_names_resolve_to_constants() {
+        assert_eq!(LevelKind::named("RF"), LevelKind::RF);
+        assert_eq!(LevelKind::named("DRAM"), LevelKind::DRAM);
+        assert_eq!(LevelKind::RF.canonical_depth(), Some(0));
+        assert_eq!(LevelKind::DRAM.canonical_depth(), Some(3));
+    }
+
+    #[test]
+    fn custom_kinds_intern_by_name() {
+        let a = LevelKind::named("L2");
+        let b = LevelKind::named("L2");
+        assert_eq!(a, b);
+        assert_eq!(a.name(), "L2");
+        assert_eq!(a.canonical_depth(), None);
+        assert_ne!(a, LevelKind::L1);
+        // Interning is stable across lookups of other names.
+        let c = LevelKind::named("HBM");
+        assert_ne!(a, c);
+        assert_eq!(LevelKind::named("L2"), a);
     }
 }

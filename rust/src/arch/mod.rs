@@ -1,14 +1,17 @@
 //! Architecture layer: storage hierarchies, sub-accelerator specs, the
-//! HARP taxonomy, energy tables, and the resource partitioner that turns
-//! a taxonomy point + Table III hardware budget into concrete machines.
+//! HARP taxonomy, energy tables, the machine memory tree ([`topology`]),
+//! and the topology generator ([`partition`]) that turns a taxonomy
+//! point + Table III hardware budget into a concrete machine tree.
 
 pub mod energy;
 pub mod level;
 pub mod partition;
 pub mod spec;
 pub mod taxonomy;
+pub mod topology;
 
 pub use level::{LevelKind, StorageLevel};
 pub use partition::{HardwareParams, MachineConfig, SubAccel};
 pub use spec::ArchSpec;
 pub use taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+pub use topology::{AccelNode, MachineTopology, MemoryNode};

@@ -1,4 +1,5 @@
-//! Resource partitioning: taxonomy point + Table III budget → machines.
+//! Resource partitioning: a topology *generator* that turns any HARP
+//! taxonomy point plus a Table III hardware budget into a machine tree.
 //!
 //! Implements the paper's policies (§V-D):
 //! - PEs (compute roof) split `roof_ratio : 1` between high- and
@@ -6,14 +7,26 @@
 //! - LLB capacity split in the ratio of compute roof — high-reuse ops
 //!   want on-chip space, low-reuse ops hit peak intensity with little;
 //! - DRAM bandwidth split by `bw_frac_low` (default 0.75 to the
-//!   low-reuse side for decoder workloads — Fig 10 sweeps this);
-//! - hierarchical points attach the low-reuse unit at the LLB (no
-//!   private L1), which is where its energy advantage comes from;
+//!   low-reuse side for decoder workloads — Fig 10 sweeps this), carried
+//!   as per-edge shares of the memory tree;
+//! - hierarchical points attach compute directly at the LLB (no private
+//!   L1), which is where the energy advantage comes from;
 //! - intra-node points share the FSM: both arrays get the same column
-//!   count and must parallelise the same dimension across columns.
+//!   count, must parallelise the same dimension across columns, and are
+//!   tagged with one FSM group in the tree;
+//! - clustered points (Symphony-style) repeat the heterogeneous mix
+//!   under passthrough cluster nodes with halved resources;
+//! - compound points compose the above: one low-side unit per
+//!   heterogeneity source, with distinct architectural types so the
+//!   classification recovers every source.
+//!
+//! The invariant tested for every taxonomy point is the round trip
+//! `MachineTopology::classify(generate(class, params)) == class`.
 
 use super::spec::{ArchSpec, MappingConstraints};
 use super::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+use super::topology::{AccelNode, MachineTopology};
+use crate::arch::energy;
 use crate::workload::einsum::Dim;
 use crate::workload::intensity::ReuseClass;
 
@@ -100,7 +113,8 @@ impl Role {
     }
 }
 
-/// One sub-accelerator instance within a machine.
+/// One sub-accelerator instance within a machine: the flattened view of
+/// one tree attachment (same index as `MachineConfig::topology.accels`).
 #[derive(Debug, Clone)]
 pub struct SubAccel {
     pub id: usize,
@@ -108,11 +122,13 @@ pub struct SubAccel {
     pub spec: ArchSpec,
 }
 
-/// A fully-partitioned machine: the realisation of one taxonomy point.
+/// A fully-partitioned machine: the memory tree realising one taxonomy
+/// point, plus the flattened per-unit view the cost model consumes.
 #[derive(Debug, Clone)]
 pub struct MachineConfig {
     pub class: HarpClass,
     pub params: HardwareParams,
+    pub topology: MachineTopology,
     pub sub_accels: Vec<SubAccel>,
 }
 
@@ -129,11 +145,21 @@ pub fn array_shape(macs: u64) -> (u64, u64) {
     best
 }
 
-impl MachineConfig {
-    /// Build the machine for a taxonomy point under `params`.
-    pub fn build(class: &HarpClass, params: &HardwareParams) -> Result<MachineConfig, String> {
-        class.validate()?;
-        let p = params.clone();
+/// The per-side resource shares every heterogeneous generator draws from.
+struct Shares {
+    dram_w: f64,
+    high_macs: u64,
+    low_macs: u64,
+    llb_high: u64,
+    llb_low: u64,
+    bw_high: f64,
+    bw_low: f64,
+    llbbw_high: f64,
+    llbbw_low: f64,
+}
+
+impl Shares {
+    fn new(p: &HardwareParams) -> Shares {
         let dram_w = p.dram_bw_words();
         let frac_high_roof = p.roof_ratio / (p.roof_ratio + 1.0);
         let high_macs = ((p.total_macs as f64) * frac_high_roof).round() as u64;
@@ -146,234 +172,513 @@ impl MachineConfig {
         let bw_high = dram_w - bw_low;
         let llbbw_high = p.llb_bw_words * frac_high_roof;
         let llbbw_low = p.llb_bw_words - llbbw_high;
+        Shares {
+            dram_w,
+            high_macs,
+            low_macs,
+            llb_high,
+            llb_low,
+            bw_high,
+            bw_low,
+            llbbw_high,
+            llbbw_low,
+        }
+    }
+}
 
-        let mut subs: Vec<SubAccel> = Vec::new();
-        let push = |role: Role, spec: ArchSpec, subs: &mut Vec<SubAccel>| {
-            let id = subs.len();
-            subs.push(SubAccel { id, role, spec });
-        };
+/// Leaf-attached unit: a private `LLB → L1 → array` chain under `parent`.
+#[allow(clippy::too_many_arguments)]
+fn leaf_unit(
+    t: &mut MachineTopology,
+    parent: usize,
+    label: &str,
+    ty: &str,
+    role: Role,
+    rows: u64,
+    cols: u64,
+    rf_bytes_per_pe: u64,
+    l1_bytes: u64,
+    llb_bytes: u64,
+    llb_bw: f64,
+    dram_bw: f64,
+    fsm_group: Option<usize>,
+    constraints: MappingConstraints,
+) -> usize {
+    use crate::arch::level::LevelKind;
+    let llb =
+        t.add_node(parent, LevelKind::LLB, &format!("llb.{label}"), llb_bytes, dram_bw, None);
+    let l1 = t.add_node(llb, LevelKind::L1, &format!("l1.{label}"), l1_bytes, llb_bw, None);
+    let attach_bw = ArchSpec::default_attach_bw(rows * cols);
+    attach_unit(
+        t, l1, label, ty, role, rows, cols, rf_bytes_per_pe, attach_bw, dram_bw,
+        fsm_group, constraints,
+    )
+}
 
-        match (&class.placement, &class.heterogeneity) {
-            // (a) leaf + homogeneous: one machine, undivided resources.
-            (ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous) => {
-                let (r, c) = array_shape(p.total_macs);
-                let spec = ArchSpec::leaf(
-                    "unified",
-                    r,
-                    c,
-                    p.rf_bytes_per_pe,
-                    p.l1_bytes,
-                    p.llb_bytes,
-                    p.llb_bw_words,
-                    dram_w,
+/// LLB-attached unit (near-memory, no private L1) under `parent`.
+#[allow(clippy::too_many_arguments)]
+fn llb_unit(
+    t: &mut MachineTopology,
+    parent: usize,
+    label: &str,
+    ty: &str,
+    role: Role,
+    rows: u64,
+    cols: u64,
+    rf_bytes_per_pe: u64,
+    llb_bytes: u64,
+    llb_bw: f64,
+    dram_bw: f64,
+    fsm_group: Option<usize>,
+    constraints: MappingConstraints,
+) -> usize {
+    use crate::arch::level::LevelKind;
+    let llb =
+        t.add_node(parent, LevelKind::LLB, &format!("llb.{label}"), llb_bytes, dram_bw, None);
+    attach_unit(
+        t, llb, label, ty, role, rows, cols, rf_bytes_per_pe, llb_bw, dram_bw,
+        fsm_group, constraints,
+    )
+}
+
+/// Attach a unit at an *existing* node (used when several units share a
+/// subtree, e.g. the hierarchical cross-node low side).
+#[allow(clippy::too_many_arguments)]
+fn attach_unit(
+    t: &mut MachineTopology,
+    node: usize,
+    label: &str,
+    ty: &str,
+    role: Role,
+    rows: u64,
+    cols: u64,
+    rf_bytes_per_pe: u64,
+    attach_bw: f64,
+    dram_bw: f64,
+    fsm_group: Option<usize>,
+    constraints: MappingConstraints,
+) -> usize {
+    t.add_accel(AccelNode {
+        label: label.into(),
+        ty: ty.into(),
+        role,
+        rows,
+        cols,
+        rf_bytes_per_pe,
+        attach: node,
+        attach_bw,
+        dram_share: dram_bw,
+        mac_energy_pj: energy::MAC_PJ,
+        fsm_group,
+        constraints,
+    })
+}
+
+/// Shared-FSM column coupling for an intra-node pair: the widest divisor
+/// of the high-reuse PE count the low-reuse budget can still fill with
+/// at least one full row (otherwise the shared-FSM column constraint
+/// would inflate the low unit past its share).
+fn intra_cols(high_macs: u64, low_macs: u64) -> (u64, u64, u64) {
+    let (_, near_square_cols) = array_shape(high_macs);
+    let cols = (1..=near_square_cols.min(low_macs))
+        .rev()
+        .find(|c| high_macs % c == 0)
+        .unwrap_or(1);
+    (cols, high_macs / cols, (low_macs / cols).max(1))
+}
+
+fn shared_fsm_constraints() -> MappingConstraints {
+    MappingConstraints {
+        forced_col_dim: Some(Dim::N),
+        forced_col_factor: None,
+        no_dram_psum: false,
+    }
+}
+
+/// Generate the memory tree for a taxonomy point under `params`.
+pub fn generate_topology(
+    class: &HarpClass,
+    p: &HardwareParams,
+) -> Result<MachineTopology, String> {
+    use crate::arch::level::LevelKind;
+    class.validate()?;
+    let s = Shares::new(p);
+    let mut t = MachineTopology::new(&class.id(), s.dram_w);
+    let root = t.root();
+    let none = MappingConstraints::default;
+
+    match (&class.placement, &class.heterogeneity) {
+        // (a) leaf + homogeneous: one machine, undivided resources.
+        (ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous) => {
+            let (r, c) = array_shape(p.total_macs);
+            leaf_unit(
+                &mut t, root, "unified", "array", Role::Unified, r, c, p.rf_bytes_per_pe,
+                p.l1_bytes, p.llb_bytes, p.llb_bw_words, s.dram_w, None, none(),
+            );
+        }
+        // (e) hierarchical + homogeneous: the SAME architecture
+        // replicated at two levels (no prior work — derived from the
+        // taxonomy): a leaf instance plus an LLB-attached instance.
+        (ComputePlacement::Hierarchical, HeterogeneityLoc::Homogeneous) => {
+            let (rh, ch) = array_shape(s.high_macs);
+            let (rl, cl) = array_shape(s.low_macs);
+            leaf_unit(
+                &mut t, root, "leaf", "array", Role::High, rh, ch, p.rf_bytes_per_pe,
+                p.l1_bytes, s.llb_high, s.llbbw_high, s.bw_high, None, none(),
+            );
+            llb_unit(
+                &mut t, root, "llb-level", "array", Role::Low, rl, cl, p.rf_bytes_per_pe,
+                s.llb_low, s.llbbw_low, s.bw_low, None, none(),
+            );
+        }
+        // (b) leaf + cross-node: two leaf units in disjoint subtrees,
+        // independent FSMs — no shared mapping constraints.
+        (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossNode { clustered: false }) => {
+            let (rh, ch) = array_shape(s.high_macs);
+            let (rl, cl) = array_shape(s.low_macs);
+            leaf_unit(
+                &mut t, root, "high", "hi-array", Role::High, rh, ch, p.rf_bytes_per_pe,
+                p.l1_bytes, s.llb_high, s.llbbw_high, s.bw_high, None, none(),
+            );
+            leaf_unit(
+                &mut t, root, "low", "lo-array", Role::Low, rl, cl, p.rf_bytes_per_pe,
+                p.l1_bytes, s.llb_low, s.llbbw_low, s.bw_low, None, none(),
+            );
+        }
+        // Hierarchical cross-node: the leaf mix of (b) plus a second
+        // low-type instance attached directly at the low-side LLB, so
+        // compute spans two depths while the heterogeneity stays at the
+        // leaves (the low type exists at both depths; the high/low pair
+        // still meets at leaf depth ⇒ cross-node, not cross-depth).
+        (ComputePlacement::Hierarchical, HeterogeneityLoc::CrossNode { clustered: false }) => {
+            let (rh, ch) = array_shape(s.high_macs);
+            leaf_unit(
+                &mut t, root, "high", "hi-array", Role::High, rh, ch, p.rf_bytes_per_pe,
+                p.l1_bytes, s.llb_high, s.llbbw_high, s.bw_high, None, none(),
+            );
+            let lm = s.low_macs / 2;
+            let (rl, cl) = array_shape(lm);
+            let (rl2, cl2) = array_shape(s.low_macs - lm);
+            let llb_lo =
+                t.add_node(root, LevelKind::LLB, "llb.low", s.llb_low, s.bw_low, None);
+            let l1_lo = t.add_node(
+                llb_lo, LevelKind::L1, "l1.low", p.l1_bytes, s.llbbw_low / 2.0, None,
+            );
+            let pes = rl * cl;
+            attach_unit(
+                &mut t, l1_lo, "low-leaf", "lo-array", Role::Low, rl, cl,
+                p.rf_bytes_per_pe, ArchSpec::default_attach_bw(pes), s.bw_low / 2.0, None, none(),
+            );
+            attach_unit(
+                &mut t, llb_lo, "low-llb", "lo-array", Role::Low, rl2, cl2,
+                p.rf_bytes_per_pe, s.llbbw_low / 2.0, s.bw_low - s.bw_low / 2.0, None,
+                none(),
+            );
+        }
+        // (c) leaf/hierarchical + intra-node: shared FSM. Arrays share
+        // the column count and the column-parallel dimension; the tree
+        // tags both with one FSM group.
+        (placement, HeterogeneityLoc::IntraNode) => {
+            let (cols, rows_h, rows_l) = intra_cols(s.high_macs, s.low_macs);
+            let shared = shared_fsm_constraints();
+            leaf_unit(
+                &mut t, root, "high", "hi-array", Role::High, rows_h, cols,
+                p.rf_bytes_per_pe, p.l1_bytes, s.llb_high, s.llbbw_high, s.bw_high,
+                Some(0), shared.clone(),
+            );
+            if *placement == ComputePlacement::Hierarchical {
+                llb_unit(
+                    &mut t, root, "low", "lo-array", Role::Low, rows_l, cols,
+                    p.rf_bytes_per_pe, s.llb_low, s.llbbw_low, s.bw_low, Some(0), shared,
                 );
-                push(Role::Unified, spec, &mut subs);
-            }
-            // (b) leaf + cross-node: two leaf sub-accelerators, disjoint
-            // nodes, independent FSMs — no shared mapping constraints.
-            // The hierarchical unclustered variant attaches the low-reuse
-            // unit at the LLB (compute at two depths, different types at
-            // different nodes).
-            (placement, HeterogeneityLoc::CrossNode { clustered: false }) => {
-                let (rh, ch) = array_shape(high_macs);
-                let (rl, cl) = array_shape(low_macs);
-                push(
-                    Role::High,
-                    ArchSpec::leaf("high", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
-                    &mut subs,
+            } else {
+                leaf_unit(
+                    &mut t, root, "low", "lo-array", Role::Low, rows_l, cols,
+                    p.rf_bytes_per_pe, p.l1_bytes, s.llb_low, s.llbbw_low, s.bw_low,
+                    Some(0), shared,
                 );
-                let low = if *placement == ComputePlacement::Hierarchical {
-                    ArchSpec::near_llb("low", rl, cl, p.rf_bytes_per_pe, llb_low, llbbw_low, bw_low)
-                } else {
-                    ArchSpec::leaf("low", rl, cl, p.rf_bytes_per_pe, p.l1_bytes, llb_low, llbbw_low, bw_low)
-                };
-                push(Role::Low, low, &mut subs);
             }
-            // (f) hierarchical + clustered cross-node (Symphony-like):
-            // the heterogeneous mix repeats per cluster. Two clusters,
-            // each holding half of each sub-accelerator; per-cluster
-            // arrays are smaller, which costs spatial utilisation on
-            // large ops — the modelling consequence of clustering.
-            (ComputePlacement::Hierarchical, HeterogeneityLoc::CrossNode { clustered: true })
-            | (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossNode { clustered: true }) => {
-                for cluster in 0..2u64 {
-                    let (rh, ch) = array_shape(high_macs / 2);
-                    let (rl, cl) = array_shape(low_macs / 2);
-                    push(
-                        Role::High,
-                        ArchSpec::leaf(
-                            &format!("high.c{cluster}"),
-                            rh,
-                            ch,
-                            p.rf_bytes_per_pe,
-                            p.l1_bytes / 2,
-                            llb_high / 2,
-                            llbbw_high / 2.0,
-                            bw_high / 2.0,
-                        ),
-                        &mut subs,
+        }
+        // (f) clustered cross-node (Symphony-like): the heterogeneous
+        // mix repeats under two cluster nodes with halved resources;
+        // per-cluster arrays are smaller, which costs spatial
+        // utilisation on large ops — the modelling consequence of
+        // clustering. The hierarchical variant adds a per-cluster
+        // LLB-attached low instance (compute at two depths).
+        (placement, HeterogeneityLoc::CrossNode { clustered: true }) => {
+            let hier = *placement == ComputePlacement::Hierarchical;
+            for cluster in 0..2u64 {
+                let g = t.add_group(root, &format!("cluster{cluster}"));
+                let (rh, ch) = array_shape(s.high_macs / 2);
+                leaf_unit(
+                    &mut t, g, &format!("high.c{cluster}"), "hi-array", Role::High, rh, ch,
+                    p.rf_bytes_per_pe, p.l1_bytes / 2, s.llb_high / 2, s.llbbw_high / 2.0,
+                    s.bw_high / 2.0, None, none(),
+                );
+                let lm = s.low_macs / 2;
+                if hier {
+                    let (rl, cl) = array_shape(lm / 2);
+                    let (rl2, cl2) = array_shape(lm - lm / 2);
+                    let llb_lo = t.add_node(
+                        g, LevelKind::LLB, &format!("llb.low.c{cluster}"), s.llb_low / 2,
+                        s.bw_low / 2.0, None,
                     );
-                    push(
-                        Role::Low,
-                        ArchSpec::leaf(
-                            &format!("low.c{cluster}"),
-                            rl,
-                            cl,
-                            p.rf_bytes_per_pe,
-                            p.l1_bytes / 2,
-                            llb_low / 2,
-                            llbbw_low / 2.0,
-                            bw_low / 2.0,
-                        ),
-                        &mut subs,
+                    let l1_lo = t.add_node(
+                        llb_lo, LevelKind::L1, &format!("l1.low.c{cluster}"),
+                        p.l1_bytes / 2, s.llbbw_low / 4.0, None,
+                    );
+                    let pes = rl * cl;
+                    attach_unit(
+                        &mut t, l1_lo, &format!("low-leaf.c{cluster}"), "lo-array",
+                        Role::Low, rl, cl, p.rf_bytes_per_pe, ArchSpec::default_attach_bw(pes),
+                        s.bw_low / 4.0, None, none(),
+                    );
+                    attach_unit(
+                        &mut t, llb_lo, &format!("low-llb.c{cluster}"), "lo-array",
+                        Role::Low, rl2, cl2, p.rf_bytes_per_pe, s.llbbw_low / 4.0,
+                        s.bw_low / 2.0 - s.bw_low / 4.0, None, none(),
+                    );
+                } else {
+                    let (rl, cl) = array_shape(lm);
+                    leaf_unit(
+                        &mut t, g, &format!("low.c{cluster}"), "lo-array", Role::Low, rl,
+                        cl, p.rf_bytes_per_pe, p.l1_bytes / 2, s.llb_low / 2,
+                        s.llbbw_low / 2.0, s.bw_low / 2.0, None, none(),
                     );
                 }
             }
-            // (c) leaf + intra-node: shared FSM. Arrays share the column
-            // count; the mapper must parallelise the same dimension
-            // across columns on both (forced to N).
-            (ComputePlacement::LeafOnly, HeterogeneityLoc::IntraNode)
-            | (ComputePlacement::Hierarchical, HeterogeneityLoc::IntraNode) => {
-                // Common columns: the widest divisor of the high-reuse
-                // PE count that the low-reuse budget can still fill with
-                // at least one full row (otherwise the shared-FSM column
-                // constraint would inflate the low unit past its share).
-                let (_, near_square_cols) = array_shape(high_macs);
-                let cols = (1..=near_square_cols.min(low_macs))
-                    .rev()
-                    .find(|c| high_macs % c == 0)
-                    .unwrap_or(1);
-                let rows_h = high_macs / cols;
-                let rows_l = (low_macs / cols).max(1);
-                let shared = MappingConstraints {
-                    forced_col_dim: Some(Dim::N),
-                    forced_col_factor: None,
-                    no_dram_psum: false,
-                };
-                let mut hi = ArchSpec::leaf(
-                    "high",
-                    rows_h,
-                    cols,
-                    p.rf_bytes_per_pe,
-                    p.l1_bytes,
-                    llb_high,
-                    llbbw_high,
-                    bw_high,
-                );
-                hi.constraints = shared.clone();
-                let low_is_hier = class.placement == ComputePlacement::Hierarchical;
-                let mut lo = if low_is_hier {
-                    ArchSpec::near_llb(
-                        "low",
-                        rows_l,
-                        cols,
-                        p.rf_bytes_per_pe,
-                        llb_low,
-                        llbbw_low,
-                        bw_low,
-                    )
+        }
+        // (d) hierarchical + cross-depth: NPU at the leaves, a
+        // bandwidth-oriented streamer attached at the LLB (NeuPIM-like):
+        // wide and shallow — built for streaming, not reuse.
+        (ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth) => {
+            let (rh, ch) = array_shape(s.high_macs);
+            let rl = ((s.low_macs as f64).sqrt() as u64 / 2).max(1);
+            let cl = s.low_macs / rl;
+            leaf_unit(
+                &mut t, root, "npu", "npu-array", Role::High, rh, ch, p.rf_bytes_per_pe,
+                p.l1_bytes, s.llb_high, s.llbbw_high, s.bw_high, None, none(),
+            );
+            llb_unit(
+                &mut t, root, "near-llb", "streamer", Role::Low, rl, cl,
+                p.rf_bytes_per_pe, s.llb_low, s.llbbw_low, s.bw_low, None, none(),
+            );
+        }
+        // (h) compound: one low-side unit per heterogeneity source, each
+        // with a distinct architectural type so classification recovers
+        // every source. Low-side resources split evenly across the low
+        // units; a clustered source repeats the whole mix per cluster.
+        (placement, HeterogeneityLoc::Compound(parts)) => {
+            let has_intra = parts.contains(&HeterogeneityLoc::IntraNode);
+            let clustered = parts
+                .iter()
+                .any(|x| matches!(x, HeterogeneityLoc::CrossNode { clustered: true }));
+            let has_xnode = clustered
+                || parts
+                    .iter()
+                    .any(|x| matches!(x, HeterogeneityLoc::CrossNode { clustered: false }));
+            let has_xdepth = parts.contains(&HeterogeneityLoc::CrossDepth);
+            let hier = *placement == ComputePlacement::Hierarchical;
+            let nclusters: u64 = if clustered { 2 } else { 1 };
+            for cluster in 0..nclusters {
+                let parent = if clustered {
+                    t.add_group(root, &format!("cluster{cluster}"))
                 } else {
-                    ArchSpec::leaf(
-                        "low",
-                        rows_l,
-                        cols,
-                        p.rf_bytes_per_pe,
-                        p.l1_bytes,
-                        llb_low,
-                        llbbw_low,
-                        bw_low,
-                    )
+                    root
                 };
-                lo.constraints = shared;
-                push(Role::High, hi, &mut subs);
-                push(Role::Low, lo, &mut subs);
-            }
-            // (d) hierarchical + cross-depth: NPU at the leaves,
-            // bandwidth-oriented unit attached to the LLB (NeuPIM-like).
-            (ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth) => {
-                let (rh, ch) = array_shape(high_macs);
-                // The near-memory unit is wide and shallow (vector-like):
-                // few rows, many columns — built for streaming, not reuse.
-                let rl = (low_macs as f64).sqrt() as u64 / 2;
-                let rl = rl.max(1);
-                let cl = low_macs / rl;
-                push(
-                    Role::High,
-                    ArchSpec::leaf("npu", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
-                    &mut subs,
+                let sfx = if clustered { format!(".c{cluster}") } else { String::new() };
+                compound_cluster(
+                    &mut t, parent, p, &s, nclusters, cluster as usize, &sfx, has_intra,
+                    has_xnode, has_xdepth, hier,
                 );
-                push(
-                    Role::Low,
-                    ArchSpec::near_llb("near-llb", rl, cl, p.rf_bytes_per_pe, llb_low, llbbw_low, bw_low),
-                    &mut subs,
-                );
-            }
-            // (e) hierarchical + homogeneous: the SAME sub-accelerator
-            // architecture replicated at two levels (no prior work —
-            // derived from the taxonomy). Leaf instance + LLB instance
-            // with identical aspect ratio.
-            (ComputePlacement::Hierarchical, HeterogeneityLoc::Homogeneous) => {
-                let (rh, ch) = array_shape(high_macs);
-                let (rl, cl) = array_shape(low_macs);
-                push(
-                    Role::High,
-                    ArchSpec::leaf("leaf", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
-                    &mut subs,
-                );
-                push(
-                    Role::Low,
-                    ArchSpec::near_llb("llb-level", rl, cl, p.rf_bytes_per_pe, llb_low, llbbw_low, bw_low),
-                    &mut subs,
-                );
-            }
-            // (h) compound: cross-node at the leaves + cross-depth.
-            // Three sub-accelerators: big leaf (high), small leaf (low),
-            // near-LLB streamer (low). Low-side resources split evenly
-            // between the two low units.
-            (placement, HeterogeneityLoc::Compound(_)) => {
-                let _ = placement;
-                let (rh, ch) = array_shape(high_macs);
-                let (rl1, cl1) = array_shape(low_macs / 2);
-                let (rl2, cl2) = array_shape(low_macs - low_macs / 2);
-                push(
-                    Role::High,
-                    ArchSpec::leaf("high", rh, ch, p.rf_bytes_per_pe, p.l1_bytes, llb_high, llbbw_high, bw_high),
-                    &mut subs,
-                );
-                push(
-                    Role::Low,
-                    ArchSpec::leaf(
-                        "low-leaf",
-                        rl1,
-                        cl1,
-                        p.rf_bytes_per_pe,
-                        p.l1_bytes,
-                        llb_low / 2,
-                        llbbw_low / 2.0,
-                        bw_low / 2.0,
-                    ),
-                    &mut subs,
-                );
-                push(
-                    Role::Low,
-                    ArchSpec::near_llb(
-                        "low-nearllb",
-                        rl2,
-                        cl2,
-                        p.rf_bytes_per_pe,
-                        llb_low / 2,
-                        llbbw_low / 2.0,
-                        bw_low / 2.0,
-                    ),
-                    &mut subs,
-                );
-            }
-            (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth) => {
-                unreachable!("rejected by validate()")
             }
         }
+        (ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth) => {
+            unreachable!("rejected by validate()")
+        }
+    }
+    Ok(t)
+}
 
-        Ok(MachineConfig { class: class.clone(), params: p, sub_accels: subs })
+/// One compound cluster's unit list. With `nclusters == 1` this is the
+/// whole machine.
+#[allow(clippy::too_many_arguments)]
+fn compound_cluster(
+    t: &mut MachineTopology,
+    parent: usize,
+    p: &HardwareParams,
+    s: &Shares,
+    nclusters: u64,
+    cluster: usize,
+    sfx: &str,
+    has_intra: bool,
+    has_xnode: bool,
+    has_xdepth: bool,
+    hier: bool,
+) {
+    let none = MappingConstraints::default;
+    let nc = nclusters;
+    let high_macs = s.high_macs / nc;
+    let low_macs = s.low_macs / nc;
+    let l1 = p.l1_bytes / nc;
+    let llb_high = s.llb_high / nc;
+    let llb_low = s.llb_low / nc;
+    let ncf = nc as f64;
+    let (bw_high, bw_low) = (s.bw_high / ncf, s.bw_low / ncf);
+    let (llbbw_high, llbbw_low) = (s.llbbw_high / ncf, s.llbbw_low / ncf);
+
+    // The low-side unit list: (label, ty, attaches-at-LLB), one entry
+    // per heterogeneity source, each with a distinct type.
+    let mut lows: Vec<(&str, &str, bool)> = Vec::new();
+    if has_intra {
+        lows.push(("low-fsm", "lo-fsm-array", false));
+    }
+    if has_xnode {
+        lows.push(("low-leaf", "lo-array", false));
+    }
+    if has_xdepth {
+        lows.push(("low-nearllb", "streamer", true));
+    }
+    let nlow = lows.len() as u64;
+
+    // When the placement is hierarchical but no cross-depth source
+    // supplies the second level, the high type itself is replicated at
+    // the LLB: same type at two depths adds hierarchy without adding a
+    // heterogeneity source.
+    let split_high = hier && !has_xdepth;
+    let fsm = if has_intra { Some(cluster) } else { None };
+    let hi_constraints =
+        if has_intra { shared_fsm_constraints() } else { MappingConstraints::default() };
+    let hm = if split_high { high_macs / 2 } else { high_macs };
+    let (cols_shared, rows_h, rows_fsm) = if has_intra {
+        intra_cols(hm, low_macs / nlow.max(1))
+    } else {
+        let (rh, ch) = array_shape(hm);
+        (ch, rh, 1)
+    };
+    let hbw_div = if split_high { 2.0 } else { 1.0 };
+    leaf_unit(
+        t, parent, &format!("high{sfx}"), "hi-array", Role::High, rows_h, cols_shared,
+        p.rf_bytes_per_pe, l1, if split_high { llb_high / 2 } else { llb_high },
+        llbbw_high / hbw_div, bw_high / hbw_div, fsm, hi_constraints,
+    );
+    if split_high {
+        let (rh2, ch2) = array_shape(high_macs - hm);
+        llb_unit(
+            t, parent, &format!("high-llb{sfx}"), "hi-array", Role::High, rh2, ch2,
+            p.rf_bytes_per_pe, llb_high - llb_high / 2, llbbw_high / 2.0,
+            bw_high - bw_high / 2.0, None, none(),
+        );
+    }
+
+    for (i, (label, ty, at_llb)) in lows.iter().enumerate() {
+        let macs = if i as u64 + 1 == nlow {
+            low_macs - (nlow - 1) * (low_macs / nlow)
+        } else {
+            low_macs / nlow
+        };
+        let nlf = nlow as f64;
+        let (llb_sz, llb_bw, dram_bw) = (llb_low / nlow, llbbw_low / nlf, bw_low / nlf);
+        let label = format!("{label}{sfx}");
+        if *at_llb {
+            let rl = ((macs as f64).sqrt() as u64 / 2).max(1);
+            let cl = macs / rl;
+            llb_unit(
+                t, parent, &label, ty, Role::Low, rl, cl, p.rf_bytes_per_pe, llb_sz,
+                llb_bw, dram_bw, None, none(),
+            );
+        } else if *ty == "lo-fsm-array" {
+            leaf_unit(
+                t, parent, &label, ty, Role::Low, rows_fsm, cols_shared,
+                p.rf_bytes_per_pe, l1, llb_sz, llb_bw, dram_bw, fsm,
+                shared_fsm_constraints(),
+            );
+        } else {
+            let (rl, cl) = array_shape(macs);
+            leaf_unit(
+                t, parent, &label, ty, Role::Low, rl, cl, p.rf_bytes_per_pe, l1, llb_sz,
+                llb_bw, dram_bw, None, none(),
+            );
+        }
+    }
+}
+
+impl MachineConfig {
+    /// Build the machine for a taxonomy point under `params`: generate
+    /// the memory tree, then flatten every attachment into the per-unit
+    /// specs the cost model consumes.
+    pub fn build(class: &HarpClass, params: &HardwareParams) -> Result<MachineConfig, String> {
+        let topology = generate_topology(class, params)?;
+        let sub_accels = topology
+            .flatten_all()
+            .into_iter()
+            .enumerate()
+            .map(|(id, spec)| SubAccel { id, role: topology.accels[id].role, spec })
+            .collect();
+        Ok(MachineConfig {
+            class: class.clone(),
+            params: params.clone(),
+            topology,
+            sub_accels,
+        })
+    }
+
+    /// Build from an explicit memory tree (the `--topology FILE` path).
+    /// The taxonomy point is *derived* from the tree, and the synthetic
+    /// `HardwareParams` summarise its aggregates (total PEs, root
+    /// bandwidth) so downstream classification thresholds keep working.
+    pub fn from_topology(topology: MachineTopology) -> Result<MachineConfig, String> {
+        use crate::arch::level::LevelKind;
+        topology.validate()?;
+        let class = topology.classify()?;
+        let defaults = HardwareParams::default();
+        let params = HardwareParams {
+            total_macs: topology.accels.iter().map(|a| a.peak_macs()).sum(),
+            dram_bw_bits: topology.total_dram_bw() * defaults.datawidth_bits as f64,
+            llb_bytes: topology
+                .nodes
+                .iter()
+                .filter(|n| !n.passthrough && n.parent.is_some() && n.kind == LevelKind::LLB)
+                .map(|n| n.size_words)
+                .sum::<u64>()
+                .max(1),
+            ..defaults
+        };
+        let sub_accels = topology
+            .flatten_all()
+            .into_iter()
+            .enumerate()
+            .map(|(id, spec)| SubAccel { id, role: topology.accels[id].role, spec })
+            .collect();
+        Ok(MachineConfig { class, params, topology, sub_accels })
+    }
+
+    /// Re-derive the taxonomy point from the tree structure (the
+    /// generate → classify round-trip invariant).
+    pub fn classify(&self) -> Result<HarpClass, String> {
+        self.topology.classify()
+    }
+
+    /// Effective DRAM bandwidth for unit `s` when exactly the units with
+    /// `busy[x] == true` contend (callers include `s` itself): idle
+    /// units' shares are re-granted along the tree. Trees whose edge
+    /// shares nest proportionally (every generated machine) reduce to
+    /// the flat share-weighted formula, which we use directly so results
+    /// are bit-stable against the pre-tree scheduler; pinned per-edge
+    /// shares take the recursive path. That path walks the whole tree
+    /// and allocates per call — acceptable because it only runs for
+    /// explicitly pinned `--topology` machines, and the scheduler issues
+    /// O(units) such queries per completion event, not per candidate op.
+    pub fn dynamic_dram_bw(&self, s: usize, busy: &[bool]) -> f64 {
+        let total = self.params.dram_bw_words();
+        if self.topology.custom_edge_shares() {
+            return self.topology.dram_shares(busy, total)[s];
+        }
+        let busy_now: f64 = (0..self.sub_accels.len())
+            .filter(|&x| busy[x])
+            .map(|x| self.sub_accels[x].spec.dram().bw_words_per_cycle)
+            .sum();
+        self.sub_accels[s].spec.dram().bw_words_per_cycle * (total / busy_now)
     }
 
     /// Total PEs across sub-accelerators (invariant: == params.total_macs,
@@ -434,7 +739,7 @@ mod tests {
         assert_eq!(m.sub_accels.len(), 1);
         assert_eq!(m.total_pes(), 40960);
         assert_eq!(m.sub_accels[0].spec.dram().bw_words_per_cycle, 256.0);
-        assert_eq!(m.sub_accels[0].spec.level(LevelKind::Llb).unwrap().size_words, 4 << 20);
+        assert_eq!(m.sub_accels[0].spec.level(LevelKind::LLB).unwrap().size_words, 4 << 20);
     }
 
     #[test]
@@ -447,9 +752,46 @@ mod tests {
         assert_eq!(hi.peak_macs(), 32768);
         assert_eq!(lo.peak_macs(), 8192);
         // LLB ∝ roof, BW 25/75.
-        assert_eq!(hi.level(LevelKind::Llb).unwrap().size_words, (4 << 20) * 4 / 5);
+        assert_eq!(hi.level(LevelKind::LLB).unwrap().size_words, (4 << 20) * 4 / 5);
         assert!((hi.dram().bw_words_per_cycle - 64.0).abs() < 1e-9);
         assert!((lo.dram().bw_words_per_cycle - 192.0).abs() < 1e-9);
+    }
+
+    /// The flattened tree specs must be numerically identical to the
+    /// direct `ArchSpec::leaf`/`near_llb` chains — the guarantee that
+    /// moving the machine model onto the tree moved no golden figure.
+    #[test]
+    fn flattened_specs_match_flat_constructors() {
+        let p = params();
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node());
+        let m = MachineConfig::build(&c, &p).unwrap();
+        let direct = ArchSpec::leaf(
+            "high", 128, 256, p.rf_bytes_per_pe, p.l1_bytes, (4 << 20) * 4 / 5,
+            1024.0 * 0.8, 64.0,
+        );
+        let flat = &m.sub_accels[0].spec;
+        assert_eq!(flat.levels.len(), direct.levels.len());
+        for (a, b) in flat.levels.iter().zip(&direct.levels) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.size_words, b.size_words);
+            assert_eq!(a.bw_words_per_cycle, b.bw_words_per_cycle);
+            assert_eq!(a.energy_pj_per_word, b.energy_pj_per_word);
+        }
+        // Near-LLB instance too (cross-depth low unit).
+        let cd = HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::CrossDepth);
+        let mcd = MachineConfig::build(&cd, &p).unwrap();
+        let lo = &mcd.sub_accels[1].spec;
+        let direct_lo = ArchSpec::near_llb(
+            "near-llb", lo.rows, lo.cols, p.rf_bytes_per_pe,
+            (4 << 20) - (4 << 20) * 4 / 5, 1024.0 - 1024.0 * 0.8, 192.0,
+        );
+        assert_eq!(lo.levels.len(), direct_lo.levels.len());
+        for (a, b) in lo.levels.iter().zip(&direct_lo.levels) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.size_words, b.size_words);
+            assert_eq!(a.bw_words_per_cycle, b.bw_words_per_cycle);
+            assert_eq!(a.energy_pj_per_word, b.energy_pj_per_word);
+        }
     }
 
     #[test]
@@ -461,6 +803,9 @@ mod tests {
         assert_eq!(hi.cols, lo.cols);
         assert!(hi.constraints.forced_col_dim.is_some());
         assert!(lo.constraints.forced_col_dim.is_some());
+        // The tree marks the shared sequencer.
+        assert_eq!(m.topology.accels[0].fsm_group, m.topology.accels[1].fsm_group);
+        assert!(m.topology.accels[0].fsm_group.is_some());
     }
 
     #[test]
@@ -506,12 +851,57 @@ mod tests {
     }
 
     #[test]
-    fn clustered_cross_node_builds_four() {
-        let c = HarpClass::new(
+    fn clustered_cross_node_unit_counts() {
+        let leaf = HarpClass::new(
+            ComputePlacement::LeafOnly,
+            HeterogeneityLoc::CrossNode { clustered: true },
+        );
+        let m = MachineConfig::build(&leaf, &params()).unwrap();
+        assert_eq!(m.sub_accels.len(), 4);
+        // The hierarchical variant adds a per-cluster LLB-attached low
+        // unit: the mix repeats at two depths.
+        let hier = HarpClass::new(
             ComputePlacement::Hierarchical,
             HeterogeneityLoc::CrossNode { clustered: true },
         );
+        let mh = MachineConfig::build(&hier, &params()).unwrap();
+        assert_eq!(mh.sub_accels.len(), 6);
+    }
+
+    #[test]
+    fn hierarchical_cross_node_has_three_units_two_depths() {
+        let c =
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node());
         let m = MachineConfig::build(&c, &params()).unwrap();
-        assert_eq!(m.sub_accels.len(), 4);
+        assert_eq!(m.sub_accels.len(), 3);
+        let depths: std::collections::BTreeSet<usize> =
+            m.topology.accels.iter().map(|a| m.topology.depth(a.attach)).collect();
+        assert_eq!(depths.len(), 2);
+        // The two low units share one LLB node.
+        assert_eq!(
+            m.sub_accels[1].spec.level(LevelKind::LLB).unwrap().size_words,
+            m.sub_accels[2].spec.level(LevelKind::LLB).unwrap().size_words
+        );
+    }
+
+    /// The tentpole invariant: generate → classify returns the same
+    /// taxonomy point, for every point the taxonomy can express.
+    #[test]
+    fn round_trip_every_taxonomy_point() {
+        for class in HarpClass::all_points() {
+            let m = MachineConfig::build(&class, &params()).unwrap();
+            let back = m.classify().unwrap();
+            assert_eq!(back, class, "round trip failed for {class}");
+        }
+    }
+
+    #[test]
+    fn dynamic_bw_regrants_to_sole_busy_unit() {
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node());
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        let both = m.dynamic_dram_bw(0, &[true, true]);
+        assert!((both - 64.0).abs() < 1e-9);
+        let solo = m.dynamic_dram_bw(1, &[false, true]);
+        assert!((solo - 256.0).abs() < 1e-6);
     }
 }

@@ -43,6 +43,27 @@ impl ArchSpec {
         self.rows * self.cols
     }
 
+    /// RF storage level for a `pes`-wide array: per-PE capacity
+    /// aggregated, 2 words/cycle/PE, flip-flop energy. Shared by the
+    /// direct chain constructors and the tree flattening
+    /// ([`crate::arch::topology::MachineTopology::flatten`]) so the two
+    /// can never diverge — the goldens' byte-identity rests on it.
+    pub fn rf_level(rf_bytes_per_pe: u64, pes: u64) -> StorageLevel {
+        StorageLevel::new(
+            LevelKind::RF,
+            rf_bytes_per_pe * pes,
+            pes as f64 * 2.0,
+            energy::RF_PJ,
+        )
+    }
+
+    /// Default bandwidth of the edge feeding a `pes`-wide array from its
+    /// attach node (`√PEs · 16` — array-boundary scaling). Same sharing
+    /// rationale as [`ArchSpec::rf_level`].
+    pub fn default_attach_bw(pes: u64) -> f64 {
+        (pes as f64).sqrt() * 16.0
+    }
+
     /// Index of a level by kind.
     pub fn level_index(&self, kind: LevelKind) -> Option<usize> {
         self.levels.iter().position(|l| l.kind == kind)
@@ -80,20 +101,15 @@ impl ArchSpec {
             rows,
             cols,
             levels: vec![
-                StorageLevel::new(
-                    LevelKind::Rf,
-                    rf_bytes_per_pe * pes,
-                    pes as f64 * 2.0,
-                    energy::RF_PJ,
-                ),
+                ArchSpec::rf_level(rf_bytes_per_pe, pes),
                 StorageLevel::new(
                     LevelKind::L1,
                     l1_bytes,
-                    (pes as f64).sqrt() * 16.0,
+                    ArchSpec::default_attach_bw(pes),
                     energy::sram_pj(l1_bytes),
                 ),
-                StorageLevel::new(LevelKind::Llb, llb_bytes, llb_bw, energy::sram_pj(llb_bytes)),
-                StorageLevel::new(LevelKind::Dram, u64::MAX, dram_bw, energy::DRAM_PJ),
+                StorageLevel::new(LevelKind::LLB, llb_bytes, llb_bw, energy::sram_pj(llb_bytes)),
+                StorageLevel::new(LevelKind::DRAM, u64::MAX, dram_bw, energy::DRAM_PJ),
             ],
             mac_energy_pj: energy::MAC_PJ,
             constraints: MappingConstraints::default(),
@@ -119,14 +135,9 @@ impl ArchSpec {
             rows,
             cols,
             levels: vec![
-                StorageLevel::new(
-                    LevelKind::Rf,
-                    rf_bytes_per_pe * pes,
-                    pes as f64 * 2.0,
-                    energy::RF_PJ,
-                ),
-                StorageLevel::new(LevelKind::Llb, llb_bytes, llb_bw, energy::sram_pj(llb_bytes)),
-                StorageLevel::new(LevelKind::Dram, u64::MAX, dram_bw, energy::DRAM_PJ),
+                ArchSpec::rf_level(rf_bytes_per_pe, pes),
+                StorageLevel::new(LevelKind::LLB, llb_bytes, llb_bw, energy::sram_pj(llb_bytes)),
+                StorageLevel::new(LevelKind::DRAM, u64::MAX, dram_bw, energy::DRAM_PJ),
             ],
             mac_energy_pj: energy::MAC_PJ,
             constraints: MappingConstraints::default(),
@@ -159,8 +170,8 @@ mod tests {
         let s = ArchSpec::leaf("hi", 256, 128, 64, 131072, 4 << 20, 512.0, 256.0);
         assert_eq!(s.peak_macs(), 32768);
         assert_eq!(s.levels.len(), 4);
-        assert_eq!(s.levels[0].kind, LevelKind::Rf);
-        assert_eq!(s.dram().kind, LevelKind::Dram);
+        assert_eq!(s.levels[0].kind, LevelKind::RF);
+        assert_eq!(s.dram().kind, LevelKind::DRAM);
         assert!(s.tipping_ai() > 100.0);
     }
 
@@ -169,12 +180,12 @@ mod tests {
         let s = ArchSpec::near_llb("lo", 64, 128, 64, 1 << 20, 512.0, 192.0);
         assert_eq!(s.levels.len(), 3);
         assert!(s.level(LevelKind::L1).is_none());
-        assert!(s.level(LevelKind::Llb).is_some());
+        assert!(s.level(LevelKind::LLB).is_some());
     }
 
     #[test]
     fn rf_capacity_scales_with_pes() {
         let s = ArchSpec::leaf("x", 2, 2, 64, 1024, 4096, 8.0, 8.0);
-        assert_eq!(s.level(LevelKind::Rf).unwrap().size_words, 64 * 4);
+        assert_eq!(s.level(LevelKind::RF).unwrap().size_words, 64 * 4);
     }
 }

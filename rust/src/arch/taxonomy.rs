@@ -110,16 +110,59 @@ impl HarpClass {
                 Err("cross-depth heterogeneity requires a hierarchical placement".into())
             }
             (placement, HeterogeneityLoc::Compound(parts)) => {
-                if parts.len() < 2 {
-                    return Err("compound needs ≥2 heterogeneity sources".into());
+                if parts.is_empty() {
+                    return Err("compound with no heterogeneity sources".into());
+                }
+                if parts.len() == 1 {
+                    return Err(
+                        "compound needs ≥2 heterogeneity sources (one source is just that source)"
+                            .into(),
+                    );
                 }
                 for p in parts {
                     check_part(p)?;
                 }
-                let mut dedup = parts.clone();
-                dedup.dedup_by(|a, b| a == b);
-                if dedup.len() != parts.len() {
-                    return Err("compound sources must be distinct".into());
+                // Full pairwise distinctness — `dedup_by` only catches
+                // *adjacent* duplicates, so [xnode, xdepth, xnode] used
+                // to slip through.
+                for (i, a) in parts.iter().enumerate() {
+                    if parts[i + 1..].contains(a) {
+                        return Err(format!(
+                            "compound sources must be distinct ('{}' appears twice)",
+                            a.name()
+                        ));
+                    }
+                }
+                // Clustering is a property of THE cross-node axis, so a
+                // compound cannot carry both flavours at once — and the
+                // classifier emits sources in canonical order, so only
+                // canonically-ordered compounds can round-trip.
+                let clustered_and_not = parts
+                    .iter()
+                    .any(|x| matches!(x, HeterogeneityLoc::CrossNode { clustered: false }))
+                    && parts
+                        .iter()
+                        .any(|x| matches!(x, HeterogeneityLoc::CrossNode { clustered: true }));
+                if clustered_and_not {
+                    return Err(
+                        "compound cannot mix clustered and unclustered cross-node sources"
+                            .into(),
+                    );
+                }
+                fn rank(p: &HeterogeneityLoc) -> u8 {
+                    match p {
+                        HeterogeneityLoc::IntraNode => 0,
+                        HeterogeneityLoc::CrossNode { .. } => 1,
+                        HeterogeneityLoc::CrossDepth => 2,
+                        _ => 3,
+                    }
+                }
+                if parts.windows(2).any(|w| rank(&w[0]) >= rank(&w[1])) {
+                    return Err(
+                        "compound sources must be in canonical order \
+                         (intra-node, cross-node, cross-depth)"
+                            .into(),
+                    );
                 }
                 if parts.contains(&HeterogeneityLoc::CrossDepth)
                     && *placement == ComputePlacement::LeafOnly
@@ -130,6 +173,36 @@ impl HarpClass {
             }
             _ => Ok(()),
         }
+    }
+
+    /// Every valid taxonomy point the topology generator can realise:
+    /// the full placement × heterogeneity grid (Table I), clustered
+    /// variants, and the compound combinations with their sources in
+    /// canonical order (intra-node, cross-node, cross-depth). This is
+    /// the domain of the generate → classify round-trip invariant.
+    pub fn all_points() -> Vec<HarpClass> {
+        use ComputePlacement::*;
+        use HeterogeneityLoc::*;
+        let xn = || CrossNode { clustered: false };
+        let xc = || CrossNode { clustered: true };
+        vec![
+            HarpClass::new(LeafOnly, Homogeneous),
+            HarpClass::new(LeafOnly, IntraNode),
+            HarpClass::new(LeafOnly, xn()),
+            HarpClass::new(LeafOnly, xc()),
+            HarpClass::new(Hierarchical, Homogeneous),
+            HarpClass::new(Hierarchical, IntraNode),
+            HarpClass::new(Hierarchical, xn()),
+            HarpClass::new(Hierarchical, xc()),
+            HarpClass::new(Hierarchical, CrossDepth),
+            HarpClass::new(LeafOnly, Compound(vec![IntraNode, xn()])),
+            HarpClass::new(LeafOnly, Compound(vec![IntraNode, xc()])),
+            HarpClass::new(Hierarchical, Compound(vec![IntraNode, xn()])),
+            HarpClass::new(Hierarchical, Compound(vec![IntraNode, CrossDepth])),
+            HarpClass::new(Hierarchical, Compound(vec![xn(), CrossDepth])),
+            HarpClass::new(Hierarchical, Compound(vec![xc(), CrossDepth])),
+            HarpClass::new(Hierarchical, Compound(vec![IntraNode, xn(), CrossDepth])),
+        ]
     }
 
     /// The four evaluation configurations of the paper (Fig 4 a-d).
@@ -154,12 +227,27 @@ impl HarpClass {
             HeterogeneityLoc::CrossNode { clustered: false } => "xnode".into(),
             HeterogeneityLoc::CrossNode { clustered: true } => "xnode-cl".into(),
             HeterogeneityLoc::CrossDepth => "xdepth".into(),
-            HeterogeneityLoc::Compound(_) => "compound".into(),
+            // Unambiguous per variant so every listed id parses back:
+            // e.g. "compound[intra,xnode]".
+            HeterogeneityLoc::Compound(parts) => {
+                let toks: Vec<&str> = parts
+                    .iter()
+                    .map(|p| match p {
+                        HeterogeneityLoc::IntraNode => "intra",
+                        HeterogeneityLoc::CrossNode { clustered: false } => "xnode",
+                        HeterogeneityLoc::CrossNode { clustered: true } => "xnode-cl",
+                        HeterogeneityLoc::CrossDepth => "xdepth",
+                        _ => "?", // rejected by validate()
+                    })
+                    .collect();
+                format!("compound[{}]", toks.join(","))
+            }
         };
         format!("{p}+{h}")
     }
 
-    /// Parse an id produced by [`HarpClass::id`].
+    /// Parse an id produced by [`HarpClass::id`]. The bare `compound`
+    /// shorthand is the canonical Fig 4h point, `[xnode, xdepth]`.
     pub fn from_id(id: &str) -> Option<HarpClass> {
         let (p, h) = id.split_once('+')?;
         let placement = match p {
@@ -167,17 +255,32 @@ impl HarpClass {
             "hier" => ComputePlacement::Hierarchical,
             _ => return None,
         };
+        let part = |tok: &str| -> Option<HeterogeneityLoc> {
+            Some(match tok {
+                "intra" => HeterogeneityLoc::IntraNode,
+                "xnode" => HeterogeneityLoc::cross_node(),
+                "xnode-cl" => HeterogeneityLoc::CrossNode { clustered: true },
+                "xdepth" => HeterogeneityLoc::CrossDepth,
+                _ => return None,
+            })
+        };
         let heterogeneity = match h {
             "homo" => HeterogeneityLoc::Homogeneous,
-            "intra" => HeterogeneityLoc::IntraNode,
-            "xnode" => HeterogeneityLoc::cross_node(),
-            "xnode-cl" => HeterogeneityLoc::CrossNode { clustered: true },
-            "xdepth" => HeterogeneityLoc::CrossDepth,
             "compound" => HeterogeneityLoc::Compound(vec![
                 HeterogeneityLoc::cross_node(),
                 HeterogeneityLoc::CrossDepth,
             ]),
-            _ => return None,
+            _ => {
+                if let Some(inner) =
+                    h.strip_prefix("compound[").and_then(|r| r.strip_suffix(']'))
+                {
+                    let parts: Option<Vec<HeterogeneityLoc>> =
+                        inner.split(',').map(|t| part(t.trim())).collect();
+                    HeterogeneityLoc::Compound(parts?)
+                } else {
+                    part(h)?
+                }
+            }
         };
         let class = HarpClass::new(placement, heterogeneity);
         class.validate().ok()?;
@@ -266,6 +369,72 @@ mod tests {
         assert!(nested.validate().is_err());
     }
 
+    /// Degenerate compound payloads are rejected with a clear error:
+    /// empty, single-source, nested compound, homogeneous-inside, and
+    /// (the actual historical bug) non-adjacent duplicate sources.
+    #[test]
+    fn degenerate_compounds_rejected() {
+        let hier = ComputePlacement::Hierarchical;
+        let make = |parts: Vec<HeterogeneityLoc>| {
+            HarpClass::new(hier, HeterogeneityLoc::Compound(parts))
+        };
+        let empty = make(vec![]).validate().unwrap_err();
+        assert!(empty.contains("no heterogeneity sources"), "{empty}");
+        let single = make(vec![HeterogeneityLoc::CrossDepth]).validate().unwrap_err();
+        assert!(single.contains("≥2"), "{single}");
+        let nested = make(vec![
+            HeterogeneityLoc::cross_node(),
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::CrossDepth,
+            ]),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(nested.contains("nested"), "{nested}");
+        let homo = make(vec![HeterogeneityLoc::cross_node(), HeterogeneityLoc::Homogeneous])
+            .validate()
+            .unwrap_err();
+        assert!(homo.contains("homogeneous"), "{homo}");
+        // Non-adjacent duplicate — dedup_by missed this before.
+        let dup = make(vec![
+            HeterogeneityLoc::cross_node(),
+            HeterogeneityLoc::CrossDepth,
+            HeterogeneityLoc::cross_node(),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(dup.contains("distinct"), "{dup}");
+        // Mixed cross-node flavours are not expressible by one machine.
+        let mixed = make(vec![
+            HeterogeneityLoc::cross_node(),
+            HeterogeneityLoc::CrossNode { clustered: true },
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(mixed.contains("mix"), "{mixed}");
+        // Only canonically-ordered compounds can round-trip classify().
+        let unordered = make(vec![
+            HeterogeneityLoc::CrossDepth,
+            HeterogeneityLoc::cross_node(),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(unordered.contains("canonical order"), "{unordered}");
+    }
+
+    #[test]
+    fn all_points_are_valid_and_distinct() {
+        let points = HarpClass::all_points();
+        assert_eq!(points.len(), 16);
+        for p in &points {
+            p.validate().unwrap_or_else(|e| panic!("{p}: {e}"));
+        }
+        for (i, p) in points.iter().enumerate() {
+            assert!(!points[i + 1..].contains(p), "duplicate point {p}");
+        }
+    }
+
     #[test]
     fn table_i_matches_paper() {
         let works = prior_works();
@@ -287,6 +456,24 @@ mod tests {
         }
         assert!(HarpClass::from_id("leaf+xdepth").is_none()); // invalid point
         assert!(HarpClass::from_id("garbage").is_none());
+    }
+
+    /// Every id `harp topology list` prints must parse back to the same
+    /// point — including each compound variant, which used to collapse
+    /// to an ambiguous (and for leaf-only, unparseable) 'compound'.
+    #[test]
+    fn every_listed_point_id_round_trips() {
+        for c in HarpClass::all_points() {
+            let id = c.id();
+            assert_eq!(HarpClass::from_id(&id).as_ref(), Some(&c), "{id}");
+        }
+        // Legacy shorthand stays aliased to the canonical Fig 4h point.
+        assert_eq!(
+            HarpClass::from_id("hier+compound").unwrap().id(),
+            "hier+compound[xnode,xdepth]"
+        );
+        assert!(HarpClass::from_id("hier+compound[intra]").is_none()); // 1 source
+        assert!(HarpClass::from_id("leaf+compound[intra,xdepth]").is_none());
     }
 
     #[test]

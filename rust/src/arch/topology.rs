@@ -1,0 +1,1001 @@
+//! Machine topology: the memory tree with sub-accelerators attached at
+//! arbitrary nodes and depths.
+//!
+//! This is the machine's source of truth. A machine is a tree of storage
+//! nodes rooted at DRAM; each sub-accelerator (a PE array plus its
+//! register file) attaches to one node at any depth. Flattening an
+//! accelerator's path to the root yields the innermost-first
+//! [`ArchSpec`] level list the cost model consumes, so the tree widens
+//! the design space without touching the per-op analysis.
+//!
+//! Three structural markers carry the HARP taxonomy (paper §IV):
+//!
+//! - **attach depth** — compute at ≥2 distinct depths ⇒ hierarchical
+//!   placement;
+//! - **accelerator type** (`ty`) — which units are instances of the same
+//!   architecture. Heterogeneity exists between *distinct* types; the
+//!   hierarchical+homogeneous point is the same type at two depths;
+//! - **FSM groups** — units sharing a sequencer (B100 SM, RaPiD) are
+//!   intra-node heterogeneous regardless of where their storage lives;
+//! - **passthrough group nodes** — Symphony-style clusters: a grouping
+//!   boundary that contributes no storage level but scopes the "repeated
+//!   heterogeneous mix" test for clustered cross-node points.
+//!
+//! [`MachineTopology::classify`] derives the taxonomy point from these
+//! markers alone; the partition generator's round-trip invariant
+//! (generate → classify → same class) is tested for every point.
+//!
+//! DRAM bandwidth is partitioned per tree edge: every accelerator owns
+//! an exclusive share (`dram_share`), and a node may pin an explicit
+//! aggregate share for its whole subtree ([`MemoryNode::dram_share`]).
+//! Without pinned edges the shares nest proportionally, and the
+//! scheduler's dynamic re-grant reduces exactly to the flat
+//! share-weighted formula (see [`MachineTopology::dram_shares`]).
+
+use super::energy;
+use super::level::{LevelKind, StorageLevel};
+use super::partition::Role;
+use super::spec::{ArchSpec, MappingConstraints};
+use crate::util::json::Json;
+use crate::workload::einsum::Dim;
+use std::collections::BTreeSet;
+
+/// One storage node of the memory tree.
+#[derive(Debug, Clone)]
+pub struct MemoryNode {
+    pub id: usize,
+    pub kind: LevelKind,
+    /// Instance label (distinct nodes of one kind need distinct labels).
+    pub label: String,
+    /// Capacity in words; `u64::MAX` for the unbounded root.
+    pub size_words: u64,
+    pub energy_pj_per_word: f64,
+    /// Words per cycle the parent delivers down the edge to this node.
+    /// For the root this is the machine's total DRAM bandwidth.
+    pub bw_words_per_cycle: f64,
+    /// Pinned aggregate DRAM-bandwidth share for this subtree, words per
+    /// cycle. `None` (the default) lets the subtree's share float to the
+    /// sum of its accelerators' shares.
+    pub dram_share: Option<f64>,
+    pub parent: Option<usize>,
+    pub children: Vec<usize>,
+    /// Grouping-only node (cluster boundary): no storage level.
+    pub passthrough: bool,
+}
+
+/// One sub-accelerator attachment.
+#[derive(Debug, Clone)]
+pub struct AccelNode {
+    pub label: String,
+    /// Architectural type: units with equal `ty` are instances of the
+    /// same sub-accelerator design (the taxonomy's homogeneity notion).
+    pub ty: String,
+    pub role: Role,
+    pub rows: u64,
+    pub cols: u64,
+    pub rf_bytes_per_pe: u64,
+    /// Node this unit's array hangs off.
+    pub attach: usize,
+    /// Words per cycle the attach node delivers to the array.
+    pub attach_bw: f64,
+    /// Exclusive share of the root (DRAM) bandwidth, words per cycle.
+    pub dram_share: f64,
+    pub mac_energy_pj: f64,
+    /// Units sharing a sequencer/FSM (intra-node heterogeneity marker).
+    pub fsm_group: Option<usize>,
+    pub constraints: MappingConstraints,
+}
+
+impl AccelNode {
+    pub fn peak_macs(&self) -> u64 {
+        self.rows * self.cols
+    }
+}
+
+/// The machine as a memory tree. `nodes[0]` is always the root, and
+/// every node's parent precedes it (pre-order ids) — both builders below
+/// and the JSON parser maintain this.
+#[derive(Debug, Clone, Default)]
+pub struct MachineTopology {
+    pub name: String,
+    pub nodes: Vec<MemoryNode>,
+    pub accels: Vec<AccelNode>,
+}
+
+impl MachineTopology {
+    /// Start a tree with an unbounded DRAM root delivering
+    /// `dram_bw_words` downward.
+    pub fn new(name: &str, dram_bw_words: f64) -> MachineTopology {
+        MachineTopology {
+            name: name.into(),
+            nodes: vec![MemoryNode {
+                id: 0,
+                kind: LevelKind::DRAM,
+                label: "dram".into(),
+                size_words: u64::MAX,
+                energy_pj_per_word: energy::DRAM_PJ,
+                bw_words_per_cycle: dram_bw_words,
+                dram_share: None,
+                parent: None,
+                children: Vec::new(),
+                passthrough: false,
+            }],
+            accels: Vec::new(),
+        }
+    }
+
+    pub fn root(&self) -> usize {
+        0
+    }
+
+    pub fn total_dram_bw(&self) -> f64 {
+        self.nodes[0].bw_words_per_cycle
+    }
+
+    /// Add a storage node under `parent`. `uplink_bw` is the bandwidth
+    /// the parent delivers to this node; energy defaults to the SRAM
+    /// capacity fit when not given.
+    pub fn add_node(
+        &mut self,
+        parent: usize,
+        kind: LevelKind,
+        label: &str,
+        size_words: u64,
+        uplink_bw: f64,
+        energy_pj_per_word: Option<f64>,
+    ) -> usize {
+        let id = self.nodes.len();
+        assert!(parent < id, "parent must precede child (pre-order ids)");
+        self.nodes.push(MemoryNode {
+            id,
+            kind,
+            label: label.into(),
+            size_words,
+            energy_pj_per_word: energy_pj_per_word
+                .unwrap_or_else(|| energy::sram_pj(size_words)),
+            bw_words_per_cycle: uplink_bw,
+            dram_share: None,
+            parent: Some(parent),
+            children: Vec::new(),
+            passthrough: false,
+        });
+        self.nodes[parent].children.push(id);
+        id
+    }
+
+    /// Add a passthrough grouping node (cluster boundary) under `parent`.
+    pub fn add_group(&mut self, parent: usize, label: &str) -> usize {
+        let id = self.add_node(parent, LevelKind::named("GROUP"), label, 0, 0.0, Some(0.0));
+        self.nodes[id].passthrough = true;
+        id
+    }
+
+    /// Attach a sub-accelerator; returns its index.
+    pub fn add_accel(&mut self, accel: AccelNode) -> usize {
+        assert!(accel.attach < self.nodes.len(), "attach node exists");
+        self.accels.push(accel);
+        self.accels.len() - 1
+    }
+
+    /// Depth of a node: storage hops below the root, with passthrough
+    /// group nodes contributing nothing.
+    pub fn depth(&self, node: usize) -> usize {
+        let mut d = 0;
+        let mut cur = node;
+        while let Some(p) = self.nodes[cur].parent {
+            if !self.nodes[cur].passthrough {
+                d += 1;
+            }
+            cur = p;
+        }
+        d
+    }
+
+    /// Structural validity of the tree and its attachments.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() || self.nodes[0].parent.is_some() {
+            return Err("topology needs a parentless root at index 0".into());
+        }
+        for n in &self.nodes {
+            match n.parent {
+                None if n.id != 0 => return Err(format!("node {} has no parent", n.label)),
+                Some(p) if p >= n.id => {
+                    return Err(format!("node {} precedes its parent", n.label))
+                }
+                _ => {}
+            }
+            if n.id != 0 && !n.passthrough {
+                if n.size_words == 0 {
+                    return Err(format!("storage node {} has zero capacity", n.label));
+                }
+                if n.bw_words_per_cycle <= 0.0 {
+                    return Err(format!("storage node {} has no uplink bandwidth", n.label));
+                }
+            }
+        }
+        if self.accels.is_empty() {
+            return Err("topology has no sub-accelerators".into());
+        }
+        let total = self.total_dram_bw();
+        for n in &self.nodes {
+            if let Some(share) = n.dram_share {
+                // A zero/negative pinned share would starve the subtree
+                // under dynamic re-granting (0 w/cyc ⇒ infinite latency)
+                // — reject at parse time instead.
+                if share <= 0.0 {
+                    return Err(format!(
+                        "node {}: pinned DRAM share must be positive",
+                        n.label
+                    ));
+                }
+                if share > total * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "node {}: pinned DRAM share {share:.3} exceeds the root's {total:.3}",
+                        n.label
+                    ));
+                }
+            }
+        }
+        let mut share_sum = 0.0;
+        for a in &self.accels {
+            if a.attach >= self.nodes.len() {
+                return Err(format!("accel {} attaches to a missing node", a.label));
+            }
+            if self.nodes[a.attach].passthrough {
+                return Err(format!("accel {} attaches to a grouping node", a.label));
+            }
+            if a.rows == 0 || a.cols == 0 {
+                return Err(format!("accel {} has an empty PE array", a.label));
+            }
+            if a.dram_share <= 0.0 || a.attach_bw <= 0.0 {
+                return Err(format!("accel {} needs positive bandwidth shares", a.label));
+            }
+            share_sum += a.dram_share;
+        }
+        if share_sum > total * (1.0 + 1e-9) {
+            return Err(format!(
+                "accelerator DRAM shares sum to {share_sum:.3} w/cyc, above the root's {total:.3}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Flatten one accelerator's path to the root into the
+    /// innermost-first [`ArchSpec`] level list the cost model consumes.
+    ///
+    /// Level `i`'s bandwidth is what it delivers to level `i-1`: the
+    /// attach node delivers `attach_bw` to the array, every higher node
+    /// delivers the uplink bandwidth of the node below it, and the root
+    /// delivers this unit's exclusive `dram_share`.
+    pub fn flatten(&self, idx: usize) -> ArchSpec {
+        let a = &self.accels[idx];
+        let pes = a.rows * a.cols;
+        let mut levels = vec![ArchSpec::rf_level(a.rf_bytes_per_pe, pes)];
+        let mut path: Vec<usize> = Vec::new();
+        let mut cur = Some(a.attach);
+        while let Some(i) = cur {
+            if !self.nodes[i].passthrough {
+                path.push(i);
+            }
+            cur = self.nodes[i].parent;
+        }
+        let mut below_bw = a.attach_bw;
+        let outer = path.len() - 1;
+        for (j, &i) in path.iter().enumerate() {
+            let n = &self.nodes[i];
+            let bw = if j == outer {
+                a.dram_share
+            } else if j == 0 {
+                a.attach_bw
+            } else {
+                below_bw
+            };
+            levels.push(StorageLevel::new(n.kind, n.size_words, bw, n.energy_pj_per_word));
+            below_bw = n.bw_words_per_cycle;
+        }
+        ArchSpec {
+            name: a.label.clone(),
+            rows: a.rows,
+            cols: a.cols,
+            levels,
+            mac_energy_pj: a.mac_energy_pj,
+            constraints: a.constraints.clone(),
+        }
+    }
+
+    /// Flatten every accelerator, in attachment order.
+    pub fn flatten_all(&self) -> Vec<ArchSpec> {
+        (0..self.accels.len()).map(|i| self.flatten(i)).collect()
+    }
+
+    /// Does any node pin an explicit subtree bandwidth share?
+    pub fn custom_edge_shares(&self) -> bool {
+        self.nodes.iter().any(|n| n.dram_share.is_some())
+    }
+
+    /// Distribute the root bandwidth over the busy accelerators along
+    /// the tree: at each node, the grant splits over busy subtrees and
+    /// busy locally-attached units in proportion to their shares (a
+    /// subtree's share is its pinned [`MemoryNode::dram_share`], or the
+    /// sum of its busy units' shares when unpinned). Idle subtrees
+    /// forfeit their share to their siblings — the NeuPIM-style re-grant
+    /// generalised from a 2-way split to the whole tree.
+    pub fn dram_shares(&self, busy: &[bool], total: f64) -> Vec<f64> {
+        assert_eq!(busy.len(), self.accels.len());
+        let n = self.nodes.len();
+        // Busy share mass per subtree (reverse pre-order = children first).
+        let mut mass = vec![0.0f64; n];
+        for (i, a) in self.accels.iter().enumerate() {
+            if busy[i] {
+                mass[a.attach] += a.dram_share;
+            }
+        }
+        for id in (1..n).rev() {
+            let p = self.nodes[id].parent.expect("non-root has parent");
+            mass[p] += mass[id];
+        }
+        // Weight a subtree bids at its parent: pinned share if busy.
+        let weight = |id: usize| -> f64 {
+            if mass[id] <= 0.0 {
+                0.0
+            } else {
+                self.nodes[id].dram_share.unwrap_or(mass[id])
+            }
+        };
+        let mut grant = vec![0.0f64; n];
+        grant[0] = total;
+        let mut out = vec![0.0f64; self.accels.len()];
+        for id in 0..n {
+            let g = grant[id];
+            if g <= 0.0 {
+                continue;
+            }
+            let mut wsum: f64 = self.nodes[id].children.iter().map(|&c| weight(c)).sum();
+            for (i, a) in self.accels.iter().enumerate() {
+                if busy[i] && a.attach == id {
+                    wsum += a.dram_share;
+                }
+            }
+            if wsum <= 0.0 {
+                continue;
+            }
+            let scale = g / wsum;
+            for &c in &self.nodes[id].children {
+                grant[c] = weight(c) * scale;
+            }
+            for (i, a) in self.accels.iter().enumerate() {
+                if busy[i] && a.attach == id {
+                    out[i] = a.dram_share * scale;
+                }
+            }
+        }
+        out
+    }
+
+    // ---- Classification ---------------------------------------------------
+
+    /// Derive the HARP taxonomy point from the tree structure alone:
+    /// attach depths give the placement axis; type/FSM/cluster markers
+    /// give the heterogeneity axis. The partition generator's invariant
+    /// is `classify(generate(class)) == class` for every taxonomy point.
+    pub fn classify(&self) -> Result<super::taxonomy::HarpClass, String> {
+        use super::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+        if self.accels.is_empty() {
+            return Err("cannot classify an empty machine".into());
+        }
+        let depths: Vec<usize> = self.accels.iter().map(|a| self.depth(a.attach)).collect();
+        let distinct: BTreeSet<usize> = depths.iter().copied().collect();
+        let placement = if distinct.len() >= 2 {
+            ComputePlacement::Hierarchical
+        } else {
+            ComputePlacement::LeafOnly
+        };
+
+        // Types in first-appearance order, with their depth sets.
+        let mut tys: Vec<&str> = Vec::new();
+        for a in &self.accels {
+            if !tys.contains(&a.ty.as_str()) {
+                tys.push(&a.ty);
+            }
+        }
+        let depth_set = |ty: &str| -> BTreeSet<usize> {
+            self.accels
+                .iter()
+                .zip(&depths)
+                .filter(|(a, _)| a.ty == ty)
+                .map(|(_, &d)| d)
+                .collect()
+        };
+        let share_fsm = |x: &str, y: &str| -> bool {
+            self.accels.iter().filter(|a| a.ty == x).any(|a| {
+                a.fsm_group.is_some()
+                    && self
+                        .accels
+                        .iter()
+                        .any(|b| b.ty == y && b.fsm_group == a.fsm_group)
+            })
+        };
+
+        let clustered = self.has_repeated_clusters();
+        let (mut intra, mut xnode, mut xdepth) = (false, false, false);
+        for (i, &x) in tys.iter().enumerate() {
+            for &y in &tys[i + 1..] {
+                if share_fsm(x, y) {
+                    intra = true;
+                } else if depth_set(x).intersection(&depth_set(y)).next().is_some() {
+                    xnode = true;
+                } else {
+                    xdepth = true;
+                }
+            }
+        }
+
+        let mut sources: Vec<HeterogeneityLoc> = Vec::new();
+        if intra {
+            sources.push(HeterogeneityLoc::IntraNode);
+        }
+        if xnode {
+            sources.push(HeterogeneityLoc::CrossNode { clustered });
+        }
+        if xdepth {
+            sources.push(HeterogeneityLoc::CrossDepth);
+        }
+        let heterogeneity = match sources.len() {
+            0 => HeterogeneityLoc::Homogeneous,
+            1 => sources.pop().unwrap(),
+            _ => HeterogeneityLoc::Compound(sources),
+        };
+        let class = HarpClass::new(placement, heterogeneity);
+        class.validate()?;
+        Ok(class)
+    }
+
+    /// Symphony-style clustering: ≥2 sibling subtrees under the root
+    /// whose accelerator-type multisets are equal and heterogeneous
+    /// (≥2 distinct types).
+    fn has_repeated_clusters(&self) -> bool {
+        let mut multisets: Vec<Vec<&str>> = Vec::new();
+        for &child in &self.nodes[0].children {
+            let mut tys: Vec<&str> = self
+                .accels
+                .iter()
+                .filter(|a| self.subtree_contains(child, a.attach))
+                .map(|a| a.ty.as_str())
+                .collect();
+            tys.sort_unstable();
+            if tys.iter().collect::<BTreeSet<_>>().len() >= 2 {
+                multisets.push(tys);
+            }
+        }
+        for (i, m) in multisets.iter().enumerate() {
+            if multisets[i + 1..].contains(m) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn subtree_contains(&self, ancestor: usize, node: usize) -> bool {
+        let mut cur = Some(node);
+        while let Some(i) = cur {
+            if i == ancestor {
+                return true;
+            }
+            cur = self.nodes[i].parent;
+        }
+        false
+    }
+
+    // ---- Rendering ---------------------------------------------------------
+
+    /// ASCII rendering of the tree (the `harp topology` output).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "machine tree '{}': {} storage node(s), {} sub-accelerator(s), DRAM {:.0} w/cyc\n",
+            self.name,
+            self.nodes.iter().filter(|n| !n.passthrough).count(),
+            self.accels.len(),
+            self.total_dram_bw()
+        );
+        self.render_node(0, "", &mut s);
+        s
+    }
+
+    fn render_node(&self, id: usize, prefix: &str, out: &mut String) {
+        let n = &self.nodes[id];
+        if n.parent.is_none() {
+            out.push_str(&format!("{} [∞, {:.0} w/cyc total]\n", n.kind.name(), n.bw_words_per_cycle));
+        }
+        let accels: Vec<usize> = (0..self.accels.len())
+            .filter(|&i| self.accels[i].attach == id)
+            .collect();
+        let total_rows = n.children.len() + accels.len();
+        let mut row = 0usize;
+        for &c in &n.children {
+            row += 1;
+            let last = row == total_rows;
+            let (tee, bar) = if last { ("└─ ", "   ") } else { ("├─ ", "│  ") };
+            let ch = &self.nodes[c];
+            if ch.passthrough {
+                out.push_str(&format!("{prefix}{tee}[{}]\n", ch.label));
+            } else {
+                let pin = match ch.dram_share {
+                    Some(v) => format!(", pinned {v:.0} w/cyc"),
+                    None => String::new(),
+                };
+                out.push_str(&format!(
+                    "{prefix}{tee}{} {} [{} w, ↑{:.0} w/cyc{pin}]\n",
+                    ch.kind.name(),
+                    ch.label,
+                    ch.size_words,
+                    ch.bw_words_per_cycle
+                ));
+            }
+            self.render_node(c, &format!("{prefix}{bar}"), out);
+        }
+        for &i in &accels {
+            row += 1;
+            let tee = if row == total_rows { "└─ " } else { "├─ " };
+            let a = &self.accels[i];
+            let fsm = match a.fsm_group {
+                Some(g) => format!(", fsm {g}"),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "{prefix}{tee}◆ {} ({}, ty {}, {}×{} PEs, DRAM share {:.0} w/cyc{fsm})\n",
+                a.label,
+                a.role.name(),
+                a.ty,
+                a.rows,
+                a.cols,
+                a.dram_share
+            ));
+        }
+    }
+
+    // ---- JSON --------------------------------------------------------------
+
+    /// Parse a machine description (the `--topology FILE` input; schema
+    /// documented in the README). Defaults: label = level name, energy
+    /// from the SRAM capacity fit, attach bandwidth `√PEs·16`, DRAM
+    /// shares proportional to PE count for units that omit theirs.
+    pub fn from_json(j: &Json) -> Result<MachineTopology, String> {
+        let name = j.get("name").and_then(|v| v.as_str()).unwrap_or("custom").to_string();
+        let root = j.get("root").ok_or("topology needs a 'root' node")?;
+        let root_bw = root
+            .get("bw_words_per_cycle")
+            .and_then(|v| v.as_f64())
+            .ok_or("root needs 'bw_words_per_cycle' (total DRAM bandwidth)")?;
+        let mut t = MachineTopology::new(&name, root_bw);
+        if let Some(kind) = root.get("level").and_then(|v| v.as_str()) {
+            t.nodes[0].kind = LevelKind::named(kind);
+        }
+        t.parse_children(root, 0)?;
+        t.parse_accels(root, 0)?;
+        // Fill missing DRAM shares proportionally to PE count out of the
+        // bandwidth explicit shares leave unclaimed.
+        let missing: Vec<usize> =
+            (0..t.accels.len()).filter(|&i| t.accels[i].dram_share <= 0.0).collect();
+        if !missing.is_empty() {
+            let claimed: f64 = t.accels.iter().map(|a| a.dram_share.max(0.0)).sum();
+            let pes: u64 = missing.iter().map(|&i| t.accels[i].peak_macs()).sum();
+            let pool = root_bw - claimed;
+            if pool <= 0.0 {
+                return Err("explicit DRAM shares leave no bandwidth for the rest".into());
+            }
+            for &i in &missing {
+                t.accels[i].dram_share = pool * t.accels[i].peak_macs() as f64 / pes as f64;
+            }
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    fn parse_children(&mut self, j: &Json, parent: usize) -> Result<(), String> {
+        let Some(children) = j.get("children").and_then(|v| v.as_arr()) else {
+            return Ok(());
+        };
+        for c in children {
+            let id = if c.get("group").and_then(|v| v.as_bool()).unwrap_or(false) {
+                let label = c.get("label").and_then(|v| v.as_str()).unwrap_or("group");
+                self.add_group(parent, label)
+            } else {
+                let kind = c
+                    .get("level")
+                    .and_then(|v| v.as_str())
+                    .ok_or("storage node needs a 'level' name")?;
+                let size = c
+                    .get("size_words")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| format!("node '{kind}' needs 'size_words'"))?;
+                let bw = c
+                    .get("bw_words_per_cycle")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("node '{kind}' needs 'bw_words_per_cycle'"))?;
+                let label = c.get("label").and_then(|v| v.as_str()).unwrap_or(kind).to_string();
+                let e = c.get("energy_pj_per_word").and_then(|v| v.as_f64());
+                let id = self.add_node(parent, LevelKind::named(kind), &label, size, bw, e);
+                if let Some(share) = c.get("dram_share_words").and_then(|v| v.as_f64()) {
+                    self.nodes[id].dram_share = Some(share);
+                }
+                id
+            };
+            self.parse_children(c, id)?;
+            self.parse_accels(c, id)?;
+        }
+        Ok(())
+    }
+
+    fn parse_accels(&mut self, j: &Json, node: usize) -> Result<(), String> {
+        let Some(accels) = j.get("accels").and_then(|v| v.as_arr()) else {
+            return Ok(());
+        };
+        for a in accels {
+            let label = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("accel needs a 'name'")?
+                .to_string();
+            let rows = a
+                .get("rows")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("accel '{label}' needs 'rows'"))?;
+            let cols = a
+                .get("cols")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("accel '{label}' needs 'cols'"))?;
+            let role = match a.get("role").and_then(|v| v.as_str()).unwrap_or("unified") {
+                "high" => Role::High,
+                "low" => Role::Low,
+                "unified" => Role::Unified,
+                other => return Err(format!("accel '{label}': unknown role '{other}'")),
+            };
+            let ty = a.get("type").and_then(|v| v.as_str()).unwrap_or(&label).to_string();
+            let rf = a.get("rf_bytes_per_pe").and_then(|v| v.as_u64()).unwrap_or(64);
+            let pes = rows * cols;
+            let attach_bw = a
+                .get("attach_bw_words")
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| ArchSpec::default_attach_bw(pes));
+            let dram_share =
+                a.get("dram_share_words").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let mac = a
+                .get("mac_energy_pj")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(energy::MAC_PJ);
+            let fsm_group = a.get("fsm").and_then(|v| v.as_usize());
+            let mut constraints = MappingConstraints::default();
+            if let Some(d) = a.get("forced_col_dim").and_then(|v| v.as_str()) {
+                constraints.forced_col_dim = Some(match d {
+                    "B" => Dim::B,
+                    "M" => Dim::M,
+                    "N" => Dim::N,
+                    "K" => Dim::K,
+                    other => {
+                        return Err(format!("accel '{label}': unknown dim '{other}'"))
+                    }
+                });
+            }
+            if let Some(b) = a.get("no_dram_psum").and_then(|v| v.as_bool()) {
+                constraints.no_dram_psum = b;
+            }
+            self.add_accel(AccelNode {
+                label,
+                ty,
+                role,
+                rows,
+                cols,
+                rf_bytes_per_pe: rf,
+                attach: node,
+                attach_bw,
+                dram_share,
+                mac_energy_pj: mac,
+                fsm_group,
+                constraints,
+            });
+        }
+        Ok(())
+    }
+
+    /// Serialize back to the `--topology` JSON schema (inverse of
+    /// [`MachineTopology::from_json`] up to defaulted fields).
+    pub fn to_json(&self) -> Json {
+        Json::obj().with("name", self.name.as_str()).with("root", self.node_json(0))
+    }
+
+    fn node_json(&self, id: usize) -> Json {
+        let n = &self.nodes[id];
+        let mut j = if n.passthrough {
+            Json::obj().with("group", true).with("label", n.label.as_str())
+        } else if n.parent.is_none() {
+            Json::obj()
+                .with("level", n.kind.name())
+                .with("bw_words_per_cycle", n.bw_words_per_cycle)
+        } else {
+            let mut j = Json::obj()
+                .with("level", n.kind.name())
+                .with("label", n.label.as_str())
+                .with("size_words", n.size_words)
+                .with("bw_words_per_cycle", n.bw_words_per_cycle)
+                .with("energy_pj_per_word", n.energy_pj_per_word);
+            if let Some(share) = n.dram_share {
+                j = j.with("dram_share_words", share);
+            }
+            j
+        };
+        if !n.children.is_empty() {
+            let kids: Vec<Json> = n.children.iter().map(|&c| self.node_json(c)).collect();
+            j = j.with("children", Json::Arr(kids));
+        }
+        let accels: Vec<Json> = self
+            .accels
+            .iter()
+            .filter(|a| a.attach == id)
+            .map(|a| {
+                let role = match a.role {
+                    Role::High => "high",
+                    Role::Low => "low",
+                    Role::Unified => "unified",
+                };
+                let mut j = Json::obj()
+                    .with("name", a.label.as_str())
+                    .with("type", a.ty.as_str())
+                    .with("role", role)
+                    .with("rows", a.rows)
+                    .with("cols", a.cols)
+                    .with("rf_bytes_per_pe", a.rf_bytes_per_pe)
+                    .with("attach_bw_words", a.attach_bw)
+                    .with("dram_share_words", a.dram_share)
+                    .with("mac_energy_pj", a.mac_energy_pj);
+                if let Some(g) = a.fsm_group {
+                    j = j.with("fsm", g);
+                }
+                if let Some(d) = a.constraints.forced_col_dim {
+                    j = j.with("forced_col_dim", d.name());
+                }
+                if a.constraints.no_dram_psum {
+                    j = j.with("no_dram_psum", true);
+                }
+                j
+            })
+            .collect();
+        if !accels.is_empty() {
+            j = j.with("accels", Json::Arr(accels));
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::taxonomy::{ComputePlacement, HeterogeneityLoc};
+
+    /// Hand-built leaf+xnode tree matching `ArchSpec::leaf` numbers.
+    fn two_unit_tree() -> MachineTopology {
+        let mut t = MachineTopology::new("t", 256.0);
+        let llb_hi = t.add_node(0, LevelKind::LLB, "llb.hi", 3 << 20, 64.0, None);
+        let l1_hi = t.add_node(llb_hi, LevelKind::L1, "l1.hi", 128 << 10, 819.2, None);
+        let llb_lo = t.add_node(0, LevelKind::LLB, "llb.lo", 1 << 20, 192.0, None);
+        let l1_lo = t.add_node(llb_lo, LevelKind::L1, "l1.lo", 128 << 10, 204.8, None);
+        for (label, ty, role, rows, cols, attach, bw) in [
+            ("high", "hi-array", Role::High, 128u64, 256u64, l1_hi, 2896.309),
+            ("low", "lo-array", Role::Low, 64, 128, l1_lo, 1448.154),
+        ] {
+            t.add_accel(AccelNode {
+                label: label.into(),
+                ty: ty.into(),
+                role,
+                rows,
+                cols,
+                rf_bytes_per_pe: 64,
+                attach,
+                attach_bw: bw,
+                dram_share: if role == Role::High { 64.0 } else { 192.0 },
+                mac_energy_pj: crate::arch::energy::MAC_PJ,
+                fsm_group: None,
+                constraints: MappingConstraints::default(),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn flatten_matches_chain() {
+        let t = two_unit_tree();
+        t.validate().unwrap();
+        let hi = t.flatten(0);
+        assert_eq!(hi.levels.len(), 4);
+        assert_eq!(hi.levels[0].kind, LevelKind::RF);
+        assert_eq!(hi.levels[1].kind, LevelKind::L1);
+        assert_eq!(hi.levels[1].size_words, 128 << 10);
+        assert!((hi.levels[1].bw_words_per_cycle - 2896.309).abs() < 1e-9);
+        assert_eq!(hi.levels[2].size_words, 3 << 20);
+        assert!((hi.levels[2].bw_words_per_cycle - 819.2).abs() < 1e-9); // L1 uplink
+        assert_eq!(hi.levels[3].kind, LevelKind::DRAM);
+        assert!((hi.levels[3].bw_words_per_cycle - 64.0).abs() < 1e-9); // exclusive share
+        assert_eq!(hi.levels[0].size_words, 64 * 128 * 256);
+    }
+
+    #[test]
+    fn classify_two_unit_cross_node() {
+        let t = two_unit_tree();
+        let c = t.classify().unwrap();
+        assert_eq!(c.placement, ComputePlacement::LeafOnly);
+        assert_eq!(c.heterogeneity, HeterogeneityLoc::CrossNode { clustered: false });
+    }
+
+    #[test]
+    fn classify_fsm_group_is_intra_node() {
+        let mut t = two_unit_tree();
+        t.accels[0].fsm_group = Some(0);
+        t.accels[1].fsm_group = Some(0);
+        assert_eq!(t.classify().unwrap().heterogeneity, HeterogeneityLoc::IntraNode);
+    }
+
+    #[test]
+    fn classify_same_type_is_homogeneous() {
+        let mut t = two_unit_tree();
+        t.accels[1].ty = "hi-array".into();
+        assert_eq!(t.classify().unwrap().heterogeneity, HeterogeneityLoc::Homogeneous);
+    }
+
+    #[test]
+    fn classify_disjoint_depths_is_cross_depth() {
+        let mut t = two_unit_tree();
+        // Move the low unit up to its LLB node: depths {2} vs {1}.
+        t.accels[1].attach = 3;
+        let c = t.classify().unwrap();
+        assert_eq!(c.placement, ComputePlacement::Hierarchical);
+        assert_eq!(c.heterogeneity, HeterogeneityLoc::CrossDepth);
+    }
+
+    #[test]
+    fn passthrough_groups_mark_clusters_without_levels() {
+        let mut t = MachineTopology::new("sym", 256.0);
+        for cl in 0..2 {
+            let g = t.add_group(0, &format!("cluster{cl}"));
+            let llb_hi =
+                t.add_node(g, LevelKind::LLB, &format!("llb.hi.c{cl}"), 1 << 20, 32.0, None);
+            let l1 =
+                t.add_node(llb_hi, LevelKind::L1, &format!("l1.hi.c{cl}"), 64 << 10, 400.0, None);
+            let llb_lo =
+                t.add_node(g, LevelKind::LLB, &format!("llb.lo.c{cl}"), 1 << 20, 96.0, None);
+            let l1_lo =
+                t.add_node(llb_lo, LevelKind::L1, &format!("l1.lo.c{cl}"), 64 << 10, 100.0, None);
+            for (label, ty, role, attach, share) in [
+                (format!("hi.c{cl}"), "hi", Role::High, l1, 32.0),
+                (format!("lo.c{cl}"), "lo", Role::Low, l1_lo, 96.0),
+            ] {
+                t.add_accel(AccelNode {
+                    label,
+                    ty: ty.into(),
+                    role,
+                    rows: 64,
+                    cols: 64,
+                    rf_bytes_per_pe: 64,
+                    attach,
+                    attach_bw: 512.0,
+                    dram_share: share,
+                    mac_energy_pj: crate::arch::energy::MAC_PJ,
+                    fsm_group: None,
+                    constraints: MappingConstraints::default(),
+                });
+            }
+        }
+        t.validate().unwrap();
+        // Group nodes contribute no storage level…
+        let spec = t.flatten(0);
+        assert_eq!(spec.levels.len(), 4); // RF, L1, LLB, DRAM — no GROUP
+        // …but scope the clustered cross-node classification.
+        let c = t.classify().unwrap();
+        assert_eq!(c.heterogeneity, HeterogeneityLoc::CrossNode { clustered: true });
+        assert_eq!(c.placement, ComputePlacement::LeafOnly);
+        // All accels attach at the same tree depth despite the groups.
+        assert_eq!(t.depth(t.accels[0].attach), t.depth(t.accels[3].attach));
+    }
+
+    #[test]
+    fn dram_shares_regrant_idle_subtrees() {
+        let t = two_unit_tree();
+        let total = 256.0;
+        // Both busy: static shares.
+        let both = t.dram_shares(&[true, true], total);
+        assert!((both[0] - 64.0).abs() < 1e-9);
+        assert!((both[1] - 192.0).abs() < 1e-9);
+        // Only the low unit busy: it inherits the whole root bandwidth.
+        let solo = t.dram_shares(&[false, true], total);
+        assert_eq!(solo[0], 0.0);
+        assert!((solo[1] - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pinned_edge_share_caps_a_subtree() {
+        let mut t = two_unit_tree();
+        // Pin the high subtree to a quarter of the root bandwidth even
+        // though its unit's own share asks for 64/256.
+        t.nodes[1].dram_share = Some(32.0);
+        assert!(t.custom_edge_shares());
+        let both = t.dram_shares(&[true, true], 256.0);
+        // hi bids 32 against lo's 192: 32/224 and 192/224 of 256.
+        assert!((both[0] - 256.0 * 32.0 / 224.0).abs() < 1e-9);
+        assert!((both[1] - 256.0 * 192.0 / 224.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let t = two_unit_tree();
+        let j = t.to_json();
+        let back = MachineTopology::from_json(&j).unwrap();
+        assert_eq!(back.nodes.len(), t.nodes.len());
+        assert_eq!(back.accels.len(), t.accels.len());
+        for (a, b) in t.accels.iter().zip(&back.accels) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.ty, b.ty);
+            assert_eq!(a.attach, b.attach);
+            assert_eq!(a.dram_share, b.dram_share);
+        }
+        for (a, b) in t.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.size_words, b.size_words);
+            assert_eq!(a.parent, b.parent);
+        }
+        assert_eq!(back.classify().unwrap(), t.classify().unwrap());
+    }
+
+    #[test]
+    fn json_defaults_fill_shares() {
+        let doc = r#"{
+          "name": "mini",
+          "root": { "bw_words_per_cycle": 100,
+            "children": [
+              { "level": "LLB", "size_words": 4096, "bw_words_per_cycle": 100,
+                "accels": [
+                  { "name": "a", "rows": 4, "cols": 4 },
+                  { "name": "b", "rows": 4, "cols": 12 } ] } ] } }"#;
+        let t = MachineTopology::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(t.accels.len(), 2);
+        // Shares proportional to PE count: 16 vs 48 PEs → 25 vs 75.
+        assert!((t.accels[0].dram_share - 25.0).abs() < 1e-9);
+        assert!((t.accels[1].dram_share - 75.0).abs() < 1e-9);
+        // Both attach at the LLB: a 3-level flattened spec.
+        assert_eq!(t.flatten(0).levels.len(), 3);
+    }
+
+    #[test]
+    fn degenerate_pinned_shares_rejected() {
+        let mut t = two_unit_tree();
+        t.nodes[1].dram_share = Some(0.0);
+        assert!(t.validate().unwrap_err().contains("positive"));
+        t.nodes[1].dram_share = Some(-4.0);
+        assert!(t.validate().is_err());
+        t.nodes[1].dram_share = Some(1e6); // above the 256 w/cyc root
+        assert!(t.validate().unwrap_err().contains("exceeds"));
+        t.nodes[1].dram_share = Some(32.0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_topologies_rejected() {
+        let mut t = MachineTopology::new("bad", 256.0);
+        assert!(t.validate().is_err()); // no accels
+        let n = t.add_node(0, LevelKind::LLB, "llb", 1024, 64.0, None);
+        t.add_accel(AccelNode {
+            label: "a".into(),
+            ty: "a".into(),
+            role: Role::Unified,
+            rows: 4,
+            cols: 4,
+            rf_bytes_per_pe: 64,
+            attach: n,
+            attach_bw: 64.0,
+            dram_share: 300.0, // above the root's 256
+            mac_energy_pj: 0.2,
+            fsm_group: None,
+            constraints: MappingConstraints::default(),
+        });
+        assert!(t.validate().is_err());
+        t.accels[0].dram_share = 64.0;
+        t.validate().unwrap();
+    }
+}

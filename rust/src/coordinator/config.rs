@@ -11,20 +11,29 @@
 //!   "dynamic_bw": false
 //! }
 //! ```
+//!
+//! Instead of a taxonomy id, `"topology": "machine.json"` points at an
+//! explicit machine-tree description (same schema as `--topology`; see
+//! the README) — the taxonomy point is then *derived* from the tree.
 
-use crate::arch::partition::HardwareParams;
+use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
-use crate::coordinator::experiment::EvalOptions;
+use crate::arch::topology::MachineTopology;
+use crate::coordinator::experiment::{default_bw_frac_low, EvalOptions};
 use crate::util::json::Json;
+use crate::workload::cascade::Cascade;
 use crate::workload::transformer::{self, TransformerConfig};
 
 /// A parsed experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub workload: TransformerConfig,
-    pub class: HarpClass,
+    /// Taxonomy point; `None` when `topology` supplies the machine.
+    pub class: Option<HarpClass>,
     pub params: HardwareParams,
     pub opts: EvalOptions,
+    /// Path to a machine-tree JSON file (overrides `class`).
+    pub topology: Option<String>,
 }
 
 impl ExperimentConfig {
@@ -37,10 +46,28 @@ impl ExperimentConfig {
             .ok_or("missing 'workload' (bert|llama2|gpt3)")?;
         let workload = transformer::by_name(workload_name)
             .ok_or_else(|| format!("unknown workload '{workload_name}'"))?;
-        let machine_id =
-            j.get("machine").and_then(|v| v.as_str()).ok_or("missing 'machine' id")?;
-        let class = HarpClass::from_id(machine_id)
-            .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
+        let topology = j.get("topology").and_then(|v| v.as_str()).map(String::from);
+        if topology.is_some() {
+            // The tree fixes the machine and its hardware; reject keys
+            // that would otherwise be silently ignored.
+            for k in [
+                "machine", "dram_bw_bits", "total_macs", "llb_bytes", "l1_bytes",
+                "roof_ratio", "bw_frac_low",
+            ] {
+                if j.get(k).is_some() {
+                    return Err(format!(
+                        "'{k}' does not apply when 'topology' supplies the machine"
+                    ));
+                }
+            }
+        }
+        let class = match j.get("machine").and_then(|v| v.as_str()) {
+            Some(id) => Some(
+                HarpClass::from_id(id).ok_or_else(|| format!("unknown machine id '{id}'"))?,
+            ),
+            None if topology.is_some() => None,
+            None => return Err("missing 'machine' id (or a 'topology' file)".into()),
+        };
 
         let mut params = HardwareParams::default();
         if let Some(v) = j.get("dram_bw_bits").and_then(|v| v.as_f64()) {
@@ -75,13 +102,41 @@ impl ExperimentConfig {
             }
             opts.bw_frac_low = Some(v);
         }
-        Ok(ExperimentConfig { workload, class, params, opts })
+        Ok(ExperimentConfig { workload, class, params, opts, topology })
     }
 
-    /// Load from a file path.
+    /// Load from a file path. A relative `topology` path is resolved
+    /// against the config file's directory, so configs are relocatable.
     pub fn load(path: &str) -> Result<ExperimentConfig, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        ExperimentConfig::parse(&text)
+        let mut cfg = ExperimentConfig::parse(&text)?;
+        if let Some(t) = &cfg.topology {
+            let p = std::path::Path::new(t);
+            if p.is_relative() {
+                if let Some(dir) = std::path::Path::new(path).parent() {
+                    cfg.topology = Some(dir.join(p).to_string_lossy().into_owned());
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Realise the machine this configuration asks for: either the
+    /// partition policy applied to the taxonomy point (with the
+    /// bandwidth-fraction policy resolved against `cascade`), or the
+    /// explicit memory tree loaded from the topology file.
+    pub fn build_machine(&self, cascade: &Cascade) -> Result<MachineConfig, String> {
+        if let Some(path) = &self.topology {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+            let topo = MachineTopology::from_json(&doc).map_err(|e| format!("{path}: {e}"))?;
+            return MachineConfig::from_topology(topo);
+        }
+        let class = self.class.as_ref().ok_or("need a 'machine' id or 'topology' file")?;
+        let mut params = self.params.clone();
+        params.bw_frac_low =
+            self.opts.bw_frac_low.unwrap_or_else(|| default_bw_frac_low(cascade));
+        MachineConfig::build(class, &params)
     }
 }
 
@@ -97,11 +152,12 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.workload.d_model, 12288);
-        assert_eq!(c.class.id(), "hier+xdepth");
+        assert_eq!(c.class.as_ref().unwrap().id(), "hier+xdepth");
         assert_eq!(c.params.dram_bw_bits, 512.0);
         assert_eq!(c.opts.samples, 99);
         assert_eq!(c.opts.bw_frac_low, Some(0.6));
         assert!(c.opts.dynamic_bw);
+        assert!(c.topology.is_none());
     }
 
     #[test]
@@ -113,6 +169,7 @@ mod tests {
             r#"{"workload":"bert","machine":"leaf+homo","bw_frac_low":1.5}"#
         )
         .is_err());
+        assert!(ExperimentConfig::parse(r#"{"workload":"bert"}"#).is_err()); // no machine
         assert!(ExperimentConfig::parse("not json").is_err());
     }
 
@@ -121,5 +178,34 @@ mod tests {
         let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
         assert_eq!(c.params.total_macs, 40960);
         assert_eq!(c.opts.bw_frac_low, None);
+    }
+
+    #[test]
+    fn topology_key_replaces_machine_id() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"bert","topology":"examples/topologies/herald_cross_node.json"}"#,
+        )
+        .unwrap();
+        assert!(c.class.is_none());
+        assert_eq!(c.topology.as_deref(), Some("examples/topologies/herald_cross_node.json"));
+        // Keys the tree supersedes are rejected loudly, not ignored.
+        for doc in [
+            r#"{"workload":"bert","topology":"m.json","machine":"leaf+homo"}"#,
+            r#"{"workload":"bert","topology":"m.json","dram_bw_bits":512}"#,
+            r#"{"workload":"bert","topology":"m.json","bw_frac_low":0.9}"#,
+        ] {
+            let err = ExperimentConfig::parse(doc).unwrap_err();
+            assert!(err.contains("does not apply"), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn build_machine_applies_bw_policy() {
+        let c = ExperimentConfig::parse(r#"{"workload":"gpt3","machine":"leaf+xnode"}"#).unwrap();
+        let cascade = transformer::cascade_for(&c.workload);
+        let m = c.build_machine(&cascade).unwrap();
+        // Decoder cascade → the 75/25 policy.
+        let lo = m.sub_accels[1].spec.dram().bw_words_per_cycle;
+        assert!((lo - 192.0).abs() < 1e-9);
     }
 }

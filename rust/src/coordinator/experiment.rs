@@ -105,25 +105,36 @@ pub fn evaluate_cascade_on_config(
     let mut params = params.clone();
     params.bw_frac_low = opts.bw_frac_low.unwrap_or_else(|| default_bw_frac_low(cascade));
     let machine = MachineConfig::build(class, &params)?;
+    evaluate_cascade_on_machine(&machine, cascade, opts)
+}
 
+/// Evaluate `cascade` on an already-built machine — taxonomy-generated
+/// or an arbitrary memory tree loaded from a `--topology` file. Any
+/// number of sub-accelerators at any attach depths flow through the
+/// same allocate → map → schedule → aggregate pipeline.
+pub fn evaluate_cascade_on_machine(
+    machine: &MachineConfig,
+    cascade: &Cascade,
+    opts: &EvalOptions,
+) -> Result<EvalResult, String> {
     // Classify against the UNPARTITIONED machine's tipping point: the
     // allocation question is "would this op saturate the whole datapath".
-    let classifier = Classifier::new(params.tipping_ai());
-    let assignment = allocate(cascade, &machine, &classifier);
+    let classifier = Classifier::new(machine.params.tipping_ai());
+    let assignment = allocate(cascade, machine, &classifier);
 
     let mapper = BlackboxMapper {
         budget: SearchBudget { samples: opts.samples, seed: opts.seed },
         threads: opts.threads,
     };
-    let mapped = mapper.map_cascade(cascade, &machine, &assignment);
+    let mapped = mapper.map_cascade(cascade, machine, &assignment);
     let sched = schedule(
         cascade,
-        &machine,
+        machine,
         &mapped,
         &ScheduleOptions { dynamic_bw: opts.dynamic_bw },
     );
-    let stats = CascadeStats::aggregate(cascade, &machine, &mapped, &sched);
-    Ok(EvalResult { machine, assignment, mapped, sched, stats })
+    let stats = CascadeStats::aggregate(cascade, machine, &mapped, &sched);
+    Ok(EvalResult { machine: machine.clone(), assignment, mapped, sched, stats })
 }
 
 #[cfg(test)]

@@ -6,4 +6,6 @@ pub mod config;
 pub mod experiment;
 pub mod figures;
 
-pub use experiment::{evaluate_cascade_on_config, EvalOptions, EvalResult};
+pub use experiment::{
+    evaluate_cascade_on_config, evaluate_cascade_on_machine, EvalOptions, EvalResult,
+};

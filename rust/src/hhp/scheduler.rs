@@ -9,14 +9,22 @@
 //! every op serialises on the single unit.
 //!
 //! DRAM bandwidth is statically partitioned by the resource partitioner
-//! (the paper's policy). With [`ScheduleOptions::dynamic_bw`], an idle
-//! machine's bandwidth share is re-granted to the busy sub-accelerators
-//! (an ablation the paper hints at when discussing partitioning
-//! sensitivity).
+//! (the paper's policy) as per-edge shares of the machine tree. With
+//! [`ScheduleOptions::dynamic_bw`], idle units' shares are re-granted
+//! to the busy ones along the tree
+//! ([`MachineConfig::dynamic_dram_bw`]) — an ablation the paper hints
+//! at when discussing partitioning sensitivity. The scheduler is
+//! N-unit: any number of sub-accelerators contend, not a 2-way split.
+//!
+//! Dependency queries go through a [`CascadeAdj`] built once per
+//! schedule — the naive `Cascade::predecessors`/`successors` accessors
+//! are O(E) with a fresh `Vec` per call, which made `priorities()` and
+//! the ready-set updates O(V·E) on large cascades (see the scheduler
+//! section of `benches/perf_hotpath.rs` for the before/after).
 
 use crate::arch::partition::MachineConfig;
 use crate::mapper::blackbox::MappedOp;
-use crate::workload::cascade::Cascade;
+use crate::workload::cascade::{Cascade, CascadeAdj};
 
 /// Scheduler knobs.
 #[derive(Debug, Clone, Copy, Default)]
@@ -80,15 +88,11 @@ impl ScheduleResult {
 }
 
 /// Critical-path priorities: longest downstream path including self.
-fn priorities(cascade: &Cascade, latency: &[f64]) -> Vec<f64> {
-    let order = cascade.topo_order().expect("valid DAG");
+fn priorities(cascade: &Cascade, adj: &CascadeAdj, latency: &[f64]) -> Vec<f64> {
+    let order = cascade.topo_order_with(adj).expect("valid DAG");
     let mut prio = vec![0.0f64; cascade.ops.len()];
     for &i in order.iter().rev() {
-        let down = cascade
-            .successors(i)
-            .into_iter()
-            .map(|s| prio[s])
-            .fold(0.0f64, f64::max);
+        let down = adj.succs[i].iter().map(|&s| prio[s]).fold(0.0f64, f64::max);
         prio[i] = latency[i] + down;
     }
     prio
@@ -105,14 +109,17 @@ pub fn schedule(
     assert_eq!(mapped.len(), n);
     let nsub = machine.sub_accels.len();
 
+    // Adjacency built once: every dependency query below indexes it.
+    let adj = CascadeAdj::new(cascade);
+
     // Baseline latency per op under the static bandwidth partition.
     let static_latency: Vec<f64> = (0..n)
         .map(|i| mapped[i].stats.cycles * cascade.ops[i].count as f64)
         .collect();
-    let prio = priorities(cascade, &static_latency);
+    let prio = priorities(cascade, &adj, &static_latency);
 
     // Dependency bookkeeping.
-    let mut remaining_preds: Vec<usize> = (0..n).map(|i| cascade.predecessors(i).len()).collect();
+    let mut remaining_preds: Vec<usize> = (0..n).map(|i| adj.preds[i].len()).collect();
     let mut ready: Vec<usize> = (0..n).filter(|&i| remaining_preds[i] == 0).collect();
     let mut done = vec![false; n];
     let mut scheduled = vec![false; n];
@@ -120,6 +127,7 @@ pub fn schedule(
     // Per-sub-accelerator state.
     let mut sub_free_at = vec![0.0f64; nsub];
     let mut running: Vec<Option<(usize, f64)>> = vec![None; nsub]; // (op, end)
+    let mut busy_buf = vec![false; nsub]; // reused per dynamic-bw query
     let mut now = 0.0f64;
     let mut intervals: Vec<Interval> = Vec::with_capacity(n);
     let mut busy = vec![0.0f64; nsub];
@@ -145,15 +153,13 @@ pub fn schedule(
                     .max_by(|&a, &b| prio[a].partial_cmp(&prio[b]).unwrap());
                 if let Some(i) = pick {
                     let lat = if opts.dynamic_bw {
-                        // Idle units' DRAM bandwidth is re-granted,
-                        // proportionally to the busy units' static share.
-                        let busy_now: f64 = (0..nsub)
-                            .filter(|&x| running[x].is_some() || x == s)
-                            .map(|x| machine.sub_accels[x].spec.dram().bw_words_per_cycle)
-                            .sum();
-                        let total_bw = machine.params.dram_bw_words();
-                        let my_bw = machine.sub_accels[s].spec.dram().bw_words_per_cycle
-                            * (total_bw / busy_now);
+                        // Idle units' DRAM bandwidth is re-granted along
+                        // the machine tree, proportionally to the busy
+                        // units' static edge shares.
+                        for (x, slot) in busy_buf.iter_mut().enumerate() {
+                            *slot = running[x].is_some() || x == s;
+                        }
+                        let my_bw = machine.dynamic_dram_bw(s, &busy_buf);
                         mapped[i].stats.latency_with_dram_bw(my_bw)
                             * cascade.ops[i].count as f64
                     } else {
@@ -189,7 +195,7 @@ pub fn schedule(
                     sub_free_at[s] = end;
                     done[i] = true;
                     completed += 1;
-                    for succ in cascade.successors(i) {
+                    for &succ in &adj.succs[i] {
                         remaining_preds[succ] -= 1;
                         if remaining_preds[succ] == 0 {
                             ready.push(succ);
@@ -342,6 +348,38 @@ mod tests {
         }
     }
 
+    /// N-unit scheduling: a ≥3-sub-accelerator machine overlaps
+    /// independent ops across every unit, and per-unit busy fractions
+    /// stay consistent with the makespan (Σ busy == Σ op latencies).
+    #[test]
+    fn n_unit_machine_overlaps_and_busy_is_consistent() {
+        let m = MachineConfig::build(
+            &HarpClass::new(
+                ComputePlacement::Hierarchical,
+                HeterogeneityLoc::Compound(vec![
+                    HeterogeneityLoc::cross_node(),
+                    HeterogeneityLoc::CrossDepth,
+                ]),
+            ),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        assert!(m.sub_accels.len() >= 3);
+        let mut g = Cascade::new("tri");
+        for i in 0..3 {
+            g.push(TensorOp::gemm(&format!("o{i}"), Phase::Encoder, 4, 4, 4));
+        }
+        let mapped =
+            vec![mapped_op(0, 0, 100.0), mapped_op(1, 1, 70.0), mapped_op(2, 2, 40.0)];
+        let r = schedule(&g, &m, &mapped, &ScheduleOptions::default());
+        assert_eq!(r.makespan, 100.0); // fully overlapped across 3 units
+        let total_busy: f64 = r.busy.iter().sum();
+        assert!((total_busy - 210.0).abs() < 1e-9);
+        for s in 0..m.sub_accels.len() {
+            assert!((r.busy_fraction(s) * r.makespan - r.busy[s]).abs() < 1e-9);
+        }
+    }
+
     #[test]
     fn dynamic_bw_helps_memory_bound_solo_op() {
         let mut g = Cascade::new("dyn");
@@ -352,7 +390,7 @@ mod tests {
         stats.compute_cycles = 1.0;
         stats.onchip_bound_cycles = 1.0;
         stats.boundary_words =
-            vec![(crate::arch::level::LevelKind::Dram, 1000.0)];
+            vec![(crate::arch::level::LevelKind::DRAM, 1000.0)];
         let low_bw = m.sub_accels[1].spec.dram().bw_words_per_cycle;
         stats.cycles = 1000.0 / low_bw;
         stats.dram_words = 1000.0;

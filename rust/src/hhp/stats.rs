@@ -24,6 +24,10 @@ pub struct CascadeStats {
     pub mac_energy_pj: f64,
     /// NoC hop energy.
     pub noc_energy_pj: f64,
+    /// Energy at each unit's outermost level (the tree root — DRAM on
+    /// every canonical machine). Tracked positionally so custom root
+    /// level names from `--topology` files stay off-chip.
+    pub offchip_energy_pj: f64,
     /// On-chip energy split by the role of the executing unit.
     pub onchip_energy_by_role: HashMap<&'static str, f64>,
     /// Memory-system (buffer) on-chip energy by role: L1 + LLB + NoC,
@@ -47,9 +51,11 @@ impl CascadeStats {
         self.macs / (self.energy_pj * 1e-12)
     }
 
-    /// On-chip energy (excludes DRAM).
+    /// On-chip energy: everything except the outermost (root) level.
+    /// Positional, not name-keyed, so a custom root level name from a
+    /// `--topology` file still counts as off-chip.
     pub fn onchip_energy_pj(&self) -> f64 {
-        self.energy_pj - self.energy_by_level.get(&LevelKind::Dram).copied().unwrap_or(0.0)
+        self.energy_pj - self.offchip_energy_pj
     }
 
     /// Aggregate mapped-op stats + schedule into cascade stats.
@@ -66,6 +72,7 @@ impl CascadeStats {
         let mut energy = 0.0;
         let mut mac_e = 0.0;
         let mut noc_e = 0.0;
+        let mut offchip = 0.0;
         let mut macs = 0.0;
 
         for m in mapped {
@@ -74,6 +81,7 @@ impl CascadeStats {
             energy += s.energy_pj;
             mac_e += s.mac_energy_pj;
             noc_e += s.noc_energy_pj;
+            offchip += s.levels.last().map(|l| l.energy_pj).unwrap_or(0.0);
             macs += s.macs;
             for lv in &s.levels {
                 *energy_by_level.entry(lv.kind).or_insert(0.0) += lv.energy_pj;
@@ -81,11 +89,17 @@ impl CascadeStats {
             let role: Role = machine.sub_accels[m.sub_accel].role;
             *onchip_energy_by_role.entry(role.name()).or_insert(0.0) +=
                 s.onchip_energy_pj();
+            // Buffer levels are positional: everything strictly between
+            // the RF (index 0, part of the datapath) and the outermost
+            // level (the tree root / DRAM) — L1 + LLB on the canonical
+            // chain, plus any custom intermediate levels.
+            let nlevels = s.levels.len();
             let buffers: f64 = s
                 .levels
                 .iter()
-                .filter(|l| matches!(l.kind, LevelKind::L1 | LevelKind::Llb))
-                .map(|l| l.energy_pj)
+                .enumerate()
+                .filter(|(i, _)| *i > 0 && i + 1 < nlevels)
+                .map(|(_, l)| l.energy_pj)
                 .sum::<f64>()
                 + s.noc_energy_pj;
             *buffer_energy_by_role.entry(role.name()).or_insert(0.0) += buffers;
@@ -102,6 +116,7 @@ impl CascadeStats {
             energy_by_level,
             mac_energy_pj: mac_e,
             noc_energy_pj: noc_e,
+            offchip_energy_pj: offchip,
             onchip_energy_by_role,
             buffer_energy_by_role,
             macs,
@@ -121,6 +136,18 @@ impl CascadeStats {
             if let Some(e) = self.energy_by_level.get(&k) {
                 levels = levels.with(k.name(), *e);
             }
+        }
+        // Custom level kinds (deeper `--topology` hierarchies) follow
+        // the canonical four, sorted by name for deterministic output.
+        let mut extra: Vec<LevelKind> = self
+            .energy_by_level
+            .keys()
+            .filter(|k| k.canonical_depth().is_none())
+            .copied()
+            .collect();
+        extra.sort();
+        for k in extra {
+            levels = levels.with(k.name(), self.energy_by_level[&k]);
         }
         let mut roles = Json::obj();
         let mut buffers = Json::obj();
@@ -147,6 +174,7 @@ impl CascadeStats {
             .with("macs", self.macs)
             .with("mac_energy_pj", self.mac_energy_pj)
             .with("noc_energy_pj", self.noc_energy_pj)
+            .with("offchip_energy_pj", self.offchip_energy_pj)
             .with("energy_by_level", levels)
             .with("onchip_energy_by_role", roles)
             .with("buffer_energy_by_role", buffers)
@@ -174,8 +202,9 @@ impl CascadeStats {
         let mut energy_by_level = HashMap::new();
         if let Some(Json::Obj(pairs)) = j.get("energy_by_level") {
             for (k, v) in pairs {
-                let kind = LevelKind::ALL.into_iter().find(|l| l.name() == k.as_str())?;
-                energy_by_level.insert(kind, v.as_f64()?);
+                // Canonical names resolve to the canonical kinds; any
+                // other name round-trips through the interner.
+                energy_by_level.insert(LevelKind::named(k), v.as_f64()?);
             }
         }
         let role_map = |key: &str| -> Option<HashMap<&'static str, f64>> {
@@ -206,6 +235,7 @@ impl CascadeStats {
             energy_by_level,
             mac_energy_pj: f64_field("mac_energy_pj")?,
             noc_energy_pj: f64_field("noc_energy_pj")?,
+            offchip_energy_pj: f64_field("offchip_energy_pj")?,
             onchip_energy_by_role: role_map("onchip_energy_by_role")?,
             buffer_energy_by_role: role_map("buffer_energy_by_role")?,
             macs: f64_field("macs")?,
@@ -297,6 +327,7 @@ mod tests {
         assert_eq!(back.energy_pj, stats.energy_pj);
         assert_eq!(back.mac_energy_pj, stats.mac_energy_pj);
         assert_eq!(back.noc_energy_pj, stats.noc_energy_pj);
+        assert_eq!(back.offchip_energy_pj, stats.offchip_energy_pj);
         assert_eq!(back.macs, stats.macs);
         assert_eq!(back.energy_by_level, stats.energy_by_level);
         assert_eq!(back.onchip_energy_by_role, stats.onchip_energy_by_role);

@@ -17,8 +17,11 @@
 //!   never oversubscribes; `HARP_THREADS` / `--threads` size it).
 //! - [`workload`] — einsum operations, arithmetic intensity, cascade
 //!   dependency graphs, transformer generators (paper Table II).
-//! - [`arch`] — storage hierarchies, sub-accelerator specs, the HARP
-//!   taxonomy itself, resource partitioning, energy tables (Table III).
+//! - [`arch`] — the machine memory tree (storage nodes with
+//!   sub-accelerators attached at any depth), flattened per-unit specs,
+//!   the HARP taxonomy itself with structural classification, the
+//!   topology generator covering every taxonomy point, and energy
+//!   tables (Table III).
 //! - [`mapping`] — loop-nest mappings and taxonomy-derived constraints.
 //! - [`model`] — the Timeloop-like nest analysis: per-level access
 //!   counts, latency (compute vs bandwidth bound), energy.
@@ -45,5 +48,7 @@ pub mod coordinator;
 pub mod runtime;
 
 pub use arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
-pub use coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+pub use coordinator::experiment::{
+    evaluate_cascade_on_config, evaluate_cascade_on_machine, EvalOptions,
+};
 pub use workload::cascade::Cascade;

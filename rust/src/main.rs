@@ -3,19 +3,24 @@
 //! Subcommands:
 //! - `taxonomy`                       print Table I (prior works classified)
 //! - `classify <name>`                classify one prior work
+//! - `topology <class|list> | --file F`  print/derive a machine memory tree
 //! - `eval …`                         evaluate one (workload, machine) point
 //! - `figures …`                      regenerate every paper figure
 //! - `roofline`                       print the Fig 1 roofline split
 //! - `sweep …`                        bandwidth/partition sweep for a workload
 //! - `validate [--artifacts DIR]`     run the AOT artifacts through PJRT
 
-use harp::arch::partition::HardwareParams;
+use harp::arch::partition::{generate_topology, HardwareParams};
 use harp::arch::taxonomy::{classify, HarpClass};
+use harp::arch::topology::MachineTopology;
 use harp::coordinator::config::ExperimentConfig;
-use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::coordinator::experiment::{
+    evaluate_cascade_on_config, evaluate_cascade_on_machine, EvalOptions,
+};
 use harp::coordinator::figures;
 use harp::runtime::validate::{render_reports, validate_all};
 use harp::util::cli::{ArgSpec, Args};
+use harp::util::json::Json;
 use harp::util::table::Table;
 use harp::util::threadpool;
 use harp::workload::transformer;
@@ -32,6 +37,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "taxonomy" => cmd_taxonomy(),
         "classify" => cmd_classify(rest),
+        "topology" => cmd_topology(rest),
         "eval" => cmd_eval(rest),
         "figures" => cmd_figures(rest),
         "roofline" => cmd_roofline(),
@@ -60,7 +66,10 @@ fn usage() -> String {
      COMMANDS:\n\
        taxonomy                 print Table I (existing works classified)\n\
        classify <name>          classify a prior work (e.g. 'neupim')\n\
-       eval [--config F | --workload W --machine M] [--bw BITS] [--samples N] [--threads N]\n\
+       topology <class|list>    print the generated memory tree for a taxonomy point\n\
+                                (or --file F to classify a machine-tree JSON)\n\
+       eval [--config F | --workload W (--machine M | --topology F)] [--bw BITS]\n\
+                                [--samples N] [--threads N]\n\
        figures [--samples N] [--threads N] [--cache FILE]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
        roofline                 print the Fig 1 roofline partitioning\n\
@@ -91,6 +100,65 @@ fn cmd_classify(argv: &[String]) -> Result<(), String> {
     }
 }
 
+fn cmd_topology(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "harp topology",
+        "print the memory tree for a taxonomy point, or classify a machine-tree file",
+    )
+    .pos("class", false, "taxonomy id (e.g. hier+xdepth), or 'list' for every point")
+    .opt("file", None, "describe + classify a machine-tree JSON file instead")
+    .opt("bw", Some("2048"), "DRAM bandwidth in bits/cycle for the generated tree")
+    .flag("json", "emit the machine-tree JSON instead of the ASCII rendering");
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+
+    if let Some(path) = args.get("file") {
+        // The file fixes the bandwidth; an explicit --bw would be dead.
+        if argv.iter().any(|a| a == "--bw" || a.starts_with("--bw=")) {
+            return Err("--file supplies the machine's bandwidth; drop --bw".into());
+        }
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        let topo = MachineTopology::from_json(&doc).map_err(|e| format!("{path}: {e}"))?;
+        if args.has_flag("json") {
+            println!("{}", topo.to_json().to_string_pretty());
+            return Ok(());
+        }
+        println!("{}", topo.describe());
+        println!("classified: {}", topo.classify()?);
+        return Ok(());
+    }
+
+    let id = args
+        .positional(0)
+        .ok_or("need a taxonomy id or --file FILE (try 'harp topology list')")?;
+    if id == "list" {
+        println!("every generatable taxonomy point (id → description):");
+        for c in HarpClass::all_points() {
+            println!("  {:<34} {}", c.id(), c);
+        }
+        return Ok(());
+    }
+    let class = HarpClass::from_id(id).ok_or_else(|| {
+        format!("unknown taxonomy id '{id}' (try 'harp topology list')")
+    })?;
+    let params = HardwareParams {
+        dram_bw_bits: args.get_f64("bw").map_err(|e| e.to_string())?,
+        ..HardwareParams::default()
+    };
+    let topo = generate_topology(&class, &params)?;
+    if args.has_flag("json") {
+        println!("{}", topo.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!("{}", topo.describe());
+    let back = topo.classify()?;
+    println!(
+        "classified: {back}  [{}]",
+        if back == class { "round-trip ok" } else { "ROUND-TRIP MISMATCH" }
+    );
+    Ok(())
+}
+
 /// Parse an optional `--threads N`, apply it to the global pool budget,
 /// and return it (so per-eval options can pick it up too).
 fn apply_threads(args: &Args) -> Result<Option<usize>, String> {
@@ -109,7 +177,12 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
         .opt(
             "machine",
             Some("leaf+homo"),
-            "taxonomy id (leaf+homo|leaf+xnode|leaf+intra|hier+xdepth|hier+homo|hier+xnode-cl|hier+intra|hier+compound)",
+            "taxonomy id (leaf+homo|leaf+xnode|leaf+intra|hier+xdepth|hier+homo|hier+xnode|hier+xnode-cl|hier+intra|hier+compound)",
+        )
+        .opt(
+            "topology",
+            None,
+            "machine-tree JSON file (replaces --machine; hardware comes from the file, so --bw/--bw-frac-low do not apply)",
         )
         .opt("bw", Some("2048"), "DRAM bandwidth in bits/cycle")
         .opt("bw-frac-low", None, "fraction of DRAM bandwidth to the low-reuse side")
@@ -130,13 +203,38 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
     let wl_name = args.get("workload").ok_or("need --workload or --config")?;
     let workload =
         transformer::by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
+    let topology = args.get("topology").map(String::from);
+    if topology.is_some() {
+        // The tree fixes the machine and its hardware; refuse knobs that
+        // would silently do nothing (--bw and --machine have defaults,
+        // so detect explicit use in raw argv).
+        let given =
+            |flag: &str| argv.iter().any(|a| a == flag || a.starts_with(&format!("{flag}=")));
+        if given("--bw") || given("--machine") || args.get("bw-frac-low").is_some() {
+            return Err(
+                "--topology supplies the machine and its bandwidth partitioning; \
+                 drop --machine / --bw / --bw-frac-low (edit the topology file instead)"
+                    .into(),
+            );
+        }
+    }
     let machine_id = args.get("machine").unwrap();
-    let class = HarpClass::from_id(machine_id)
-        .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
-    let mut params = HardwareParams::default();
-    params.dram_bw_bits = args.get_f64("bw").map_err(|e| e.to_string())?;
-    let mut opts = EvalOptions::default();
-    opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    let class = if topology.is_some() {
+        None
+    } else {
+        Some(
+            HarpClass::from_id(machine_id)
+                .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?,
+        )
+    };
+    let params = HardwareParams {
+        dram_bw_bits: args.get_f64("bw").map_err(|e| e.to_string())?,
+        ..HardwareParams::default()
+    };
+    let mut opts = EvalOptions {
+        samples: args.get_usize("samples").map_err(|e| e.to_string())?,
+        ..EvalOptions::default()
+    };
     opts.dynamic_bw = args.has_flag("dynamic-bw");
     if let Some(n) = threads {
         opts.threads = n;
@@ -144,16 +242,20 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
     if args.get("bw-frac-low").is_some() {
         opts.bw_frac_low = Some(args.get_f64("bw-frac-low").map_err(|e| e.to_string())?);
     }
-    Ok((ExperimentConfig { workload, class, params, opts }, json))
+    Ok((ExperimentConfig { workload, class, params, opts, topology }, json))
 }
 
 fn cmd_eval(argv: &[String]) -> Result<(), String> {
     let (cfg, json) = parse_eval_opts(argv)?;
     let cascade = transformer::cascade_for(&cfg.workload);
-    let r = evaluate_cascade_on_config(&cfg.class, &cfg.params, &cascade, &cfg.opts)?;
+    let machine = cfg.build_machine(&cascade)?;
+    let r = evaluate_cascade_on_machine(&machine, &cascade, &cfg.opts)?;
     if json {
         println!("{}", r.stats.to_json().to_string_pretty());
         return Ok(());
+    }
+    if cfg.topology.is_some() {
+        println!("{}", r.machine.topology.describe());
     }
     println!("{}", r.machine.describe());
     println!("{}", cascade.describe());
@@ -178,8 +280,10 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         .opt("threads", None, "worker threads for the sweep (default: HARP_THREADS or core count)")
         .opt("cache", None, "JSON evaluation-cache file, reused across runs");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
-    let mut opts = EvalOptions::default();
-    opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    let mut opts = EvalOptions {
+        samples: args.get_usize("samples").map_err(|e| e.to_string())?,
+        ..EvalOptions::default()
+    };
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
     }
@@ -226,8 +330,10 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let wl =
         transformer::by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
     let cascade = transformer::cascade_for(&wl);
-    let mut opts = EvalOptions::default();
-    opts.samples = args.get_usize("samples").map_err(|e| e.to_string())?;
+    let mut opts = EvalOptions {
+        samples: args.get_usize("samples").map_err(|e| e.to_string())?,
+        ..EvalOptions::default()
+    };
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
     }

@@ -101,23 +101,16 @@ impl OpStats {
     }
 
     /// Recompute latency if the DRAM share changes (the scheduler uses
-    /// this when re-granting bandwidth between sub-accelerators).
+    /// this when re-granting bandwidth between sub-accelerators). The
+    /// outermost boundary is positionally the tree root (DRAM) whatever
+    /// the hierarchy's level kinds are.
     pub fn latency_with_dram_bw(&self, dram_bw_words: f64) -> f64 {
-        let mut worst = self.compute_cycles;
-        for &(kind, words) in &self.boundary_words {
-            let cycles = if kind == LevelKind::Dram {
-                words / dram_bw_words
-            } else {
-                // Non-DRAM bounds are already folded into `cycles`;
-                // recover them from the stored boundary/bw ratio is not
-                // possible here, so approximate with the recorded total.
-                0.0
-            };
-            worst = worst.max(cycles);
-        }
-        // Never faster than the non-DRAM bounds already computed.
-        let non_dram_bound = self.non_dram_bound_cycles();
-        worst.max(non_dram_bound)
+        let root_cycles = match self.boundary_words.last() {
+            Some(&(_, words)) => words / dram_bw_words,
+            None => 0.0,
+        };
+        // Never faster than the compute and on-chip bounds.
+        self.compute_cycles.max(root_cycles).max(self.non_dram_bound_cycles())
     }
 
     /// The latency floor imposed by compute and on-chip levels only.
@@ -131,9 +124,10 @@ impl OpStats {
         self.macs / (self.energy_pj * 1e-12)
     }
 
-    /// On-chip energy (everything except DRAM).
+    /// On-chip energy: everything except the outermost level (the tree
+    /// root — DRAM in every canonical machine).
     pub fn onchip_energy_pj(&self) -> f64 {
-        self.energy_pj - self.level_energy(LevelKind::Dram)
+        self.energy_pj - self.levels.last().map(|l| l.energy_pj).unwrap_or(0.0)
     }
 }
 
@@ -169,9 +163,9 @@ mod tests {
         s.macs = 1000.0;
         s.energy_pj = 500.0;
         s.dram_words = 640.0;
-        s.boundary_words = vec![(LevelKind::L1, 100.0), (LevelKind::Dram, 640.0)];
+        s.boundary_words = vec![(LevelKind::L1, 100.0), (LevelKind::DRAM, 640.0)];
         s.levels = vec![LevelStats {
-            kind: LevelKind::Dram,
+            kind: LevelKind::DRAM,
             reads: 600.0,
             writes: 40.0,
             energy_pj: 300.0,

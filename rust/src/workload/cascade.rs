@@ -16,6 +16,28 @@ pub struct Cascade {
     pub deps: Vec<(usize, usize)>,
 }
 
+/// Precomputed adjacency lists for a cascade, built once in O(V + E).
+/// Per-node lists preserve `deps` order, so algorithms that switch from
+/// the scanning accessors to this index produce identical traversals.
+#[derive(Debug, Clone)]
+pub struct CascadeAdj {
+    pub preds: Vec<Vec<usize>>,
+    pub succs: Vec<Vec<usize>>,
+}
+
+impl CascadeAdj {
+    pub fn new(cascade: &Cascade) -> CascadeAdj {
+        let n = cascade.ops.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(p, c) in &cascade.deps {
+            succs[p].push(c);
+            preds[c].push(p);
+        }
+        CascadeAdj { preds, succs }
+    }
+}
+
 impl Cascade {
     pub fn new(name: &str) -> Cascade {
         Cascade { name: name.into(), ops: Vec::new(), deps: Vec::new() }
@@ -33,28 +55,34 @@ impl Cascade {
         self.deps.push((producer, consumer));
     }
 
-    /// Indices of direct predecessors of `op`.
+    /// Indices of direct predecessors of `op`. O(E) with a fresh `Vec`
+    /// per call — fine for one-off queries; anything querying every node
+    /// (schedulers, path analyses) should build a [`CascadeAdj`] once.
     pub fn predecessors(&self, op: usize) -> Vec<usize> {
         self.deps.iter().filter(|(_, c)| *c == op).map(|(p, _)| *p).collect()
     }
 
-    /// Indices of direct successors of `op`.
+    /// Indices of direct successors of `op` (same O(E) caveat as
+    /// [`Cascade::predecessors`]).
     pub fn successors(&self, op: usize) -> Vec<usize> {
         self.deps.iter().filter(|(p, _)| *p == op).map(|(_, c)| *c).collect()
     }
 
     /// Kahn topological order; `Err` if the graph has a cycle.
     pub fn topo_order(&self) -> Result<Vec<usize>, String> {
+        self.topo_order_with(&CascadeAdj::new(self))
+    }
+
+    /// [`Cascade::topo_order`] against a prebuilt adjacency (avoids the
+    /// O(V·E) per-node edge scans the naive version paid).
+    pub fn topo_order_with(&self, adj: &CascadeAdj) -> Result<Vec<usize>, String> {
         let n = self.ops.len();
-        let mut indeg = vec![0usize; n];
-        for &(_, c) in &self.deps {
-            indeg[c] += 1;
-        }
+        let mut indeg: Vec<usize> = adj.preds.iter().map(|p| p.len()).collect();
         let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
         let mut order = Vec::with_capacity(n);
         while let Some(i) = queue.pop() {
             order.push(i);
-            for s in self.successors(i) {
+            for &s in &adj.succs[i] {
                 indeg[s] -= 1;
                 if indeg[s] == 0 {
                     queue.push(s);
@@ -92,15 +120,13 @@ impl Cascade {
     /// Critical-path length under a per-op latency function
     /// (`latency(i)` must already include the op's `count` repetitions).
     pub fn critical_path<F: Fn(usize) -> f64>(&self, latency: F) -> f64 {
-        let order = self.topo_order().expect("valid DAG");
+        let adj = CascadeAdj::new(self);
+        let order = self.topo_order_with(&adj).expect("valid DAG");
         let mut finish = vec![0.0f64; self.ops.len()];
         // Forward pass in topological order.
         for &i in &order {
-            let start = self
-                .predecessors(i)
-                .into_iter()
-                .map(|p| finish[p])
-                .fold(0.0f64, f64::max);
+            let start =
+                adj.preds[i].iter().map(|&p| finish[p]).fold(0.0f64, f64::max);
             finish[i] = start + latency(i);
         }
         finish.into_iter().fold(0.0f64, f64::max)
@@ -194,6 +220,17 @@ mod tests {
         assert_eq!(g.ops.len(), 8);
         assert!(g.deps.contains(&(4, 5)));
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn adjacency_matches_scanning_accessors() {
+        let g = diamond();
+        let adj = CascadeAdj::new(&g);
+        for i in 0..g.ops.len() {
+            assert_eq!(adj.preds[i], g.predecessors(i), "preds of {i}");
+            assert_eq!(adj.succs[i], g.successors(i), "succs of {i}");
+        }
+        assert_eq!(g.topo_order_with(&adj).unwrap(), g.topo_order().unwrap());
     }
 
     #[test]

@@ -83,6 +83,16 @@ fn golden_fig6_and_fig7() {
 }
 
 #[test]
+fn golden_fig8_and_fig9() {
+    // One evaluator shared by both drivers: fig8's points are a subset
+    // of fig6's grid and fig9 adds the batch-1 decoder operating points,
+    // so sharing maximises cross-driver cache hits.
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    assert_golden("fig8_mults_per_joule", &figures::fig8_mults_per_joule(&ev).render());
+    assert_golden("fig9_subaccel_energy", &figures::fig9_subaccel_energy(&ev).render());
+}
+
+#[test]
 fn fig10_byte_identical_across_thread_counts() {
     let ev_serial = Evaluator::new(golden_opts(1));
     let serial = figures::fig10_bw_partition(&ev_serial).render();

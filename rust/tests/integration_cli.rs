@@ -66,9 +66,103 @@ fn eval_rejects_invalid_machine() {
 fn help_lists_commands() {
     let (ok, stdout, _) = harp(&["help"]);
     assert!(ok);
-    for cmd in ["taxonomy", "classify", "eval", "figures", "sweep", "validate"] {
+    for cmd in ["taxonomy", "classify", "topology", "eval", "figures", "sweep", "validate"] {
         assert!(stdout.contains(cmd));
     }
+}
+
+fn example_topology(name: &str) -> String {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("topologies")
+        .join(name)
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn topology_prints_generated_tree() {
+    let (ok, stdout, stderr) = harp(&["topology", "hier+xdepth"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("DRAM"));
+    assert!(stdout.contains("near-llb"));
+    assert!(stdout.contains("round-trip ok"), "{stdout}");
+}
+
+#[test]
+fn topology_list_shows_every_point() {
+    let (ok, stdout, _) = harp(&["topology", "list"]);
+    assert!(ok);
+    for id in ["leaf+homo", "leaf+intra", "hier+xnode-cl", "hier+compound"] {
+        assert!(stdout.contains(id), "missing {id}:\n{stdout}");
+    }
+}
+
+#[test]
+fn topology_classifies_machine_file() {
+    let (ok, stdout, stderr) =
+        harp(&["topology", "--file", &example_topology("symphony_clustered.json")]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("cross-node (clustered)"), "{stdout}");
+}
+
+#[test]
+fn topology_rejects_unknown_id() {
+    let (ok, _, stderr) = harp(&["topology", "not+a-point"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown taxonomy id"));
+}
+
+#[test]
+fn eval_topology_rejects_conflicting_bw_flags() {
+    // The tree fixes the hardware: combining it with --bw must be a
+    // loud error, not a silently ignored knob.
+    let (ok, _, stderr) = harp(&[
+        "eval",
+        "--workload",
+        "bert",
+        "--topology",
+        &example_topology("herald_cross_node.json"),
+        "--bw",
+        "512",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--topology supplies the machine"), "{stderr}");
+    // Same for a conflicting explicit --machine.
+    let (ok, _, stderr) = harp(&[
+        "eval",
+        "--workload",
+        "bert",
+        "--topology",
+        &example_topology("herald_cross_node.json"),
+        "--machine",
+        "hier+xdepth",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("drop --machine"), "{stderr}");
+}
+
+#[test]
+fn eval_runs_explicit_topology_file() {
+    let (ok, stdout, stderr) = harp(&[
+        "eval",
+        "--workload",
+        "llama2",
+        "--topology",
+        &example_topology("fig4h_compound.json"),
+        "--samples",
+        "30",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert!(v.get("latency_cycles").unwrap().as_f64().unwrap() > 0.0);
+    // Three sub-accelerators reported, with busy fractions for each.
+    let busy = v.get("busy_fraction").unwrap().as_arr().unwrap();
+    assert_eq!(busy.len(), 3);
+    // The derived class id labels the report, compound sources spelled out.
+    assert_eq!(v.get("machine").unwrap().as_str(), Some("hier+compound[xnode,xdepth]"));
 }
 
 #[test]

@@ -74,13 +74,13 @@ fn heterogeneous_saves_energy() {
 #[test]
 fn energy_breakdown_by_workload_type() {
     let bert = eval("bert", "leaf+homo", 2048.0, None);
-    let rf = bert.stats.energy_by_level[&LevelKind::Rf];
-    let dram = bert.stats.energy_by_level[&LevelKind::Dram];
+    let rf = bert.stats.energy_by_level[&LevelKind::RF];
+    let dram = bert.stats.energy_by_level[&LevelKind::DRAM];
     assert!(rf > dram, "BERT: RF {rf:.3e} should dominate DRAM {dram:.3e}");
 
     let gpt = eval("gpt3", "leaf+homo", 2048.0, None);
-    let rf = gpt.stats.energy_by_level[&LevelKind::Rf];
-    let dram = gpt.stats.energy_by_level[&LevelKind::Dram];
+    let rf = gpt.stats.energy_by_level[&LevelKind::RF];
+    let dram = gpt.stats.energy_by_level[&LevelKind::DRAM];
     assert!(dram > rf, "GPT3: DRAM {dram:.3e} should dominate RF {rf:.3e}");
 }
 

@@ -1,0 +1,147 @@
+//! Integration: explicit `--topology` machine trees through the full
+//! evaluation pipeline, and the shipped example files.
+
+use harp::arch::partition::MachineConfig;
+use harp::arch::taxonomy::{ComputePlacement, HeterogeneityLoc};
+use harp::arch::topology::MachineTopology;
+use harp::coordinator::experiment::{evaluate_cascade_on_machine, EvalOptions};
+use harp::util::json::Json;
+use harp::workload::transformer;
+use std::path::PathBuf;
+
+fn load(name: &str) -> MachineTopology {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("topologies")
+        .join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    MachineTopology::from_json(&Json::parse(&text).expect("valid JSON"))
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+/// Every shipped example classifies to the taxonomy row it illustrates.
+#[test]
+fn example_topologies_classify_to_their_rows() {
+    let cases: [(&str, ComputePlacement, HeterogeneityLoc); 5] = [
+        ("b100_intra_node.json", ComputePlacement::LeafOnly, HeterogeneityLoc::IntraNode),
+        (
+            "herald_cross_node.json",
+            ComputePlacement::LeafOnly,
+            HeterogeneityLoc::CrossNode { clustered: false },
+        ),
+        (
+            "symphony_clustered.json",
+            ComputePlacement::LeafOnly,
+            HeterogeneityLoc::CrossNode { clustered: true },
+        ),
+        (
+            "neupim_cross_depth.json",
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::CrossDepth,
+        ),
+        (
+            "fig4h_compound.json",
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::CrossNode { clustered: false },
+                HeterogeneityLoc::CrossDepth,
+            ]),
+        ),
+    ];
+    for (file, placement, het) in cases {
+        let t = load(file);
+        let c = t.classify().unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(c.placement, placement, "{file}");
+        assert_eq!(c.heterogeneity, het, "{file}");
+    }
+}
+
+/// Acceptance: a ≥3-sub-accelerator topology evaluates end-to-end, and
+/// the scheduler's busy fractions are consistent with the makespan —
+/// `busy_fraction[s] · makespan` sums to the total scheduled op time.
+#[test]
+fn three_accel_topology_evaluates_end_to_end() {
+    let machine = MachineConfig::from_topology(load("fig4h_compound.json")).unwrap();
+    assert!(machine.sub_accels.len() >= 3, "need ≥3 sub-accelerators");
+
+    let wl = transformer::llama2();
+    let cascade = transformer::cascade_for(&wl);
+    let opts = EvalOptions { samples: 40, ..EvalOptions::default() };
+    let r = evaluate_cascade_on_machine(&machine, &cascade, &opts).unwrap();
+
+    assert!(r.stats.latency_cycles > 0.0);
+    assert!(r.stats.energy_pj > 0.0);
+    assert_eq!(r.assignment.len(), cascade.ops.len());
+    assert_eq!(r.stats.busy_fraction.len(), machine.sub_accels.len());
+
+    // Busy time reconstructed from the fractions must equal the summed
+    // interval lengths, which must equal the scheduled per-op latencies.
+    let busy_from_fractions: f64 = r
+        .stats
+        .busy_fraction
+        .iter()
+        .map(|b| b * r.stats.latency_cycles)
+        .sum();
+    let interval_sum: f64 = r.sched.intervals.iter().map(|iv| iv.end - iv.start).sum();
+    assert!(
+        (busy_from_fractions - interval_sum).abs() <= 1e-6 * interval_sum,
+        "busy {busy_from_fractions} vs intervals {interval_sum}"
+    );
+    // Every op runs exactly once, on a unit whose role accepts it.
+    assert_eq!(r.sched.intervals.len(), cascade.ops.len());
+    // At least two units saw work (the low side has two candidates and
+    // the allocator balances across them).
+    let active = r.stats.busy_fraction.iter().filter(|&&b| b > 0.0).count();
+    assert!(active >= 2, "busy fractions {:?}", r.stats.busy_fraction);
+}
+
+/// A custom deep hierarchy (5 storage levels) flows through the mapper
+/// and cost model end to end — the level walk is index-based.
+#[test]
+fn deep_custom_hierarchy_evaluates() {
+    let doc = r#"{
+      "name": "deep",
+      "root": { "level": "DRAM", "bw_words_per_cycle": 256,
+        "children": [
+          { "level": "LLB", "size_words": 4194304, "bw_words_per_cycle": 256,
+            "children": [
+              { "level": "L2", "size_words": 1048576, "bw_words_per_cycle": 512,
+                "children": [
+                  { "level": "L1", "size_words": 131072, "bw_words_per_cycle": 1024,
+                    "accels": [ { "name": "deep-array", "role": "unified",
+                                  "rows": 64, "cols": 64 } ] } ] } ] } ] } }"#;
+    let topo = MachineTopology::from_json(&Json::parse(doc).unwrap()).unwrap();
+    let machine = MachineConfig::from_topology(topo).unwrap();
+    assert_eq!(machine.sub_accels[0].spec.levels.len(), 5); // RF,L1,L2,LLB,DRAM
+
+    let wl = transformer::bert_large();
+    let cascade = transformer::encoder_cascade(&wl);
+    let opts = EvalOptions { samples: 30, ..EvalOptions::default() };
+    let r = evaluate_cascade_on_machine(&machine, &cascade, &opts).unwrap();
+    assert!(r.stats.latency_cycles > 0.0);
+    // The custom L2 level shows up in the energy breakdown and survives
+    // the JSON round trip.
+    let l2 = harp::arch::level::LevelKind::named("L2");
+    assert!(r.stats.energy_by_level.get(&l2).copied().unwrap_or(0.0) > 0.0);
+    let back =
+        harp::hhp::stats::CascadeStats::from_json(&r.stats.to_json()).expect("round-trips");
+    assert_eq!(back.energy_by_level, r.stats.energy_by_level);
+}
+
+/// Pinned per-edge shares change the dynamic re-grant (the recursive
+/// tree path), and an all-busy grant never exceeds the root bandwidth.
+#[test]
+fn pinned_edge_shares_flow_through_scheduler_path() {
+    let mut t = load("herald_cross_node.json");
+    assert!(!t.custom_edge_shares());
+    t.nodes[1].dram_share = Some(32.0);
+    assert!(t.custom_edge_shares());
+    let machine = MachineConfig::from_topology(t).unwrap();
+    let both: f64 = (0..2).map(|s| machine.dynamic_dram_bw(s, &[true, true])).sum();
+    assert!(both <= 256.0 * (1.0 + 1e-9), "grants {both} exceed the root");
+    // The pinned subtree bids 32 instead of its unit's 64.
+    let hi = machine.dynamic_dram_bw(0, &[true, true]);
+    assert!((hi - 256.0 * 32.0 / 224.0).abs() < 1e-9);
+}

@@ -187,10 +187,15 @@ fn prop_scheduler_bounds() {
 
 /// Machine building conserves resources for every valid taxonomy point:
 /// PEs within rounding of the budget, LLB shares never exceed the total.
+/// LLB capacity is summed over *tree nodes* — several units may share
+/// one LLB node, so summing flattened specs would double-count it.
 #[test]
 fn prop_partitioner_conserves_resources() {
     use harp::arch::level::LevelKind;
-    let ids = ["leaf+homo", "leaf+xnode", "leaf+intra", "hier+xdepth", "hier+homo", "hier+xnode-cl", "hier+compound"];
+    let ids = [
+        "leaf+homo", "leaf+xnode", "leaf+intra", "hier+xdepth", "hier+homo", "hier+xnode",
+        "hier+xnode-cl", "hier+compound",
+    ];
     let gen = Gen::ranges(vec![(0, ids.len() - 1), (256, 8192), (1, 3)]);
     check("partitioner-conserves", 0xD4, 30, &gen, |v| {
         let class = HarpClass::from_id(ids[v[0]]).unwrap();
@@ -199,7 +204,7 @@ fn prop_partitioner_conserves_resources() {
             dram_bw_bits: [512.0, 1024.0, 2048.0][v[2] - 1],
             ..HardwareParams::default()
         };
-        let m = MachineConfig::build(&class, &params).map_err(|e| e)?;
+        let m = MachineConfig::build(&class, &params)?;
         let total = m.total_pes();
         if total > params.total_macs {
             return Err(format!("PEs {total} exceed budget {}", params.total_macs));
@@ -208,9 +213,11 @@ fn prop_partitioner_conserves_resources() {
             return Err(format!("PEs {total} lose >20% of budget {}", params.total_macs));
         }
         let llb_total: u64 = m
-            .sub_accels
+            .topology
+            .nodes
             .iter()
-            .filter_map(|s| s.spec.level(LevelKind::Llb).map(|l| l.size_words))
+            .filter(|n| !n.passthrough && n.parent.is_some() && n.kind == LevelKind::LLB)
+            .map(|n| n.size_words)
             .sum();
         if llb_total > params.llb_bytes {
             return Err(format!("LLB {llb_total} exceeds {}", params.llb_bytes));
@@ -219,6 +226,37 @@ fn prop_partitioner_conserves_resources() {
             m.sub_accels.iter().map(|s| s.spec.dram().bw_words_per_cycle).sum();
         if bw_total > params.dram_bw_words() + 1e-6 {
             return Err(format!("bw {bw_total} exceeds {}", params.dram_bw_words()));
+        }
+        Ok(())
+    });
+}
+
+/// Tentpole invariant of the topology generator, as a property over
+/// random hardware budgets: `classify(generate(class, params))` returns
+/// exactly `class`, for every point the taxonomy can express.
+#[test]
+fn prop_generate_classify_round_trip() {
+    let points = HarpClass::all_points();
+    let gen = Gen::ranges(vec![(0, points.len() - 1), (256, 8192), (1, 3)]);
+    check("generate-classify-round-trip", 0xF7, 40, &gen, |v| {
+        let class = &points[v[0]];
+        let params = HardwareParams {
+            total_macs: (v[1] as u64) * 8,
+            dram_bw_bits: [512.0, 1024.0, 2048.0][v[2] - 1],
+            ..HardwareParams::default()
+        };
+        let m = MachineConfig::build(class, &params)?;
+        let back = m.classify()?;
+        if back != *class {
+            return Err(format!("{class} classified as {back}"));
+        }
+        // The flattened view and the tree agree on unit count and PEs.
+        if m.sub_accels.len() != m.topology.accels.len() {
+            return Err("sub_accels/topology length mismatch".into());
+        }
+        let tree_pes: u64 = m.topology.accels.iter().map(|a| a.peak_macs()).sum();
+        if tree_pes != m.total_pes() {
+            return Err(format!("tree PEs {tree_pes} != flattened {}", m.total_pes()));
         }
         Ok(())
     });
@@ -303,7 +341,7 @@ fn prop_cascade_merge() {
         let b = mk(v[1], "b");
         let macs = a.total_macs() + b.total_macs();
         a.merge(&b);
-        a.validate().map_err(|e| e)?;
+        a.validate()?;
         if a.total_macs() != macs {
             return Err("MACs not conserved by merge".into());
         }

@@ -21,7 +21,12 @@ echo "== tier1: CLI smoke =="
 "$BIN" taxonomy > /dev/null
 "$BIN" classify neupim > /dev/null
 "$BIN" roofline > /dev/null
+"$BIN" topology list > /dev/null
+"$BIN" topology hier+xdepth > /dev/null
+"$BIN" topology --file examples/topologies/fig4h_compound.json > /dev/null
 "$BIN" eval --workload bert --machine leaf+xnode --samples 20 --json > /dev/null
+"$BIN" eval --workload llama2 --samples 20 --json \
+    --topology examples/topologies/fig4h_compound.json > /dev/null
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
     --cache target/tier1-eval-cache.json > /dev/null
 # Second figures run must be served from the disk-spilled cache.
