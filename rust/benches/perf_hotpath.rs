@@ -20,7 +20,7 @@ use harp::mapper::blackbox::BlackboxMapper;
 use harp::mapper::search::{search_best, search_best_threaded, SearchBudget};
 use harp::mapping::loopnest::Mapping;
 use harp::model::nest::analyze;
-use harp::util::benchkit::bench_fn;
+use harp::util::benchkit::{bench_fn, bench_smoke};
 use harp::util::threadpool::default_threads;
 use harp::workload::einsum::{Dim, Phase, TensorOp};
 use harp::workload::intensity::Classifier;
@@ -30,6 +30,10 @@ use std::time::{Duration, Instant};
 fn main() {
     common::banner("perf_hotpath", "framework hot-path throughput (§Perf)");
     let budget = Duration::from_millis(600);
+    // HARP_BENCH_SMOKE=1 (CI): every target runs once at a tiny mapper
+    // budget — a compile-and-execute drift gate, not a measurement.
+    let smoke = bench_smoke();
+    let mapper_samples = if smoke { 20 } else { 400 };
 
     // --- nest analysis ---------------------------------------------------
     let machine = MachineConfig::build(
@@ -49,7 +53,7 @@ fn main() {
     println!("  → {:.2} M analyses/s\n", 1e9 / t.median_ns / 1e6);
 
     // --- single-op search --------------------------------------------------
-    let sb = SearchBudget { samples: 400, seed: 1 };
+    let sb = SearchBudget { samples: mapper_samples, seed: 1 };
     let serial = bench_fn("mapper search_best (400 samples, serial)", budget, 200, || {
         let _ = std::hint::black_box(search_best_threaded(&op, &spec, &sb, 1));
     });
@@ -67,7 +71,8 @@ fn main() {
     let cascade = transformer::decoder_cascade(&transformer::gpt3());
     let classifier = Classifier::new(machine.params.tipping_ai());
     let assignment = harp::hhp::allocator::allocate(&cascade, &machine, &classifier);
-    let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 200, seed: 1 });
+    let mapper =
+        BlackboxMapper::with_budget(SearchBudget { samples: mapper_samples.min(200), seed: 1 });
     bench_fn("blackbox map_cascade (GPT3, 45 ops)", budget, 50, || {
         let _ = std::hint::black_box(mapper.map_cascade(&cascade, &machine, &assignment));
     });
@@ -136,7 +141,7 @@ fn main() {
     );
 
     // --- full evaluation -------------------------------------------------------
-    let opts = EvalOptions { samples: 200, ..EvalOptions::default() };
+    let opts = EvalOptions { samples: mapper_samples.min(200), ..EvalOptions::default() };
     bench_fn("full evaluation (GPT3 × hier+xdepth)", Duration::from_secs(2), 20, || {
         let _ = std::hint::black_box(evaluate_cascade_on_config(
             &HarpClass::from_id("hier+xdepth").unwrap(),
@@ -152,8 +157,9 @@ fn main() {
     // engine pinned to one worker vs the shared pool. A fresh Evaluator
     // per run keeps the cross-run cache from flattering either side; the
     // outputs are byte-identical by construction (asserted).
+    let sweep_samples = if smoke { 8 } else { 150 };
     let sweep = |threads: usize| -> (f64, String) {
-        let mut o = EvalOptions { samples: 150, ..EvalOptions::default() };
+        let mut o = EvalOptions { samples: sweep_samples, ..EvalOptions::default() };
         o.threads = threads;
         let ev = Evaluator::new(o);
         let t0 = Instant::now();

@@ -25,7 +25,7 @@
 
 use super::spec::{ArchSpec, MappingConstraints};
 use super::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
-use super::topology::{AccelNode, MachineTopology};
+use super::topology::{AccelNode, ContentionMode, MachineTopology};
 use crate::arch::energy;
 use crate::workload::einsum::Dim;
 use crate::workload::intensity::ReuseClass;
@@ -130,6 +130,12 @@ pub struct MachineConfig {
     pub params: HardwareParams,
     pub topology: MachineTopology,
     pub sub_accels: Vec<SubAccel>,
+    /// Shared-node contention mode the `sub_accels` specs were
+    /// flattened under. The scheduler reads this to decide whether to
+    /// arbitrate shared-edge bandwidth, so the flag and the specs can
+    /// never disagree — change it only via
+    /// [`MachineConfig::with_contention`].
+    pub contention: ContentionMode,
 }
 
 /// Pick a near-square `rows × cols = macs` factorisation (cols ≥ rows).
@@ -268,6 +274,7 @@ fn attach_unit(
         attach: node,
         attach_bw,
         dram_share: dram_bw,
+        capacity_share: None,
         mac_energy_pj: energy::MAC_PJ,
         fsm_group,
         constraints,
@@ -603,24 +610,56 @@ fn compound_cluster(
     }
 }
 
+/// Precomputed shared-node lookup tables (`node_users` + per-unit root
+/// paths) for repeated contended-bandwidth queries. Derived from the
+/// topology; rebuild after any structural change.
+pub struct ContentionCtx {
+    users: Vec<Vec<usize>>,
+    paths: Vec<Vec<usize>>,
+}
+
+/// Flatten every attachment of `topology` under `mode` into the
+/// per-unit view the cost model consumes — the ONE place the tree and
+/// the flattened specs are tied together, shared by every
+/// `MachineConfig` constructor so they can never drift.
+fn sub_accels_for(topology: &MachineTopology, mode: ContentionMode) -> Vec<SubAccel> {
+    topology
+        .flatten_all_with(mode)
+        .into_iter()
+        .enumerate()
+        .map(|(id, spec)| SubAccel { id, role: topology.accels[id].role, spec })
+        .collect()
+}
+
 impl MachineConfig {
     /// Build the machine for a taxonomy point under `params`: generate
     /// the memory tree, then flatten every attachment into the per-unit
     /// specs the cost model consumes.
     pub fn build(class: &HarpClass, params: &HardwareParams) -> Result<MachineConfig, String> {
         let topology = generate_topology(class, params)?;
-        let sub_accels = topology
-            .flatten_all()
-            .into_iter()
-            .enumerate()
-            .map(|(id, spec)| SubAccel { id, role: topology.accels[id].role, spec })
-            .collect();
+        let sub_accels = sub_accels_for(&topology, ContentionMode::Off);
         Ok(MachineConfig {
             class: class.clone(),
             params: params.clone(),
             topology,
             sub_accels,
+            contention: ContentionMode::Off,
         })
+    }
+
+    /// Re-flatten the machine under `mode`: the per-unit specs pick up
+    /// their booked capacity slices and statically-partitioned shared
+    /// edge bandwidths (or revert to the historical full-node view for
+    /// [`ContentionMode::Off`]). Everything else — tree, class, params —
+    /// is unchanged, so a `with_contention(Off)` round trip is exact.
+    pub fn with_contention(mut self, mode: ContentionMode) -> Result<MachineConfig, String> {
+        if mode == self.contention {
+            return Ok(self);
+        }
+        self.topology.validate()?;
+        self.sub_accels = sub_accels_for(&self.topology, mode);
+        self.contention = mode;
+        Ok(self)
     }
 
     /// Build from an explicit memory tree (the `--topology FILE` path).
@@ -644,13 +683,14 @@ impl MachineConfig {
                 .max(1),
             ..defaults
         };
-        let sub_accels = topology
-            .flatten_all()
-            .into_iter()
-            .enumerate()
-            .map(|(id, spec)| SubAccel { id, role: topology.accels[id].role, spec })
-            .collect();
-        Ok(MachineConfig { class, params, topology, sub_accels })
+        let sub_accels = sub_accels_for(&topology, ContentionMode::Off);
+        Ok(MachineConfig {
+            class,
+            params,
+            topology,
+            sub_accels,
+            contention: ContentionMode::Off,
+        })
     }
 
     /// Re-derive the taxonomy point from the tree structure (the
@@ -679,6 +719,101 @@ impl MachineConfig {
             .map(|x| self.sub_accels[x].spec.dram().bw_words_per_cycle)
             .sum();
         self.sub_accels[s].spec.dram().bw_words_per_cycle * (total / busy_now)
+    }
+
+    /// Precompute the shared-node lookup tables
+    /// ([`MachineConfig::contended_boundary_bw_with`] queries them per
+    /// dispatch — built once per schedule, like `CascadeAdj`, so the
+    /// scheduler's hot loop allocates no per-call user tables).
+    pub fn contention_ctx(&self) -> ContentionCtx {
+        ContentionCtx {
+            users: self.topology.node_users(),
+            paths: (0..self.topology.accels.len())
+                .map(|i| self.topology.accel_path(i))
+                .collect(),
+        }
+    }
+
+    /// Effective bandwidth at every boundary of unit `s`'s flattened
+    /// spec when exactly the units with `busy[x] == true` contend
+    /// (entry `j` feeds boundary `j`, between levels `j` and `j+1`).
+    /// Convenience wrapper over
+    /// [`MachineConfig::contended_boundary_bw_with`] that rebuilds the
+    /// lookup tables; repeated callers (the scheduler) should hold a
+    /// [`ContentionCtx`] instead.
+    pub fn contended_boundary_bw(&self, s: usize, busy: &[bool]) -> Vec<f64> {
+        self.contended_boundary_bw_with(&self.contention_ctx(), s, busy)
+    }
+
+    /// Per-boundary bandwidth grants for unit `s` under the busy set:
+    ///
+    /// - the attach port (boundary 0) is exclusive;
+    /// - each intermediate boundary crosses the uplink edge of a path
+    ///   node — under [`ContentionMode::Booked`] a shared edge splits
+    ///   over its busy users by DRAM-share weight with idle re-grant
+    ///   ([`MachineTopology::shared_edge_bw`]); under
+    ///   [`ContentionMode::Off`] it stays whole (the historical model);
+    /// - the outermost boundary is the DRAM grant
+    ///   ([`MachineConfig::dynamic_dram_bw`]); under Booked, when the
+    ///   edge below the root is shared, the grant additionally caps at
+    ///   that edge's busy-weighted split so co-attached units cannot
+    ///   double-book it (mirroring the static flatten).
+    ///
+    /// With every user busy this reproduces the static spec bandwidths
+    /// bit-identically — provided the DRAM shares fully subscribe the
+    /// root, which holds for every generated machine and for
+    /// `--topology` files that claim (or default-fill to) the whole
+    /// root. Undersubscribed shares behave like idle siblings: the
+    /// dynamic re-grant hands the unclaimed bandwidth to the busy
+    /// units, the longstanding [`MachineConfig::dynamic_dram_bw`]
+    /// semantic.
+    pub fn contended_boundary_bw_with(
+        &self,
+        ctx: &ContentionCtx,
+        s: usize,
+        busy: &[bool],
+    ) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.contended_boundary_bw_into(ctx, s, busy, &mut out);
+        out
+    }
+
+    /// [`MachineConfig::contended_boundary_bw_with`] into a reusable
+    /// buffer — the scheduler's per-dispatch form (no allocation once
+    /// the buffer has grown to the deepest unit's boundary count).
+    pub fn contended_boundary_bw_into(
+        &self,
+        ctx: &ContentionCtx,
+        s: usize,
+        busy: &[bool],
+        out: &mut Vec<f64>,
+    ) {
+        let spec = &self.sub_accels[s].spec;
+        let nb = spec.levels.len() - 1;
+        out.clear();
+        out.extend((0..nb).map(|j| spec.levels[j + 1].bw_words_per_cycle));
+        out[nb - 1] = self.dynamic_dram_bw(s, busy);
+        if self.contention == ContentionMode::Booked {
+            let path = &ctx.paths[s];
+            // Boundary j (1 ≤ j < nb−1) crosses the edge feeding path
+            // node j−1; its users are that node's users.
+            for j in 1..nb.saturating_sub(1) {
+                let n = path[j - 1];
+                out[j] = self.topology.shared_edge_bw(n, s, &ctx.users[n], busy);
+            }
+            // Shared edge below the root: cap the DRAM grant.
+            if nb >= 2 {
+                let n = path[nb - 2];
+                if ctx.users[n].len() >= 2 {
+                    out[nb - 1] = out[nb - 1].min(self.topology.shared_edge_bw(
+                        n,
+                        s,
+                        &ctx.users[n],
+                        busy,
+                    ));
+                }
+            }
+        }
     }
 
     /// Total PEs across sub-accelerators (invariant: == params.total_macs,
@@ -893,6 +1028,85 @@ mod tests {
             let back = m.classify().unwrap();
             assert_eq!(back, class, "round trip failed for {class}");
         }
+    }
+
+    /// The contention tentpole on the generated machines: hier+xnode's
+    /// two low units share one LLB node; booking splits it exactly,
+    /// leaves every exclusive resource alone, and round-trips back to
+    /// the historical specs at `Off`.
+    #[test]
+    fn with_contention_books_shared_llb_and_round_trips() {
+        let c =
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node());
+        let m = MachineConfig::build(&c, &params()).unwrap();
+        let llb_full = m.sub_accels[1].spec.level(LevelKind::LLB).unwrap().size_words;
+        let booked = m.clone().with_contention(ContentionMode::Booked).unwrap();
+        assert_eq!(booked.contention, ContentionMode::Booked);
+        let lo1 = booked.sub_accels[1].spec.level(LevelKind::LLB).unwrap().size_words;
+        let lo2 = booked.sub_accels[2].spec.level(LevelKind::LLB).unwrap().size_words;
+        // The two equal-sized low units split the shared LLB, summing
+        // exactly to the node capacity (no words lost to rounding).
+        assert!(lo1 < llb_full && lo2 < llb_full);
+        assert_eq!(lo1 + lo2, llb_full);
+        assert!(lo1.abs_diff(lo2) <= 1);
+        // The high unit has its LLB to itself: untouched.
+        assert_eq!(
+            booked.sub_accels[0].spec.level(LevelKind::LLB).unwrap().size_words,
+            m.sub_accels[0].spec.level(LevelKind::LLB).unwrap().size_words
+        );
+        // DRAM shares (already exclusive) are untouched.
+        for (a, b) in booked.sub_accels.iter().zip(&m.sub_accels) {
+            assert_eq!(
+                a.spec.dram().bw_words_per_cycle,
+                b.spec.dram().bw_words_per_cycle
+            );
+        }
+        // Off round trip restores the historical specs bit-identically.
+        let back = booked.with_contention(ContentionMode::Off).unwrap();
+        for (a, b) in back.sub_accels.iter().zip(&m.sub_accels) {
+            assert_eq!(a.spec.levels.len(), b.spec.levels.len());
+            for (x, y) in a.spec.levels.iter().zip(&b.spec.levels) {
+                assert_eq!(x.size_words, y.size_words);
+                assert_eq!(x.bw_words_per_cycle, y.bw_words_per_cycle);
+            }
+        }
+    }
+
+    #[test]
+    fn contended_boundary_bw_matches_static_spec_under_full_load() {
+        let c =
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node());
+        let m = MachineConfig::build(&c, &params())
+            .unwrap()
+            .with_contention(ContentionMode::Booked)
+            .unwrap();
+        let all = vec![true; m.sub_accels.len()];
+        for s in 0..m.sub_accels.len() {
+            let bw = m.contended_boundary_bw(s, &all);
+            let spec = &m.sub_accels[s].spec;
+            assert_eq!(bw.len(), spec.levels.len() - 1);
+            for (j, &b) in bw.iter().enumerate() {
+                assert_eq!(
+                    b,
+                    spec.levels[j + 1].bw_words_per_cycle,
+                    "unit {s} boundary {j} diverges from the static partition"
+                );
+            }
+        }
+        // A solo busy low unit re-inherits bandwidth up to the physical
+        // uplink of its SHARED subtree edge (192 w/cyc — the low LLB's
+        // fill rate), not the whole 256 w/cyc root: co-attached units'
+        // grants can never oversubscribe the edge they share.
+        let mut solo = vec![false; m.sub_accels.len()];
+        solo[1] = true;
+        let bw = m.contended_boundary_bw(1, &solo);
+        assert!((bw.last().unwrap() - 192.0).abs() < 1e-6);
+        // The high unit shares no below-root edge: its solo re-grant is
+        // still the whole root.
+        let mut solo_hi = vec![false; m.sub_accels.len()];
+        solo_hi[0] = true;
+        let bw = m.contended_boundary_bw(0, &solo_hi);
+        assert!((bw.last().unwrap() - m.params.dram_bw_words()).abs() < 1e-6);
     }
 
     #[test]

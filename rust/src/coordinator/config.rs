@@ -8,9 +8,16 @@
 //!   "dram_bw_bits": 2048,
 //!   "bw_frac_low": 0.75,
 //!   "samples": 400,
-//!   "dynamic_bw": false
+//!   "dynamic_bw": false,
+//!   "contention": "off"
 //! }
 //! ```
+//!
+//! `"contention": "on"` books shared tree nodes (co-attached units get
+//! exclusive capacity slices and arbitrated edge bandwidth) instead of
+//! the historical double-booking; it applies to generated machines and
+//! `topology` files alike, so it is NOT rejected alongside the hardware
+//! keys below.
 //!
 //! Instead of a taxonomy id, `"topology": "machine.json"` points at an
 //! explicit machine-tree description (same schema as `--topology`; see
@@ -96,6 +103,12 @@ impl ExperimentConfig {
         if let Some(v) = j.get("dynamic_bw").and_then(|v| v.as_bool()) {
             opts.dynamic_bw = v;
         }
+        if let Some(v) = j.get("contention") {
+            let s = v
+                .as_str()
+                .ok_or("'contention' must be \"off\" or \"on\"")?;
+            opts.contention = crate::arch::topology::ContentionMode::parse(s)?;
+        }
         if let Some(v) = j.get("bw_frac_low").and_then(|v| v.as_f64()) {
             if !(0.0..=1.0).contains(&v) {
                 return Err(format!("bw_frac_low {v} out of [0,1]"));
@@ -178,6 +191,37 @@ mod tests {
         let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
         assert_eq!(c.params.total_macs, 40960);
         assert_eq!(c.opts.bw_frac_low, None);
+        assert_eq!(c.opts.contention, crate::arch::topology::ContentionMode::Off);
+    }
+
+    #[test]
+    fn contention_key_parses_and_rejects_garbage() {
+        use crate::arch::topology::ContentionMode;
+        let on = ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode","contention":"on"}"#,
+        )
+        .unwrap();
+        assert_eq!(on.opts.contention, ContentionMode::Booked);
+        let off = ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode","contention":"off"}"#,
+        )
+        .unwrap();
+        assert_eq!(off.opts.contention, ContentionMode::Off);
+        assert!(ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode","contention":"maybe"}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode","contention":true}"#
+        )
+        .is_err());
+        // Contention composes with an explicit topology file (it is an
+        // evaluation knob, not a hardware key).
+        let topo = ExperimentConfig::parse(
+            r#"{"workload":"bert","topology":"m.json","contention":"on"}"#,
+        )
+        .unwrap();
+        assert_eq!(topo.opts.contention, ContentionMode::Booked);
     }
 
     #[test]

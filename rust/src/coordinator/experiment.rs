@@ -3,6 +3,7 @@
 
 use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
+use crate::arch::topology::ContentionMode;
 use crate::hhp::allocator::allocate;
 use crate::hhp::scheduler::{schedule, ScheduleOptions, ScheduleResult};
 use crate::hhp::stats::CascadeStats;
@@ -31,6 +32,11 @@ pub struct EvalOptions {
     /// Override the low-reuse bandwidth fraction; `None` applies the
     /// paper's policy (0.75 for decoder workloads, 0.5 otherwise).
     pub bw_frac_low: Option<f64>,
+    /// Shared-node contention: `Off` double-books shared tree nodes
+    /// (the historical model — bit-identical to pre-contention
+    /// results); `Booked` hands each co-attached unit its booked
+    /// capacity slice and arbitrates shared edge bandwidth.
+    pub contention: ContentionMode,
     /// Mapper threads.
     pub threads: usize,
 }
@@ -45,6 +51,7 @@ impl Default for EvalOptions {
             // (Fig 10) still applies whenever both units are busy.
             dynamic_bw: true,
             bw_frac_low: None,
+            contention: ContentionMode::Off,
             threads: crate::util::threadpool::default_threads(),
         }
     }
@@ -67,8 +74,11 @@ impl EvalOptions {
     /// file would silently serve stale numbers.
     pub fn fingerprint(&self) -> String {
         format!(
-            "m{EVAL_MODEL_VERSION}|s{}|r{:#018x}|dyn{}",
-            self.samples, self.seed, self.dynamic_bw
+            "m{EVAL_MODEL_VERSION}|s{}|r{:#018x}|dyn{}|ct{}",
+            self.samples,
+            self.seed,
+            self.dynamic_bw,
+            self.contention.name()
         )
     }
 }
@@ -117,6 +127,17 @@ pub fn evaluate_cascade_on_machine(
     cascade: &Cascade,
     opts: &EvalOptions,
 ) -> Result<EvalResult, String> {
+    // Re-flatten under the requested contention mode when it differs
+    // from how the machine was built: the mapper then sees booked
+    // capacities (tiling shrinks to the slice) and the scheduler
+    // arbitrates shared-node bandwidth.
+    let contended;
+    let machine = if machine.contention == opts.contention {
+        machine
+    } else {
+        contended = machine.clone().with_contention(opts.contention)?;
+        &contended
+    };
     // Classify against the UNPARTITIONED machine's tipping point: the
     // allocation question is "would this op saturate the whole datapath".
     let classifier = Classifier::new(machine.params.tipping_ai());
@@ -166,6 +187,46 @@ mod tests {
         let dec = transformer::decoder_cascade(&transformer::llama2());
         assert_eq!(default_bw_frac_low(&enc), 0.5);
         assert_eq!(default_bw_frac_low(&dec), 0.75);
+    }
+
+    /// Contention is an evaluation knob: `Booked` shrinks the tiling
+    /// space on shared-node machines, while on machines without shared
+    /// bounded nodes it changes nothing at all — bit-identically.
+    #[test]
+    fn contention_mode_flows_through_evaluation() {
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let mut on = EvalOptions::quick();
+        on.contention = ContentionMode::Booked;
+
+        // leaf+xnode: disjoint subtrees, nothing shared but the
+        // unbounded root → identical numbers in both modes.
+        let free = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node());
+        let a = evaluate_cascade_on_config(&free, &HardwareParams::default(), &g, &EvalOptions::quick())
+            .unwrap();
+        let b = evaluate_cascade_on_config(&free, &HardwareParams::default(), &g, &on).unwrap();
+        assert_eq!(a.stats.latency_cycles, b.stats.latency_cycles);
+        assert_eq!(a.stats.energy_pj, b.stats.energy_pj);
+
+        // hier+xnode: the shared low LLB is actually booked — the
+        // machine the result carries shows the sliced capacities.
+        let shared =
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node());
+        let r = evaluate_cascade_on_config(&shared, &HardwareParams::default(), &g, &on).unwrap();
+        assert_eq!(r.machine.contention, ContentionMode::Booked);
+        use crate::arch::level::LevelKind;
+        let llb1 = r.machine.sub_accels[1].spec.level(LevelKind::LLB).unwrap().size_words;
+        let llb2 = r.machine.sub_accels[2].spec.level(LevelKind::LLB).unwrap().size_words;
+        let node = r.machine.topology.nodes[r.machine.topology.accels[2].attach].size_words;
+        assert_eq!(llb1 + llb2, node, "booked slices must sum to the shared node");
+        assert!(r.stats.latency_cycles > 0.0);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_contention() {
+        let off = EvalOptions::default();
+        let mut on = EvalOptions::default();
+        on.contention = ContentionMode::Booked;
+        assert_ne!(off.fingerprint(), on.fingerprint());
     }
 
     #[test]

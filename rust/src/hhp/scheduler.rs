@@ -16,6 +16,16 @@
 //! at when discussing partitioning sensitivity. The scheduler is
 //! N-unit: any number of sub-accelerators contend, not a 2-way split.
 //!
+//! When the machine was flattened under
+//! [`ContentionMode::Booked`](crate::arch::topology::ContentionMode),
+//! the dynamic re-grant generalises from the DRAM root to EVERY shared
+//! node: each op's latency is recomputed against the full per-boundary
+//! grant vector ([`MachineConfig::contended_boundary_bw`]), so a unit
+//! sharing an LLB with an idle sibling temporarily inherits the whole
+//! edge, exactly as it inherits idle DRAM shares. Under
+//! `ContentionMode::Off` the historical DRAM-only path runs unchanged,
+//! bit-identically.
+//!
 //! Dependency queries go through a [`CascadeAdj`] built once per
 //! schedule — the naive `Cascade::predecessors`/`successors` accessors
 //! are O(E) with a fresh `Vec` per call, which made `priorities()` and
@@ -128,6 +138,12 @@ pub fn schedule(
     let mut sub_free_at = vec![0.0f64; nsub];
     let mut running: Vec<Option<(usize, f64)>> = vec![None; nsub]; // (op, end)
     let mut busy_buf = vec![false; nsub]; // reused per dynamic-bw query
+    // Shared-node lookup tables, built once (like the adjacency): the
+    // per-dispatch grant queries must not rebuild them.
+    let booked = machine.contention == crate::arch::topology::ContentionMode::Booked;
+    let contention_ctx =
+        if opts.dynamic_bw && booked { Some(machine.contention_ctx()) } else { None };
+    let mut bw_buf: Vec<f64> = Vec::new(); // reused per contended grant query
     let mut now = 0.0f64;
     let mut intervals: Vec<Interval> = Vec::with_capacity(n);
     let mut busy = vec![0.0f64; nsub];
@@ -153,15 +169,25 @@ pub fn schedule(
                     .max_by(|&a, &b| prio[a].partial_cmp(&prio[b]).unwrap());
                 if let Some(i) = pick {
                     let lat = if opts.dynamic_bw {
-                        // Idle units' DRAM bandwidth is re-granted along
-                        // the machine tree, proportionally to the busy
+                        // Idle units' bandwidth is re-granted along the
+                        // machine tree, proportionally to the busy
                         // units' static edge shares.
                         for (x, slot) in busy_buf.iter_mut().enumerate() {
                             *slot = running[x].is_some() || x == s;
                         }
-                        let my_bw = machine.dynamic_dram_bw(s, &busy_buf);
-                        mapped[i].stats.latency_with_dram_bw(my_bw)
-                            * cascade.ops[i].count as f64
+                        let cycles = if let Some(ctx) = &contention_ctx {
+                            // Booked machines arbitrate every shared
+                            // node, not just DRAM: the grant vector
+                            // covers all boundaries.
+                            machine.contended_boundary_bw_into(
+                                ctx, s, &busy_buf, &mut bw_buf,
+                            );
+                            mapped[i].stats.latency_with_boundary_bw(&bw_buf)
+                        } else {
+                            let my_bw = machine.dynamic_dram_bw(s, &busy_buf);
+                            mapped[i].stats.latency_with_dram_bw(my_bw)
+                        };
+                        cycles * cascade.ops[i].count as f64
                     } else {
                         static_latency[i]
                     };
@@ -378,6 +404,66 @@ mod tests {
         for s in 0..m.sub_accels.len() {
             assert!((r.busy_fraction(s) * r.makespan - r.busy[s]).abs() < 1e-9);
         }
+    }
+
+    /// Booked-contention machines re-grant SHARED-NODE bandwidth, not
+    /// just DRAM: a unit whose op is bound by a shared intermediate edge
+    /// runs at the full edge rate while its co-attached sibling idles.
+    #[test]
+    fn booked_contention_regrants_shared_edge_to_solo_unit() {
+        use crate::arch::level::LevelKind;
+        use crate::arch::topology::{AccelNode, ContentionMode, MachineTopology};
+        use crate::arch::partition::Role;
+        use crate::arch::spec::MappingConstraints;
+
+        let mut t = MachineTopology::new("deep-shared", 256.0);
+        let llb = t.add_node(0, LevelKind::LLB, "llb", 1 << 20, 256.0, None);
+        let l2 = t.add_node(llb, LevelKind::named("L2"), "l2.shared", 65536, 96.0, None);
+        let l1 = t.add_node(l2, LevelKind::L1, "l1.deep", 8192, 256.0, None);
+        for (label, attach, share) in [("deep", l1, 64.0), ("near", l2, 192.0)] {
+            t.add_accel(AccelNode {
+                label: label.into(),
+                ty: label.into(),
+                role: Role::Unified,
+                rows: 8,
+                cols: 8,
+                rf_bytes_per_pe: 64,
+                attach,
+                attach_bw: 128.0,
+                dram_share: share,
+                capacity_share: None,
+                mac_energy_pj: 0.2,
+                fsm_group: None,
+                constraints: MappingConstraints::default(),
+            });
+        }
+        let m = MachineConfig::from_topology(t)
+            .unwrap()
+            .with_contention(ContentionMode::Booked)
+            .unwrap();
+
+        // Op on the deep unit bound by the shared l2 uplink: 9600 words
+        // over an edge whose static booked share is 96 · 64/256 = 24
+        // w/cyc → 400 cycles; the whole edge serves it in 100.
+        let mut g = Cascade::new("solo");
+        g.push(TensorOp::gemm("a", Phase::Decode, 4, 4, 4));
+        let mut stats = OpStats::new_empty();
+        stats.compute_cycles = 1.0;
+        stats.onchip_bound_cycles = 400.0;
+        stats.cycles = 400.0;
+        stats.boundary_words = vec![
+            (LevelKind::L1, 1.0),
+            (LevelKind::named("L2"), 1.0),
+            (LevelKind::LLB, 9600.0),
+            (LevelKind::DRAM, 64.0),
+        ];
+        stats.dram_words = 64.0;
+        let mapped = vec![MappedOp { op_index: 0, sub_accel: 0, stats, evaluated: 0 }];
+
+        let stat = schedule(&g, &m, &mapped, &ScheduleOptions { dynamic_bw: false });
+        assert_eq!(stat.makespan, 400.0); // static booked partition
+        let dyn_ = schedule(&g, &m, &mapped, &ScheduleOptions { dynamic_bw: true });
+        assert!((dyn_.makespan - 100.0).abs() < 1e-9); // whole edge re-granted
     }
 
     #[test]

@@ -43,6 +43,74 @@ pub struct CascadeStats {
     pub utilization_timeline: Vec<f64>,
     /// Energy per phase (prefill/decode/encoder).
     pub energy_by_phase: HashMap<&'static str, f64>,
+    /// Occupancy/contention per *shared* tree node (≥2 users), in node
+    /// id order. Reported in every mode — under `contention: off` it
+    /// quantifies how much double-booking the run tolerated.
+    pub node_contention: Vec<NodeContentionStats>,
+}
+
+/// Occupancy of one shared memory-tree node over the schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeContentionStats {
+    /// Node instance label (unique within a machine).
+    pub node: String,
+    /// Number of sub-accelerators whose root path uses the node.
+    pub users: usize,
+    /// Fraction of the makespan with ≥1 user busy.
+    pub occupied_frac: f64,
+    /// Fraction of the makespan with ≥2 users simultaneously busy —
+    /// the time the node's capacity/bandwidth was actually contended.
+    pub contended_frac: f64,
+}
+
+impl NodeContentionStats {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .with("node", self.node.as_str())
+            .with("users", self.users)
+            .with("occupied_frac", self.occupied_frac)
+            .with("contended_frac", self.contended_frac)
+    }
+
+    fn from_json(j: &Json) -> Option<NodeContentionStats> {
+        Some(NodeContentionStats {
+            node: j.get("node")?.as_str()?.to_string(),
+            users: j.get("users")?.as_usize()?,
+            occupied_frac: j.get("occupied_frac")?.as_f64()?,
+            contended_frac: j.get("contended_frac")?.as_f64()?,
+        })
+    }
+}
+
+/// Sweep the busy intervals of a node's users: time with ≥1 and ≥2
+/// users simultaneously busy, as fractions of `makespan`.
+fn occupancy_sweep(intervals: &[(f64, f64)], makespan: f64) -> (f64, f64) {
+    if makespan <= 0.0 || intervals.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(intervals.len() * 2);
+    for &(start, end) in intervals {
+        events.push((start, 1));
+        events.push((end, -1));
+    }
+    // Ends sort before starts at equal times so touching intervals do
+    // not count as overlap.
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let (mut occupied, mut contended) = (0.0f64, 0.0f64);
+    let mut depth = 0i32;
+    let mut prev = events[0].0;
+    for (t, d) in events {
+        let span = t - prev;
+        if depth >= 1 {
+            occupied += span;
+        }
+        if depth >= 2 {
+            contended += span;
+        }
+        depth += d;
+        prev = t;
+    }
+    (occupied / makespan, contended / makespan)
 }
 
 impl CascadeStats {
@@ -106,6 +174,29 @@ impl CascadeStats {
             *energy_by_phase.entry(phase_name(op.phase)).or_insert(0.0) += s.energy_pj;
         }
 
+        // Shared-node occupancy: for every tree node used by ≥2 units,
+        // how long it was occupied and how long actually contended.
+        let users = machine.topology.node_users();
+        let mut node_contention = Vec::new();
+        for (n, node_users) in users.iter().enumerate() {
+            if node_users.len() < 2 {
+                continue;
+            }
+            let spans: Vec<(f64, f64)> = sched
+                .intervals
+                .iter()
+                .filter(|iv| node_users.contains(&iv.sub_accel))
+                .map(|iv| (iv.start, iv.end))
+                .collect();
+            let (occupied_frac, contended_frac) = occupancy_sweep(&spans, sched.makespan);
+            node_contention.push(NodeContentionStats {
+                node: machine.topology.nodes[n].label.clone(),
+                users: node_users.len(),
+                occupied_frac,
+                contended_frac,
+            });
+        }
+
         let busy_fraction =
             (0..machine.sub_accels.len()).map(|s| sched.busy_fraction(s)).collect();
         CascadeStats {
@@ -123,6 +214,7 @@ impl CascadeStats {
             busy_fraction,
             utilization_timeline: sched.utilization_timeline(machine, 48),
             energy_by_phase,
+            node_contention,
         }
     }
 
@@ -187,6 +279,10 @@ impl CascadeStats {
                 "utilization_timeline",
                 Json::Arr(self.utilization_timeline.iter().map(|&b| Json::Num(b)).collect()),
             )
+            .with(
+                "node_contention",
+                Json::Arr(self.node_contention.iter().map(|c| c.to_json()).collect()),
+            )
     }
 
     /// Inverse of [`CascadeStats::to_json`]. Returns `None` on any
@@ -227,6 +323,16 @@ impl CascadeStats {
             }
         }
 
+        // Absent in documents written before the contention model: treat
+        // as "no shared nodes" rather than a malformed cache entry.
+        let node_contention = match j.get("node_contention").and_then(|v| v.as_arr()) {
+            Some(items) => items
+                .iter()
+                .map(NodeContentionStats::from_json)
+                .collect::<Option<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+
         Some(CascadeStats {
             workload: j.get("workload")?.as_str()?.to_string(),
             machine: j.get("machine")?.as_str()?.to_string(),
@@ -242,6 +348,7 @@ impl CascadeStats {
             busy_fraction: arr_field("busy_fraction")?,
             utilization_timeline: arr_field("utilization_timeline")?,
             energy_by_phase,
+            node_contention,
         })
     }
 }
@@ -335,9 +442,58 @@ mod tests {
         assert_eq!(back.energy_by_phase, stats.energy_by_phase);
         assert_eq!(back.busy_fraction, stats.busy_fraction);
         assert_eq!(back.utilization_timeline, stats.utilization_timeline);
+        assert_eq!(back.node_contention, stats.node_contention);
 
         // Malformed documents are a cache miss, not a panic.
         assert!(CascadeStats::from_json(&Json::parse("{}").unwrap()).is_none());
+
+        // Pre-contention cache documents (no node_contention key) still
+        // load — as an empty report, not a miss.
+        let mut doc = stats.to_json();
+        if let Json::Obj(pairs) = &mut doc {
+            pairs.retain(|(k, _)| k != "node_contention");
+        }
+        let old = CascadeStats::from_json(&doc).expect("legacy document loads");
+        assert!(old.node_contention.is_empty());
+    }
+
+    #[test]
+    fn occupancy_sweep_counts_overlap_only() {
+        // [0,10) and [5,15): occupied 15, contended 5, makespan 20.
+        let (occ, cont) = occupancy_sweep(&[(0.0, 10.0), (5.0, 15.0)], 20.0);
+        assert!((occ - 0.75).abs() < 1e-12);
+        assert!((cont - 0.25).abs() < 1e-12);
+        // Touching intervals do not contend.
+        let (occ, cont) = occupancy_sweep(&[(0.0, 10.0), (10.0, 20.0)], 20.0);
+        assert!((occ - 1.0).abs() < 1e-12);
+        assert_eq!(cont, 0.0);
+        assert_eq!(occupancy_sweep(&[], 20.0), (0.0, 0.0));
+        assert_eq!(occupancy_sweep(&[(0.0, 1.0)], 0.0), (0.0, 0.0));
+    }
+
+    /// Every multi-unit machine shares at least the DRAM root: the
+    /// report carries its occupancy, and overlap there matches the
+    /// schedule's parallelism.
+    #[test]
+    fn shared_root_contention_reported() {
+        let machine = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let assign = crate::hhp::allocator::allocate(&g, &machine, &classifier);
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 20, seed: 1 });
+        let mapped = mapper.map_cascade(&g, &machine, &assign);
+        let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
+        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched);
+
+        assert_eq!(stats.node_contention.len(), 1); // only the root is shared
+        let root = &stats.node_contention[0];
+        assert_eq!(root.users, 2);
+        assert!(root.occupied_frac > 0.0 && root.occupied_frac <= 1.0 + 1e-9);
+        assert!(root.contended_frac <= root.occupied_frac);
     }
 
     /// Drift guard: the hardcoded serialization key lists must cover

@@ -69,7 +69,7 @@ fn usage() -> String {
        topology <class|list>    print the generated memory tree for a taxonomy point\n\
                                 (or --file F to classify a machine-tree JSON)\n\
        eval [--config F | --workload W (--machine M | --topology F)] [--bw BITS]\n\
-                                [--samples N] [--threads N]\n\
+                                [--samples N] [--threads N] [--contention off|on]\n\
        figures [--samples N] [--threads N] [--cache FILE]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
        roofline                 print the Fig 1 roofline partitioning\n\
@@ -188,12 +188,28 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
         .opt("bw-frac-low", None, "fraction of DRAM bandwidth to the low-reuse side")
         .opt("samples", Some("400"), "mapper samples per unique shape")
         .opt("threads", None, "worker threads (default: HARP_THREADS or core count)")
+        .opt(
+            "contention",
+            Some("off"),
+            "shared-node contention: off (double-book shared nodes, historical) | on \
+             (book capacity slices + arbitrate shared edges)",
+        )
         .flag("dynamic-bw", "re-grant idle units' bandwidth (ablation)")
         .flag("json", "emit machine-readable JSON");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let json = args.has_flag("json");
     let threads = apply_threads(&args)?;
     if let Some(path) = args.get("config") {
+        // --contention has a default, so detect explicit use in raw
+        // argv: silently ignoring it in favour of the config's value
+        // would report the wrong model's numbers.
+        if argv.iter().any(|a| a == "--contention" || a.starts_with("--contention=")) {
+            return Err(
+                "--config supplies the evaluation options; set \"contention\" in the \
+                 config file instead of passing --contention"
+                    .into(),
+            );
+        }
         let mut cfg = ExperimentConfig::load(path)?;
         if let Some(n) = threads {
             cfg.opts.threads = n;
@@ -236,6 +252,8 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
         ..EvalOptions::default()
     };
     opts.dynamic_bw = args.has_flag("dynamic-bw");
+    opts.contention =
+        harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
     if let Some(n) = threads {
         opts.threads = n;
     }
@@ -278,12 +296,19 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("harp figures", "regenerate the paper figures")
         .opt("samples", Some("400"), "mapper samples per unique shape")
         .opt("threads", None, "worker threads for the sweep (default: HARP_THREADS or core count)")
-        .opt("cache", None, "JSON evaluation-cache file, reused across runs");
+        .opt("cache", None, "JSON evaluation-cache file, reused across runs")
+        .opt(
+            "contention",
+            Some("off"),
+            "shared-node contention model (off reproduces the paper figures)",
+        );
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let mut opts = EvalOptions {
         samples: args.get_usize("samples").map_err(|e| e.to_string())?,
         ..EvalOptions::default()
     };
+    opts.contention =
+        harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
     }
@@ -324,7 +349,8 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("harp sweep", "bandwidth × machine sweep")
         .opt("workload", Some("gpt3"), "bert | llama2 | gpt3")
         .opt("samples", Some("200"), "mapper samples per unique shape")
-        .opt("threads", None, "worker threads (default: HARP_THREADS or core count)");
+        .opt("threads", None, "worker threads (default: HARP_THREADS or core count)")
+        .opt("contention", Some("off"), "shared-node contention model (off | on)");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let wl_name = args.get("workload").unwrap();
     let wl =
@@ -334,6 +360,8 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         samples: args.get_usize("samples").map_err(|e| e.to_string())?,
         ..EvalOptions::default()
     };
+    opts.contention =
+        harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
     }

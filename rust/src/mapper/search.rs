@@ -534,6 +534,56 @@ mod tests {
         assert_no_duplicates(&c);
     }
 
+    /// The mapper sees booked capacity: searching on a contended
+    /// hier+xnode low-unit spec produces tilings that fit the SLICE of
+    /// the shared LLB (not the full node), and the batched pipeline
+    /// stays bit-identical across thread counts on booked specs.
+    #[test]
+    fn search_respects_booked_capacity_and_stays_deterministic() {
+        use crate::arch::level::LevelKind;
+        use crate::arch::partition::{HardwareParams, MachineConfig};
+        use crate::arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+        use crate::arch::topology::ContentionMode;
+        use crate::workload::einsum::Operand;
+
+        let c =
+            HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node());
+        let m = MachineConfig::build(&c, &HardwareParams::default())
+            .unwrap()
+            .with_contention(ContentionMode::Booked)
+            .unwrap();
+        let booked = &m.sub_accels[1].spec; // low-leaf: shares its LLB
+        let llb = booked.level_index(LevelKind::LLB).unwrap();
+        let cap = booked.levels[llb].size_words;
+        assert!(cap < (4 << 20)); // genuinely a slice, not the budget
+
+        let op = TensorOp::gemm("g", Phase::Decode, 8, 2048, 2048);
+        let b = SearchBudget { samples: 60, seed: 11 };
+        let r = search_best(&op, booked, &b);
+        assert!(r.valid > 0);
+        r.mapping.validate(&op, booked).unwrap();
+        // The winning tiling's LLB-resident tile fits the booked slice.
+        let tile: u64 = Operand::ALL
+            .iter()
+            .map(|&t| {
+                Dim::ALL
+                    .iter()
+                    .filter(|&&d| op.relevant(t, d))
+                    .map(|&d| r.mapping.extent(llb, d))
+                    .product::<u64>()
+            })
+            .sum();
+        assert!(tile <= cap, "LLB tile {tile} exceeds booked slice {cap}");
+
+        // Thread-count determinism survives booked specs.
+        let serial = search_best_threaded(&op, booked, &b, 1);
+        for threads in [2usize, 8] {
+            let r = search_best_threaded(&op, booked, &b, threads);
+            assert_eq!(r.mapping, serial.mapping);
+            assert_eq!(r.stats.cycles, serial.stats.cycles);
+        }
+    }
+
     #[test]
     fn fingerprint_distinguishes_shapes() {
         let a = TensorOp::gemm("a", Phase::Encoder, 10, 20, 30);

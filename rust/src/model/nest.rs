@@ -431,6 +431,52 @@ mod tests {
         assert!(sn.noc_energy_pj < sl.noc_energy_pj);
     }
 
+    /// Booked contention shrinks the valid map space: a tile that fills
+    /// the full shared LLB analyses fine on the `Off` flatten but is a
+    /// capacity violation on the booked slice — the mechanism by which
+    /// co-attached units stop double-booking each other's buffer space.
+    #[test]
+    fn booked_capacity_rejects_tiles_the_full_node_accepted() {
+        use crate::arch::partition::Role;
+        use crate::arch::spec::MappingConstraints;
+        use crate::arch::topology::{AccelNode, ContentionMode, MachineTopology};
+
+        let mut t = MachineTopology::new("co", 64.0);
+        let llb = t.add_node(0, LevelKind::LLB, "llb.shared", 4096, 16.0, None);
+        for i in 0..2u64 {
+            t.add_accel(AccelNode {
+                label: format!("u{i}"),
+                ty: format!("ty{i}"),
+                role: Role::Unified,
+                rows: 2,
+                cols: 2,
+                rf_bytes_per_pe: 8,
+                attach: llb,
+                attach_bw: 16.0,
+                dram_share: 32.0,
+                capacity_share: None,
+                mac_energy_pj: 0.5,
+                fsm_group: None,
+                constraints: MappingConstraints::default(),
+            });
+        }
+        t.validate().unwrap();
+        let full = t.flatten_with(0, ContentionMode::Off);
+        let booked = t.flatten_with(0, ContentionMode::Booked);
+        assert_eq!(full.levels[1].size_words, 4096);
+        assert_eq!(booked.levels[1].size_words, 2048); // equal-PE split
+
+        // 32×32×32 GEMM with a 32×32 output + 32-K A-tile at the LLB:
+        // 32·32 + 32·32 + 32·32 = 3072 words — fits 4096, not 2048.
+        let op = TensorOp::gemm("g", Phase::Encoder, 32, 32, 32);
+        let mut m = Mapping::trivial(3, &op);
+        m.temporal[1] = [1, 32, 32, 32];
+        m.temporal[2] = [1, 1, 1, 1];
+        analyze(&op, &full, &m).unwrap();
+        let err = analyze(&op, &booked, &m).unwrap_err();
+        assert!(matches!(err, MapError::CapacityExceeded { level: "LLB", .. }), "{err:?}");
+    }
+
     #[test]
     fn energy_accounts_all_levels() {
         let op = op_8x8x8();

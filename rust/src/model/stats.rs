@@ -119,6 +119,25 @@ impl OpStats {
         self.onchip_bound_cycles
     }
 
+    /// Recompute latency when EVERY boundary's bandwidth may differ from
+    /// the spec the op was analysed on — the shared-node contention
+    /// re-grant, where idle siblings return capacity on intermediate
+    /// edges too, not just at DRAM. `bw[j]` feeds boundary `j` (between
+    /// levels `j` and `j+1`); with the spec's own bandwidths this
+    /// reproduces the analysed `cycles` bit-identically (same divisions,
+    /// same max).
+    pub fn latency_with_boundary_bw(&self, bw: &[f64]) -> f64 {
+        assert_eq!(bw.len(), self.boundary_words.len(), "one bandwidth per boundary");
+        let mut cycles = self.compute_cycles;
+        for (&(_, words), &b) in self.boundary_words.iter().zip(bw) {
+            let c = words / b;
+            if c > cycles {
+                cycles = c;
+            }
+        }
+        cycles
+    }
+
     /// Multiplications per joule.
     pub fn mults_per_joule(&self) -> f64 {
         self.macs / (self.energy_pj * 1e-12)
@@ -189,6 +208,25 @@ mod tests {
         assert_eq!(s.latency_with_dram_bw(1.0), 640.0);
         // At very high bw the on-chip bound (80) holds.
         assert_eq!(s.latency_with_dram_bw(1e9), 80.0);
+    }
+
+    #[test]
+    fn latency_rebinds_per_boundary() {
+        let s = sample();
+        // Spec-equivalent bandwidths reproduce the analysed latency: the
+        // sample has 100 L1 words and 640 DRAM words; at (1, 6.4) w/cyc
+        // both boundaries hit exactly 100 cycles.
+        assert_eq!(s.latency_with_boundary_bw(&[1.0, 6.4]), 100.0);
+        // Squeezing an INTERMEDIATE boundary dominates — the case
+        // latency_with_dram_bw cannot express.
+        assert_eq!(s.latency_with_boundary_bw(&[0.5, 6.4]), 200.0);
+        // Unconstrained bandwidths fall back to the compute floor.
+        assert_eq!(s.latency_with_boundary_bw(&[1e9, 1e9]), 80.0);
+        // More bandwidth never increases latency (re-grant monotonicity).
+        assert!(
+            s.latency_with_boundary_bw(&[2.0, 12.8])
+                <= s.latency_with_boundary_bw(&[1.0, 6.4])
+        );
     }
 
     #[test]

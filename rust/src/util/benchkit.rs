@@ -49,15 +49,38 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Smoke mode for CI (`HARP_BENCH_SMOKE=1`): every [`bench_fn`] target
+/// compiles and runs exactly once, with no statistical sampling — so
+/// `cargo bench` doubles as a drift gate without the wall-clock cost.
+/// Timing numbers are meaningless in this mode; the value is that a
+/// bench that no longer builds or panics breaks CI instead of rotting.
+pub fn bench_smoke() -> bool {
+    std::env::var("HARP_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Time `f`, printing and returning statistics.
 ///
 /// Runs a short warm-up, then samples until `budget` elapses or
-/// `max_iters` samples are collected (min 10 samples).
+/// `max_iters` samples are collected (min 10 samples; a single
+/// un-batched sample under [`bench_smoke`]).
 pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, max_iters: usize, mut f: F) -> Timing {
     // Warm-up: a few calls, also used to size batches for fast functions.
     let warm_start = Instant::now();
     f();
     let single = warm_start.elapsed().as_nanos().max(1) as f64;
+    if bench_smoke() {
+        // The warm-up call above already exercised the target once.
+        let timing = Timing {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: single,
+            median_ns: single,
+            p95_ns: single,
+            min_ns: single,
+        };
+        println!("{}", timing.report());
+        return timing;
+    }
     let batch = if single < 1e4 { (1e5 / single).ceil() as usize } else { 1 }.max(1);
 
     let mut samples: Vec<f64> = Vec::new();

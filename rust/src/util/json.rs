@@ -531,4 +531,44 @@ mod tests {
         assert_eq!(Json::Num(1.5).as_u64(), None);
         assert_eq!(Json::Num(-1.0).as_u64(), None);
     }
+
+    /// Machine-tree documents survive parse → serialize → parse for the
+    /// generated tree of EVERY taxonomy point, with capacity shares
+    /// populated — the serializer and the topology parser agree on one
+    /// schema, including the contention fields.
+    #[test]
+    fn machine_tree_documents_round_trip_for_every_taxonomy_point() {
+        use crate::arch::partition::{generate_topology, HardwareParams};
+        use crate::arch::taxonomy::HarpClass;
+
+        for class in HarpClass::all_points() {
+            let mut t = generate_topology(&class, &HardwareParams::default()).unwrap();
+            // Populate pinned capacity shares on every shared node's
+            // users (proportional values, so validation always holds).
+            let users = t.node_users();
+            for (n, us) in users.iter().enumerate() {
+                if us.len() < 2 || t.nodes[n].size_words == u64::MAX {
+                    continue;
+                }
+                for (u, words) in t.booked_capacities(n, us) {
+                    t.accels[u].capacity_share = Some(words);
+                }
+            }
+            t.validate().unwrap();
+
+            let text = t.to_json().to_string_pretty();
+            let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{class}: {e}"));
+            let back = crate::arch::topology::MachineTopology::from_json(&parsed)
+                .unwrap_or_else(|e| panic!("{class}: {e}"));
+            // Serializing the re-parsed tree reproduces the document
+            // byte-for-byte, and the structure classifies identically.
+            assert_eq!(back.to_json().to_string_pretty(), text, "{class}");
+            assert_eq!(back.classify().unwrap(), t.classify().unwrap(), "{class}");
+            for (a, b) in t.accels.iter().zip(&back.accels) {
+                assert_eq!(a.capacity_share, b.capacity_share, "{class}");
+                assert_eq!(a.dram_share, b.dram_share, "{class}");
+                assert_eq!(a.attach, b.attach, "{class}");
+            }
+        }
+    }
 }

@@ -13,9 +13,13 @@
 //! which `fig10_byte_identical_across_thread_counts` asserts by running
 //! the same driver against single- and multi-threaded evaluators.
 
-use harp::coordinator::experiment::EvalOptions;
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::arch::topology::ContentionMode;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
 use harp::coordinator::figures::{self, Evaluator};
 use harp::util::threadpool::default_threads;
+use harp::workload::transformer;
 use std::path::PathBuf;
 
 /// The small fixed budget all goldens are rendered at.
@@ -90,6 +94,69 @@ fn golden_fig8_and_fig9() {
     let ev = Evaluator::new(golden_opts(default_threads()));
     assert_golden("fig8_mults_per_joule", &figures::fig8_mults_per_joule(&ev).render());
     assert_golden("fig9_subaccel_energy", &figures::fig9_subaccel_energy(&ev).render());
+}
+
+/// Contention-on goldens for the shared-node taxonomy points. The
+/// existing fig6/7/10 goldens pin `contention: off` (the figure drivers'
+/// default, byte-identical to the pre-contention model); these pin the
+/// `Booked` numbers for the two machines where booking actually changes
+/// the map space — hier+xnode (two low units on one LLB) and the
+/// clustered hierarchical point (a shared LLB per cluster).
+fn render_contention_eval(class_id: &str) -> String {
+    let class = HarpClass::from_id(class_id).expect("taxonomy id");
+    let mut opts = golden_opts(default_threads());
+    opts.contention = ContentionMode::Booked;
+    let cascade = transformer::cascade_for(&transformer::llama2());
+    let r =
+        evaluate_cascade_on_config(&class, &HardwareParams::default(), &cascade, &opts)
+            .expect("valid eval point");
+    // Machine description (shows the booked capacity slices) plus the
+    // full deterministic stats document.
+    format!("{}\n{}\n", r.machine.describe(), r.stats.to_json().to_string_pretty())
+}
+
+#[test]
+fn golden_contention_hier_xnode() {
+    assert_golden("contention_hier_xnode", &render_contention_eval("hier+xnode"));
+}
+
+#[test]
+fn golden_contention_clustered() {
+    assert_golden("contention_clustered", &render_contention_eval("hier+xnode-cl"));
+}
+
+/// The back-compat half of the contention contract, independent of any
+/// committed file: a shared-node machine round-tripped through
+/// `Booked` and back to `Off` evaluates bit-identically to one that
+/// was never re-flattened at all — so `contention: "off"` reproduces
+/// the legacy numbers and the existing fig6/7/10 goldens stay valid.
+#[test]
+fn contention_off_is_bit_identical_to_legacy_path() {
+    use harp::arch::partition::MachineConfig;
+    use harp::coordinator::experiment::evaluate_cascade_on_machine;
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let cascade = transformer::cascade_for(&transformer::llama2());
+    let opts = golden_opts(1);
+    let pristine = MachineConfig::build(&class, &HardwareParams::default()).unwrap();
+    let round_tripped = pristine
+        .clone()
+        .with_contention(ContentionMode::Booked)
+        .unwrap()
+        .with_contention(ContentionMode::Off)
+        .unwrap();
+    let a = evaluate_cascade_on_machine(&pristine, &cascade, &opts).unwrap();
+    let b = evaluate_cascade_on_machine(&round_tripped, &cascade, &opts).unwrap();
+    assert_eq!(
+        a.stats.to_json().to_string_pretty(),
+        b.stats.to_json().to_string_pretty()
+    );
+    // And Booked genuinely moves the machine's inputs on this point, so
+    // the equality above is not vacuous.
+    let booked = pristine.with_contention(ContentionMode::Booked).unwrap();
+    assert_ne!(
+        booked.sub_accels[1].spec.levels[2].size_words,
+        round_tripped.sub_accels[1].spec.levels[2].size_words
+    );
 }
 
 #[test]

@@ -56,6 +56,40 @@ fn eval_emits_json() {
 }
 
 #[test]
+fn eval_contention_flag_flows_to_report() {
+    let (ok, stdout, stderr) = harp(&[
+        "eval",
+        "--workload",
+        "llama2",
+        "--machine",
+        "hier+xnode",
+        "--samples",
+        "20",
+        "--contention",
+        "on",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    // hier+xnode shares its low LLB between two units: the occupancy
+    // report must list that node (plus the root) with 2 and 3 users.
+    let nodes = v.get("node_contention").unwrap().as_arr().unwrap();
+    assert!(
+        nodes
+            .iter()
+            .any(|c| c.get("node").unwrap().as_str() == Some("llb.low")
+                && c.get("users").unwrap().as_usize() == Some(2)),
+        "{stdout}"
+    );
+    // An unknown mode is a usage error, not a silent default.
+    let (ok, _, stderr) = harp(&[
+        "eval", "--workload", "bert", "--machine", "leaf+xnode", "--contention", "sometimes",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown contention mode"), "{stderr}");
+}
+
+#[test]
 fn eval_rejects_invalid_machine() {
     let (ok, _, stderr) = harp(&["eval", "--workload", "bert", "--machine", "leaf+xdepth"]);
     assert!(!ok);

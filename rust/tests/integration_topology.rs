@@ -3,11 +3,20 @@
 
 use harp::arch::partition::MachineConfig;
 use harp::arch::taxonomy::{ComputePlacement, HeterogeneityLoc};
-use harp::arch::topology::MachineTopology;
+use harp::arch::topology::{ContentionMode, MachineTopology};
 use harp::coordinator::experiment::{evaluate_cascade_on_machine, EvalOptions};
 use harp::util::json::Json;
 use harp::workload::transformer;
 use std::path::PathBuf;
+
+const EXAMPLES: [&str; 6] = [
+    "b100_intra_node.json",
+    "herald_cross_node.json",
+    "symphony_clustered.json",
+    "neupim_cross_depth.json",
+    "fig4h_compound.json",
+    "hier_xnode_shared_llb.json",
+];
 
 fn load(name: &str) -> MachineTopology {
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -24,7 +33,12 @@ fn load(name: &str) -> MachineTopology {
 /// Every shipped example classifies to the taxonomy row it illustrates.
 #[test]
 fn example_topologies_classify_to_their_rows() {
-    let cases: [(&str, ComputePlacement, HeterogeneityLoc); 5] = [
+    let cases: [(&str, ComputePlacement, HeterogeneityLoc); 6] = [
+        (
+            "hier_xnode_shared_llb.json",
+            ComputePlacement::Hierarchical,
+            HeterogeneityLoc::CrossNode { clustered: false },
+        ),
         ("b100_intra_node.json", ComputePlacement::LeafOnly, HeterogeneityLoc::IntraNode),
         (
             "herald_cross_node.json",
@@ -128,6 +142,147 @@ fn deep_custom_hierarchy_evaluates() {
     let back =
         harp::hhp::stats::CascadeStats::from_json(&r.stats.to_json()).expect("round-trips");
     assert_eq!(back.energy_by_level, r.stats.energy_by_level);
+}
+
+/// Differential back-compat: every shipped example evaluated with
+/// `contention: "off"` is byte-identical to the pre-contention pipeline
+/// — i.e. to the machine exactly as `from_topology` builds it, with
+/// specs straight from the historical `flatten` (the flatten-vs-direct
+/// equality harness extended across the contention boundary).
+#[test]
+fn examples_with_contention_off_match_pre_contention_output() {
+    let wl = transformer::bert_large();
+    let cascade = transformer::encoder_cascade(&wl);
+    for file in EXAMPLES {
+        let topo = load(file);
+        // Spec-level: flatten_with(Off) IS the historical flatten.
+        for i in 0..topo.accels.len() {
+            let old = topo.flatten(i);
+            let off = topo.flatten_with(i, ContentionMode::Off);
+            assert_eq!(old.levels.len(), off.levels.len(), "{file}");
+            for (a, b) in old.levels.iter().zip(&off.levels) {
+                assert_eq!(a.kind, b.kind, "{file}");
+                assert_eq!(a.size_words, b.size_words, "{file}");
+                assert_eq!(a.bw_words_per_cycle, b.bw_words_per_cycle, "{file}");
+                assert_eq!(a.energy_pj_per_word, b.energy_pj_per_word, "{file}");
+            }
+        }
+        // End-to-end: a Booked→Off round trip through the machine view
+        // leaves the full evaluation document byte-identical.
+        let pristine = MachineConfig::from_topology(topo).unwrap();
+        let round_tripped = pristine
+            .clone()
+            .with_contention(ContentionMode::Booked)
+            .unwrap()
+            .with_contention(ContentionMode::Off)
+            .unwrap();
+        let opts = EvalOptions { samples: 12, ..EvalOptions::default() };
+        let a = evaluate_cascade_on_machine(&pristine, &cascade, &opts).unwrap();
+        let b = evaluate_cascade_on_machine(&round_tripped, &cascade, &opts).unwrap();
+        assert_eq!(
+            a.stats.to_json().to_string_pretty(),
+            b.stats.to_json().to_string_pretty(),
+            "{file}: contention off drifted from the pre-contention output"
+        );
+    }
+}
+
+/// The shared-LLB example actually books: its pinned shares are honoured
+/// verbatim, sum to the node, and the contended evaluation runs end to
+/// end with per-node occupancy reported.
+#[test]
+fn shared_llb_example_books_and_evaluates_contended() {
+    let topo = load("hier_xnode_shared_llb.json");
+    assert_eq!(topo.accels[1].capacity_share, Some(419430));
+    assert_eq!(topo.accels[2].capacity_share, Some(419431));
+    let m = MachineConfig::from_topology(topo)
+        .unwrap()
+        .with_contention(ContentionMode::Booked)
+        .unwrap();
+    use harp::arch::level::LevelKind;
+    let lo1 = m.sub_accels[1].spec.level(LevelKind::LLB).unwrap().size_words;
+    let lo2 = m.sub_accels[2].spec.level(LevelKind::LLB).unwrap().size_words;
+    assert_eq!((lo1, lo2), (419430, 419431));
+    assert_eq!(lo1 + lo2, 838861);
+    // The high unit's private LLB is untouched.
+    assert_eq!(m.sub_accels[0].spec.level(LevelKind::LLB).unwrap().size_words, 3355443);
+
+    let wl = transformer::llama2();
+    let cascade = transformer::cascade_for(&wl);
+    let mut opts = EvalOptions { samples: 20, ..EvalOptions::default() };
+    opts.contention = ContentionMode::Booked;
+    let r = evaluate_cascade_on_machine(&m, &cascade, &opts).unwrap();
+    assert!(r.stats.latency_cycles > 0.0);
+    // The shared LLB node shows up in the contention report.
+    let shared = r
+        .stats
+        .node_contention
+        .iter()
+        .find(|c| c.node == "llb.low.shared")
+        .expect("shared node reported");
+    assert_eq!(shared.users, 2);
+    assert!(shared.contended_frac <= shared.occupied_frac);
+}
+
+/// Malformed topology documents return `Err` — never panic: truncated
+/// JSON at every byte boundary, over-subscribed/degenerate capacity
+/// shares, and shares on non-attachment edges.
+#[test]
+fn malformed_topologies_error_instead_of_panicking() {
+    // Truncations of a real document: either the JSON parser or the
+    // topology parser must reject every proper prefix.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/topologies/hier_xnode_shared_llb.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    // Cut strictly inside the document: a cut in the trailing
+    // whitespace would leave a complete, valid file.
+    let doc_len = text.trim_end().len();
+    for cut in (0..doc_len - 1).step_by(97).chain([doc_len - 1]) {
+        let truncated = &text[..cut];
+        let outcome = Json::parse(truncated).map_err(|e| e.to_string()).and_then(|j| {
+            MachineTopology::from_json(&j).map(|_| ())
+        });
+        assert!(outcome.is_err(), "truncation at byte {cut} was accepted");
+    }
+
+    let shared_llb = |accels: &str| -> Result<MachineTopology, String> {
+        let doc = format!(
+            r#"{{"name":"m","root":{{"bw_words_per_cycle":256,"children":[
+                {{"level":"LLB","size_words":4096,"bw_words_per_cycle":128,
+                  "accels":[{accels}]}}]}}}}"#
+        );
+        MachineTopology::from_json(&Json::parse(&doc).unwrap())
+    };
+    // Over-subscribed pinned capacity.
+    let err = shared_llb(
+        r#"{"name":"a","rows":4,"cols":4,"capacity_share_words":4000},
+           {"name":"b","rows":4,"cols":4,"capacity_share_words":4000}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("capacity shares sum"), "{err}");
+    // Pins that starve an unpinned sibling.
+    let err = shared_llb(
+        r#"{"name":"a","rows":4,"cols":4,"capacity_share_words":4096},
+           {"name":"b","rows":4,"cols":4}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("unpinned"), "{err}");
+    // Zero and negative shares.
+    for bad in ["0", "-16"] {
+        let err = shared_llb(&format!(
+            r#"{{"name":"a","rows":4,"cols":4,"capacity_share_words":{bad}}},
+               {{"name":"b","rows":4,"cols":4}}"#
+        ))
+        .unwrap_err();
+        assert!(err.contains("positive"), "{bad}: {err}");
+    }
+    // A share on a storage node (non-attachment edge).
+    let doc = r#"{"name":"m","root":{"bw_words_per_cycle":256,"children":[
+        {"level":"LLB","size_words":4096,"bw_words_per_cycle":128,
+         "capacity_share_words":64,
+         "accels":[{"name":"a","rows":4,"cols":4}]}]}}"#;
+    let err = MachineTopology::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+    assert!(err.contains("not storage nodes"), "{err}");
 }
 
 /// Pinned per-edge shares change the dynamic re-grant (the recursive

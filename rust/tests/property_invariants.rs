@@ -1,9 +1,10 @@
 //! Property-based invariants over the cost model, mapper, scheduler and
 //! substrates, via the from-scratch `util::prop` runner.
 
-use harp::arch::partition::{HardwareParams, MachineConfig};
-use harp::arch::spec::ArchSpec;
+use harp::arch::partition::{HardwareParams, MachineConfig, Role};
+use harp::arch::spec::{ArchSpec, MappingConstraints};
 use harp::arch::taxonomy::HarpClass;
+use harp::arch::topology::{AccelNode, ContentionMode, MachineTopology};
 use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
 use harp::coordinator::figures::Evaluator;
 use harp::hhp::scheduler::{schedule, ScheduleOptions};
@@ -257,6 +258,180 @@ fn prop_generate_classify_round_trip() {
         let tree_pes: u64 = m.topology.accels.iter().map(|a| a.peak_macs()).sum();
         if tree_pes != m.total_pes() {
             return Err(format!("tree PEs {tree_pes} != flattened {}", m.total_pes()));
+        }
+        Ok(())
+    });
+}
+
+/// A root → LLB tree with `k` units co-attached at the shared LLB.
+/// `pes[i]` sizes unit `i`'s array; every unit gets an equal DRAM share.
+fn co_attached_machine(pes: &[u64]) -> MachineTopology {
+    let k = pes.len() as f64;
+    let mut t = MachineTopology::new("co", 256.0);
+    let llb = t.add_node(0, harp::arch::level::LevelKind::LLB, "llb.shared", 1 << 16, 128.0, None);
+    for (i, &p) in pes.iter().enumerate() {
+        t.add_accel(AccelNode {
+            label: format!("u{i}"),
+            ty: format!("ty{i}"),
+            role: Role::Unified,
+            rows: 1,
+            cols: p,
+            rf_bytes_per_pe: 64,
+            attach: llb,
+            attach_bw: 64.0,
+            dram_share: 256.0 / k,
+            capacity_share: None,
+            mac_energy_pj: 0.2,
+            fsm_group: None,
+            constraints: MappingConstraints::default(),
+        });
+    }
+    t.validate().unwrap();
+    t
+}
+
+/// Contention invariant #1: adding a co-attached unit never *increases*
+/// another unit's booked capacity or granted bandwidth — so it can
+/// never decrease that unit's op latency. Checked over random array
+/// sizes for growing co-attachment counts, against the same fixed
+/// memory-bound op.
+#[test]
+fn prop_adding_co_attached_unit_never_decreases_latency() {
+    use harp::arch::level::LevelKind;
+    let gen = Gen::ranges(vec![(1, 64), (1, 64), (1, 64), (1, 64)]);
+    check("co-attach-monotone", 0xCA11, 25, &gen, |v| {
+        let pes: Vec<u64> = v.iter().map(|&x| x as u64).collect();
+        // A fixed op on unit 0, bound by the shared LLB uplink + DRAM.
+        let mut stats = harp::model::stats::OpStats::new_empty();
+        stats.compute_cycles = 1.0;
+        stats.boundary_words = vec![(LevelKind::LLB, 640.0), (LevelKind::DRAM, 2560.0)];
+        let mut prev_cap = u64::MAX;
+        let mut prev_lat = 0.0f64;
+        for k in 1..=pes.len() {
+            let t = co_attached_machine(&pes[..k]);
+            let m = MachineConfig::from_topology(t)
+                .map_err(|e| e.to_string())?
+                .with_contention(ContentionMode::Booked)?;
+            let cap = m.sub_accels[0].spec.levels[1].size_words;
+            if cap > prev_cap {
+                return Err(format!("booked capacity grew from {prev_cap} to {cap} at k={k}"));
+            }
+            prev_cap = cap;
+            let busy = vec![true; k];
+            let lat = stats.latency_with_boundary_bw(&m.contended_boundary_bw(0, &busy));
+            if lat + 1e-9 < prev_lat {
+                return Err(format!("op latency dropped from {prev_lat} to {lat} at k={k}"));
+            }
+            prev_lat = lat;
+            // Booked slices always sum to the shared node exactly.
+            let total: u64 =
+                (0..k).map(|s| m.sub_accels[s].spec.levels[1].size_words).sum();
+            if k >= 2 && total != 1 << 16 {
+                return Err(format!("slices sum to {total}, node is {}", 1u64 << 16));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Contention invariant #2: shrinking the busy set never shrinks any
+/// boundary grant (idle siblings only ever *give back* bandwidth), over
+/// random busy subsets of the clustered hierarchical machine.
+#[test]
+fn prop_idle_regrant_is_monotone() {
+    let m = MachineConfig::build(
+        &HarpClass::from_id("hier+xnode-cl").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap()
+    .with_contention(ContentionMode::Booked)
+    .unwrap();
+    let n = m.sub_accels.len();
+    let gen = Gen::ranges(vec![(0, (1 << n) - 1), (0, n - 1)]);
+    check("idle-regrant-monotone", 0x1D1E, 40, &gen, |v| {
+        let s = v[1];
+        let mut small: Vec<bool> = (0..n).map(|i| v[0] >> i & 1 == 1).collect();
+        small[s] = true; // the queried unit is always busy
+        let large = vec![true; n];
+        let bw_small = m.contended_boundary_bw(s, &small);
+        let bw_large = m.contended_boundary_bw(s, &large);
+        for (j, (a, b)) in bw_small.iter().zip(&bw_large).enumerate() {
+            if a + 1e-9 < *b {
+                return Err(format!(
+                    "unit {s} boundary {j}: busier set granted MORE ({b} > {a})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Contention invariant #3: pinned capacity shares equal to the
+/// proportional booking (which sums exactly to each shared node's
+/// capacity) flatten to bit-identical specs — pinning is a superset of
+/// the default policy, not a different model.
+#[test]
+fn pinned_shares_matching_proportional_split_are_identity() {
+    for id in ["hier+xnode", "hier+xnode-cl"] {
+        let class = HarpClass::from_id(id).unwrap();
+        let m = MachineConfig::build(&class, &HardwareParams::default()).unwrap();
+        let mut t = m.topology.clone();
+        // Pin every unit that actually shares a node to its proportional
+        // booking at that node.
+        let users = t.node_users();
+        for (n, us) in users.iter().enumerate() {
+            if us.len() < 2 || t.nodes[n].size_words == u64::MAX {
+                continue;
+            }
+            for (u, words) in t.booked_capacities(n, us) {
+                t.accels[u].capacity_share = Some(words);
+            }
+        }
+        assert!(
+            t.accels.iter().any(|a| a.capacity_share.is_some()),
+            "{id}: no shared node found — test is vacuous"
+        );
+        t.validate().unwrap();
+        let prop = m.topology.flatten_all_with(ContentionMode::Booked);
+        let pinned = t.flatten_all_with(ContentionMode::Booked);
+        for (a, b) in prop.iter().zip(&pinned) {
+            assert_eq!(a.levels.len(), b.levels.len());
+            for (x, y) in a.levels.iter().zip(&b.levels) {
+                assert_eq!(x.size_words, y.size_words, "{id}: pinned ≠ proportional");
+                assert_eq!(x.bw_words_per_cycle, y.bw_words_per_cycle);
+            }
+        }
+    }
+}
+
+/// Contention invariant #4: populating capacity shares is invisible to
+/// classification — `classify(generate(c)) == c` still holds for every
+/// taxonomy point with every attachment's share pinned.
+#[test]
+fn prop_round_trip_holds_with_shares_populated() {
+    let points = HarpClass::all_points();
+    let gen = Gen::ranges(vec![(0, points.len() - 1), (256, 4096)]);
+    check("round-trip-with-shares", 0x5A5E, 30, &gen, |v| {
+        let class = &points[v[0]];
+        let params = HardwareParams {
+            total_macs: (v[1] as u64) * 16,
+            ..HardwareParams::default()
+        };
+        let m = MachineConfig::build(class, &params)?;
+        let mut t = m.topology.clone();
+        let users = t.node_users();
+        for (n, us) in users.iter().enumerate() {
+            if us.len() < 2 || t.nodes[n].size_words == u64::MAX {
+                continue;
+            }
+            for (u, words) in t.booked_capacities(n, us) {
+                t.accels[u].capacity_share = Some(words);
+            }
+        }
+        t.validate()?;
+        let back = t.classify()?;
+        if back != *class {
+            return Err(format!("{class} with shares classified as {back}"));
         }
         Ok(())
     });

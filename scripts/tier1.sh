@@ -27,10 +27,23 @@ echo "== tier1: CLI smoke =="
 "$BIN" eval --workload bert --machine leaf+xnode --samples 20 --json > /dev/null
 "$BIN" eval --workload llama2 --samples 20 --json \
     --topology examples/topologies/fig4h_compound.json > /dev/null
+# Contention model: booked evaluation on the shared-LLB machines, via
+# the taxonomy generator and an explicit topology file with pinned
+# capacity shares.
+"$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --contention on --json > /dev/null
+"$BIN" eval --workload llama2 --samples 20 --contention on --json \
+    --topology examples/topologies/hier_xnode_shared_llb.json > /dev/null
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
     --cache target/tier1-eval-cache.json > /dev/null
 # Second figures run must be served from the disk-spilled cache.
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
     --cache target/tier1-eval-cache.json > /dev/null
+
+echo "== tier1: bench smoke (compile + one iteration) =="
+# Every bench target compiles and runs exactly once, so bench drift
+# breaks the gate instead of rotting silently. HARP_BENCH_SMOKE skips
+# the statistical sampling; numbers printed here are meaningless.
+HARP_BENCH_SMOKE=1 cargo bench --bench perf_hotpath > /dev/null
 
 echo "tier1 OK"

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Refresh the committed golden snapshots under rust/tests/goldens/.
+#
+# Goldens are COMMITTED to the repo and required in CI
+# (HARP_REQUIRE_GOLDENS=1, no bootstrap step), so they catch cross-run
+# regressions, not just intra-run nondeterminism. When an intentional
+# model change moves the numbers, run this script and commit the diff —
+# the review of that diff IS the review of the numeric change.
+#
+# Usage:
+#   scripts/update_goldens.sh          # regenerate every golden
+#   git diff rust/tests/goldens/       # inspect what moved, then commit
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== regenerating goldens (HARP_UPDATE_GOLDENS=1) =="
+HARP_UPDATE_GOLDENS=1 HARP_THREADS="${HARP_THREADS:-4}" \
+    cargo test -q --release --test golden_figures
+
+echo
+echo "== goldens now on disk =="
+ls -l rust/tests/goldens/*.txt
+
+if git status --porcelain rust/tests/goldens | grep -q .; then
+    echo
+    echo "goldens changed — review with 'git diff rust/tests/goldens/' and commit."
+else
+    echo
+    echo "goldens unchanged — nothing to commit."
+fi
