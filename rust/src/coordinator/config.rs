@@ -13,6 +13,11 @@
 //! }
 //! ```
 //!
+//! `"workload"` is a registered name (`harp workload list`) or a path
+//! to a cascade JSON file (same schema as `--workload FILE`; see the
+//! README). Like `"topology"`, a relative path resolves against the
+//! config file's directory.
+//!
 //! `"contention": "on"` books shared tree nodes (co-attached units get
 //! exclusive capacity slices and arbitrated edge bandwidth) instead of
 //! the historical double-booking; it applies to generated machines and
@@ -29,12 +34,13 @@ use crate::arch::topology::MachineTopology;
 use crate::coordinator::experiment::{default_bw_frac_low, EvalOptions};
 use crate::util::json::Json;
 use crate::workload::cascade::Cascade;
-use crate::workload::transformer::{self, TransformerConfig};
+use crate::workload::registry::{self, WorkloadSource};
 
 /// A parsed experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    pub workload: TransformerConfig,
+    /// The workload: a registered spec, or a cascade file to load.
+    pub workload: WorkloadSource,
     /// Taxonomy point; `None` when `topology` supplies the machine.
     pub class: Option<HarpClass>,
     pub params: HardwareParams,
@@ -50,9 +56,10 @@ impl ExperimentConfig {
         let workload_name = j
             .get("workload")
             .and_then(|v| v.as_str())
-            .ok_or("missing 'workload' (bert|llama2|gpt3)")?;
-        let workload = transformer::by_name(workload_name)
-            .ok_or_else(|| format!("unknown workload '{workload_name}'"))?;
+            .ok_or("missing 'workload' (a registered name or a cascade .json file)")?;
+        // File sources stay lazy: `load()` resolves them against the
+        // config file's directory first — exactly like 'topology'.
+        let workload = registry::source_for(workload_name)?;
         let topology = j.get("topology").and_then(|v| v.as_str()).map(String::from);
         if topology.is_some() {
             // The tree fixes the machine and its hardware; reject keys
@@ -118,18 +125,24 @@ impl ExperimentConfig {
         Ok(ExperimentConfig { workload, class, params, opts, topology })
     }
 
-    /// Load from a file path. A relative `topology` path is resolved
-    /// against the config file's directory, so configs are relocatable.
+    /// Load from a file path. Relative `topology` and `workload` file
+    /// paths are resolved against the config file's directory, so
+    /// configs are relocatable.
     pub fn load(path: &str) -> Result<ExperimentConfig, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let mut cfg = ExperimentConfig::parse(&text)?;
-        if let Some(t) = &cfg.topology {
-            let p = std::path::Path::new(t);
-            if p.is_relative() {
-                if let Some(dir) = std::path::Path::new(path).parent() {
-                    cfg.topology = Some(dir.join(p).to_string_lossy().into_owned());
-                }
+        let resolve = |file: &str| -> String {
+            let p = std::path::Path::new(file);
+            match std::path::Path::new(path).parent() {
+                Some(dir) if p.is_relative() => dir.join(p).to_string_lossy().into_owned(),
+                _ => file.to_string(),
             }
+        };
+        if let Some(t) = &cfg.topology {
+            cfg.topology = Some(resolve(t));
+        }
+        if let WorkloadSource::File(w) = &cfg.workload {
+            cfg.workload = WorkloadSource::File(resolve(w));
         }
         Ok(cfg)
     }
@@ -164,7 +177,7 @@ mod tests {
                 "bw_frac_low":0.6,"samples":99,"dynamic_bw":true}"#,
         )
         .unwrap();
-        assert_eq!(c.workload.d_model, 12288);
+        assert_eq!(c.workload.load().unwrap().name(), "GPT3");
         assert_eq!(c.class.as_ref().unwrap().id(), "hier+xdepth");
         assert_eq!(c.params.dram_bw_bits, 512.0);
         assert_eq!(c.opts.samples, 99);
@@ -246,10 +259,63 @@ mod tests {
     #[test]
     fn build_machine_applies_bw_policy() {
         let c = ExperimentConfig::parse(r#"{"workload":"gpt3","machine":"leaf+xnode"}"#).unwrap();
-        let cascade = transformer::cascade_for(&c.workload);
+        let cascade = c.workload.load().unwrap().cascade();
         let m = c.build_machine(&cascade).unwrap();
         // Decoder cascade → the 75/25 policy.
         let lo = m.sub_accels[1].spec.dram().bw_words_per_cycle;
         assert!((lo - 192.0).abs() < 1e-9);
+    }
+
+    /// The workload key is the full registry: new families parse, and
+    /// unknown names error with the list (never a silent fallback).
+    #[test]
+    fn workload_key_spans_the_registry_and_files() {
+        for name in ["moe_decode", "resnet50", "gqa_decode", "serving_mix"] {
+            let c = ExperimentConfig::parse(&format!(
+                r#"{{"workload":"{name}","machine":"leaf+xnode"}}"#
+            ))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!c.workload.load().unwrap().cascade().ops.is_empty(), "{name}");
+        }
+        let err = ExperimentConfig::parse(r#"{"workload":"mamba","machine":"leaf+homo"}"#)
+            .unwrap_err();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("moe_decode"), "list missing: {err}");
+        // A .json value is a file source, deferred to load time.
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"cascades/mine.json","machine":"leaf+homo"}"#,
+        )
+        .unwrap();
+        match &c.workload {
+            WorkloadSource::File(p) => assert_eq!(p, "cascades/mine.json"),
+            other => panic!("expected a file source, got {other:?}"),
+        }
+    }
+
+    /// A relative workload file in a config resolves against the
+    /// config's directory and loads through the schema parser.
+    #[test]
+    fn relative_workload_file_resolves_against_config_dir() {
+        let dir = std::env::temp_dir().join("harp_config_workload_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let wl_path = dir.join("tiny.json");
+        std::fs::write(
+            &wl_path,
+            r#"{"name":"tiny","ops":[{"name":"g","kind":"gemm","phase":"encoder",
+                "m":8,"n":8,"k":8}]}"#,
+        )
+        .unwrap();
+        let cfg_path = dir.join("cfg.json");
+        std::fs::write(
+            &cfg_path,
+            r#"{"workload":"tiny.json","machine":"leaf+homo"}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::load(cfg_path.to_str().unwrap()).unwrap();
+        let wl = c.workload.load().unwrap();
+        assert_eq!(wl.name(), "tiny");
+        assert_eq!(wl.cascade().ops.len(), 1);
+        let _ = std::fs::remove_file(&wl_path);
+        let _ = std::fs::remove_file(&cfg_path);
     }
 }

@@ -26,15 +26,18 @@ use crate::util::benchkit::{Figure, Series};
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::util::threadpool::parallel_map;
-use crate::workload::transformer::{self, TransformerConfig};
+use crate::workload::einsum::Phase;
+use crate::workload::registry::{self, WorkloadSpec};
+use crate::workload::transformer;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// One evaluation point: (workload, machine class, DRAM bw bits,
-/// bandwidth-fraction override).
-pub type EvalPoint = (TransformerConfig, HarpClass, f64, Option<f64>);
+/// bandwidth-fraction override). Any registered family — or a cascade
+/// loaded from a `--workload FILE` document — is a valid point.
+pub type EvalPoint = (WorkloadSpec, HarpClass, f64, Option<f64>);
 
 /// Canonical fingerprint of one evaluation point — every knob that can
 /// change the result. The worker count is deliberately excluded:
@@ -137,21 +140,23 @@ impl Evaluator {
     }
 
     /// Evaluate (workload, class) at `dram_bw_bits`, memoised across
-    /// drivers, threads, and (with a spill file) processes.
+    /// drivers, threads, and (with a spill file) processes. Built-in
+    /// workloads key by name (so pre-registry disk spills stay valid);
+    /// file cascades key by name + content fingerprint.
     pub fn eval(
         &self,
-        wl: &TransformerConfig,
+        wl: &WorkloadSpec,
         class: &HarpClass,
         dram_bw_bits: f64,
         bw_frac_low: Option<f64>,
     ) -> Arc<CascadeStats> {
-        let key = eval_key(&wl.name, class, dram_bw_bits, bw_frac_low, &self.opts);
+        let key = eval_key(&wl.cache_key(), class, dram_bw_bits, bw_frac_low, &self.opts);
         let cell = {
             let mut map = self.cache.lock().unwrap();
             map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
         };
         cell.get_or_init(|| {
-            let cascade = transformer::cascade_for(wl);
+            let cascade = wl.cascade();
             let params = HardwareParams { dram_bw_bits, ..HardwareParams::default() };
             let mut opts = self.opts.clone();
             opts.bw_frac_low = bw_frac_low;
@@ -178,7 +183,7 @@ impl Evaluator {
 /// Cross-product of workloads × classes × bandwidths as warm-up points
 /// (the point list every grid-shaped driver feeds [`Evaluator::warm`]).
 fn cross_points(
-    wls: &[TransformerConfig],
+    wls: &[WorkloadSpec],
     classes: &[(char, HarpClass)],
     bws: &[f64],
 ) -> Vec<EvalPoint> {
@@ -254,35 +259,65 @@ pub fn table2_table3() -> String {
     format!("Table II (workloads)\n{}\nTable III (hardware)\n{}", t2.render(), t3.render())
 }
 
-/// Fig 6: speedup of every configuration vs leaf+homogeneous at both
-/// bandwidth sweep points, plus the BERT utilisation-over-time zoom.
-pub fn fig6_speedup(ev: &Evaluator) -> (Figure, Figure) {
+/// Speedup-vs-leaf+homogeneous figure over an arbitrary workload list —
+/// the Fig 6 shape, reusable for ANY registered family or file cascade.
+/// `fig6_speedup` feeds it the Table II grid; `fig6_style_speedup`
+/// drives a single workload through the same sweep.
+pub fn speedup_figure(
+    ev: &Evaluator,
+    title: &str,
+    ylabel: &str,
+    wls: &[WorkloadSpec],
+    bws: &[f64],
+) -> Figure {
     let classes = HarpClass::eval_points();
-    let wls = transformer::paper_workloads();
-    ev.warm(&cross_points(&wls, &classes, &[2048.0, 512.0]));
+    ev.warm(&cross_points(wls, &classes, bws));
 
-    let mut fig = Figure::new(
-        "Fig 6: speedup normalized to leaf+homogeneous",
-        "speedup (higher is better)",
-    );
-    for bw in [2048.0, 512.0] {
+    let mut fig = Figure::new(title, ylabel);
+    for &bw in bws {
         let mut s = Series::new(&format!("bw={bw} b/cyc"));
-        for wl in &wls {
+        for wl in wls {
             let base = ev.eval(wl, &classes[0].1, bw, None).latency_cycles;
             for (tag, class) in &classes {
                 let lat = ev.eval(wl, class, bw, None).latency_cycles;
-                s.push(&format!("{} ({tag}) {}", wl.name, class.id()), base / lat);
+                s.push(&format!("{} ({tag}) {}", wl.name(), class.id()), base / lat);
             }
         }
         fig.add(s);
     }
+    fig
+}
+
+/// Fig 6-style speedup sweep for ONE workload (any registered family or
+/// a loaded `--workload FILE` cascade) at both paper bandwidths.
+pub fn fig6_style_speedup(ev: &Evaluator, wl: &WorkloadSpec) -> Figure {
+    speedup_figure(
+        ev,
+        &format!("Fig 6-style speedup, {} (normalized to leaf+homogeneous)", wl.name()),
+        "speedup (higher is better)",
+        std::slice::from_ref(wl),
+        &[2048.0, 512.0],
+    )
+}
+
+/// Fig 6: speedup of every configuration vs leaf+homogeneous at both
+/// bandwidth sweep points, plus the BERT utilisation-over-time zoom.
+pub fn fig6_speedup(ev: &Evaluator) -> (Figure, Figure) {
+    let classes = HarpClass::eval_points();
+    let fig = speedup_figure(
+        ev,
+        "Fig 6: speedup normalized to leaf+homogeneous",
+        "speedup (higher is better)",
+        &registry::paper_specs(),
+        &[2048.0, 512.0],
+    );
 
     // Zoom: PE-weighted utilisation over time, BERT, homo vs cross-node.
     let mut zoom = Figure::new(
         "Fig 6 (zoom): BERT utilisation over time",
         "fraction of total PEs busy per time slice",
     );
-    let bert = transformer::bert_large();
+    let bert = WorkloadSpec::Transformer(transformer::bert_large());
     for (tag, class) in [&classes[0], &classes[1]] {
         let r = ev.eval(&bert, class, 2048.0, None);
         let mut s = Series::new(&format!("({tag}) {}", class.id()));
@@ -294,17 +329,52 @@ pub fn fig6_speedup(ev: &Evaluator) -> (Figure, Figure) {
     (fig, zoom)
 }
 
+/// Table II-style summary of every REGISTERED workload (the `harp
+/// workload list` body): registry name, display name, family, size,
+/// phase structure, and the arithmetic-intensity span that drives
+/// reuse classification.
+pub fn workload_table() -> String {
+    let mut t = Table::new(&[
+        "name", "workload", "family", "ops", "edges", "MACs", "phases", "AI min..max",
+    ]);
+    for (key, spec) in registry::all_builtins() {
+        let g = spec.cascade();
+        let phases: Vec<&str> = Phase::ALL
+            .iter()
+            .filter(|p| !g.ops_in_phase(**p).is_empty())
+            .map(|p| p.name())
+            .collect();
+        let lo = g
+            .ops
+            .iter()
+            .map(|o| o.arithmetic_intensity())
+            .fold(f64::INFINITY, f64::min);
+        let hi = g.ops.iter().map(|o| o.arithmetic_intensity()).fold(0.0f64, f64::max);
+        t.row(&[
+            key.to_string(),
+            g.name.clone(),
+            spec.family().to_string(),
+            g.ops.len().to_string(),
+            g.deps.len().to_string(),
+            format!("{:.3e}", g.total_macs() as f64),
+            phases.join("+"),
+            format!("{lo:.1}..{hi:.1}"),
+        ]);
+    }
+    t.render()
+}
+
 /// Fig 7: energy by memory hierarchy level for every configuration.
 pub fn fig7_energy(ev: &Evaluator) -> Vec<Figure> {
     use crate::arch::level::LevelKind;
     let classes = HarpClass::eval_points();
-    let wls = transformer::paper_workloads();
+    let wls = registry::paper_specs();
     ev.warm(&cross_points(&wls, &classes, &[2048.0]));
 
     let mut out = Vec::new();
     for wl in &wls {
         let mut fig = Figure::new(
-            &format!("Fig 7: energy breakdown, {} (µJ)", wl.name),
+            &format!("Fig 7: energy breakdown, {} (µJ)", wl.name()),
             "energy in µJ by level",
         );
         for (tag, class) in &classes {
@@ -327,7 +397,7 @@ pub fn fig7_energy(ev: &Evaluator) -> Vec<Figure> {
 /// Fig 8: multiplications per joule, normalised to leaf+homogeneous.
 pub fn fig8_mults_per_joule(ev: &Evaluator) -> Figure {
     let classes = HarpClass::eval_points();
-    let wls = transformer::paper_workloads();
+    let wls = registry::paper_specs();
     ev.warm(&cross_points(&wls, &classes, &[2048.0]));
 
     let mut fig = Figure::new(
@@ -339,7 +409,7 @@ pub fn fig8_mults_per_joule(ev: &Evaluator) -> Figure {
         for wl in &wls {
             let base = ev.eval(wl, &classes[0].1, 2048.0, None).mults_per_joule();
             let v = ev.eval(wl, class, 2048.0, None).mults_per_joule();
-            s.push(&wl.name, v / base);
+            s.push(wl.name(), v / base);
         }
         fig.add(s);
     }
@@ -359,12 +429,12 @@ pub fn fig9_subaccel_energy(ev: &Evaluator) -> Figure {
     // performance figures, and single-request decoding (batch = 1, the
     // regime where decode is pure streaming and the paper's "low-reuse
     // dominates on-chip energy" claim is most pronounced).
-    let mut workloads = transformer::paper_workloads();
+    let mut workloads = registry::paper_specs();
     for base in [transformer::llama2(), transformer::gpt3()] {
         let mut wl = base;
         wl.batch = 1;
         wl.name = format!("{} (b=1)", wl.name);
-        workloads.push(wl);
+        workloads.push(WorkloadSpec::Transformer(wl));
     }
     ev.warm(&cross_points(&workloads, &het_points, &[2048.0]));
 
@@ -374,7 +444,7 @@ pub fn fig9_subaccel_energy(ev: &Evaluator) -> Figure {
             let r = ev.eval(wl, class, 2048.0, None);
             for role in ["high-reuse", "low-reuse"] {
                 let e = r.buffer_energy_by_role.get(role).copied().unwrap_or(0.0);
-                s.push(&format!("{} {}", wl.name, role), e * 1e-6);
+                s.push(&format!("{} {}", wl.name(), role), e * 1e-6);
             }
         }
         fig.add(s);
@@ -391,8 +461,14 @@ pub fn fig10_bw_partition(ev: &Evaluator) -> Figure {
     );
     let xnode = HarpClass::eval_points()[1].1.clone();
     let homo = HarpClass::eval_points()[0].1.clone();
+    let decoders = || {
+        [
+            WorkloadSpec::Transformer(transformer::llama2()),
+            WorkloadSpec::Transformer(transformer::gpt3()),
+        ]
+    };
     let mut points: Vec<EvalPoint> = Vec::new();
-    for wl in [transformer::llama2(), transformer::gpt3()] {
+    for wl in decoders() {
         points.push((wl.clone(), homo.clone(), 2048.0, None));
         points.push((wl.clone(), xnode.clone(), 2048.0, Some(0.75)));
         points.push((wl, xnode.clone(), 2048.0, Some(0.5)));
@@ -401,10 +477,10 @@ pub fn fig10_bw_partition(ev: &Evaluator) -> Figure {
 
     for (label, frac) in [("75% to low-reuse", Some(0.75)), ("50/50 naive", Some(0.5))] {
         let mut s = Series::new(label);
-        for wl in [transformer::llama2(), transformer::gpt3()] {
+        for wl in decoders() {
             let base = ev.eval(&wl, &homo, 2048.0, None).latency_cycles;
             let lat = ev.eval(&wl, &xnode, 2048.0, frac).latency_cycles;
-            s.push(&wl.name, base / lat);
+            s.push(wl.name(), base / lat);
         }
         fig.add(s);
     }
@@ -432,6 +508,18 @@ mod tests {
     }
 
     #[test]
+    fn workload_table_lists_every_registered_name() {
+        let t = workload_table();
+        for name in registry::names() {
+            assert!(t.contains(name), "missing {name}:\n{t}");
+        }
+        // Display names and families render alongside the registry keys.
+        for s in ["MoE-decode", "conv-im2col", "serving-mix", "prefill+decode"] {
+            assert!(t.contains(s), "missing {s}:\n{t}");
+        }
+    }
+
+    #[test]
     fn fig1_has_tipping_structure() {
         let fig = fig1_roofline();
         assert_eq!(fig.series.len(), 3); // unified + high + low
@@ -444,7 +532,7 @@ mod tests {
     #[test]
     fn evaluator_caches_by_point() {
         let ev = Evaluator::new(EvalOptions { samples: 10, ..EvalOptions::default() });
-        let wl = transformer::bert_large();
+        let wl = WorkloadSpec::Transformer(transformer::bert_large());
         let class = HarpClass::eval_points()[0].1.clone();
         assert!(ev.is_empty());
         let a = ev.eval(&wl, &class, 2048.0, None);
@@ -485,7 +573,7 @@ mod tests {
         let _ = std::fs::remove_file(&path);
 
         let opts = EvalOptions { samples: 10, ..EvalOptions::default() };
-        let wl = transformer::bert_large();
+        let wl = WorkloadSpec::Transformer(transformer::bert_large());
         let class = HarpClass::eval_points()[0].1.clone();
 
         let ev = Evaluator::with_cache_file(opts.clone(), &path);

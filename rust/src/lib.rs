@@ -16,7 +16,10 @@
 //!   and a thread pool with a shared global budget so nested fan-out
 //!   never oversubscribes; `HARP_THREADS` / `--threads` size it).
 //! - [`workload`] — einsum operations, arithmetic intensity, cascade
-//!   dependency graphs, transformer generators (paper Table II).
+//!   dependency graphs, the transformer generators (paper Table II)
+//!   plus the mixed-reuse families (MoE, im2col CNN, GQA long-context
+//!   decode, serving mix), the JSON cascade schema (`--workload FILE`),
+//!   and the registry that fronts them all.
 //! - [`arch`] — the machine memory tree (storage nodes with
 //!   sub-accelerators attached at any depth), flattened per-unit specs,
 //!   the HARP taxonomy itself with structural classification, the

@@ -4,6 +4,7 @@
 //! - `taxonomy`                       print Table I (prior works classified)
 //! - `classify <name>`                classify one prior work
 //! - `topology <class|list> | --file F`  print/derive a machine memory tree
+//! - `workload <name|list> | --file F`   print/validate a workload cascade
 //! - `eval …`                         evaluate one (workload, machine) point
 //! - `figures …`                      regenerate every paper figure
 //! - `roofline`                       print the Fig 1 roofline split
@@ -23,7 +24,7 @@ use harp::util::cli::{ArgSpec, Args};
 use harp::util::json::Json;
 use harp::util::table::Table;
 use harp::util::threadpool;
-use harp::workload::transformer;
+use harp::workload::registry::{self, WorkloadSource};
 use std::path::Path;
 use std::process::ExitCode;
 
@@ -38,6 +39,7 @@ fn main() -> ExitCode {
         "taxonomy" => cmd_taxonomy(),
         "classify" => cmd_classify(rest),
         "topology" => cmd_topology(rest),
+        "workload" => cmd_workload(rest),
         "eval" => cmd_eval(rest),
         "figures" => cmd_figures(rest),
         "roofline" => cmd_roofline(),
@@ -68,8 +70,11 @@ fn usage() -> String {
        classify <name>          classify a prior work (e.g. 'neupim')\n\
        topology <class|list>    print the generated memory tree for a taxonomy point\n\
                                 (or --file F to classify a machine-tree JSON)\n\
-       eval [--config F | --workload W (--machine M | --topology F)] [--bw BITS]\n\
+       workload <name|list>     print a registered workload cascade\n\
+                                (or --file F to validate + print a cascade JSON)\n\
+       eval [--config F | --workload W|FILE (--machine M | --topology F)] [--bw BITS]\n\
                                 [--samples N] [--threads N] [--contention off|on]\n\
+                                (--model NAME is the explicit built-in form of --workload)\n\
        figures [--samples N] [--threads N] [--cache FILE]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
        roofline                 print the Fig 1 roofline partitioning\n\
@@ -159,6 +164,48 @@ fn cmd_topology(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_workload(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "harp workload",
+        "print a registered workload cascade, or validate + print a cascade JSON file",
+    )
+    .pos("name", false, "registered workload name (or 'list' for every built-in)")
+    .opt("file", None, "cascade JSON file to load instead of a registered name")
+    .flag("json", "emit the workload JSON schema instead of the description");
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+
+    let wl = if let Some(path) = args.get("file") {
+        if args.positional(0).is_some() {
+            return Err("give a workload name or --file FILE, not both".into());
+        }
+        registry::load_file(path)?
+    } else {
+        let name = args
+            .positional(0)
+            .ok_or("need a workload name or --file FILE (try 'harp workload list')")?;
+        if name == "list" {
+            println!("registered workloads (pass the name to eval/sweep --workload):");
+            println!("{}", figures::workload_table());
+            println!(
+                "or load a cascade file: harp workload --file examples/workloads/moe_decode.json"
+            );
+            return Ok(());
+        }
+        registry::by_name(name).ok_or_else(|| {
+            format!(
+                "unknown workload '{name}' (try 'harp workload list', or --file for a \
+                 cascade JSON)"
+            )
+        })?
+    };
+    if args.has_flag("json") {
+        println!("{}", wl.to_json().to_string_pretty());
+    } else {
+        println!("{}", wl.cascade().describe());
+    }
+    Ok(())
+}
+
 /// Parse an optional `--threads N`, apply it to the global pool budget,
 /// and return it (so per-eval options can pick it up too).
 fn apply_threads(args: &Args) -> Result<Option<usize>, String> {
@@ -173,7 +220,17 @@ fn apply_threads(args: &Args) -> Result<Option<usize>, String> {
 fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> {
     let spec = ArgSpec::new("harp eval", "evaluate one (workload, machine) point")
         .opt("config", None, "JSON experiment config path")
-        .opt("workload", None, "bert | llama2 | gpt3")
+        .opt(
+            "workload",
+            None,
+            "registered workload name (see 'harp workload list') or a cascade .json file",
+        )
+        .opt(
+            "model",
+            None,
+            "registered workload name only — the explicit built-in form of --workload \
+             (giving both is an error)",
+        )
         .opt(
             "machine",
             Some("leaf+homo"),
@@ -210,15 +267,35 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
                     .into(),
             );
         }
+        // Same for the workload selectors: the config's "workload" key
+        // wins, so a CLI selector alongside it must error loudly.
+        for flag in ["--workload", "--model"] {
+            if argv.iter().any(|a| a == flag || a.starts_with(&format!("{flag}="))) {
+                return Err(format!(
+                    "--config supplies the workload; set \"workload\" in the config \
+                     file instead of passing {flag}"
+                ));
+            }
+        }
         let mut cfg = ExperimentConfig::load(path)?;
         if let Some(n) = threads {
             cfg.opts.threads = n;
         }
         return Ok((cfg, json));
     }
-    let wl_name = args.get("workload").ok_or("need --workload or --config")?;
-    let workload =
-        transformer::by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
+    let workload = match (args.get("workload"), args.get("model")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "give --workload OR --model, not both: they both select the workload \
+                 (--model is the explicit built-in form; --workload also accepts a \
+                 cascade .json file)"
+                    .into(),
+            )
+        }
+        (Some(w), None) => registry::resolve(w)?,
+        (None, Some(m)) => registry::resolve_builtin(m)?,
+        (None, None) => return Err("need --workload (or --model / --config)".into()),
+    };
     let topology = args.get("topology").map(String::from);
     if topology.is_some() {
         // The tree fixes the machine and its hardware; refuse knobs that
@@ -260,12 +337,21 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
     if args.get("bw-frac-low").is_some() {
         opts.bw_frac_low = Some(args.get_f64("bw-frac-low").map_err(|e| e.to_string())?);
     }
-    Ok((ExperimentConfig { workload, class, params, opts, topology }, json))
+    Ok((
+        ExperimentConfig {
+            workload: WorkloadSource::Spec(workload),
+            class,
+            params,
+            opts,
+            topology,
+        },
+        json,
+    ))
 }
 
 fn cmd_eval(argv: &[String]) -> Result<(), String> {
     let (cfg, json) = parse_eval_opts(argv)?;
-    let cascade = transformer::cascade_for(&cfg.workload);
+    let cascade = cfg.workload.load()?.cascade();
     let machine = cfg.build_machine(&cascade)?;
     let r = evaluate_cascade_on_machine(&machine, &cascade, &cfg.opts)?;
     if json {
@@ -347,15 +433,17 @@ fn cmd_roofline() -> Result<(), String> {
 
 fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("harp sweep", "bandwidth × machine sweep")
-        .opt("workload", Some("gpt3"), "bert | llama2 | gpt3")
+        .opt(
+            "workload",
+            Some("gpt3"),
+            "registered workload name (see 'harp workload list') or a cascade .json file",
+        )
         .opt("samples", Some("200"), "mapper samples per unique shape")
         .opt("threads", None, "worker threads (default: HARP_THREADS or core count)")
         .opt("contention", Some("off"), "shared-node contention model (off | on)");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
-    let wl_name = args.get("workload").unwrap();
-    let wl =
-        transformer::by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
-    let cascade = transformer::cascade_for(&wl);
+    let wl = registry::resolve(args.get("workload").unwrap())?;
+    let cascade = wl.cascade();
     let mut opts = EvalOptions {
         samples: args.get_usize("samples").map_err(|e| e.to_string())?,
         ..EvalOptions::default()
@@ -380,7 +468,7 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
             ]);
         }
     }
-    println!("workload: {}", wl.name);
+    println!("workload: {}", wl.name());
     println!("{}", t.render());
     Ok(())
 }

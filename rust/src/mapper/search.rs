@@ -417,6 +417,32 @@ pub fn shape_fingerprint(op: &TensorOp) -> u64 {
     h
 }
 
+/// Deterministic fingerprint of a whole cascade: every op's shape,
+/// kind, phase, repeat count, and name, plus the dependency edges.
+/// Unlike [`shape_fingerprint`] (deliberately name/phase-agnostic —
+/// mappings depend only on shape), this distinguishes everything that
+/// can change an *evaluation*: it keys file-loaded workloads in the
+/// cross-run evaluation cache, where a document's `name` alone could
+/// collide across different contents.
+pub fn cascade_fingerprint(c: &crate::workload::cascade::Cascade) -> u64 {
+    const P: u64 = 0x100000001b3;
+    let mut h = 0xcbf29ce484222325u64;
+    let mix = |h: u64, v: u64| -> u64 { (h ^ v).wrapping_mul(P) };
+    for op in &c.ops {
+        h = mix(h, shape_fingerprint(op));
+        h = mix(h, op.count);
+        h = mix(h, op.phase as u64);
+        h = mix(h, op.name.len() as u64);
+        for b in op.name.bytes() {
+            h = mix(h, b as u64);
+        }
+    }
+    for &(p, s) in &c.deps {
+        h = mix(h, ((p as u64) << 32) ^ s as u64);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -591,5 +617,37 @@ mod tests {
         assert_ne!(shape_fingerprint(&a), shape_fingerprint(&b));
         let c = TensorOp::gemm("c", Phase::Decode, 10, 20, 30);
         assert_eq!(shape_fingerprint(&a), shape_fingerprint(&c)); // name/phase-agnostic
+    }
+
+    /// The cascade fingerprint distinguishes everything an evaluation
+    /// can see: shapes, phases, repeat counts, names, and edges.
+    #[test]
+    fn cascade_fingerprint_distinguishes_evaluation_inputs() {
+        use crate::workload::cascade::Cascade;
+        let base = || {
+            let mut g = Cascade::new("w");
+            let a = g.push(TensorOp::gemm("a", Phase::Encoder, 8, 8, 8));
+            let b = g.push(TensorOp::gemm("b", Phase::Encoder, 8, 8, 8));
+            g.dep(a, b);
+            g
+        };
+        let h0 = cascade_fingerprint(&base());
+        assert_eq!(h0, cascade_fingerprint(&base()), "deterministic");
+
+        let mut shape = base();
+        shape.ops[1].n = 16;
+        assert_ne!(h0, cascade_fingerprint(&shape));
+        let mut phase = base();
+        phase.ops[1].phase = Phase::Decode;
+        assert_ne!(h0, cascade_fingerprint(&phase));
+        let mut count = base();
+        count.ops[1].count = 4;
+        assert_ne!(h0, cascade_fingerprint(&count));
+        let mut name = base();
+        name.ops[1].name = "c".into();
+        assert_ne!(h0, cascade_fingerprint(&name));
+        let mut edges = base();
+        edges.deps.clear();
+        assert_ne!(h0, cascade_fingerprint(&edges));
     }
 }

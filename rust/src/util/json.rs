@@ -571,4 +571,28 @@ mod tests {
             }
         }
     }
+
+    /// Workload documents survive parse → serialize → parse for EVERY
+    /// registered built-in — the serializer and the cascade parser
+    /// agree on one schema, byte for byte (the workload-side mirror of
+    /// the machine-tree property above).
+    #[test]
+    fn workload_documents_round_trip_for_every_builtin() {
+        use crate::workload::registry;
+        use crate::workload::Cascade;
+
+        for (key, spec) in registry::all_builtins() {
+            let text = spec.to_json().to_string_pretty();
+            let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{key}: {e}"));
+            let back =
+                Cascade::from_json(&parsed).unwrap_or_else(|e| panic!("{key}: {e}"));
+            // Serializing the re-parsed cascade reproduces the document
+            // byte-for-byte, and the structure is preserved exactly.
+            assert_eq!(back.to_json().to_string_pretty(), text, "{key}");
+            let direct = spec.cascade();
+            assert_eq!(back.name, direct.name, "{key}");
+            assert_eq!(back.deps, direct.deps, "{key}");
+            assert_eq!(back.total_macs(), direct.total_macs(), "{key}");
+        }
+    }
 }

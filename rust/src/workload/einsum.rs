@@ -24,6 +24,17 @@ pub enum Dim {
 impl Dim {
     pub const ALL: [Dim; 4] = [Dim::B, Dim::M, Dim::N, Dim::K];
 
+    /// Parse a dimension letter (the inverse of [`Dim::name`]).
+    pub fn parse(s: &str) -> Result<Dim, String> {
+        match s {
+            "B" => Ok(Dim::B),
+            "M" => Ok(Dim::M),
+            "N" => Ok(Dim::N),
+            "K" => Ok(Dim::K),
+            other => Err(format!("unknown dim '{other}' (B|M|N|K)")),
+        }
+    }
+
     pub fn index(self) -> usize {
         match self {
             Dim::B => 0,
@@ -72,6 +83,27 @@ pub enum OpKind {
     Vector,
 }
 
+impl OpKind {
+    /// Canonical schema name (what the workload JSON emits).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Gemm => "gemm",
+            OpKind::Bmm => "bmm",
+            OpKind::Vector => "vector",
+        }
+    }
+
+    /// Parse a schema name (the inverse of [`OpKind::name`]).
+    pub fn parse(s: &str) -> Result<OpKind, String> {
+        match s {
+            "gemm" => Ok(OpKind::Gemm),
+            "bmm" => Ok(OpKind::Bmm),
+            "vector" => Ok(OpKind::Vector),
+            other => Err(format!("unknown op kind '{other}' (gemm|bmm|vector)")),
+        }
+    }
+}
+
 /// Which phase of the workload the operation belongs to. Used by the
 /// inter-cascade partitioner (prefill → high-reuse sub-accelerator,
 /// decode → low-reuse) and by the figure drivers.
@@ -90,6 +122,16 @@ impl Phase {
             Phase::Encoder => "encoder",
             Phase::Prefill => "prefill",
             Phase::Decode => "decode",
+        }
+    }
+
+    /// Parse a schema name (the inverse of [`Phase::name`]).
+    pub fn parse(s: &str) -> Result<Phase, String> {
+        match s {
+            "encoder" => Ok(Phase::Encoder),
+            "prefill" => Ok(Phase::Prefill),
+            "decode" => Ok(Phase::Decode),
+            other => Err(format!("unknown phase '{other}' (encoder|prefill|decode)")),
         }
     }
 }
@@ -111,19 +153,57 @@ pub struct TensorOp {
 }
 
 impl TensorOp {
+    /// The single validated constructor every operation goes through:
+    /// the `gemm`/`bmm`/`vector` builders below AND the workload JSON
+    /// loader ([`crate::workload::schema`]) both call it, so the
+    /// built-in generators and `--workload` files can never drift on
+    /// what a legal op is. Rejects zero dims, a zero repeat count, and
+    /// vector ops with `k != 1`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        kind: OpKind,
+        phase: Phase,
+        b: u64,
+        m: u64,
+        n: u64,
+        k: u64,
+        count: u64,
+    ) -> Result<TensorOp, String> {
+        if name.is_empty() {
+            return Err("op needs a non-empty name".into());
+        }
+        for (dim, v) in [("b", b), ("m", m), ("n", n), ("k", k), ("repeat", count)] {
+            if v == 0 {
+                return Err(format!("op '{name}': '{dim}' must be a positive integer"));
+            }
+        }
+        if kind == OpKind::Vector && k != 1 {
+            return Err(format!("op '{name}': vector ops are k = 1 einsums (got k = {k})"));
+        }
+        Ok(TensorOp { name: name.into(), kind, phase, b, m, n, k, count })
+    }
+
     pub fn gemm(name: &str, phase: Phase, m: u64, k: u64, n: u64) -> TensorOp {
-        TensorOp { name: name.into(), kind: OpKind::Gemm, phase, b: 1, m, n, k, count: 1 }
+        TensorOp::new(name, OpKind::Gemm, phase, 1, m, n, k, 1)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn bmm(name: &str, phase: Phase, b: u64, m: u64, k: u64, n: u64) -> TensorOp {
-        TensorOp { name: name.into(), kind: OpKind::Bmm, phase, b, m, n, k, count: 1 }
+        TensorOp::new(name, OpKind::Bmm, phase, b, m, n, k, 1)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn vector(name: &str, phase: Phase, b: u64, m: u64, n: u64) -> TensorOp {
-        TensorOp { name: name.into(), kind: OpKind::Vector, phase, b, m, n, k: 1, count: 1 }
+        TensorOp::new(name, OpKind::Vector, phase, b, m, n, 1, 1)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Set the repeat count. Panics on 0, like the builders above — the
+    /// schema rejects `repeat: 0`, so a zero here would create an op
+    /// whose serialized form cannot re-parse.
     pub fn repeated(mut self, count: u64) -> TensorOp {
+        assert!(count > 0, "op '{}': 'repeat' must be a positive integer", self.name);
         self.count = count;
         self
     }
@@ -250,5 +330,38 @@ mod tests {
     fn repetition_scales_macs() {
         let op = TensorOp::gemm("d", Phase::Decode, 1, 64, 64).repeated(1000);
         assert_eq!(op.total_macs(), 1000 * 64 * 64);
+    }
+
+    /// The schema-backed constructor rejects degenerate ops with a
+    /// distinct message per failure — the loader's validation lives
+    /// HERE, so builders and JSON files share one notion of legality.
+    #[test]
+    fn validated_constructor_rejects_degenerate_ops() {
+        let ok = TensorOp::new("g", OpKind::Gemm, Phase::Encoder, 1, 4, 4, 4, 2).unwrap();
+        assert_eq!((ok.b, ok.m, ok.n, ok.k, ok.count), (1, 4, 4, 4, 2));
+        let err = TensorOp::new("g", OpKind::Gemm, Phase::Encoder, 1, 0, 4, 4, 1).unwrap_err();
+        assert!(err.contains("'m' must be a positive integer"), "{err}");
+        let err = TensorOp::new("g", OpKind::Bmm, Phase::Encoder, 1, 4, 4, 4, 0).unwrap_err();
+        assert!(err.contains("'repeat' must be a positive integer"), "{err}");
+        let err = TensorOp::new("v", OpKind::Vector, Phase::Encoder, 1, 4, 4, 7, 1).unwrap_err();
+        assert!(err.contains("vector ops are k = 1"), "{err}");
+        let err = TensorOp::new("", OpKind::Gemm, Phase::Encoder, 1, 4, 4, 4, 1).unwrap_err();
+        assert!(err.contains("non-empty name"), "{err}");
+    }
+
+    #[test]
+    fn kind_phase_dim_names_round_trip() {
+        for kind in [OpKind::Gemm, OpKind::Bmm, OpKind::Vector] {
+            assert_eq!(OpKind::parse(kind.name()).unwrap(), kind);
+        }
+        for phase in Phase::ALL {
+            assert_eq!(Phase::parse(phase.name()).unwrap(), phase);
+        }
+        for dim in Dim::ALL {
+            assert_eq!(Dim::parse(dim.name()).unwrap(), dim);
+        }
+        assert!(OpKind::parse("conv").is_err());
+        assert!(Phase::parse("warmup").is_err());
+        assert!(Dim::parse("Q").is_err());
     }
 }

@@ -1,0 +1,477 @@
+//! Mixed-reuse workload families beyond the paper's Table II
+//! transformers — the varied multi-DNN workload set that Herald- and
+//! MOSAIC-style heterogeneity studies need:
+//!
+//! - **MoE decode/prefill** — per-expert FFN GEMMs (each expert owns
+//!   its weights, so weight reuse drops by the expert count) gated by a
+//!   deliberately low-intensity router GEMM.
+//! - **CNN via im2col** — a ResNet-ish layer stack lowered to
+//!   `B×M×N×K` GEMMs ([`conv_gemm`]), whose arithmetic intensity spans
+//!   both sides of the paper's tipping point within ONE cascade.
+//! - **GQA long-context decode** — decode-only serving of a
+//!   grouped-query model against a long KV cache: pure streaming.
+//! - **Serving mix** — prefill and decode request pools interleaved at
+//!   a configurable batch ratio (continuous batching), the operating
+//!   point inter-cascade partitioning exists for.
+//!
+//! Every generator emits plain [`Cascade`]s through the same
+//! [`TensorOp`] constructor path as the JSON loader
+//! (`workload::schema`), so each family is a serializable definition:
+//! `spec.to_json()` re-parses and evaluates bit-identically (the
+//! differential workload suite asserts this).
+
+use super::cascade::Cascade;
+use super::einsum::{Phase, TensorOp};
+use super::transformer::{
+    attention_layer, chain_decode_chunks, decode_chunk_loop, TransformerConfig,
+};
+
+// ---- Mixture of Experts ----------------------------------------------------
+
+/// MoE model hyper-parameters (Mixtral-8x7B-shaped defaults).
+#[derive(Debug, Clone)]
+pub struct MoeConfig {
+    pub name: String,
+    pub d_model: u64,
+    /// Per-expert FFN inner dimension.
+    pub d_ff: u64,
+    /// Total experts (each owns its FFN weights).
+    pub experts: u64,
+    /// Active experts per token.
+    pub top_k: u64,
+    pub heads: u64,
+    pub kv_heads: u64,
+    /// Prefill length; for decode-only configs this is the already-
+    /// prefilled context the KV cache starts at.
+    pub seq: u64,
+    /// Generated tokens; 0 ⇒ prefill-only cascade.
+    pub decode_tokens: u64,
+    pub decode_chunks: u64,
+    pub batch: u64,
+}
+
+/// MoE prefill (one layer at full sequence length).
+pub fn moe_prefill() -> MoeConfig {
+    MoeConfig {
+        name: "MoE-prefill".into(),
+        d_model: 4096,
+        d_ff: 14336,
+        experts: 8,
+        top_k: 2,
+        heads: 32,
+        kv_heads: 8,
+        seq: 2048,
+        decode_tokens: 0,
+        decode_chunks: 0,
+        batch: 8,
+    }
+}
+
+/// MoE decode (chunk-compressed token loop over a prefilled context).
+pub fn moe_decode() -> MoeConfig {
+    MoeConfig {
+        name: "MoE-decode".into(),
+        decode_tokens: 512,
+        decode_chunks: 4,
+        batch: 64,
+        ..moe_prefill()
+    }
+}
+
+/// One MoE layer: attention (GQA) → router → per-expert FFN.
+///
+/// Returns the indices of the layer's first and final ops.
+fn moe_layer(
+    g: &mut Cascade,
+    cfg: &MoeConfig,
+    phase: Phase,
+    seq: u64,
+    kv_len: u64,
+    suffix: &str,
+    count: u64,
+) -> (usize, usize) {
+    assert!(cfg.top_k >= 1 && cfg.top_k <= cfg.experts, "top_k out of range");
+    assert!(cfg.heads % cfg.kv_heads == 0 && cfg.d_model % cfg.heads == 0);
+    let d = cfg.d_model;
+    let dh = d / cfg.heads;
+    let nm = |base: &str| format!("{base}{suffix}");
+    let rows = seq * cfg.batch;
+    let bmm_b = cfg.kv_heads * cfg.batch;
+    let bmm_m = seq * (cfg.heads / cfg.kv_heads);
+
+    let q = g.push(TensorOp::gemm(&nm("q_gen"), phase, rows, d, d).repeated(count));
+    let k = g.push(TensorOp::gemm(&nm("k_gen"), phase, rows, d, d).repeated(count));
+    let v = g.push(TensorOp::gemm(&nm("v_gen"), phase, rows, d, d).repeated(count));
+    let logit =
+        g.push(TensorOp::bmm(&nm("logit"), phase, bmm_b, bmm_m, dh, kv_len).repeated(count));
+    let softmax =
+        g.push(TensorOp::vector(&nm("softmax"), phase, bmm_b, bmm_m, kv_len).repeated(count));
+    let attend =
+        g.push(TensorOp::bmm(&nm("attend"), phase, bmm_b, bmm_m, kv_len, dh).repeated(count));
+    let deproj = g.push(TensorOp::gemm(&nm("deproj"), phase, rows, d, d).repeated(count));
+    // Router: every token scored against `experts` gates. N = experts
+    // keeps the output tiny relative to the streamed activations — the
+    // low-intensity gate this family exists to exercise.
+    let router =
+        g.push(TensorOp::gemm(&nm("router"), phase, rows, d, cfg.experts).repeated(count));
+    // Experts: each expert owns its FFN weights, so the per-expert GEMM
+    // batch carries the weight operand (a BMM with b = experts); the
+    // routed token set (top_k · rows) is balanced across experts.
+    let routed = (rows * cfg.top_k / cfg.experts).max(1);
+    let up = g.push(
+        TensorOp::bmm(&nm("expert_up"), phase, cfg.experts, routed, d, cfg.d_ff).repeated(count),
+    );
+    let down = g.push(
+        TensorOp::bmm(&nm("expert_down"), phase, cfg.experts, routed, cfg.d_ff, d)
+            .repeated(count),
+    );
+
+    g.dep(q, logit);
+    g.dep(k, logit);
+    g.dep(logit, softmax);
+    g.dep(softmax, attend);
+    g.dep(v, attend);
+    g.dep(attend, deproj);
+    g.dep(deproj, router);
+    // Routing decides which expert sees which token.
+    g.dep(router, up);
+    g.dep(up, down);
+    (q, down)
+}
+
+/// The cascade for an MoE config: prefill layer, or the chunk-compressed
+/// decode loop — the SAME compression policy as the Table II decoders,
+/// via `transformer::chain_decode_chunks` (moe_layer emits q/k/v first,
+/// satisfying the chaining contract).
+pub fn moe_cascade(cfg: &MoeConfig) -> Cascade {
+    let mut g = Cascade::new(&cfg.name);
+    if cfg.decode_tokens == 0 {
+        moe_layer(&mut g, cfg, Phase::Prefill, cfg.seq, cfg.seq, "", 1);
+    } else {
+        chain_decode_chunks(
+            &mut g,
+            cfg.seq,
+            cfg.decode_tokens,
+            cfg.decode_chunks,
+            |g, kv_mid, suffix, count| {
+                moe_layer(g, cfg, Phase::Decode, 1, kv_mid, suffix, count)
+            },
+        );
+    }
+    g.validate().expect("moe cascade is a DAG");
+    g
+}
+
+// ---- CNN via im2col --------------------------------------------------------
+
+/// One convolution layer described by its output spatial extent.
+#[derive(Debug, Clone)]
+pub struct ConvLayerDef {
+    pub name: &'static str,
+    pub c_in: u64,
+    pub h_out: u64,
+    pub w_out: u64,
+    pub kh: u64,
+    pub kw: u64,
+    pub c_out: u64,
+    /// Back-to-back repetitions (a stage of identical residual blocks).
+    pub repeat: u64,
+}
+
+/// A CNN lowered to a chain of im2col GEMMs.
+#[derive(Debug, Clone)]
+pub struct ConvNetConfig {
+    pub name: String,
+    /// Images per inference batch.
+    pub batch: u64,
+    pub layers: Vec<ConvLayerDef>,
+}
+
+/// im2col lowering: a `K_h×K_w` convolution over `C_in` channels
+/// producing `C_out×H_out×W_out` becomes a GEMM with
+/// `M = B·H_out·W_out` (output pixels), `K = C_in·K_h·K_w` (unrolled
+/// input patch), `N = C_out` (filters).
+pub fn conv_gemm(name: &str, phase: Phase, batch: u64, l: &ConvLayerDef) -> TensorOp {
+    TensorOp::gemm(name, phase, batch * l.h_out * l.w_out, l.c_in * l.kh * l.kw, l.c_out)
+}
+
+/// ResNet-50-shaped representative stack at 224×224 input: the stem
+/// convolution and one bottleneck's worth of convs per stage (with the
+/// stage's block count as the repeat), then global-average-pool and the
+/// classifier GEMM. Early wide-spatial layers sit BELOW the paper's
+/// tipping point, late channel-heavy layers far above — mixed reuse in
+/// one encoder cascade.
+pub fn resnet50() -> ConvNetConfig {
+    ConvNetConfig {
+        name: "ResNet50-im2col".into(),
+        batch: 8,
+        layers: vec![
+            ConvLayerDef { name: "conv1", c_in: 3, h_out: 112, w_out: 112, kh: 7, kw: 7, c_out: 64, repeat: 1 },
+            ConvLayerDef { name: "res2_reduce", c_in: 256, h_out: 56, w_out: 56, kh: 1, kw: 1, c_out: 64, repeat: 3 },
+            ConvLayerDef { name: "res2_conv", c_in: 64, h_out: 56, w_out: 56, kh: 3, kw: 3, c_out: 64, repeat: 3 },
+            ConvLayerDef { name: "res2_expand", c_in: 64, h_out: 56, w_out: 56, kh: 1, kw: 1, c_out: 256, repeat: 3 },
+            ConvLayerDef { name: "res3_conv", c_in: 128, h_out: 28, w_out: 28, kh: 3, kw: 3, c_out: 128, repeat: 4 },
+            ConvLayerDef { name: "res4_conv", c_in: 256, h_out: 14, w_out: 14, kh: 3, kw: 3, c_out: 256, repeat: 6 },
+            ConvLayerDef { name: "res5_conv", c_in: 512, h_out: 7, w_out: 7, kh: 3, kw: 3, c_out: 512, repeat: 3 },
+        ],
+    }
+}
+
+/// The cascade for a conv net: the layer chain, then
+/// global-average-pool (vector) and the classifier GEMM.
+pub fn conv_cascade(cfg: &ConvNetConfig) -> Cascade {
+    let mut g = Cascade::new(&cfg.name);
+    let mut prev: Option<usize> = None;
+    for l in &cfg.layers {
+        let id = g.push(conv_gemm(l.name, Phase::Encoder, cfg.batch, l).repeated(l.repeat));
+        if let Some(p) = prev {
+            g.dep(p, id);
+        }
+        prev = Some(id);
+    }
+    let last = cfg.layers.last().expect("conv net has layers");
+    let feat = last.c_out * 4; // bottleneck expansion ×4
+    let pool = g.push(TensorOp::vector("gap", Phase::Encoder, 1, cfg.batch, feat));
+    let fc = g.push(TensorOp::gemm("fc", Phase::Encoder, cfg.batch, feat, 1000));
+    if let Some(p) = prev {
+        g.dep(p, pool);
+    }
+    g.dep(pool, fc);
+    g.validate().expect("conv cascade is a DAG");
+    g
+}
+
+// ---- GQA long-context decode ----------------------------------------------
+
+/// Grouped-query attention, decode-only, long context (Llama-2-70B-ish
+/// shapes serving a 32k-token prompt): every op streams KV cache or
+/// weights, the regime where the low-reuse sub-accelerator earns its
+/// bandwidth share.
+pub fn gqa_long_decode() -> TransformerConfig {
+    TransformerConfig {
+        name: "GQA-long-decode".into(),
+        d_model: 8192,
+        heads: 64,
+        kv_heads: 8,
+        d_ff: 28672,
+        // `seq` is the prefilled context the KV cache starts at — the
+        // cascade itself contains no prefill ops.
+        seq: 32768,
+        decode_tokens: 256,
+        decode_chunks: 4,
+        batch: 16,
+    }
+}
+
+/// Decode-only cascade: the chunk-compressed token loop with the KV
+/// cache starting at `cfg.seq`, no prefill sub-cascade.
+pub fn gqa_decode_cascade(cfg: &TransformerConfig) -> Cascade {
+    assert!(cfg.decode_tokens > 0, "gqa decode cascade requires decode_tokens");
+    let mut g = Cascade::new(&cfg.name);
+    decode_chunk_loop(&mut g, cfg);
+    g.validate().expect("gqa decode cascade is a DAG");
+    g
+}
+
+// ---- Serving mix -----------------------------------------------------------
+
+/// Continuous-batching operating point: a pool of requests in prefill
+/// and a pool in decode move through the machine together, at a given
+/// ratio of the serving batch.
+#[derive(Debug, Clone)]
+pub struct ServingMixConfig {
+    pub name: String,
+    /// The transformer whose requests are being served.
+    pub base: TransformerConfig,
+    pub prefill_requests: u64,
+    pub decode_requests: u64,
+}
+
+/// Default mix: Llama-2 serving with 8 requests in prefill and 56 in
+/// decode (the steady state of a 64-slot batch when outputs are ~7×
+/// longer than the prefill residency).
+pub fn serving_mix() -> ServingMixConfig {
+    ServingMixConfig {
+        name: "ServingMix-llama2-8p56d".into(),
+        base: super::transformer::llama2(),
+        prefill_requests: 8,
+        decode_requests: 56,
+    }
+}
+
+/// Interleave a prefill cascade and a decode cascade at the configured
+/// batch ratio. No cross-edges — the pools are independent request
+/// sets, decoupled at batch granularity (the inter-cascade premise).
+pub fn serving_mix_cascade(cfg: &ServingMixConfig) -> Cascade {
+    assert!(cfg.prefill_requests > 0 && cfg.decode_requests > 0, "both pools must be non-empty");
+    let mut g = Cascade::new(&cfg.name);
+    let mut pre = cfg.base.clone();
+    pre.batch = cfg.prefill_requests;
+    attention_layer(&mut g, &pre, Phase::Prefill, pre.seq, pre.seq, "_pre", 1);
+    let mut dec = cfg.base.clone();
+    dec.batch = cfg.decode_requests;
+    decode_chunk_loop(&mut g, &dec);
+    g.validate().expect("serving mix cascade is a DAG");
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::einsum::{OpKind, Operand};
+    use crate::workload::intensity::{Classifier, ReuseClass};
+
+    /// im2col dims and intensity against hand-computed values: a 3×3
+    /// conv over 4 channels to 8 filters on 2×2 output pixels, batch 2.
+    #[test]
+    fn conv_gemm_im2col_hand_computed() {
+        let l = ConvLayerDef {
+            name: "t",
+            c_in: 4,
+            h_out: 2,
+            w_out: 2,
+            kh: 3,
+            kw: 3,
+            c_out: 8,
+            repeat: 1,
+        };
+        let op = conv_gemm("t", Phase::Encoder, 2, &l);
+        assert_eq!((op.b, op.m, op.k, op.n), (1, 8, 36, 8));
+        // MACs = M·K·N = 8·36·8 = 2304; words = A(8·36) + W(36·8) + O(8·8)
+        // = 288 + 288 + 64 = 640.
+        assert_eq!(op.macs(), 2304);
+        assert_eq!(op.footprint_words(), 640);
+        assert_eq!(op.arithmetic_intensity(), 2304.0 / 640.0);
+    }
+
+    /// The ResNet stack straddles the Table III tipping point (160,
+    /// which the classifier's 0.5 margin turns into an effective
+    /// high-reuse threshold of 80 MACs/word): the stem is low-reuse,
+    /// the late channel-heavy stages high-reuse.
+    #[test]
+    fn resnet_layers_straddle_the_tipping_point() {
+        let c = Classifier::new(160.0);
+        let cfg = resnet50();
+        let g = conv_cascade(&cfg);
+        let class_of = |name: &str| {
+            c.classify(g.ops.iter().find(|o| o.name == name).unwrap_or_else(|| {
+                panic!("missing op {name}")
+            }))
+        };
+        // conv1: M=8·112·112=100352, K=147, N=64 → AI ≈ 44.6 < 80.
+        assert_eq!(class_of("conv1"), ReuseClass::Low);
+        // res4: M=8·14·14=1568, K=2304, N=256 → AI ≈ 200.9 > 80.
+        assert_eq!(class_of("res4_conv"), ReuseClass::High);
+        assert_eq!(class_of("res5_conv"), ReuseClass::High);
+        // The head: global-average-pool and the tiny FC are low-reuse.
+        assert_eq!(class_of("gap"), ReuseClass::Low);
+        assert_eq!(class_of("fc"), ReuseClass::Low);
+        // Exact hand-computed AI for res4: MACs = 1568·2304·256,
+        // words = 1568·2304 + 2304·256 + 1568·256.
+        let res4 = g.ops.iter().find(|o| o.name == "res4_conv").unwrap();
+        let macs = 1568u64 * 2304 * 256;
+        let words = 1568u64 * 2304 + 2304 * 256 + 1568 * 256;
+        assert_eq!(res4.macs(), macs);
+        assert_eq!(res4.arithmetic_intensity(), macs as f64 / words as f64);
+    }
+
+    /// MoE decode: the router is low-intensity by construction, and the
+    /// per-expert FFN is a BMM whose weight operand carries the expert
+    /// batch (each expert owns its weights — hand-computed footprints).
+    #[test]
+    fn moe_ops_hand_computed() {
+        let cfg = moe_decode();
+        let g = moe_cascade(&cfg);
+        let router = g.ops.iter().find(|o| o.name == "router_dec0").unwrap();
+        // rows = batch = 64; MACs = 64·4096·8 = 2_097_152;
+        // words = 64·4096 + 4096·8 + 64·8 = 295_424 → AI ≈ 7.1.
+        assert_eq!((router.m, router.k, router.n), (64, 4096, 8));
+        assert_eq!(router.macs(), 2_097_152);
+        assert_eq!(router.footprint_words(), 295_424);
+        assert!(router.arithmetic_intensity() < 10.0);
+
+        let up = g.ops.iter().find(|o| o.name == "expert_up_dec0").unwrap();
+        assert_eq!(up.kind, OpKind::Bmm);
+        // routed = 64·2/8 = 16 tokens per expert, b = 8 experts.
+        assert_eq!((up.b, up.m, up.k, up.n), (8, 16, 4096, 14336));
+        // The weight operand carries the expert batch: 8·4096·14336.
+        assert_eq!(up.operand_words(Operand::InputB), 8 * 4096 * 14336);
+        // Decode-phase ops classify low-reuse under the paper's policy.
+        let c = Classifier::new(160.0);
+        assert_eq!(c.classify(up), ReuseClass::Low);
+        assert_eq!(c.classify(router), ReuseClass::Low);
+
+        // Prefill MoE: the same expert GEMM is high-reuse (tokens ≫).
+        let pre = moe_cascade(&moe_prefill());
+        let up_pre = pre.ops.iter().find(|o| o.name == "expert_up").unwrap();
+        assert_eq!((up_pre.b, up_pre.m), (8, 2048 * 8 * 2 / 8));
+        assert_eq!(c.classify(up_pre), ReuseClass::High);
+    }
+
+    /// GQA decode BMM: KV streaming dominates — hand-computed intensity
+    /// stays in single digits despite the huge MAC count.
+    #[test]
+    fn gqa_decode_bmm_hand_computed() {
+        let cfg = gqa_long_decode();
+        let g = gqa_decode_cascade(&cfg);
+        assert!(g.ops_in_phase(Phase::Prefill).is_empty(), "decode-only cascade");
+        let logit = g.ops.iter().find(|o| o.name == "logit_dec0").unwrap();
+        // b = kv_heads·batch = 128, m = group = 8, k = dh = 128,
+        // kv₀ = 32768 + 32 = 32800.
+        assert_eq!((logit.b, logit.m, logit.k, logit.n), (128, 8, 128, 32800));
+        let macs = 128u64 * 8 * 128 * 32800;
+        let words = 128u64 * 8 * 128 + 128 * 128 * 32800 + 128 * 8 * 32800;
+        assert_eq!(logit.macs(), macs);
+        assert_eq!(logit.footprint_words(), words);
+        assert!(logit.arithmetic_intensity() < 10.0, "{}", logit.arithmetic_intensity());
+        // KV grows across chunks, and the chunks chain serially.
+        let kvs: Vec<u64> = g
+            .ops
+            .iter()
+            .filter(|o| o.name.starts_with("logit"))
+            .map(|o| o.n)
+            .collect();
+        assert!(kvs.windows(2).all(|w| w[0] < w[1]), "{kvs:?}");
+    }
+
+    /// The serving mix keeps the pools decoupled (no cross edges) at
+    /// the configured batch ratio.
+    #[test]
+    fn serving_mix_pools_are_decoupled() {
+        let cfg = serving_mix();
+        let g = serving_mix_cascade(&cfg);
+        let pre = g.ops_in_phase(Phase::Prefill);
+        let dec = g.ops_in_phase(Phase::Decode);
+        assert_eq!(pre.len(), 9);
+        assert!(!dec.is_empty());
+        for &(p, c) in &g.deps {
+            let cross =
+                (pre.contains(&p) && dec.contains(&c)) || (dec.contains(&p) && pre.contains(&c));
+            assert!(!cross, "unexpected cross-pool edge ({p},{c})");
+        }
+        // Prefill rows fold the prefill pool; decode BMMs batch the
+        // decode pool's KV caches.
+        let q = &g.ops[pre[0]];
+        assert_eq!(q.m, cfg.base.seq * cfg.prefill_requests);
+        let logit = g.ops.iter().find(|o| o.name == "logit_dec0").unwrap();
+        assert_eq!(logit.b, cfg.base.kv_heads * cfg.decode_requests);
+    }
+
+    /// Decode token counts are preserved by the chunk compression in
+    /// every decode-bearing family.
+    #[test]
+    fn decode_token_counts_sum_across_families() {
+        let moe = moe_cascade(&moe_decode());
+        let total: u64 = moe
+            .ops
+            .iter()
+            .filter(|o| o.name.starts_with("q_gen_dec"))
+            .map(|o| o.count)
+            .sum();
+        assert_eq!(total, moe_decode().decode_tokens);
+        let gqa = gqa_decode_cascade(&gqa_long_decode());
+        let total: u64 =
+            gqa.ops.iter().filter(|o| o.name.starts_with("q_gen_dec")).map(|o| o.count).sum();
+        assert_eq!(total, gqa_long_decode().decode_tokens);
+    }
+}

@@ -1,11 +1,17 @@
 //! Workload representation: tensor operations, arithmetic intensity,
-//! cascade dependency graphs, and the paper's transformer workload
-//! generators (Table II).
+//! cascade dependency graphs, the paper's transformer workload
+//! generators (Table II), the mixed-reuse workload families beyond
+//! them (`families`), the JSON cascade schema (`schema`), and the
+//! registry that fronts them all (`registry`).
 
 pub mod cascade;
 pub mod einsum;
+pub mod families;
 pub mod intensity;
+pub mod registry;
+pub mod schema;
 pub mod transformer;
 
 pub use cascade::Cascade;
 pub use einsum::{OpKind, Phase, TensorOp};
+pub use registry::{WorkloadSource, WorkloadSpec};

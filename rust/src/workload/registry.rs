@@ -1,0 +1,261 @@
+//! The workload registry: ONE front-end for every built-in family and
+//! for cascades loaded from `--workload FILE` JSON documents —
+//! symmetric to the machine front-end (`arch/topology.rs` +
+//! `--topology FILE`). The CLI, experiment configs, the sweep engine,
+//! and the figure drivers' evaluation cache all go through
+//! [`WorkloadSpec`]; nothing downstream knows which family (or file) a
+//! cascade came from.
+
+use super::cascade::Cascade;
+use super::families::{self, ConvNetConfig, MoeConfig, ServingMixConfig};
+use super::transformer::{self, TransformerConfig};
+use crate::mapper::search::cascade_fingerprint;
+use crate::util::json::Json;
+
+/// A named workload: a built-in generator config, or an explicit
+/// cascade loaded from a JSON document.
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    /// Paper Table II transformer (BERT / Llama-2 / GPT-3).
+    Transformer(TransformerConfig),
+    /// Mixture-of-experts prefill or decode.
+    Moe(MoeConfig),
+    /// CNN lowered to im2col GEMMs.
+    Conv(ConvNetConfig),
+    /// Grouped-query attention, decode-only, long context.
+    GqaDecode(TransformerConfig),
+    /// Prefill + decode request pools at a batch ratio.
+    ServingMix(ServingMixConfig),
+    /// Explicit cascade from a `--workload FILE` document.
+    Cascade(Cascade),
+}
+
+impl WorkloadSpec {
+    /// Display name (what figures and reports print).
+    pub fn name(&self) -> &str {
+        match self {
+            WorkloadSpec::Transformer(c) | WorkloadSpec::GqaDecode(c) => &c.name,
+            WorkloadSpec::Moe(c) => &c.name,
+            WorkloadSpec::Conv(c) => &c.name,
+            WorkloadSpec::ServingMix(c) => &c.name,
+            WorkloadSpec::Cascade(c) => &c.name,
+        }
+    }
+
+    /// Family tag (the `workload list` column).
+    pub fn family(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Transformer(_) => "transformer",
+            WorkloadSpec::Moe(_) => "moe",
+            WorkloadSpec::Conv(_) => "conv-im2col",
+            WorkloadSpec::GqaDecode(_) => "gqa-decode",
+            WorkloadSpec::ServingMix(_) => "serving-mix",
+            WorkloadSpec::Cascade(_) => "file",
+        }
+    }
+
+    /// Generate the cascade (built-ins) or clone the loaded one (files).
+    pub fn cascade(&self) -> Cascade {
+        match self {
+            WorkloadSpec::Transformer(c) => transformer::cascade_for(c),
+            WorkloadSpec::Moe(c) => families::moe_cascade(c),
+            WorkloadSpec::Conv(c) => families::conv_cascade(c),
+            WorkloadSpec::GqaDecode(c) => families::gqa_decode_cascade(c),
+            WorkloadSpec::ServingMix(c) => families::serving_mix_cascade(c),
+            WorkloadSpec::Cascade(c) => c.clone(),
+        }
+    }
+
+    /// Serialize to the workload JSON schema: every built-in is a
+    /// serializable definition, not code-only — re-parsing this and
+    /// evaluating is bit-identical to the in-code cascade (the
+    /// differential workload suite's contract).
+    pub fn to_json(&self) -> Json {
+        self.cascade().to_json()
+    }
+
+    /// Canonical evaluation-cache key. Built-ins key by display name
+    /// (byte-stable across runs and processes, so disk-spilled caches
+    /// written before the registry existed stay valid); file cascades
+    /// add a content fingerprint so two documents sharing a `name` can
+    /// never collide in the cache.
+    pub fn cache_key(&self) -> String {
+        match self {
+            WorkloadSpec::Cascade(c) => {
+                format!("file:{}:{:016x}", c.name, cascade_fingerprint(c))
+            }
+            _ => self.name().to_string(),
+        }
+    }
+}
+
+/// Canonical registry names, in `workload list` order.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "bert",
+        "llama2",
+        "gpt3",
+        "moe_prefill",
+        "moe_decode",
+        "resnet50",
+        "gqa_decode",
+        "serving_mix",
+    ]
+}
+
+/// Look a workload up by (case-insensitive) registered name.
+pub fn by_name(name: &str) -> Option<WorkloadSpec> {
+    if let Some(t) = transformer::by_name(name) {
+        return Some(WorkloadSpec::Transformer(t));
+    }
+    let lower = name.to_ascii_lowercase();
+    match lower.as_str() {
+        "moe_prefill" | "moe-prefill" => Some(WorkloadSpec::Moe(families::moe_prefill())),
+        "moe_decode" | "moe-decode" | "moe" => Some(WorkloadSpec::Moe(families::moe_decode())),
+        "resnet50" | "resnet" | "cnn" => Some(WorkloadSpec::Conv(families::resnet50())),
+        "gqa_decode" | "gqa-decode" | "gqa" => {
+            Some(WorkloadSpec::GqaDecode(families::gqa_long_decode()))
+        }
+        "serving_mix" | "serving-mix" => {
+            Some(WorkloadSpec::ServingMix(families::serving_mix()))
+        }
+        _ => None,
+    }
+}
+
+/// Every registered built-in as `(registry name, spec)`, Table II first.
+pub fn all_builtins() -> Vec<(&'static str, WorkloadSpec)> {
+    names().iter().map(|&n| (n, by_name(n).expect("registered name"))).collect()
+}
+
+/// The paper's Table II grid as specs (what the paper-figure drivers
+/// sweep — deliberately NOT the whole registry, so the committed
+/// fig6–fig10 goldens never move when a family is added).
+pub fn paper_specs() -> Vec<WorkloadSpec> {
+    transformer::paper_workloads().into_iter().map(WorkloadSpec::Transformer).collect()
+}
+
+/// Does a CLI/config workload value look like a file path rather than a
+/// registered name?
+pub fn looks_like_path(s: &str) -> bool {
+    s.ends_with(".json") || s.contains('/') || s.contains('\\')
+}
+
+/// Load a workload cascade from a JSON document on disk.
+pub fn load_file(path: &str) -> Result<WorkloadSpec, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let cascade = Cascade::from_json(&doc).map_err(|e| format!("{path}: {e}"))?;
+    Ok(WorkloadSpec::Cascade(cascade))
+}
+
+/// Classify a CLI/config workload value WITHOUT touching the
+/// filesystem: a registered name becomes a spec, a path-shaped value a
+/// lazy file source (so callers can resolve relative paths first), and
+/// anything else errors loudly with the full list — never a silent
+/// fallback. The single dispatch point for `--workload`, the config
+/// `"workload"` key, and [`resolve`].
+pub fn source_for(value: &str) -> Result<WorkloadSource, String> {
+    if let Some(w) = by_name(value) {
+        return Ok(WorkloadSource::Spec(w));
+    }
+    if looks_like_path(value) {
+        return Ok(WorkloadSource::File(value.to_string()));
+    }
+    Err(format!(
+        "unknown workload '{value}' (built-ins: {}; or give a cascade .json file)",
+        names().join(", ")
+    ))
+}
+
+/// Resolve a CLI workload value eagerly: a registered name, or a path
+/// to a cascade JSON file (loaded immediately).
+pub fn resolve(name_or_path: &str) -> Result<WorkloadSpec, String> {
+    source_for(name_or_path)?.load()
+}
+
+/// Resolve a built-in-only selector (the CLI's `--model`): unknown
+/// names — including path-shaped values — error with the registry
+/// list and point at `--workload` for files.
+pub fn resolve_builtin(name: &str) -> Result<WorkloadSpec, String> {
+    by_name(name).ok_or_else(|| {
+        format!(
+            "unknown built-in workload '{name}' (built-ins: {}); use --workload for a \
+             cascade .json file",
+            names().join(", ")
+        )
+    })
+}
+
+/// Where an experiment config's workload comes from. File paths load
+/// lazily so `ExperimentConfig::load` can first resolve them relative
+/// to the config file's directory (exactly like the `topology` key).
+#[derive(Debug, Clone)]
+pub enum WorkloadSource {
+    Spec(WorkloadSpec),
+    File(String),
+}
+
+impl WorkloadSource {
+    pub fn load(&self) -> Result<WorkloadSpec, String> {
+        match self {
+            WorkloadSource::Spec(s) => Ok(s.clone()),
+            WorkloadSource::File(p) => load_file(p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_resolves_and_generates() {
+        for (key, spec) in all_builtins() {
+            let g = spec.cascade();
+            assert!(!g.ops.is_empty(), "{key}");
+            g.validate().unwrap_or_else(|e| panic!("{key}: {e}"));
+            assert_eq!(spec.cache_key(), spec.name(), "{key}: built-ins key by name");
+        }
+        assert_eq!(all_builtins().len(), names().len());
+    }
+
+    #[test]
+    fn aliases_and_case_insensitivity() {
+        assert_eq!(by_name("MoE").unwrap().name(), "MoE-decode");
+        assert_eq!(by_name("moe-prefill").unwrap().name(), "MoE-prefill");
+        assert_eq!(by_name("GQA").unwrap().name(), "GQA-long-decode");
+        assert_eq!(by_name("cnn").unwrap().name(), "ResNet50-im2col");
+        assert_eq!(by_name("bert").unwrap().name(), "BERT-large");
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names_with_the_list() {
+        let err = resolve("not-a-workload").unwrap_err();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("moe_decode"), "list missing from: {err}");
+        // A path-shaped value that does not exist errors as a file.
+        let err = resolve("does/not/exist.json").unwrap_err();
+        assert!(err.contains("exist.json"), "{err}");
+    }
+
+    #[test]
+    fn file_cache_keys_fingerprint_content() {
+        let doc = |m: u64| {
+            format!(
+                r#"{{"name":"same","ops":[{{"name":"g","kind":"gemm","phase":"encoder",
+                    "m":{m},"n":4,"k":4}}]}}"#
+            )
+        };
+        let a = WorkloadSpec::Cascade(
+            Cascade::from_json(&Json::parse(&doc(4)).unwrap()).unwrap(),
+        );
+        let b = WorkloadSpec::Cascade(
+            Cascade::from_json(&Json::parse(&doc(8)).unwrap()).unwrap(),
+        );
+        assert_eq!(a.name(), b.name());
+        assert_ne!(a.cache_key(), b.cache_key(), "same name, different content");
+        assert!(a.cache_key().starts_with("file:same:"));
+    }
+}

@@ -1,0 +1,336 @@
+//! JSON cascade schema — the workload front-end mirroring the machine
+//! topology front-end (`eval --workload FILE` ↔ `eval --topology FILE`).
+//!
+//! A workload document is a cascade DAG spelled out op by op:
+//!
+//! ```json
+//! {
+//!   "name": "my-workload",
+//!   "ops": [
+//!     { "name": "q_gen", "kind": "gemm", "phase": "prefill",
+//!       "b": 1, "m": 24000, "n": 4096, "k": 4096, "repeat": 1 }
+//!   ],
+//!   "deps": [ ["q_gen", "logit"] ]
+//! }
+//! ```
+//!
+//! Every op is constructed through [`TensorOp::new`] — the same
+//! validated path the built-in generators use — so a file can express
+//! exactly what the generators can, and nothing more. Validation is
+//! loud and distinct per failure: dangling deps, cycles, zero/negative
+//! dims, duplicate op names, self-deps, duplicate edges, vector ops
+//! with `k != 1`, and unknown kinds/phases each get their own error.
+//!
+//! Serialization is deterministic (ops and deps in declaration order,
+//! every field emitted), so `parse → serialize` is a fixpoint:
+//! re-parsing the emitted text and serializing again reproduces the
+//! bytes — property-tested over every registered built-in in
+//! `util/json.rs`, mirroring the machine-tree round-trip test.
+
+use super::cascade::Cascade;
+use super::einsum::{OpKind, Phase, TensorOp};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+impl Cascade {
+    /// Serialize to the workload JSON schema (inverse of
+    /// [`Cascade::from_json`]). Deps are emitted as `[producer,
+    /// consumer]` *name* pairs, so op names must be unique — which
+    /// [`Cascade::from_json`] enforces, and every built-in generator
+    /// guarantees (the round-trip test would fail otherwise).
+    pub fn to_json(&self) -> Json {
+        let ops: Vec<Json> = self
+            .ops
+            .iter()
+            .map(|op| {
+                Json::obj()
+                    .with("name", op.name.as_str())
+                    .with("kind", op.kind.name())
+                    .with("phase", op.phase.name())
+                    .with("b", op.b)
+                    .with("m", op.m)
+                    .with("n", op.n)
+                    .with("k", op.k)
+                    .with("repeat", op.count)
+            })
+            .collect();
+        let deps: Vec<Json> = self
+            .deps
+            .iter()
+            .map(|&(p, c)| {
+                Json::Arr(vec![
+                    Json::Str(self.ops[p].name.clone()),
+                    Json::Str(self.ops[c].name.clone()),
+                ])
+            })
+            .collect();
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("ops", ops)
+            .with("deps", deps)
+    }
+
+    /// Parse a workload document (the `--workload FILE` input; schema
+    /// documented in the README). `b` defaults to 1, `k` defaults to 1
+    /// for vector ops (and must be 1 if given), `repeat` defaults to 1;
+    /// everything else — including the document `name`, which labels
+    /// reports and keys the evaluation cache — is required.
+    pub fn from_json(j: &Json) -> Result<Cascade, String> {
+        reject_unknown_keys(j, &["name", "ops", "deps"], "workload document")?;
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or("workload needs a 'name' string")?;
+        if name.is_empty() {
+            // The name labels every report and keys the evaluation
+            // cache — hold it to the same bar as op names.
+            return Err("workload needs a non-empty 'name'".into());
+        }
+        let ops_json = j
+            .get("ops")
+            .and_then(|v| v.as_arr())
+            .ok_or("workload needs an 'ops' array")?;
+        if ops_json.is_empty() {
+            return Err("workload needs at least one op".into());
+        }
+        let mut g = Cascade::new(name);
+        let mut index: HashMap<String, usize> = HashMap::new();
+        for o in ops_json {
+            let op_name = o
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("every op needs a 'name' string")?;
+            // A typo'd optional key ("repeats", "batch") would silently
+            // fall back to its default and evaluate a different
+            // workload — reject anything outside the schema instead.
+            reject_unknown_keys(
+                o,
+                &["name", "kind", "phase", "b", "m", "n", "k", "repeat"],
+                &format!("op '{op_name}'"),
+            )?;
+            let kind = o
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("op '{op_name}': needs a 'kind' (gemm|bmm|vector)"))
+                .and_then(|s| {
+                    OpKind::parse(s).map_err(|e| format!("op '{op_name}': {e}"))
+                })?;
+            let phase = o
+                .get("phase")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    format!("op '{op_name}': needs a 'phase' (encoder|prefill|decode)")
+                })
+                .and_then(|s| {
+                    Phase::parse(s).map_err(|e| format!("op '{op_name}': {e}"))
+                })?;
+            let dim = |key: &str, default: Option<u64>| -> Result<u64, String> {
+                match o.get(key) {
+                    None => default.ok_or_else(|| {
+                        format!("op '{op_name}': needs '{key}' (a positive integer)")
+                    }),
+                    Some(v) => v.as_u64().filter(|&x| x > 0).ok_or_else(|| {
+                        format!("op '{op_name}': '{key}' must be a positive integer")
+                    }),
+                }
+            };
+            let b = dim("b", Some(1))?;
+            let m = dim("m", None)?;
+            let n = dim("n", None)?;
+            let k = dim("k", if kind == OpKind::Vector { Some(1) } else { None })?;
+            let repeat = dim("repeat", Some(1))?;
+            let op = TensorOp::new(op_name, kind, phase, b, m, n, k, repeat)?;
+            if index.insert(op_name.to_string(), g.ops.len()).is_some() {
+                return Err(format!("duplicate op name '{op_name}'"));
+            }
+            g.push(op);
+        }
+        if let Some(deps) = j.get("deps") {
+            let deps = deps
+                .as_arr()
+                .ok_or("'deps' must be an array of [producer, consumer] name pairs")?;
+            for d in deps {
+                let pair = d
+                    .as_arr()
+                    .filter(|a| a.len() == 2)
+                    .ok_or("each dep must be a [producer, consumer] name pair")?;
+                let mut idx = [0usize; 2];
+                for (slot, v) in idx.iter_mut().zip(pair) {
+                    let nm = v.as_str().ok_or("dep endpoints must be op-name strings")?;
+                    *slot = *index
+                        .get(nm)
+                        .ok_or_else(|| format!("dangling dep: no op named '{nm}'"))?;
+                }
+                if idx[0] == idx[1] {
+                    return Err(format!("op '{}' depends on itself", g.ops[idx[0]].name));
+                }
+                g.dep(idx[0], idx[1]);
+            }
+        }
+        // Duplicate edges and cycles surface here with their own
+        // messages ("duplicate edge …" / "… contains a cycle").
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+/// Error on any object key outside `known`, and on duplicate keys —
+/// the loader's misspelled-field guard. (The JSON parser keeps every
+/// pair and `get` returns the first, so an unrejected duplicate would
+/// make a later `"m": 9999` edit silently inert.)
+fn reject_unknown_keys(j: &Json, known: &[&str], what: &str) -> Result<(), String> {
+    if let Json::Obj(pairs) = j {
+        let mut seen: Vec<&str> = Vec::with_capacity(pairs.len());
+        for (key, _) in pairs {
+            if !known.contains(&key.as_str()) {
+                return Err(format!(
+                    "{what}: unknown key '{key}' (known: {})",
+                    known.join(", ")
+                ));
+            }
+            if seen.contains(&key.as_str()) {
+                return Err(format!("{what}: duplicate key '{key}'"));
+            }
+            seen.push(key.as_str());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::transformer;
+
+    fn parse(doc: &str) -> Result<Cascade, String> {
+        Cascade::from_json(&Json::parse(doc).expect("valid JSON"))
+    }
+
+    #[test]
+    fn bert_round_trips_through_the_schema() {
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let text = g.to_json().to_string_pretty();
+        let back = Cascade::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.deps, g.deps);
+        assert_eq!(back.ops.len(), g.ops.len());
+        for (a, b) in g.ops.iter().zip(&back.ops) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.phase, b.phase);
+            assert_eq!((a.b, a.m, a.n, a.k, a.count), (b.b, b.m, b.n, b.k, b.count));
+        }
+        // Serialization is a fixpoint after the first round.
+        assert_eq!(back.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn defaults_fill_in_b_k_repeat() {
+        let g = parse(
+            r#"{"name":"w","ops":[
+                {"name":"v","kind":"vector","phase":"encoder","m":4,"n":4},
+                {"name":"g","kind":"gemm","phase":"encoder","m":4,"n":4,"k":8}]}"#,
+        )
+        .unwrap();
+        assert_eq!((g.ops[0].b, g.ops[0].k, g.ops[0].count), (1, 1, 1));
+        assert_eq!(g.ops[1].k, 8);
+        assert!(g.deps.is_empty());
+    }
+
+    #[test]
+    fn distinct_errors_per_failure_mode() {
+        let op = r#"{"name":"a","kind":"gemm","phase":"encoder","m":4,"n":4,"k":4}"#;
+        let op_b = r#"{"name":"b","kind":"gemm","phase":"encoder","m":4,"n":4,"k":4}"#;
+        let cases = [
+            // (document, expected error fragment)
+            (format!(r#"{{"ops":[{op}]}}"#), "needs a 'name' string"),
+            (r#"{"name":"w"}"#.to_string(), "needs an 'ops' array"),
+            (r#"{"name":"w","ops":[]}"#.to_string(), "at least one op"),
+            (
+                format!(r#"{{"name":"w","ops":[{op},{op}]}}"#),
+                "duplicate op name 'a'",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"conv","phase":"encoder",
+                    "m":4,"n":4,"k":4}]}"#
+                    .to_string(),
+                "unknown op kind 'conv'",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"gemm","phase":"warmup",
+                    "m":4,"n":4,"k":4}]}"#
+                    .to_string(),
+                "unknown phase 'warmup'",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"gemm","phase":"encoder",
+                    "m":0,"n":4,"k":4}]}"#
+                    .to_string(),
+                "'m' must be a positive integer",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"gemm","phase":"encoder",
+                    "m":-4,"n":4,"k":4}]}"#
+                    .to_string(),
+                "'m' must be a positive integer",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"gemm","phase":"encoder",
+                    "m":4,"n":4}]}"#
+                    .to_string(),
+                "needs 'k'",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"vector","phase":"encoder",
+                    "m":4,"n":4,"k":3}]}"#
+                    .to_string(),
+                "vector ops are k = 1",
+            ),
+            (
+                format!(r#"{{"name":"w","ops":[{op}],"deps":[["a","zzz"]]}}"#),
+                "dangling dep: no op named 'zzz'",
+            ),
+            (
+                format!(r#"{{"name":"w","ops":[{op}],"deps":[["a","a"]]}}"#),
+                "depends on itself",
+            ),
+            (
+                format!(r#"{{"name":"w","ops":[{op},{op_b}],"deps":[["a","b"],["a","b"]]}}"#),
+                "duplicate edge",
+            ),
+            (
+                format!(r#"{{"name":"w","ops":[{op},{op_b}],"deps":[["a","b"],["b","a"]]}}"#),
+                "contains a cycle",
+            ),
+            (
+                format!(r#"{{"name":"w","ops":[{op}],"deps":[["a"]]}}"#),
+                "name pair",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"gemm","phase":"encoder",
+                    "m":4,"n":4,"k":4,"repeats":1000}]}"#
+                    .to_string(),
+                "unknown key 'repeats'",
+            ),
+            (
+                format!(r#"{{"name":"w","operations":[{op}]}}"#),
+                "unknown key 'operations'",
+            ),
+            (
+                r#"{"name":"w","ops":[{"name":"a","kind":"gemm","phase":"encoder",
+                    "m":4,"n":4,"k":4,"m":9999}]}"#
+                    .to_string(),
+                "duplicate key 'm'",
+            ),
+            (
+                format!(r#"{{"name":"w","ops":[{op}],"ops":[{op}]}}"#),
+                "duplicate key 'ops'",
+            ),
+            (format!(r#"{{"name":"","ops":[{op}]}}"#), "non-empty 'name'"),
+        ];
+        for (doc, want) in cases {
+            let err = parse(&doc).unwrap_err();
+            assert!(err.contains(want), "expected '{want}' in: {err}");
+        }
+    }
+}

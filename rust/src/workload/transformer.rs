@@ -115,7 +115,10 @@ pub fn paper_workloads() -> Vec<TransformerConfig> {
     vec![bert_large(), llama2(), gpt3()]
 }
 
-/// Look a workload up by (case-insensitive) name.
+/// Look a Table II workload up by (case-insensitive) name. The full
+/// registry — these three plus the mixed-reuse families — is
+/// [`crate::workload::registry::by_name`]; CLI and configs go through
+/// that.
 pub fn by_name(name: &str) -> Option<TransformerConfig> {
     let lower = name.to_ascii_lowercase();
     match lower.as_str() {
@@ -128,8 +131,12 @@ pub fn by_name(name: &str) -> Option<TransformerConfig> {
 
 /// One attention + FFN layer at sequence length `seq`, tagged `phase`.
 ///
-/// Returns the cascade and the index of its final op (for chaining).
-fn attention_layer(
+/// Returns the indices of the layer's first and final ops (for
+/// chaining). Shared with the non-transformer families in
+/// [`crate::workload::families`] (GQA long-context decode, serving
+/// mix), so every attention block in the repo has one construction
+/// path.
+pub(crate) fn attention_layer(
     g: &mut Cascade,
     cfg: &TransformerConfig,
     phase: Phase,
@@ -196,36 +203,65 @@ pub fn decoder_cascade(cfg: &TransformerConfig) -> Cascade {
     assert!(cfg.decode_tokens > 0, "decoder cascade requires decode_tokens");
     let mut g = Cascade::new(&cfg.name);
     attention_layer(&mut g, cfg, Phase::Prefill, cfg.seq, cfg.seq, "_pre", 1);
+    decode_chunk_loop(&mut g, cfg);
+    g.validate().expect("decoder cascade is a DAG");
+    g
+}
 
-    // Decode: `decode_tokens` single-token steps, compressed into chunks.
-    // Chunk c covers tokens [c·T/C, (c+1)·T/C) with KV length sampled at
-    // the chunk midpoint; its ops repeat count times back-to-back.
-    let chunks = cfg.decode_chunks.max(1);
-    let per = cfg.decode_tokens / chunks;
+/// Append the compressed decode token loop: `decode_tokens` single-token
+/// steps compressed into `decode_chunks` chunks. Chunk c covers tokens
+/// [c·T/C, (c+1)·T/C) with KV length sampled at the chunk midpoint
+/// (starting from the `cfg.seq` context); its ops repeat `count` times
+/// back-to-back, and chunks chain serially (tokens are autoregressive).
+/// Shared by the Table II decoders and the decode-only families (GQA
+/// long-context, serving mix) in [`crate::workload::families`].
+pub(crate) fn decode_chunk_loop(g: &mut Cascade, cfg: &TransformerConfig) {
+    chain_decode_chunks(
+        g,
+        cfg.seq,
+        cfg.decode_tokens,
+        cfg.decode_chunks,
+        |g, kv_mid, suffix, count| {
+            attention_layer(g, cfg, Phase::Decode, 1, kv_mid, suffix, count)
+        },
+    );
+}
+
+/// The chunk-compression policy itself, generalized over the layer
+/// builder so every decode-bearing family (transformer, MoE) shares ONE
+/// copy of the chunks/midpoint/remainder math and the serial chaining.
+///
+/// `layer(g, kv_mid, suffix, count)` must push the chunk's ops with
+/// q/k/v generation as its FIRST THREE (the chaining wires the previous
+/// tail to head, head+1, head+2) and return (head, tail) indices.
+pub(crate) fn chain_decode_chunks<F>(
+    g: &mut Cascade,
+    context: u64,
+    decode_tokens: u64,
+    decode_chunks: u64,
+    mut layer: F,
+) where
+    F: FnMut(&mut Cascade, u64, &str, u64) -> (usize, usize),
+{
+    let chunks = decode_chunks.max(1);
+    // A chunk with zero tokens would carry `repeat: 0` ops, which the
+    // schema (rightly) refuses to re-parse.
+    assert!(decode_tokens >= chunks, "fewer decode tokens than chunks");
+    let per = decode_tokens / chunks;
     let mut prev_tail: Option<usize> = None;
     for c in 0..chunks {
-        let count = if c == chunks - 1 { cfg.decode_tokens - per * (chunks - 1) } else { per };
-        let kv_mid = cfg.seq + c * per + count / 2;
-        let (head, tail) = attention_layer(
-            &mut g,
-            cfg,
-            Phase::Decode,
-            1,
-            kv_mid,
-            &format!("_dec{c}"),
-            count,
-        );
-        // Tokens are generated serially: chain chunks.
+        let count = if c == chunks - 1 { decode_tokens - per * (chunks - 1) } else { per };
+        let kv_mid = context + c * per + count / 2;
+        let (head, tail) = layer(g, kv_mid, &format!("_dec{c}"), count);
+        // Tokens are generated serially: chain chunks — the previous
+        // tail gates the next chunk's q/k/v generation.
         if let Some(t) = prev_tail {
-            // Head here is q_gen; k_gen/v_gen of the chunk are head+1, head+2.
             g.dep(t, head);
             g.dep(t, head + 1);
             g.dep(t, head + 2);
         }
         prev_tail = Some(tail);
     }
-    g.validate().expect("decoder cascade is a DAG");
-    g
 }
 
 /// The cascade for a workload config (encoder or decoder shape).

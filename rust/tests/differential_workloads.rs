@@ -1,0 +1,92 @@
+//! Differential suite: every REGISTERED built-in workload serialized to
+//! the JSON cascade schema, re-parsed, and evaluated must produce
+//! bit-identical `CascadeStats` to the in-code cascade — across
+//! contention off/on and a sample of taxonomy points. This is the
+//! contract that keeps the built-in generators and the `--workload
+//! FILE` loader from ever drifting: built-ins ARE serializable
+//! definitions, and the schema can express exactly what they generate.
+
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::arch::topology::ContentionMode;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::util::json::Json;
+use harp::workload::registry;
+use harp::workload::Cascade;
+
+/// Serialize → re-parse a built-in's cascade, asserting the document
+/// fixpoint on the way.
+fn round_trip(key: &str, spec: &registry::WorkloadSpec) -> (Cascade, Cascade) {
+    let direct = spec.cascade();
+    let text = spec.to_json().to_string_pretty();
+    let reparsed = Cascade::from_json(&Json::parse(&text).expect("valid JSON"))
+        .unwrap_or_else(|e| panic!("{key}: {e}"));
+    assert_eq!(
+        reparsed.to_json().to_string_pretty(),
+        text,
+        "{key}: serialize(parse(serialize(x))) must be byte-identical"
+    );
+    (direct, reparsed)
+}
+
+#[test]
+fn builtin_vs_json_cascades_evaluate_bit_identically() {
+    // One homogeneous and one shared-node machine: the latter is where
+    // contention booking actually changes the map space, so both the
+    // Off and Booked pipelines see every family.
+    let classes = ["leaf+homo", "hier+xnode"];
+    for (key, spec) in registry::all_builtins() {
+        let (direct, reparsed) = round_trip(key, &spec);
+        for class_id in classes {
+            let class = HarpClass::from_id(class_id).expect("taxonomy id");
+            for contention in [ContentionMode::Off, ContentionMode::Booked] {
+                let mut opts = EvalOptions { samples: 8, ..EvalOptions::default() };
+                opts.contention = contention;
+                let a = evaluate_cascade_on_config(
+                    &class,
+                    &HardwareParams::default(),
+                    &direct,
+                    &opts,
+                )
+                .unwrap_or_else(|e| panic!("{key} on {class_id}: {e}"));
+                let b = evaluate_cascade_on_config(
+                    &class,
+                    &HardwareParams::default(),
+                    &reparsed,
+                    &opts,
+                )
+                .unwrap_or_else(|e| panic!("{key} (reparsed) on {class_id}: {e}"));
+                assert_eq!(
+                    a.stats.to_json().to_string_pretty(),
+                    b.stats.to_json().to_string_pretty(),
+                    "{key} on {class_id} ({contention:?}): stats drifted between the \
+                     in-code cascade and its JSON round trip"
+                );
+            }
+        }
+    }
+}
+
+/// The structural half of the contract, cheap enough to run over every
+/// field of every op: the re-parsed cascade IS the generated one.
+#[test]
+fn reparsed_cascades_are_structurally_identical() {
+    for (key, spec) in registry::all_builtins() {
+        let (direct, reparsed) = round_trip(key, &spec);
+        assert_eq!(direct.name, reparsed.name, "{key}");
+        assert_eq!(direct.deps, reparsed.deps, "{key}");
+        assert_eq!(direct.ops.len(), reparsed.ops.len(), "{key}");
+        for (a, b) in direct.ops.iter().zip(&reparsed.ops) {
+            assert_eq!(a.name, b.name, "{key}");
+            assert_eq!(a.kind, b.kind, "{key}/{}", a.name);
+            assert_eq!(a.phase, b.phase, "{key}/{}", a.name);
+            assert_eq!(
+                (a.b, a.m, a.n, a.k, a.count),
+                (b.b, b.m, b.n, b.k, b.count),
+                "{key}/{}",
+                a.name
+            );
+        }
+        assert_eq!(direct.total_macs(), reparsed.total_macs(), "{key}");
+    }
+}

@@ -19,6 +19,7 @@ use harp::arch::topology::ContentionMode;
 use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
 use harp::coordinator::figures::{self, Evaluator};
 use harp::util::threadpool::default_threads;
+use harp::workload::registry;
 use harp::workload::transformer;
 use std::path::PathBuf;
 
@@ -73,6 +74,25 @@ fn assert_golden(name: &str, rendered: &str) {
 #[test]
 fn golden_table1() {
     assert_golden("table1", &figures::table1());
+}
+
+/// The workload registry's Table II-style summary (the `harp workload
+/// list` body): pins the registered names, cascade sizes, MAC counts,
+/// and intensity spans of every family — a generator change that moves
+/// ANY built-in's shape shows up here.
+#[test]
+fn golden_workload_table() {
+    assert_golden("workload_table", &figures::workload_table());
+}
+
+/// Fig 6-style speedup sweep over one NEW family (MoE decode): the
+/// workload front-end's analog of the paper-figure goldens. The paper's
+/// own fig6 golden is untouched — this pins the new family's numbers.
+#[test]
+fn golden_fig6_moe_decode() {
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    let wl = registry::by_name("moe_decode").expect("registered");
+    assert_golden("fig6_moe_decode", &figures::fig6_style_speedup(&ev, &wl).render());
 }
 
 #[test]

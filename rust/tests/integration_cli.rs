@@ -205,3 +205,126 @@ fn no_args_prints_usage_and_fails() {
     assert!(!ok);
     assert!(stderr.contains("USAGE"));
 }
+
+fn example_workload(name: &str) -> String {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("workloads")
+        .join(name)
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn workload_list_shows_every_registered_name() {
+    let (ok, stdout, stderr) = harp(&["workload", "list"]);
+    assert!(ok, "stderr: {stderr}");
+    for name in ["bert", "llama2", "gpt3", "moe_decode", "resnet50", "gqa_decode", "serving_mix"]
+    {
+        assert!(stdout.contains(name), "missing {name}:\n{stdout}");
+    }
+}
+
+#[test]
+fn workload_prints_builtin_and_json_round_trips() {
+    let (ok, stdout, stderr) = harp(&["workload", "moe_decode"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("expert_up"), "{stdout}");
+    let (ok, stdout, _) = harp(&["workload", "moe_decode", "--json"]);
+    assert!(ok);
+    let doc = harp::util::json::Json::parse(&stdout).expect("valid JSON");
+    let back = harp::workload::Cascade::from_json(&doc).expect("valid workload schema");
+    assert_eq!(back.name, "MoE-decode");
+}
+
+#[test]
+fn workload_file_validates_and_prints() {
+    let (ok, stdout, stderr) =
+        harp(&["workload", "--file", &example_workload("moe_decode.json")]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("router_dec0"), "{stdout}");
+    // Name + --file together are a usage error, not a silent pick.
+    let (ok, _, stderr) =
+        harp(&["workload", "bert", "--file", &example_workload("moe_decode.json")]);
+    assert!(!ok);
+    assert!(stderr.contains("not both"), "{stderr}");
+    // Unknown names list the remedy.
+    let (ok, _, stderr) = harp(&["workload", "mamba"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown workload"), "{stderr}");
+}
+
+#[test]
+fn eval_accepts_workload_files_and_new_families() {
+    let (ok, stdout, stderr) = harp(&[
+        "eval",
+        "--workload",
+        &example_workload("moe_decode.json"),
+        "--machine",
+        "hier+xnode",
+        "--samples",
+        "10",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert!(v.get("latency_cycles").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(v.get("workload").unwrap().as_str(), Some("moe-decode-example"));
+    // A new built-in family through --model (the explicit built-in form).
+    let (ok, stdout, stderr) = harp(&[
+        "eval", "--model", "gqa_decode", "--machine", "leaf+xnode", "--samples", "10", "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert_eq!(v.get("workload").unwrap().as_str(), Some("GQA-long-decode"));
+}
+
+#[test]
+fn eval_workload_model_conflicts_are_loud() {
+    // --workload FILE + --model: both select the workload → error.
+    let (ok, _, stderr) = harp(&[
+        "eval",
+        "--workload",
+        &example_workload("moe_decode.json"),
+        "--model",
+        "bert",
+        "--machine",
+        "leaf+homo",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("not both"), "{stderr}");
+    // --model only takes built-ins; a file path is a loud error.
+    let (ok, _, stderr) = harp(&[
+        "eval", "--model", &example_workload("moe_decode.json"), "--machine", "leaf+homo",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown built-in workload"), "{stderr}");
+    // Unknown non-path workload names list the built-ins.
+    let (ok, _, stderr) =
+        harp(&["eval", "--workload", "mamba", "--machine", "leaf+homo"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown workload"), "{stderr}");
+    assert!(stderr.contains("serving_mix"), "{stderr}");
+}
+
+#[test]
+fn eval_config_rejects_cli_workload_selectors() {
+    let dir = std::env::temp_dir().join("harp_cli_config_workload_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("cfg.json");
+    std::fs::write(
+        &cfg,
+        r#"{"workload":"bert","machine":"leaf+homo","samples":10}"#,
+    )
+    .unwrap();
+    let cfg = cfg.to_string_lossy().into_owned();
+    for flag in ["--workload", "--model"] {
+        let (ok, _, stderr) = harp(&["eval", "--config", &cfg, flag, "bert"]);
+        assert!(!ok, "{flag} alongside --config must fail");
+        assert!(stderr.contains("--config supplies the workload"), "{flag}: {stderr}");
+    }
+    // The config alone still runs.
+    let (ok, _, stderr) = harp(&["eval", "--config", &cfg, "--json"]);
+    assert!(ok, "stderr: {stderr}");
+}

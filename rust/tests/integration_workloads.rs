@@ -1,0 +1,88 @@
+//! Integration: the workload JSON front-end — the shipped example
+//! files, loader robustness (truncation sweep, malformed documents with
+//! a distinct error each), and file-cascade evaluation end to end.
+//! Mirrors `integration_topology.rs` for the machine front-end.
+
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::util::json::Json;
+use harp::workload::registry;
+use harp::workload::Cascade;
+use std::path::PathBuf;
+
+const EXAMPLES: [&str; 5] = [
+    "moe_decode.json",
+    "moe_prefill.json",
+    "conv_resnet.json",
+    "gqa_decode.json",
+    "serving_mix.json",
+];
+
+fn example_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("workloads")
+        .join(name)
+}
+
+fn load(name: &str) -> Cascade {
+    let path = example_path(name);
+    let text =
+        std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    Cascade::from_json(&Json::parse(&text).expect("valid JSON"))
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+/// Every shipped example parses, validates, reaches a serialization
+/// fixpoint, and evaluates end to end on a heterogeneous machine.
+#[test]
+fn example_workloads_parse_and_evaluate() {
+    for file in EXAMPLES {
+        let g = load(file);
+        g.validate().unwrap_or_else(|e| panic!("{file}: {e}"));
+        let text = g.to_json().to_string_pretty();
+        let back = Cascade::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text, "{file}");
+
+        let class = HarpClass::from_id("leaf+xnode").unwrap();
+        let opts = EvalOptions { samples: 8, ..EvalOptions::default() };
+        let r = evaluate_cascade_on_config(&class, &HardwareParams::default(), &g, &opts)
+            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert!(r.stats.latency_cycles > 0.0, "{file}");
+        assert!(r.stats.energy_pj > 0.0, "{file}");
+        assert_eq!(r.assignment.len(), g.ops.len(), "{file}");
+    }
+}
+
+/// The registry resolves example files as path-shaped values, and the
+/// resulting spec round-trips through the evaluation-cache key.
+#[test]
+fn registry_resolves_example_files() {
+    let path = example_path("moe_decode.json");
+    let wl = registry::resolve(path.to_str().unwrap()).unwrap();
+    assert_eq!(wl.name(), "moe-decode-example");
+    assert_eq!(wl.family(), "file");
+    assert!(wl.cache_key().starts_with("file:moe-decode-example:"), "{}", wl.cache_key());
+    // A registered name resolves to the built-in, never a file.
+    assert_eq!(registry::resolve("moe_decode").unwrap().family(), "moe");
+}
+
+/// Malformed workload documents return `Err` — never panic: truncated
+/// JSON at every byte boundary of a real example file.
+#[test]
+fn truncated_workload_documents_error() {
+    let path = example_path("moe_decode.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    // Cut strictly inside the document: a cut in the trailing
+    // whitespace would leave a complete, valid file.
+    let doc_len = text.trim_end().len();
+    for cut in (0..doc_len - 1).step_by(97).chain([doc_len - 1]) {
+        let truncated = &text[..cut];
+        let outcome = Json::parse(truncated)
+            .map_err(|e| e.to_string())
+            .and_then(|j| Cascade::from_json(&j).map(|_| ()));
+        assert!(outcome.is_err(), "truncation at byte {cut} was accepted");
+    }
+}

@@ -94,14 +94,14 @@ fn prop_search_identical_across_thread_counts() {
 fn evaluator_cache_hits_equal_fresh_search() {
     let opts = EvalOptions { samples: 40, ..EvalOptions::default() };
     let ev = Evaluator::new(opts.clone());
-    let wl = transformer::bert_large();
+    let wl = harp::workload::WorkloadSpec::Transformer(transformer::bert_large());
     let class = HarpClass::from_id("leaf+xnode").unwrap();
 
     let first = ev.eval(&wl, &class, 2048.0, None);
     let hit = ev.eval(&wl, &class, 2048.0, None);
     assert!(Arc::ptr_eq(&first, &hit), "second lookup must be a cache hit");
 
-    let cascade = transformer::cascade_for(&wl);
+    let cascade = wl.cascade();
     let params = HardwareParams { dram_bw_bits: 2048.0, ..HardwareParams::default() };
     let fresh = evaluate_cascade_on_config(&class, &params, &cascade, &opts).unwrap();
     assert_eq!(first.latency_cycles, fresh.stats.latency_cycles);

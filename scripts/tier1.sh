@@ -24,6 +24,18 @@ echo "== tier1: CLI smoke =="
 "$BIN" topology list > /dev/null
 "$BIN" topology hier+xdepth > /dev/null
 "$BIN" topology --file examples/topologies/fig4h_compound.json > /dev/null
+# Workload front-end: registry listing, built-in + file cascades, and
+# the loud-error path when a workload file is combined with --model.
+"$BIN" workload list > /dev/null
+"$BIN" workload moe_decode > /dev/null
+"$BIN" workload --file examples/workloads/moe_decode.json > /dev/null
+"$BIN" eval --workload examples/workloads/moe_decode.json --machine hier+xnode \
+    --samples 20 --json > /dev/null
+"$BIN" eval --model gqa_decode --machine leaf+xnode --samples 20 --json > /dev/null
+if "$BIN" eval --workload examples/workloads/moe_decode.json --model bert \
+    --machine leaf+homo --samples 20 > /dev/null 2>&1; then
+    echo "tier1 FAIL: --workload FILE + --model should be a loud error"; exit 1
+fi
 "$BIN" eval --workload bert --machine leaf+xnode --samples 20 --json > /dev/null
 "$BIN" eval --workload llama2 --samples 20 --json \
     --topology examples/topologies/fig4h_compound.json > /dev/null
