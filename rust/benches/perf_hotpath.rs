@@ -151,6 +151,47 @@ fn main() {
         ));
     });
 
+    // --- allocation-policy search: cost vs makespan gain ---------------------
+    // The acceptance metric of the allocation engine: what the
+    // schedule-aware `search` policy pays over `greedy` (cost-matrix
+    // mapping of every op on every eligible unit + scheduler-replay
+    // local search) and what it buys (makespan). Replays reuse one
+    // `ScheduleOracle`, so the probe cost is the event loop alone —
+    // the before/after of the `replay()` entry point.
+    {
+        use harp::hhp::allocator::AllocPolicy;
+        let mut greedy_opts =
+            EvalOptions { samples: mapper_samples.min(200), ..EvalOptions::default() };
+        let mut search_opts = greedy_opts.clone();
+        search_opts.alloc = AllocPolicy::Search;
+        let class = HarpClass::from_id("hier+xnode").unwrap();
+        let run = |opts: &EvalOptions| {
+            let t0 = Instant::now();
+            let r = evaluate_cascade_on_config(
+                &class,
+                &HardwareParams::default(),
+                &cascade,
+                opts,
+            )
+            .unwrap();
+            (t0.elapsed().as_secs_f64(), r.stats.latency_cycles)
+        };
+        greedy_opts.threads = default_threads();
+        search_opts.threads = default_threads();
+        let (t_greedy, m_greedy) = run(&greedy_opts);
+        let (t_search, m_search) = run(&search_opts);
+        assert!(
+            m_search <= m_greedy * (1.0 + 1e-9),
+            "search must never schedule worse than greedy"
+        );
+        println!(
+            "alloc search (GPT3 × hier+xnode): greedy {t_greedy:.2}s @ {m_greedy:.4e} cyc, \
+             search {t_search:.2}s @ {m_search:.4e} cyc → {:.2}× search cost, {:.3}× makespan",
+            t_search / t_greedy,
+            m_search / m_greedy
+        );
+    }
+
     // --- parallel sweep throughput (fig6-style) ------------------------------
     // The acceptance metric of the parallel-sweep work: one full fig6
     // sweep (all workloads × taxonomy points × both bandwidths) with the

@@ -622,13 +622,34 @@ pub struct ContentionCtx {
 /// per-unit view the cost model consumes — the ONE place the tree and
 /// the flattened specs are tied together, shared by every
 /// `MachineConfig` constructor so they can never drift.
-fn sub_accels_for(topology: &MachineTopology, mode: ContentionMode) -> Vec<SubAccel> {
-    topology
+///
+/// Every flattened unit must have at least one PE: a zero-PE unit would
+/// make the allocator's roof-weighted load ratios NaN (and its `min_by`
+/// ordering meaningless). Topology files already reject empty arrays at
+/// `validate()`, but the *generator* can produce one when the hardware
+/// budget is too small to split (e.g. `total_macs: 1` on a
+/// heterogeneous point rounds the low side to zero) — so the check
+/// lives here, on the constructor path every machine passes through.
+fn sub_accels_for(
+    topology: &MachineTopology,
+    mode: ContentionMode,
+) -> Result<Vec<SubAccel>, String> {
+    let sub_accels: Vec<SubAccel> = topology
         .flatten_all_with(mode)
         .into_iter()
         .enumerate()
         .map(|(id, spec)| SubAccel { id, role: topology.accels[id].role, spec })
-        .collect()
+        .collect();
+    for s in &sub_accels {
+        if s.spec.peak_macs() == 0 {
+            return Err(format!(
+                "sub-accelerator '{}' has zero PEs — the hardware budget is too small \
+                 to partition at this taxonomy point",
+                s.spec.name
+            ));
+        }
+    }
+    Ok(sub_accels)
 }
 
 impl MachineConfig {
@@ -637,7 +658,7 @@ impl MachineConfig {
     /// specs the cost model consumes.
     pub fn build(class: &HarpClass, params: &HardwareParams) -> Result<MachineConfig, String> {
         let topology = generate_topology(class, params)?;
-        let sub_accels = sub_accels_for(&topology, ContentionMode::Off);
+        let sub_accels = sub_accels_for(&topology, ContentionMode::Off)?;
         Ok(MachineConfig {
             class: class.clone(),
             params: params.clone(),
@@ -657,7 +678,7 @@ impl MachineConfig {
             return Ok(self);
         }
         self.topology.validate()?;
-        self.sub_accels = sub_accels_for(&self.topology, mode);
+        self.sub_accels = sub_accels_for(&self.topology, mode)?;
         self.contention = mode;
         Ok(self)
     }
@@ -683,7 +704,7 @@ impl MachineConfig {
                 .max(1),
             ..defaults
         };
-        let sub_accels = sub_accels_for(&topology, ContentionMode::Off);
+        let sub_accels = sub_accels_for(&topology, ContentionMode::Off)?;
         Ok(MachineConfig {
             class,
             params,
@@ -957,6 +978,22 @@ mod tests {
     fn invalid_point_rejected() {
         let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::CrossDepth);
         assert!(MachineConfig::build(&c, &params()).is_err());
+    }
+
+    /// Regression for the latent allocator NaN: a hardware budget too
+    /// small to split (the low side rounds to zero PEs) must be
+    /// rejected at machine construction — previously it built a
+    /// zero-PE unit whose load ratio was NaN and the allocator's
+    /// `min_by` comparison panicked mid-evaluation.
+    #[test]
+    fn degenerate_budget_rejected_not_nan() {
+        let tiny = HardwareParams { total_macs: 1, ..params() };
+        let c = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node());
+        let err = MachineConfig::build(&c, &tiny).unwrap_err();
+        assert!(err.contains("zero PEs"), "{err}");
+        // A budget of 1 still builds the homogeneous point (one unit).
+        let homo = HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous);
+        assert!(MachineConfig::build(&homo, &tiny).is_ok());
     }
 
     #[test]

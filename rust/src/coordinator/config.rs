@@ -9,9 +9,15 @@
 //!   "bw_frac_low": 0.75,
 //!   "samples": 400,
 //!   "dynamic_bw": false,
-//!   "contention": "off"
+//!   "contention": "off",
+//!   "alloc": "greedy"
 //! }
 //! ```
+//!
+//! `"alloc"` selects the op → sub-accelerator allocation policy
+//! (`greedy` | `round_robin` | `critical_path` | `search`); like
+//! `"contention"` it is an evaluation knob, so it composes with both
+//! `machine` ids and `topology` files.
 //!
 //! `"workload"` is a registered name (`harp workload list`) or a path
 //! to a cascade JSON file (same schema as `--workload FILE`; see the
@@ -115,6 +121,12 @@ impl ExperimentConfig {
                 .as_str()
                 .ok_or("'contention' must be \"off\" or \"on\"")?;
             opts.contention = crate::arch::topology::ContentionMode::parse(s)?;
+        }
+        if let Some(v) = j.get("alloc") {
+            let s = v.as_str().ok_or(
+                "'alloc' must be a policy name (greedy | round_robin | critical_path | search)",
+            )?;
+            opts.alloc = crate::hhp::allocator::AllocPolicy::parse(s)?;
         }
         if let Some(v) = j.get("bw_frac_low").and_then(|v| v.as_f64()) {
             if !(0.0..=1.0).contains(&v) {
@@ -235,6 +247,43 @@ mod tests {
         )
         .unwrap();
         assert_eq!(topo.opts.contention, ContentionMode::Booked);
+    }
+
+    #[test]
+    fn alloc_key_parses_and_rejects_garbage() {
+        use crate::hhp::allocator::AllocPolicy;
+        for (value, want) in [
+            ("greedy", AllocPolicy::Greedy),
+            ("round_robin", AllocPolicy::RoundRobin),
+            ("critical_path", AllocPolicy::CriticalPath),
+            ("search", AllocPolicy::Search),
+        ] {
+            let c = ExperimentConfig::parse(&format!(
+                r#"{{"workload":"bert","machine":"hier+xnode","alloc":"{value}"}}"#
+            ))
+            .unwrap_or_else(|e| panic!("{value}: {e}"));
+            assert_eq!(c.opts.alloc, want, "{value}");
+        }
+        // Defaults to greedy when absent.
+        let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
+        assert_eq!(c.opts.alloc, AllocPolicy::Greedy);
+        // Garbage is loud and lists the valid set.
+        let err = ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"leaf+homo","alloc":"optimal"}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown allocation policy"), "{err}");
+        assert!(err.contains("critical_path"), "{err}");
+        assert!(ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"leaf+homo","alloc":7}"#
+        )
+        .is_err());
+        // Like contention, alloc composes with an explicit topology.
+        let topo = ExperimentConfig::parse(
+            r#"{"workload":"bert","topology":"m.json","alloc":"search"}"#,
+        )
+        .unwrap();
+        assert_eq!(topo.opts.alloc, AllocPolicy::Search);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::ContentionMode;
-use crate::hhp::allocator::allocate;
+use crate::hhp::allocator::{self, AllocPolicy};
 use crate::hhp::scheduler::{schedule, ScheduleOptions, ScheduleResult};
 use crate::hhp::stats::CascadeStats;
 use crate::mapper::blackbox::{BlackboxMapper, MappedOp};
@@ -37,6 +37,10 @@ pub struct EvalOptions {
     /// results); `Booked` hands each co-attached unit its booked
     /// capacity slice and arbitrates shared edge bandwidth.
     pub contention: ContentionMode,
+    /// Op → sub-accelerator allocation policy. `Greedy` (the default)
+    /// is bit-identical to the historical allocator; `Search`
+    /// co-optimises the assignment with the overlap scheduler.
+    pub alloc: AllocPolicy,
     /// Mapper threads.
     pub threads: usize,
 }
@@ -52,6 +56,7 @@ impl Default for EvalOptions {
             dynamic_bw: true,
             bw_frac_low: None,
             contention: ContentionMode::Off,
+            alloc: AllocPolicy::Greedy,
             threads: crate::util::threadpool::default_threads(),
         }
     }
@@ -72,14 +77,25 @@ impl EvalOptions {
     /// The [`EVAL_MODEL_VERSION`] stamp invalidates disk-spilled caches
     /// whenever the cost model changes — without it a reused `--cache`
     /// file would silently serve stale numbers.
+    ///
+    /// The allocation policy is appended only when it differs from the
+    /// default: `greedy` keys stay byte-identical to every fingerprint
+    /// written before the policy knob existed, so old disk spills stay
+    /// valid, while a non-default policy can never be served a cached
+    /// greedy result (or vice versa).
     pub fn fingerprint(&self) -> String {
-        format!(
+        let mut fp = format!(
             "m{EVAL_MODEL_VERSION}|s{}|r{:#018x}|dyn{}|ct{}",
             self.samples,
             self.seed,
             self.dynamic_bw,
             self.contention.name()
-        )
+        );
+        if self.alloc != AllocPolicy::Greedy {
+            fp.push_str("|a");
+            fp.push_str(self.alloc.name());
+        }
+        fp
     }
 }
 
@@ -141,20 +157,27 @@ pub fn evaluate_cascade_on_machine(
     // Classify against the UNPARTITIONED machine's tipping point: the
     // allocation question is "would this op saturate the whole datapath".
     let classifier = Classifier::new(machine.params.tipping_ai());
-    let assignment = allocate(cascade, machine, &classifier);
-
     let mapper = BlackboxMapper {
         budget: SearchBudget { samples: opts.samples, seed: opts.seed },
         threads: opts.threads,
     };
-    let mapped = mapper.map_cascade(cascade, machine, &assignment);
-    let sched = schedule(
-        cascade,
-        machine,
-        &mapped,
-        &ScheduleOptions { dynamic_bw: opts.dynamic_bw },
-    );
-    let stats = CascadeStats::aggregate(cascade, machine, &mapped, &sched);
+    let sched_opts = ScheduleOptions { dynamic_bw: opts.dynamic_bw };
+    // `Search` co-optimises the assignment with the scheduler and hands
+    // back the mapping results it probed with, so the final schedule
+    // reproduces the searched makespan exactly; the closed-form
+    // policies assign first and map once.
+    let (assignment, mapped) = match opts.alloc {
+        AllocPolicy::Search => {
+            allocator::search_allocation(cascade, machine, &classifier, &mapper, &sched_opts)
+        }
+        policy => {
+            let assignment = allocator::allocate_policy(policy, cascade, machine, &classifier);
+            let mapped = mapper.map_cascade(cascade, machine, &assignment);
+            (assignment, mapped)
+        }
+    };
+    let sched = schedule(cascade, machine, &mapped, &sched_opts);
+    let stats = CascadeStats::aggregate(cascade, machine, &mapped, &sched, opts.alloc);
     Ok(EvalResult { machine: machine.clone(), assignment, mapped, sched, stats })
 }
 
@@ -227,6 +250,61 @@ mod tests {
         let mut on = EvalOptions::default();
         on.contention = ContentionMode::Booked;
         assert_ne!(off.fingerprint(), on.fingerprint());
+    }
+
+    /// Cache safety for the allocation knob: `greedy` keeps the
+    /// pre-policy fingerprint bytes (old disk spills stay valid), and
+    /// every other policy gets a distinct fingerprint — the evaluator
+    /// cache can never serve a `greedy` result for `--alloc search`.
+    #[test]
+    fn fingerprint_distinguishes_alloc_policies() {
+        let base = EvalOptions::default();
+        assert_eq!(base.alloc, AllocPolicy::Greedy);
+        assert!(
+            !base.fingerprint().contains("|a"),
+            "greedy fingerprint must keep the legacy byte shape: {}",
+            base.fingerprint()
+        );
+        let mut fps = vec![base.fingerprint()];
+        for p in [AllocPolicy::RoundRobin, AllocPolicy::CriticalPath, AllocPolicy::Search] {
+            let mut o = EvalOptions::default();
+            o.alloc = p;
+            fps.push(o.fingerprint());
+        }
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "policies {i} and {j} share a fingerprint");
+            }
+        }
+    }
+
+    /// The policy knob flows through the whole pipeline: `search` never
+    /// reports a worse makespan than `greedy` on the same point, every
+    /// policy's stats carry its name + a full valid assignment, and the
+    /// searched stats' latency equals its own schedule (no drift
+    /// between the oracle and the final evaluation).
+    #[test]
+    fn alloc_policy_flows_through_evaluation() {
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let class = HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node());
+        let mut results = Vec::new();
+        for p in AllocPolicy::ALL {
+            let mut opts = EvalOptions { samples: 8, ..EvalOptions::default() };
+            opts.alloc = p;
+            let r = evaluate_cascade_on_config(&class, &HardwareParams::default(), &g, &opts)
+                .unwrap();
+            assert_eq!(r.stats.alloc_policy, p.name());
+            assert_eq!(r.stats.assignment, r.assignment);
+            assert_eq!(r.assignment.len(), g.ops.len());
+            assert_eq!(r.stats.latency_cycles, r.sched.makespan);
+            results.push((p, r.stats.latency_cycles));
+        }
+        let greedy = results.iter().find(|(p, _)| *p == AllocPolicy::Greedy).unwrap().1;
+        let search = results.iter().find(|(p, _)| *p == AllocPolicy::Search).unwrap().1;
+        assert!(
+            search <= greedy + 1e-9 * greedy,
+            "search makespan {search} worse than greedy {greedy}"
+        );
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use crate::arch::partition::HardwareParams;
 use crate::arch::taxonomy::{prior_works, HarpClass};
 use crate::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use crate::hhp::allocator::AllocPolicy;
 use crate::hhp::stats::CascadeStats;
 use crate::model::roofline::machine_rooflines;
 use crate::util::benchkit::{Figure, Series};
@@ -38,6 +39,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// bandwidth-fraction override). Any registered family — or a cascade
 /// loaded from a `--workload FILE` document — is a valid point.
 pub type EvalPoint = (WorkloadSpec, HarpClass, f64, Option<f64>);
+
+/// An evaluation point with an explicit allocation policy — what the
+/// `fig_alloc_ablation` driver fans out over [`Evaluator::warm_alloc`].
+pub type AllocEvalPoint = (WorkloadSpec, HarpClass, f64, AllocPolicy);
 
 /// Canonical fingerprint of one evaluation point — every knob that can
 /// change the result. The worker count is deliberately excluded:
@@ -150,7 +155,25 @@ impl Evaluator {
         dram_bw_bits: f64,
         bw_frac_low: Option<f64>,
     ) -> Arc<CascadeStats> {
-        let key = eval_key(&wl.cache_key(), class, dram_bw_bits, bw_frac_low, &self.opts);
+        self.eval_with(wl, class, dram_bw_bits, bw_frac_low, self.opts.alloc)
+    }
+
+    /// [`Evaluator::eval`] with an explicit allocation policy override —
+    /// what lets one evaluator sweep policies (`fig_alloc_ablation`)
+    /// while sharing cache entries with the policy-agnostic drivers:
+    /// the key includes the overridden fingerprint, so a `greedy` point
+    /// here IS the same cache entry fig6 warms.
+    pub fn eval_with(
+        &self,
+        wl: &WorkloadSpec,
+        class: &HarpClass,
+        dram_bw_bits: f64,
+        bw_frac_low: Option<f64>,
+        alloc: AllocPolicy,
+    ) -> Arc<CascadeStats> {
+        let mut opts = self.opts.clone();
+        opts.alloc = alloc;
+        let key = eval_key(&wl.cache_key(), class, dram_bw_bits, bw_frac_low, &opts);
         let cell = {
             let mut map = self.cache.lock().unwrap();
             map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
@@ -158,7 +181,6 @@ impl Evaluator {
         cell.get_or_init(|| {
             let cascade = wl.cascade();
             let params = HardwareParams { dram_bw_bits, ..HardwareParams::default() };
-            let mut opts = self.opts.clone();
             opts.bw_frac_low = bw_frac_low;
             let r = evaluate_cascade_on_config(class, &params, &cascade, &opts)
                 .expect("valid eval point");
@@ -176,6 +198,15 @@ impl Evaluator {
         parallel_map(points.len(), self.opts.threads, |i| {
             let (wl, class, bw, frac) = &points[i];
             self.eval(wl, class, *bw, *frac);
+        });
+    }
+
+    /// [`Evaluator::warm`] for policy-explicit points (the allocation
+    /// ablation's sweep axis).
+    pub fn warm_alloc(&self, points: &[AllocEvalPoint]) {
+        parallel_map(points.len(), self.opts.threads, |i| {
+            let (wl, class, bw, alloc) = &points[i];
+            self.eval_with(wl, class, *bw, None, *alloc);
         });
     }
 }
@@ -487,6 +518,60 @@ pub fn fig10_bw_partition(ev: &Evaluator) -> Figure {
     fig
 }
 
+/// The workload grid the allocation ablation sweeps: the paper's
+/// Table II transformers plus the MoE families — the mixed-reuse
+/// cascades where the op → unit assignment has the most room to move.
+fn alloc_ablation_specs() -> Vec<WorkloadSpec> {
+    let mut wls = registry::paper_specs();
+    for name in ["moe_prefill", "moe_decode"] {
+        wls.push(registry::by_name(name).expect("registered"));
+    }
+    wls
+}
+
+/// Allocation-policy ablation: speedup of every [`AllocPolicy`] over
+/// `greedy` for each (workload, taxonomy point) at the paper's primary
+/// bandwidth. One series per policy; values are
+/// `greedy latency / policy latency`, so `greedy` pins 1.0, a value
+/// above 1.0 means the policy beat the paper's fixed heuristic, and
+/// `search` is ≥ 1.0 by construction (it starts from greedy and keeps
+/// only strict improvements — a local optimum, so it may still trail
+/// another policy's row). Points fan out through
+/// [`Evaluator::warm_alloc`]; the `greedy` column shares cache entries
+/// with the fig6 grid.
+pub fn fig_alloc_ablation(ev: &Evaluator) -> Figure {
+    let classes = HarpClass::eval_points();
+    let wls = alloc_ablation_specs();
+    let mut points: Vec<AllocEvalPoint> = Vec::new();
+    for policy in AllocPolicy::ALL {
+        for wl in &wls {
+            for (_, class) in &classes {
+                points.push((wl.clone(), class.clone(), 2048.0, policy));
+            }
+        }
+    }
+    ev.warm_alloc(&points);
+
+    let mut fig = Figure::new(
+        "Allocation-policy ablation: speedup over greedy (policy × machine × workload)",
+        "greedy latency / policy latency (higher is better; greedy = 1)",
+    );
+    for policy in AllocPolicy::ALL {
+        let mut s = Series::new(policy.name());
+        for wl in &wls {
+            for (tag, class) in &classes {
+                let base = ev
+                    .eval_with(wl, class, 2048.0, None, AllocPolicy::Greedy)
+                    .latency_cycles;
+                let lat = ev.eval_with(wl, class, 2048.0, None, policy).latency_cycles;
+                s.push(&format!("{} ({tag}) {}", wl.name(), class.id()), base / lat);
+            }
+        }
+        fig.add(s);
+    }
+    fig
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -544,6 +629,33 @@ mod tests {
         let c = ev.eval(&wl, &class, 512.0, None);
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(ev.len(), 2);
+    }
+
+    /// The policy-explicit entry point shares cache cells with the
+    /// policy-agnostic one for the evaluator's own policy, and keys
+    /// other policies separately — a `greedy` result can never be
+    /// served for a `search` request.
+    #[test]
+    fn eval_with_policy_caches_separately_but_shares_default() {
+        let ev = Evaluator::new(EvalOptions { samples: 8, ..EvalOptions::default() });
+        let wl = WorkloadSpec::Transformer(transformer::bert_large());
+        let class = HarpClass::eval_points()[1].1.clone();
+        let a = ev.eval(&wl, &class, 2048.0, None);
+        let b = ev.eval_with(&wl, &class, 2048.0, None, AllocPolicy::Greedy);
+        assert!(Arc::ptr_eq(&a, &b), "default policy shares the eval() cache entry");
+        let c = ev.eval_with(&wl, &class, 2048.0, None, AllocPolicy::RoundRobin);
+        assert!(!Arc::ptr_eq(&a, &c), "a different policy is a different point");
+        assert_eq!(c.alloc_policy, "round_robin");
+        assert_eq!(ev.len(), 2);
+    }
+
+    #[test]
+    fn eval_key_distinguishes_alloc_policy() {
+        let class = HarpClass::eval_points()[0].1.clone();
+        let base = eval_key("bert", &class, 2048.0, None, &EvalOptions::default());
+        let mut o = EvalOptions::default();
+        o.alloc = AllocPolicy::Search;
+        assert_ne!(base, eval_key("bert", &class, 2048.0, None, &o));
     }
 
     #[test]

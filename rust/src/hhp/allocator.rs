@@ -1,15 +1,100 @@
-//! Reuse-based operation allocation (paper §III, §V-D).
+//! Operation → sub-accelerator allocation policies (paper §III, §V-D).
 //!
 //! Operations are classified high/low reuse and assigned to a
-//! sub-accelerator whose role accepts that class. When several
-//! sub-accelerators share a role (clustered cross-node, compound), the
-//! allocator balances accumulated MAC load greedily.
+//! sub-accelerator whose role accepts that class. *How* the ops spread
+//! over the units that share a role is a first-class search space
+//! (Herald, MOSAIC): [`AllocPolicy`] selects the policy, from the
+//! byte-stable greedy default up to a schedule-aware local search that
+//! replays the overlap scheduler as its cost oracle
+//! ([`ScheduleOracle`]).
+//!
+//! Every policy preserves the same validity contract: each op lands on
+//! a unit whose role accepts its reuse class, with the homogeneous
+//! fallback (no unit accepts the class ⇒ every unit is eligible)
+//! intact. `greedy` is bit-identical to the historical allocator, so
+//! default evaluations — and the committed goldens — never move.
 
 use crate::arch::partition::MachineConfig;
+use crate::hhp::scheduler::{ScheduleOptions, ScheduleOracle};
+use crate::mapper::blackbox::{BlackboxMapper, MappedOp, OpUnitCost};
+use crate::model::stats::OpStats;
 use crate::workload::cascade::Cascade;
-use crate::workload::intensity::Classifier;
+use crate::workload::intensity::{Classifier, ReuseClass};
 
-/// Assign each op of `cascade` to a sub-accelerator id.
+/// Allocation policy for the op → sub-accelerator assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllocPolicy {
+    /// Reuse-class + least-loaded (load weighted by compute roof). The
+    /// historical policy; byte-stable default.
+    #[default]
+    Greedy,
+    /// Rotate eligible units per reuse class in op order.
+    RoundRobin,
+    /// Longest op first, onto the eligible unit that finishes it
+    /// earliest under the load placed so far (LPT list scheduling on
+    /// the compute roofs).
+    CriticalPath,
+    /// Start from `greedy`, then schedule-aware local search: replay
+    /// the overlap scheduler per probe, repeatedly re-assigning the op
+    /// with the worst queue-delay/latency ratio, keeping strict
+    /// makespan improvements until a fixpoint or the move budget.
+    Search,
+}
+
+impl AllocPolicy {
+    pub const ALL: [AllocPolicy; 4] = [
+        AllocPolicy::Greedy,
+        AllocPolicy::RoundRobin,
+        AllocPolicy::CriticalPath,
+        AllocPolicy::Search,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocPolicy::Greedy => "greedy",
+            AllocPolicy::RoundRobin => "round_robin",
+            AllocPolicy::CriticalPath => "critical_path",
+            AllocPolicy::Search => "search",
+        }
+    }
+
+    /// Parse a CLI/config policy name. Unknown names error with the
+    /// full valid set — never a silent default.
+    pub fn parse(s: &str) -> Result<AllocPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Ok(AllocPolicy::Greedy),
+            "round_robin" | "round-robin" | "rr" => Ok(AllocPolicy::RoundRobin),
+            "critical_path" | "critical-path" | "cp" => Ok(AllocPolicy::CriticalPath),
+            "search" => Ok(AllocPolicy::Search),
+            other => Err(format!(
+                "unknown allocation policy '{other}' (valid: greedy, round_robin, \
+                 critical_path, search)"
+            )),
+        }
+    }
+}
+
+/// Accepted-move budget for [`AllocPolicy::Search`], as a function of
+/// cascade size: generous enough that the fixpoint, not the budget, is
+/// what normally terminates the search; the budget only bounds
+/// pathological move chains on huge cascades.
+pub fn search_move_budget(n_ops: usize) -> usize {
+    (4 * n_ops).max(16)
+}
+
+/// Units eligible for `class` on `machine`: the role-accepting set, or
+/// every unit when none accepts (homogeneous / role-less machines).
+pub fn eligible_units(machine: &MachineConfig, class: ReuseClass) -> Vec<usize> {
+    let candidates = machine.accelerators_for(class);
+    if candidates.is_empty() {
+        (0..machine.sub_accels.len()).collect()
+    } else {
+        candidates
+    }
+}
+
+/// Assign each op of `cascade` to a sub-accelerator id (the historical
+/// greedy policy — [`AllocPolicy::Greedy`]).
 pub fn allocate(cascade: &Cascade, machine: &MachineConfig, classifier: &Classifier) -> Vec<usize> {
     let mut load: Vec<f64> = vec![0.0; machine.sub_accels.len()];
     cascade
@@ -17,20 +102,18 @@ pub fn allocate(cascade: &Cascade, machine: &MachineConfig, classifier: &Classif
         .iter()
         .map(|op| {
             let class = classifier.classify(op);
-            let mut candidates = machine.accelerators_for(class);
-            if candidates.is_empty() {
-                // Homogeneous machine (or a role-less config): anything
-                // that accepts the op — fall back to all units.
-                candidates = (0..machine.sub_accels.len()).collect();
-            }
+            let candidates = eligible_units(machine, class);
             // Least-loaded candidate, weighted by its compute roof so a
-            // half-size cluster fills at half the rate.
+            // half-size cluster fills at half the rate. Ratios are
+            // finite non-negative (MachineConfig construction rejects
+            // zero-PE units), and `total_cmp` keeps the ordering total
+            // even if that invariant is ever violated upstream.
             let chosen = *candidates
                 .iter()
                 .min_by(|&&a, &&b| {
                     let la = load[a] / machine.sub_accels[a].spec.peak_macs() as f64;
                     let lb = load[b] / machine.sub_accels[b].spec.peak_macs() as f64;
-                    la.partial_cmp(&lb).unwrap()
+                    la.total_cmp(&lb)
                 })
                 .unwrap();
             load[chosen] += op.total_macs() as f64;
@@ -39,11 +122,211 @@ pub fn allocate(cascade: &Cascade, machine: &MachineConfig, classifier: &Classif
         .collect()
 }
 
+/// Round-robin policy: eligible units for each reuse class are cycled
+/// in op order, one counter per class.
+fn allocate_round_robin(
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+) -> Vec<usize> {
+    let mut counters = [0usize; 2]; // [High, Low]
+    cascade
+        .ops
+        .iter()
+        .map(|op| {
+            let class = classifier.classify(op);
+            let candidates = eligible_units(machine, class);
+            let c = match class {
+                ReuseClass::High => &mut counters[0],
+                ReuseClass::Low => &mut counters[1],
+            };
+            let chosen = candidates[*c % candidates.len()];
+            *c += 1;
+            chosen
+        })
+        .collect()
+}
+
+/// Critical-path (LPT) policy: ops in descending MAC count, each onto
+/// the eligible unit that finishes it earliest given the compute-roof
+/// load placed so far — the longest ops get first pick of the fastest
+/// units. Ties break on op index and unit id, so the assignment is
+/// deterministic.
+fn allocate_critical_path(
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+) -> Vec<usize> {
+    let n = cascade.ops.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        cascade.ops[b]
+            .total_macs()
+            .cmp(&cascade.ops[a].total_macs())
+            .then(a.cmp(&b))
+    });
+    let mut finish = vec![0.0f64; machine.sub_accels.len()];
+    let mut assignment = vec![0usize; n];
+    for &i in &order {
+        let op = &cascade.ops[i];
+        let class = classifier.classify(op);
+        let candidates = eligible_units(machine, class);
+        let work = op.total_macs() as f64;
+        // min_by keeps the FIRST minimum; candidates are in ascending
+        // unit-id order, so equal finish times pick the lower id.
+        let chosen = *candidates
+            .iter()
+            .min_by(|&&a, &&b| {
+                let fa = finish[a] + work / machine.sub_accels[a].spec.peak_macs() as f64;
+                let fb = finish[b] + work / machine.sub_accels[b].spec.peak_macs() as f64;
+                fa.total_cmp(&fb)
+            })
+            .unwrap();
+        finish[chosen] += work / machine.sub_accels[chosen].spec.peak_macs() as f64;
+        assignment[i] = chosen;
+    }
+    assignment
+}
+
+/// Dispatch the closed-form policies. [`AllocPolicy::Search`] needs the
+/// mapper and scheduler as its cost oracle — use
+/// [`search_allocation`] for it (this function falls back to its greedy
+/// starting point, which the search only ever improves on).
+pub fn allocate_policy(
+    policy: AllocPolicy,
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+) -> Vec<usize> {
+    match policy {
+        AllocPolicy::Greedy | AllocPolicy::Search => allocate(cascade, machine, classifier),
+        AllocPolicy::RoundRobin => allocate_round_robin(cascade, machine, classifier),
+        AllocPolicy::CriticalPath => allocate_critical_path(cascade, machine, classifier),
+    }
+}
+
+/// Relative tolerance for "strictly better makespan": mirrors the
+/// mapper's latency tie-break so float noise can never drive an
+/// accept/oscillate loop.
+fn strictly_better(candidate: f64, incumbent: f64) -> bool {
+    candidate < incumbent - 1e-9 * incumbent.max(1.0)
+}
+
+/// One cell of the cost matrix as the `&OpStats` the oracle replays.
+fn cost_at<'c>(costs: &'c [Vec<Option<OpUnitCost>>], i: usize, u: usize) -> &'c OpStats {
+    &costs[i][u].as_ref().expect("cost searched for every eligible unit").stats
+}
+
+/// The per-op `&OpStats` view of `assign` over the cost matrix — what
+/// [`ScheduleOracle::replay`] consumes per probe.
+fn cost_view<'c>(
+    costs: &'c [Vec<Option<OpUnitCost>>],
+    assign: &[usize],
+) -> Vec<&'c OpStats> {
+    assign.iter().enumerate().map(|(i, &u)| cost_at(costs, i, u)).collect()
+}
+
+/// [`AllocPolicy::Search`]: greedy start, then schedule-aware local
+/// search. Each round replays the scheduler on the current assignment,
+/// ranks ops by queue-delay/latency ratio (the ops losing the most time
+/// waiting for their unit), and tries moving the worst-queued op to
+/// each alternative eligible unit; the first strict makespan
+/// improvement is kept and the round restarts. Terminates at a fixpoint
+/// (no op improves) or after [`search_move_budget`] accepted moves.
+///
+/// Returns the assignment AND the per-op mapping results for it (drawn
+/// from the same cost matrix the oracle replayed), so the caller's
+/// final [`schedule`](crate::hhp::scheduler::schedule) reproduces the
+/// searched makespan exactly instead of re-searching the map space.
+pub fn search_allocation(
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+    mapper: &BlackboxMapper,
+    sched_opts: &ScheduleOptions,
+) -> (Vec<usize>, Vec<MappedOp>) {
+    let n = cascade.ops.len();
+    let mut assignment = allocate(cascade, machine, classifier);
+    let eligible: Vec<Vec<usize>> = cascade
+        .ops
+        .iter()
+        .map(|op| eligible_units(machine, classifier.classify(op)))
+        .collect();
+    let costs = mapper.map_units(cascade, machine, &eligible);
+
+    let mut oracle = ScheduleOracle::new(cascade, machine, sched_opts);
+    // One stats view kept in lockstep with `assignment`: probes swap a
+    // single entry in and out instead of rebuilding the O(n) vector.
+    let mut stats_view = cost_view(&costs, &assignment);
+    let mut best = oracle.replay(&assignment, &stats_view);
+
+    let budget = search_move_budget(n);
+    let mut moves = 0usize;
+    let mut ranked: Vec<usize> = (0..n).collect();
+    while moves < budget {
+        // Rank ops by queue-delay/latency ratio under the CURRENT
+        // assignment (the replay above / the accepted probe left the
+        // oracle's delay and latency buffers at exactly this state).
+        let delays = oracle.queue_delays().to_vec();
+        let lats = oracle.latencies().to_vec();
+        ranked.sort_by(|&a, &b| {
+            let ra = delays[a] / lats[a].max(1e-12);
+            let rb = delays[b] / lats[b].max(1e-12);
+            rb.total_cmp(&ra).then(a.cmp(&b))
+        });
+        let mut improved = false;
+        'outer: for &i in &ranked {
+            if eligible[i].len() < 2 {
+                continue;
+            }
+            let home = assignment[i];
+            for &u in &eligible[i] {
+                if u == home {
+                    continue;
+                }
+                assignment[i] = u;
+                stats_view[i] = cost_at(&costs, i, u);
+                let m = oracle.replay(&assignment, &stats_view);
+                if strictly_better(m, best) {
+                    best = m;
+                    moves += 1;
+                    improved = true;
+                    break 'outer;
+                }
+                assignment[i] = home;
+                stats_view[i] = cost_at(&costs, i, home);
+            }
+        }
+        if !improved {
+            break;
+        }
+        // An accepted probe was the oracle's LAST replay, so its
+        // delay/latency buffers already describe the new assignment —
+        // the next round ranks against fresh state without a re-replay.
+    }
+
+    let mapped = (0..n)
+        .map(|i| {
+            let c = costs[i][assignment[i]]
+                .as_ref()
+                .expect("cost searched for every eligible unit");
+            MappedOp {
+                op_index: i,
+                sub_accel: assignment[i],
+                stats: c.stats.clone(),
+                evaluated: c.evaluated,
+            }
+        })
+        .collect();
+    (assignment, mapped)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::partition::{HardwareParams, MachineConfig};
     use crate::arch::taxonomy::{ComputePlacement, HarpClass, HeterogeneityLoc};
+    use crate::mapper::search::SearchBudget;
     use crate::workload::einsum::{Phase, TensorOp};
     use crate::workload::transformer;
 
@@ -118,5 +401,151 @@ mod tests {
         assert!(a.contains(&1));
         assert!(a.contains(&2));
         assert!(!a.contains(&0));
+    }
+
+    #[test]
+    fn policy_names_parse_and_round_trip() {
+        for p in AllocPolicy::ALL {
+            assert_eq!(AllocPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(AllocPolicy::parse("round-robin").unwrap(), AllocPolicy::RoundRobin);
+        assert_eq!(AllocPolicy::parse("CP").unwrap(), AllocPolicy::CriticalPath);
+        let err = AllocPolicy::parse("optimal").unwrap_err();
+        for name in ["greedy", "round_robin", "critical_path", "search"] {
+            assert!(err.contains(name), "valid set missing '{name}': {err}");
+        }
+        assert_eq!(AllocPolicy::default(), AllocPolicy::Greedy);
+    }
+
+    #[test]
+    fn round_robin_cycles_eligible_units() {
+        let m = MachineConfig::build(
+            &HarpClass::new(
+                ComputePlacement::Hierarchical,
+                HeterogeneityLoc::Compound(vec![
+                    HeterogeneityLoc::cross_node(),
+                    HeterogeneityLoc::CrossDepth,
+                ]),
+            ),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        // Two low units (1, 2): four decode ops must alternate 1,2,1,2.
+        let mut g = Cascade::new("rr");
+        for i in 0..4 {
+            g.push(TensorOp::gemm(&format!("v{i}"), Phase::Decode, 1, 64, 64));
+        }
+        let a = allocate_policy(AllocPolicy::RoundRobin, &g, &m, &classifier());
+        assert_eq!(a, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn critical_path_gives_longest_op_first_pick() {
+        let m = MachineConfig::build(
+            &HarpClass::new(
+                ComputePlacement::Hierarchical,
+                HeterogeneityLoc::Compound(vec![
+                    HeterogeneityLoc::cross_node(),
+                    HeterogeneityLoc::CrossDepth,
+                ]),
+            ),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        // One huge decode op and three tiny ones on two low units: LPT
+        // takes the huge op first (it gets an empty unit) and the tiny
+        // ops then pile onto the OTHER unit, whose finish time stays
+        // below the huge op's.
+        let mut g = Cascade::new("lpt");
+        g.push(TensorOp::gemm("big", Phase::Decode, 4, 4096, 4096));
+        for i in 0..3 {
+            g.push(TensorOp::gemm(&format!("s{i}"), Phase::Decode, 1, 32, 32));
+        }
+        let a = allocate_policy(AllocPolicy::CriticalPath, &g, &m, &classifier());
+        let low = eligible_units(&m, ReuseClass::Low);
+        assert!(a.iter().all(|u| low.contains(u)), "decode ops stay on low units: {a:?}");
+        assert!(
+            a[1..].iter().all(|&u| u != a[0]),
+            "the longest op should run alone on its unit: {a:?}"
+        );
+        // Deterministic: ties break on op index / unit id, never on
+        // iteration order of a hash container.
+        let b = allocate_policy(AllocPolicy::CriticalPath, &g, &m, &classifier());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_policy_is_valid_on_paper_workload() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let cl = classifier();
+        for p in [AllocPolicy::Greedy, AllocPolicy::RoundRobin, AllocPolicy::CriticalPath] {
+            let a = allocate_policy(p, &g, &m, &cl);
+            assert_eq!(a.len(), g.ops.len());
+            for (i, &u) in a.iter().enumerate() {
+                let class = cl.classify(&g.ops[i]);
+                assert!(
+                    eligible_units(&m, class).contains(&u),
+                    "{}: op {i} on ineligible unit {u}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    /// The schedule-aware search never ends up above its greedy start —
+    /// the invariant the allocation-oracle suite extends to the
+    /// enumerated optimum — and its mapped ops agree with its
+    /// assignment.
+    #[test]
+    fn search_never_worse_than_greedy_start() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let cl = classifier();
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 10, seed: 3 });
+        let opts = ScheduleOptions::default();
+
+        let greedy = allocate(&g, &m, &cl);
+        let greedy_mapped = mapper.map_cascade(&g, &m, &greedy);
+        let greedy_makespan =
+            crate::hhp::scheduler::schedule(&g, &m, &greedy_mapped, &opts).makespan;
+
+        let (assignment, mapped) = search_allocation(&g, &m, &cl, &mapper, &opts);
+        assert_eq!(assignment.len(), g.ops.len());
+        for (i, mo) in mapped.iter().enumerate() {
+            assert_eq!(mo.op_index, i);
+            assert_eq!(mo.sub_accel, assignment[i]);
+            let class = cl.classify(&g.ops[i]);
+            assert!(eligible_units(&m, class).contains(&assignment[i]));
+        }
+        let searched = crate::hhp::scheduler::schedule(&g, &m, &mapped, &opts).makespan;
+        assert!(
+            searched <= greedy_makespan + 1e-9 * greedy_makespan,
+            "search ({searched}) worse than greedy ({greedy_makespan})"
+        );
+    }
+
+    /// On a single-unit machine the search is a no-op that returns the
+    /// greedy assignment (every eligible set is a singleton).
+    #[test]
+    fn search_on_homogeneous_machine_is_greedy() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::Homogeneous),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let cl = classifier();
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 8, seed: 1 });
+        let (a, _) = search_allocation(&g, &m, &cl, &mapper, &ScheduleOptions::default());
+        assert_eq!(a, allocate(&g, &m, &cl));
     }
 }

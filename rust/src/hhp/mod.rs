@@ -7,6 +7,6 @@ pub mod allocator;
 pub mod scheduler;
 pub mod stats;
 
-pub use allocator::allocate;
-pub use scheduler::{schedule, ScheduleOptions, ScheduleResult};
+pub use allocator::{allocate, AllocPolicy};
+pub use scheduler::{schedule, ScheduleOptions, ScheduleOracle, ScheduleResult};
 pub use stats::CascadeStats;

@@ -34,6 +34,7 @@
 
 use crate::arch::partition::MachineConfig;
 use crate::mapper::blackbox::MappedOp;
+use crate::model::stats::OpStats;
 use crate::workload::cascade::{Cascade, CascadeAdj};
 
 /// Scheduler knobs.
@@ -233,6 +234,214 @@ pub fn schedule(
     }
 
     ScheduleResult { makespan: now, intervals, busy }
+}
+
+/// Reusable scheduling cost oracle for the allocation-policy search
+/// ([`AllocPolicy::Search`](crate::hhp::allocator::AllocPolicy)).
+///
+/// [`schedule`] rebuilds the [`CascadeAdj`], the topological order, and
+/// the shared-node contention tables on every call — fine once per
+/// evaluation, wasteful when a local search probes hundreds of
+/// assignments of the SAME cascade on the SAME machine. The oracle
+/// builds those once and exposes [`ScheduleOracle::replay`], which runs
+/// the identical event-driven list-scheduling loop over reused buffers
+/// and returns the makespan. For any `(assignment, stats)` pair,
+/// `replay` is **bit-identical** to `schedule(..).makespan` with the
+/// same options (property-tested) — so a makespan the search accepted
+/// is exactly the makespan the final evaluation reports.
+///
+/// After a replay the oracle also exposes per-op queue delays (time an
+/// op sat ready but waiting for its assigned unit) and scheduled
+/// latencies — the signal the local search ranks its moves by.
+pub struct ScheduleOracle<'a> {
+    cascade: &'a Cascade,
+    machine: &'a MachineConfig,
+    opts: ScheduleOptions,
+    adj: CascadeAdj,
+    order: Vec<usize>,
+    contention_ctx: Option<crate::arch::partition::ContentionCtx>,
+    // Reused per replay:
+    lat: Vec<f64>,
+    prio: Vec<f64>,
+    remaining_preds: Vec<usize>,
+    ready: Vec<usize>,
+    scheduled: Vec<bool>,
+    running: Vec<Option<(usize, f64)>>,
+    sub_free_at: Vec<f64>,
+    busy_buf: Vec<bool>,
+    bw_buf: Vec<f64>,
+    start: Vec<f64>,
+    end: Vec<f64>,
+    ready_at: Vec<f64>,
+    delay: Vec<f64>,
+    sched_lat: Vec<f64>,
+}
+
+impl<'a> ScheduleOracle<'a> {
+    pub fn new(
+        cascade: &'a Cascade,
+        machine: &'a MachineConfig,
+        opts: &ScheduleOptions,
+    ) -> ScheduleOracle<'a> {
+        let n = cascade.ops.len();
+        let nsub = machine.sub_accels.len();
+        let adj = CascadeAdj::new(cascade);
+        let order = cascade.topo_order_with(&adj).expect("valid DAG");
+        let booked = machine.contention == crate::arch::topology::ContentionMode::Booked;
+        let contention_ctx =
+            if opts.dynamic_bw && booked { Some(machine.contention_ctx()) } else { None };
+        ScheduleOracle {
+            cascade,
+            machine,
+            opts: *opts,
+            adj,
+            order,
+            contention_ctx,
+            lat: vec![0.0; n],
+            prio: vec![0.0; n],
+            remaining_preds: vec![0; n],
+            ready: Vec::with_capacity(n),
+            scheduled: vec![false; n],
+            running: vec![None; nsub],
+            sub_free_at: vec![0.0; nsub],
+            busy_buf: vec![false; nsub],
+            bw_buf: Vec::new(),
+            start: vec![0.0; n],
+            end: vec![0.0; n],
+            ready_at: vec![0.0; n],
+            delay: vec![0.0; n],
+            sched_lat: vec![0.0; n],
+        }
+    }
+
+    /// Makespan of list-scheduling the cascade with op `i` on unit
+    /// `assignment[i]` at per-repetition cost `stats[i]` — the same
+    /// event loop as [`schedule`], over prebuilt adjacency/contention
+    /// tables and reused buffers, recording no intervals.
+    pub fn replay(&mut self, assignment: &[usize], stats: &[&OpStats]) -> f64 {
+        let n = self.cascade.ops.len();
+        assert_eq!(assignment.len(), n);
+        assert_eq!(stats.len(), n);
+        let nsub = self.machine.sub_accels.len();
+
+        for i in 0..n {
+            self.lat[i] = stats[i].cycles * self.cascade.ops[i].count as f64;
+        }
+        // Critical-path priorities, identical to `priorities()` but over
+        // the stored topological order.
+        for &i in self.order.iter().rev() {
+            let down =
+                self.adj.succs[i].iter().map(|&s| self.prio[s]).fold(0.0f64, f64::max);
+            self.prio[i] = self.lat[i] + down;
+        }
+
+        self.ready.clear();
+        for i in 0..n {
+            self.remaining_preds[i] = self.adj.preds[i].len();
+            if self.remaining_preds[i] == 0 {
+                self.ready.push(i);
+            }
+            self.scheduled[i] = false;
+            self.ready_at[i] = 0.0;
+        }
+        for s in 0..nsub {
+            self.running[s] = None;
+            self.sub_free_at[s] = 0.0;
+        }
+
+        let mut now = 0.0f64;
+        let mut completed = 0usize;
+        while completed < n {
+            let mut dispatched_any = true;
+            while dispatched_any {
+                dispatched_any = false;
+                for s in 0..nsub {
+                    if self.running[s].is_some() {
+                        continue;
+                    }
+                    let pick = self
+                        .ready
+                        .iter()
+                        .copied()
+                        .filter(|&i| !self.scheduled[i] && assignment[i] == s)
+                        .max_by(|&a, &b| self.prio[a].partial_cmp(&self.prio[b]).unwrap());
+                    if let Some(i) = pick {
+                        let lat = if self.opts.dynamic_bw {
+                            for (x, slot) in self.busy_buf.iter_mut().enumerate() {
+                                *slot = self.running[x].is_some() || x == s;
+                            }
+                            let cycles = if let Some(ctx) = &self.contention_ctx {
+                                self.machine.contended_boundary_bw_into(
+                                    ctx,
+                                    s,
+                                    &self.busy_buf,
+                                    &mut self.bw_buf,
+                                );
+                                stats[i].latency_with_boundary_bw(&self.bw_buf)
+                            } else {
+                                let my_bw = self.machine.dynamic_dram_bw(s, &self.busy_buf);
+                                stats[i].latency_with_dram_bw(my_bw)
+                            };
+                            cycles * self.cascade.ops[i].count as f64
+                        } else {
+                            self.lat[i]
+                        };
+                        let start = now.max(self.sub_free_at[s]);
+                        let end = start + lat;
+                        self.running[s] = Some((i, end));
+                        self.scheduled[i] = true;
+                        self.start[i] = start;
+                        self.end[i] = end;
+                        dispatched_any = true;
+                    }
+                }
+            }
+
+            let next_end = self
+                .running
+                .iter()
+                .flatten()
+                .map(|&(_, end)| end)
+                .fold(f64::INFINITY, f64::min);
+            if !next_end.is_finite() {
+                panic!("scheduler stalled: no runnable op at t={now}");
+            }
+            now = next_end;
+            for s in 0..nsub {
+                if let Some((i, end)) = self.running[s] {
+                    if end <= now + 1e-9 {
+                        self.running[s] = None;
+                        self.sub_free_at[s] = end;
+                        completed += 1;
+                        for &succ in &self.adj.succs[i] {
+                            self.remaining_preds[succ] -= 1;
+                            if self.remaining_preds[succ] == 0 {
+                                self.ready.push(succ);
+                                self.ready_at[succ] = end;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        for i in 0..n {
+            self.delay[i] = self.start[i] - self.ready_at[i];
+            self.sched_lat[i] = self.end[i] - self.start[i];
+        }
+        now
+    }
+
+    /// Per-op queue delay of the LAST replay: how long each op sat with
+    /// all dependencies met, waiting for its assigned unit.
+    pub fn queue_delays(&self) -> &[f64] {
+        &self.delay
+    }
+
+    /// Per-op scheduled latency of the LAST replay.
+    pub fn latencies(&self) -> &[f64] {
+        &self.sched_lat
+    }
 }
 
 #[cfg(test)]
@@ -464,6 +673,112 @@ mod tests {
         assert_eq!(stat.makespan, 400.0); // static booked partition
         let dyn_ = schedule(&g, &m, &mapped, &ScheduleOptions { dynamic_bw: true });
         assert!((dyn_.makespan - 100.0).abs() < 1e-9); // whole edge re-granted
+    }
+
+    /// The oracle's replay is bit-identical to `schedule().makespan`
+    /// for random DAGs × random assignments, in both the static and the
+    /// dynamic-bandwidth mode — the contract that lets the allocation
+    /// search trust its probes. One oracle is reused across every
+    /// replay, exercising the buffer reset paths.
+    #[test]
+    fn oracle_replay_matches_schedule_bit_exactly() {
+        use crate::util::rng::Rng;
+        let m = machine_het();
+        for seed in [1u64, 7, 42, 99] {
+            let mut rng = Rng::new(seed);
+            let n = 3 + rng.next_below(8);
+            let mut g = Cascade::new("r");
+            for i in 0..n {
+                g.push(TensorOp::gemm(&format!("o{i}"), Phase::Encoder, 8, 8, 8));
+            }
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.next_f64() < 0.3 {
+                        g.dep(i, j);
+                    }
+                }
+            }
+            let mapped: Vec<MappedOp> = (0..n)
+                .map(|i| {
+                    mapped_op(i, rng.next_below(2), 5.0 + rng.next_below(100) as f64)
+                })
+                .collect();
+            let assignment: Vec<usize> = mapped.iter().map(|mo| mo.sub_accel).collect();
+            let stats: Vec<&crate::model::stats::OpStats> =
+                mapped.iter().map(|mo| &mo.stats).collect();
+            for dynamic_bw in [false, true] {
+                let opts = ScheduleOptions { dynamic_bw };
+                let full = schedule(&g, &m, &mapped, &opts);
+                let mut oracle = ScheduleOracle::new(&g, &m, &opts);
+                // Twice on the same oracle: the second replay runs over
+                // reused (dirty) buffers and must agree.
+                assert_eq!(oracle.replay(&assignment, &stats), full.makespan);
+                assert_eq!(oracle.replay(&assignment, &stats), full.makespan);
+            }
+        }
+    }
+
+    /// Replay equivalence holds on booked-contention machines too (the
+    /// per-boundary grant path).
+    #[test]
+    fn oracle_replay_matches_schedule_on_booked_machine() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap()
+        .with_contention(crate::arch::topology::ContentionMode::Booked)
+        .unwrap();
+        let mut g = Cascade::new("bk");
+        for i in 0..4 {
+            g.push(TensorOp::gemm(&format!("o{i}"), Phase::Decode, 4, 64, 64));
+        }
+        g.dep(0, 2);
+        let mut mapped = Vec::new();
+        for (i, sub) in [(0usize, 1usize), (1, 2), (2, 1), (3, 2)] {
+            let mut stats = OpStats::new_empty();
+            stats.compute_cycles = 10.0;
+            stats.onchip_bound_cycles = 10.0;
+            stats.cycles = 40.0;
+            stats.boundary_words = vec![
+                (crate::arch::level::LevelKind::LLB, 200.0),
+                (crate::arch::level::LevelKind::DRAM, 400.0),
+            ];
+            stats.dram_words = 400.0;
+            mapped.push(MappedOp { op_index: i, sub_accel: sub, stats, evaluated: 0 });
+        }
+        let assignment: Vec<usize> = mapped.iter().map(|mo| mo.sub_accel).collect();
+        let stats: Vec<&OpStats> = mapped.iter().map(|mo| &mo.stats).collect();
+        for dynamic_bw in [false, true] {
+            let opts = ScheduleOptions { dynamic_bw };
+            let full = schedule(&g, &m, &mapped, &opts);
+            let mut oracle = ScheduleOracle::new(&g, &m, &opts);
+            assert_eq!(oracle.replay(&assignment, &stats), full.makespan);
+        }
+    }
+
+    /// Queue delays: two independent ops forced onto one unit — the
+    /// second waits exactly the first's latency; the op on the idle
+    /// unit waits nothing.
+    #[test]
+    fn oracle_queue_delays_measure_unit_waiting() {
+        let m = machine_het();
+        let mut g = Cascade::new("qd");
+        for name in ["a", "b", "c"] {
+            g.push(TensorOp::gemm(name, Phase::Encoder, 4, 4, 4));
+        }
+        let mapped =
+            vec![mapped_op(0, 0, 100.0), mapped_op(1, 0, 50.0), mapped_op(2, 1, 30.0)];
+        let assignment = vec![0, 0, 1];
+        let stats: Vec<&OpStats> = mapped.iter().map(|mo| &mo.stats).collect();
+        let mut oracle = ScheduleOracle::new(&g, &m, &ScheduleOptions::default());
+        let makespan = oracle.replay(&assignment, &stats);
+        assert_eq!(makespan, 150.0);
+        let d = oracle.queue_delays();
+        assert_eq!(d[0], 0.0); // dispatched at t=0 (higher priority)
+        assert_eq!(d[1], 100.0); // waited for unit 0
+        assert_eq!(d[2], 0.0); // alone on unit 1
+        assert_eq!(oracle.latencies(), &[100.0, 50.0, 30.0]);
     }
 
     #[test]

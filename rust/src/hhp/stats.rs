@@ -2,6 +2,7 @@
 
 use crate::arch::level::LevelKind;
 use crate::arch::partition::{MachineConfig, Role};
+use crate::hhp::allocator::AllocPolicy;
 use crate::hhp::scheduler::ScheduleResult;
 use crate::mapper::blackbox::MappedOp;
 use crate::util::json::Json;
@@ -47,6 +48,14 @@ pub struct CascadeStats {
     /// id order. Reported in every mode — under `contention: off` it
     /// quantifies how much double-booking the run tolerated.
     pub node_contention: Vec<NodeContentionStats>,
+    /// Name of the allocation policy that produced `assignment`
+    /// (`"greedy"` is the byte-stable default).
+    pub alloc_policy: &'static str,
+    /// Per-op sub-accelerator assignment, in op order. Serialized (with
+    /// `alloc_policy`) only for non-default policies so `greedy`
+    /// documents keep their pre-policy-engine bytes; documents loaded
+    /// from older caches report the default policy and an empty vector.
+    pub assignment: Vec<usize>,
 }
 
 /// Occupancy of one shared memory-tree node over the schedule.
@@ -126,12 +135,15 @@ impl CascadeStats {
         self.energy_pj - self.offchip_energy_pj
     }
 
-    /// Aggregate mapped-op stats + schedule into cascade stats.
+    /// Aggregate mapped-op stats + schedule into cascade stats. The
+    /// per-op assignment is read back from `mapped` (op order), and
+    /// `alloc` records which policy produced it.
     pub fn aggregate(
         cascade: &Cascade,
         machine: &MachineConfig,
         mapped: &[MappedOp],
         sched: &ScheduleResult,
+        alloc: AllocPolicy,
     ) -> CascadeStats {
         let mut energy_by_level: HashMap<LevelKind, f64> = HashMap::new();
         let mut onchip_energy_by_role: HashMap<&'static str, f64> = HashMap::new();
@@ -197,6 +209,10 @@ impl CascadeStats {
             });
         }
 
+        let mut assignment = vec![0usize; cascade.ops.len()];
+        for m in mapped {
+            assignment[m.op_index] = m.sub_accel;
+        }
         let busy_fraction =
             (0..machine.sub_accels.len()).map(|s| sched.busy_fraction(s)).collect();
         CascadeStats {
@@ -215,6 +231,8 @@ impl CascadeStats {
             utilization_timeline: sched.utilization_timeline(machine, 48),
             energy_by_phase,
             node_contention,
+            alloc_policy: alloc.name(),
+            assignment,
         }
     }
 
@@ -257,10 +275,21 @@ impl CascadeStats {
                 phases = phases.with(p, *v);
             }
         }
-        Json::obj()
+        let mut j = Json::obj()
             .with("workload", self.workload.as_str())
-            .with("machine", self.machine.as_str())
-            .with("latency_cycles", self.latency_cycles)
+            .with("machine", self.machine.as_str());
+        // The allocation keys appear ONLY for non-default policies:
+        // `greedy` documents are byte-identical to those written before
+        // the policy engine existed, so the committed goldens and old
+        // disk-spilled caches are untouched (the from_json inverse
+        // treats the absent keys as the default).
+        if self.alloc_policy != AllocPolicy::Greedy.name() {
+            j = j.with("alloc", self.alloc_policy).with(
+                "assignment",
+                Json::Arr(self.assignment.iter().map(|&s| Json::Num(s as f64)).collect()),
+            );
+        }
+        j.with("latency_cycles", self.latency_cycles)
             .with("energy_pj", self.energy_pj)
             .with("mults_per_joule", self.mults_per_joule())
             .with("macs", self.macs)
@@ -333,6 +362,19 @@ impl CascadeStats {
             None => Vec::new(),
         };
 
+        // Absent on `greedy` documents (and everything written before
+        // the allocation-policy engine): the default policy with no
+        // recorded assignment. A present-but-unknown policy name is a
+        // malformed document (cache miss), not a silent default.
+        let alloc_policy = match j.get("alloc") {
+            Some(v) => AllocPolicy::parse(v.as_str()?).ok()?.name(),
+            None => AllocPolicy::Greedy.name(),
+        };
+        let assignment = match j.get("assignment").and_then(|v| v.as_arr()) {
+            Some(items) => items.iter().map(|v| v.as_usize()).collect::<Option<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+
         Some(CascadeStats {
             workload: j.get("workload")?.as_str()?.to_string(),
             machine: j.get("machine")?.as_str()?.to_string(),
@@ -349,6 +391,8 @@ impl CascadeStats {
             utilization_timeline: arr_field("utilization_timeline")?,
             energy_by_phase,
             node_contention,
+            alloc_policy,
+            assignment,
         })
     }
 }
@@ -394,7 +438,7 @@ mod tests {
         let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 40, seed: 1 });
         let mapped = mapper.map_cascade(&g, &machine, &assign);
         let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
-        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched);
+        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched, AllocPolicy::Greedy);
 
         assert!(stats.latency_cycles > 0.0);
         assert!(stats.energy_pj > 0.0);
@@ -424,7 +468,7 @@ mod tests {
         let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 20, seed: 1 });
         let mapped = mapper.map_cascade(&g, &machine, &assign);
         let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
-        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched);
+        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched, AllocPolicy::Greedy);
 
         let text = stats.to_json().to_string_pretty();
         let back = CascadeStats::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -443,6 +487,34 @@ mod tests {
         assert_eq!(back.busy_fraction, stats.busy_fraction);
         assert_eq!(back.utilization_timeline, stats.utilization_timeline);
         assert_eq!(back.node_contention, stats.node_contention);
+
+        // Greedy documents carry NO allocation keys (pre-policy-engine
+        // byte shape) and load back as the default policy.
+        assert!(stats.to_json().get("alloc").is_none());
+        assert!(stats.to_json().get("assignment").is_none());
+        assert_eq!(back.alloc_policy, "greedy");
+        assert!(back.assignment.is_empty());
+
+        // Non-default policies serialize their name + assignment and
+        // round-trip exactly.
+        let mut searched = stats.clone();
+        searched.alloc_policy = AllocPolicy::Search.name();
+        let text2 = searched.to_json().to_string_pretty();
+        let back2 = CascadeStats::from_json(&Json::parse(&text2).unwrap()).unwrap();
+        assert_eq!(back2.alloc_policy, "search");
+        assert_eq!(back2.assignment, searched.assignment);
+        assert!(!back2.assignment.is_empty());
+
+        // An unknown policy name is a malformed document (cache miss).
+        let mut bad = searched.to_json();
+        if let Json::Obj(pairs) = &mut bad {
+            for (k, v) in pairs.iter_mut() {
+                if k == "alloc" {
+                    *v = Json::Str("optimal".into());
+                }
+            }
+        }
+        assert!(CascadeStats::from_json(&bad).is_none());
 
         // Malformed documents are a cache miss, not a panic.
         assert!(CascadeStats::from_json(&Json::parse("{}").unwrap()).is_none());
@@ -487,7 +559,7 @@ mod tests {
         let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 20, seed: 1 });
         let mapped = mapper.map_cascade(&g, &machine, &assign);
         let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
-        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched);
+        let stats = CascadeStats::aggregate(&g, &machine, &mapped, &sched, AllocPolicy::Greedy);
 
         assert_eq!(stats.node_contention.len(), 1); // only the root is shared
         let root = &stats.node_contention[0];

@@ -31,7 +31,9 @@
 //! - [`mapper`] — map-space enumeration and the seeded black-box
 //!   search, run as a batched generate → parallel-evaluate → reduce
 //!   pipeline that is bit-identical for every worker count.
-//! - [`hhp`] — the paper's wrapper: operation allocation, overlap
+//! - [`hhp`] — the paper's wrapper: operation allocation (a searchable
+//!   policy space — greedy/round-robin/critical-path/schedule-aware
+//!   local search over a reusable scheduler replay oracle), overlap
 //!   scheduling with shared-bandwidth contention, cascade statistics.
 //! - [`coordinator`] — experiment configs, sweeps, figure drivers, and
 //!   the concurrent cross-driver evaluation cache (memoised by a

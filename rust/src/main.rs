@@ -74,9 +74,11 @@ fn usage() -> String {
                                 (or --file F to validate + print a cascade JSON)\n\
        eval [--config F | --workload W|FILE (--machine M | --topology F)] [--bw BITS]\n\
                                 [--samples N] [--threads N] [--contention off|on]\n\
+                                [--alloc greedy|round_robin|critical_path|search]\n\
                                 (--model NAME is the explicit built-in form of --workload)\n\
-       figures [--samples N] [--threads N] [--cache FILE]\n\
+       figures [--samples N] [--threads N] [--cache FILE] [--alloc POLICY]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
+                                + the allocation-policy ablation\n\
        roofline                 print the Fig 1 roofline partitioning\n\
        sweep --workload W       DRAM bandwidth × machine sweep\n\
        validate [--artifacts D] execute AOT artifacts through PJRT + check numerics"
@@ -251,6 +253,12 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             "shared-node contention: off (double-book shared nodes, historical) | on \
              (book capacity slices + arbitrate shared edges)",
         )
+        .opt(
+            "alloc",
+            Some("greedy"),
+            "op → sub-accelerator allocation policy: greedy (paper heuristic) | \
+             round_robin | critical_path | search (schedule-aware local search)",
+        )
         .flag("dynamic-bw", "re-grant idle units' bandwidth (ablation)")
         .flag("json", "emit machine-readable JSON");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
@@ -264,6 +272,16 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             return Err(
                 "--config supplies the evaluation options; set \"contention\" in the \
                  config file instead of passing --contention"
+                    .into(),
+            );
+        }
+        // --alloc follows --contention's rule: it has a default, so
+        // explicit use alongside --config must be a loud error, not a
+        // silently ignored knob.
+        if argv.iter().any(|a| a == "--alloc" || a.starts_with("--alloc=")) {
+            return Err(
+                "--config supplies the evaluation options; set \"alloc\" in the \
+                 config file instead of passing --alloc"
                     .into(),
             );
         }
@@ -331,6 +349,7 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
     opts.dynamic_bw = args.has_flag("dynamic-bw");
     opts.contention =
         harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
+    opts.alloc = harp::hhp::allocator::AllocPolicy::parse(args.get("alloc").unwrap())?;
     if let Some(n) = threads {
         opts.threads = n;
     }
@@ -364,6 +383,23 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
     println!("{}", r.machine.describe());
     println!("{}", cascade.describe());
     let mut t = Table::new(&["metric", "value"]);
+    t.row(&["alloc policy".into(), r.stats.alloc_policy.to_string()]);
+    // Per-op assignment, compact: ops grouped by their unit.
+    for (s, sub) in r.machine.sub_accels.iter().enumerate() {
+        let ops: Vec<&str> = r
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|&(_, &u)| u == s)
+            .map(|(i, _)| cascade.ops[i].name.as_str())
+            .collect();
+        if !ops.is_empty() {
+            t.row(&[
+                format!("ops on [{} {}]", sub.spec.name, sub.role.name()),
+                format!("{} op(s): {}", ops.len(), truncate_list(&ops, 72)),
+            ]);
+        }
+    }
     t.row(&["latency (cycles)".into(), format!("{:.3e}", r.stats.latency_cycles)]);
     t.row(&["energy (µJ)".into(), format!("{:.3}", r.stats.energy_pj * 1e-6)]);
     t.row(&["mults/joule".into(), format!("{:.3e}", r.stats.mults_per_joule())]);
@@ -378,6 +414,22 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Join names with commas, cutting off (with an ellipsis) once the
+/// rendered list would exceed `max` characters.
+fn truncate_list(names: &[&str], max: usize) -> String {
+    let mut out = String::new();
+    for (i, n) in names.iter().enumerate() {
+        let sep = if i == 0 { "" } else { ", " };
+        if out.len() + sep.len() + n.len() > max {
+            out.push_str(if i == 0 { "…" } else { ", …" });
+            break;
+        }
+        out.push_str(sep);
+        out.push_str(n);
+    }
+    out
+}
+
 fn cmd_figures(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("harp figures", "regenerate the paper figures")
         .opt("samples", Some("400"), "mapper samples per unique shape")
@@ -387,6 +439,12 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
             "contention",
             Some("off"),
             "shared-node contention model (off reproduces the paper figures)",
+        )
+        .opt(
+            "alloc",
+            Some("greedy"),
+            "allocation policy for the paper-figure drivers (greedy reproduces the \
+             paper; the ablation figure always sweeps every policy)",
         );
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let mut opts = EvalOptions {
@@ -395,6 +453,7 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     };
     opts.contention =
         harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
+    opts.alloc = harp::hhp::allocator::AllocPolicy::parse(args.get("alloc").unwrap())?;
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
     }
@@ -420,6 +479,7 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     figures::fig8_mults_per_joule(&ev).emit("fig8_mults_per_joule");
     figures::fig9_subaccel_energy(&ev).emit("fig9_subaccel_energy");
     figures::fig10_bw_partition(&ev).emit("fig10_bw_partition");
+    figures::fig_alloc_ablation(&ev).emit("fig_alloc_ablation");
     if let Err(e) = ev.persist() {
         eprintln!("warn: could not persist evaluation cache: {e}");
     }
@@ -440,7 +500,12 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         )
         .opt("samples", Some("200"), "mapper samples per unique shape")
         .opt("threads", None, "worker threads (default: HARP_THREADS or core count)")
-        .opt("contention", Some("off"), "shared-node contention model (off | on)");
+        .opt("contention", Some("off"), "shared-node contention model (off | on)")
+        .opt(
+            "alloc",
+            Some("greedy"),
+            "allocation policy (greedy | round_robin | critical_path | search)",
+        );
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let wl = registry::resolve(args.get("workload").unwrap())?;
     let cascade = wl.cascade();
@@ -450,6 +515,7 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     };
     opts.contention =
         harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
+    opts.alloc = harp::hhp::allocator::AllocPolicy::parse(args.get("alloc").unwrap())?;
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
     }

@@ -24,6 +24,16 @@ pub struct MappedOp {
     pub evaluated: usize,
 }
 
+/// Best-mapping cost of one op on one CANDIDATE unit — a cell of the
+/// allocation search's cost matrix ([`BlackboxMapper::map_units`]).
+#[derive(Debug, Clone)]
+pub struct OpUnitCost {
+    /// Stats for ONE repetition on that unit.
+    pub stats: OpStats,
+    /// Mapper search metadata (candidates evaluated).
+    pub evaluated: usize,
+}
+
 /// Black-box mapper with a shape-level cache.
 pub struct BlackboxMapper {
     pub budget: SearchBudget,
@@ -92,6 +102,56 @@ impl BlackboxMapper {
             })
             .collect()
     }
+
+    /// Map every op of `cascade` on EVERY candidate unit in
+    /// `units_per_op[i]` — the allocation search's cost matrix. Entry
+    /// `[i][u]` is `Some` exactly when `u ∈ units_per_op[i]`.
+    ///
+    /// The search pipeline is [`map_cascade`](BlackboxMapper::map_cascade)'s:
+    /// unique (shape fingerprint, unit) pairs are searched once each,
+    /// concurrently on the shared pool, then scattered back — so a cell
+    /// is bit-identical to what `map_cascade` would produce for an
+    /// assignment placing that op on that unit, and the whole matrix is
+    /// thread-count invariant.
+    pub fn map_units(
+        &self,
+        cascade: &Cascade,
+        machine: &MachineConfig,
+        units_per_op: &[Vec<usize>],
+    ) -> Vec<Vec<Option<OpUnitCost>>> {
+        assert_eq!(units_per_op.len(), cascade.ops.len());
+        let nsub = machine.sub_accels.len();
+        let mut group_keys: Vec<(u64, usize)> = Vec::new();
+        let mut group_rep: Vec<usize> = Vec::new(); // representative op per group
+        let mut seen: HashMap<(u64, usize), usize> = HashMap::new();
+        for (i, op) in cascade.ops.iter().enumerate() {
+            let fp = shape_fingerprint(op);
+            for &u in &units_per_op[i] {
+                assert!(u < nsub, "op {i}: candidate unit {u} out of range");
+                seen.entry((fp, u)).or_insert_with(|| {
+                    group_keys.push((fp, u));
+                    group_rep.push(i);
+                    group_keys.len() - 1
+                });
+            }
+        }
+        let results: Vec<SearchResult> = parallel_map(group_keys.len(), self.threads, |g| {
+            let (_, sub) = group_keys[g];
+            let op = &cascade.ops[group_rep[g]];
+            search_best_threaded(op, &machine.sub_accels[sub].spec, &self.budget, self.threads)
+        });
+        let mut out: Vec<Vec<Option<OpUnitCost>>> =
+            (0..cascade.ops.len()).map(|_| vec![None; nsub]).collect();
+        for (i, op) in cascade.ops.iter().enumerate() {
+            let fp = shape_fingerprint(op);
+            for &u in &units_per_op[i] {
+                let r = &results[seen[&(fp, u)]];
+                out[i][u] =
+                    Some(OpUnitCost { stats: r.stats.clone(), evaluated: r.evaluated });
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +199,33 @@ mod tests {
         // cached search must give identical stats.
         assert_eq!(mapped[0].stats.cycles, mapped[1].stats.cycles);
         assert_eq!(mapped[0].stats.energy_pj, mapped[1].stats.energy_pj);
+    }
+
+    /// The cost matrix agrees cell-for-cell with what `map_cascade`
+    /// produces when an assignment places the op on that unit — the
+    /// contract the allocation search relies on so its searched
+    /// makespan carries over to the final evaluation exactly.
+    #[test]
+    fn map_units_cells_match_map_cascade() {
+        let g = small_cascade();
+        let m = machine();
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 30, seed: 5 });
+        let units: Vec<Vec<usize>> = vec![vec![0, 1]; g.ops.len()];
+        let costs = mapper.map_units(&g, &m, &units);
+        assert_eq!(costs.len(), g.ops.len());
+        for u in [0usize, 1] {
+            let assignment = vec![u; g.ops.len()];
+            let mapped = mapper.map_cascade(&g, &m, &assignment);
+            for (i, mo) in mapped.iter().enumerate() {
+                let cell = costs[i][u].as_ref().expect("candidate unit populated");
+                assert_eq!(cell.stats.cycles, mo.stats.cycles, "op {i} unit {u}");
+                assert_eq!(cell.stats.energy_pj, mo.stats.energy_pj, "op {i} unit {u}");
+                assert_eq!(cell.evaluated, mo.evaluated);
+            }
+        }
+        // Units outside the candidate set stay empty.
+        let partial = mapper.map_units(&g, &m, &vec![vec![1]; g.ops.len()]);
+        assert!(partial.iter().all(|row| row[0].is_none() && row[1].is_some()));
     }
 
     #[test]

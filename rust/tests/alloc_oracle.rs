@@ -1,0 +1,220 @@
+//! Allocation-oracle suite: the `search` policy is squeezed between
+//! its greedy starting point and the brute-force enumerated optimum on
+//! machines small enough to enumerate (≤ 6 ops × ≤ 3 units), and every
+//! policy is property-tested for assignment validity on random
+//! cascades across ALL 16 taxonomy points. The determinism half pins
+//! each policy's full stats document across worker counts.
+
+use harp::arch::partition::{HardwareParams, MachineConfig};
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::hhp::allocator::{
+    allocate, allocate_policy, eligible_units, search_allocation, AllocPolicy,
+};
+use harp::hhp::scheduler::{schedule, ScheduleOptions, ScheduleOracle};
+use harp::mapper::blackbox::BlackboxMapper;
+use harp::mapper::search::SearchBudget;
+use harp::model::stats::OpStats;
+use harp::util::rng::Rng;
+use harp::workload::cascade::Cascade;
+use harp::workload::einsum::{Phase, TensorOp};
+use harp::workload::intensity::Classifier;
+
+/// A random DAG of ≤ `n` small GEMMs with mixed phases (so both reuse
+/// classes appear) and random forward edges.
+fn random_cascade(rng: &mut Rng, n: usize) -> Cascade {
+    let mut g = Cascade::new("oracle");
+    for i in 0..n {
+        let phase = match rng.next_below(3) {
+            0 => Phase::Decode,
+            1 => Phase::Prefill,
+            _ => Phase::Encoder,
+        };
+        let m = 1u64 << rng.next_below(7);
+        let nn = 8u64 << rng.next_below(5);
+        let k = 8u64 << rng.next_below(5);
+        g.push(TensorOp::gemm(&format!("o{i}"), phase, m, nn, k));
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.next_f64() < 0.35 {
+                g.dep(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Cartesian product of the per-op eligible sets.
+fn enumerate_assignments(eligible: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = vec![Vec::new()];
+    for options in eligible {
+        let mut next = Vec::with_capacity(out.len() * options.len());
+        for prefix in &out {
+            for &u in options {
+                let mut a = prefix.clone();
+                a.push(u);
+                next.push(a);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// The oracle contract: on every enumerable case,
+/// `optimum ≤ search ≤ greedy` — the local search never loses to its
+/// starting point and never claims to beat the exhaustive optimum. The
+/// makespans are measured through the REAL `schedule()` on the mapped
+/// ops each policy hands back, so the bound holds for what evaluations
+/// actually report, not just for the oracle's internal replays.
+#[test]
+fn search_bounded_by_greedy_and_enumerated_optimum() {
+    let budget = SearchBudget { samples: 6, seed: 0xA110C };
+    let mapper = BlackboxMapper { budget, threads: 2 };
+    // leaf+xnode is the degenerate case (one eligible unit per class —
+    // search must equal greedy must equal the optimum); hier+xnode has
+    // two IDENTICAL low units (symmetric choices); hier+compound has
+    // two DIFFERENT low architectures, where the optimum genuinely
+    // depends on which op lands where.
+    for machine_id in ["leaf+xnode", "hier+xnode", "hier+compound"] {
+        let machine = MachineConfig::build(
+            &HarpClass::from_id(machine_id).unwrap(),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        assert!(machine.sub_accels.len() <= 3);
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let mut rng = Rng::new(0x0_2ACE ^ machine.sub_accels.len() as u64);
+        for case in 0..4 {
+            let g = random_cascade(&mut rng, 3 + rng.next_below(4)); // 3..=6 ops
+            let eligible: Vec<Vec<usize>> = g
+                .ops
+                .iter()
+                .map(|op| eligible_units(&machine, classifier.classify(op)))
+                .collect();
+            let costs = mapper.map_units(&g, &machine, &eligible);
+            for dynamic_bw in [false, true] {
+                let opts = ScheduleOptions { dynamic_bw };
+
+                // Brute-force optimum over every eligible assignment.
+                let mut oracle = ScheduleOracle::new(&g, &machine, &opts);
+                let mut optimum = f64::INFINITY;
+                let all = enumerate_assignments(&eligible);
+                assert!(!all.is_empty() && all.len() <= 3usize.pow(6));
+                for assignment in &all {
+                    let stats: Vec<&OpStats> = assignment
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &u)| &costs[i][u].as_ref().unwrap().stats)
+                        .collect();
+                    optimum = optimum.min(oracle.replay(assignment, &stats));
+                }
+
+                // Greedy through the real pipeline.
+                let greedy = allocate(&g, &machine, &classifier);
+                let greedy_mapped = mapper.map_cascade(&g, &machine, &greedy);
+                let greedy_makespan = schedule(&g, &machine, &greedy_mapped, &opts).makespan;
+
+                // Search through the real pipeline.
+                let (_, searched_mapped) =
+                    search_allocation(&g, &machine, &classifier, &mapper, &opts);
+                let searched = schedule(&g, &machine, &searched_mapped, &opts).makespan;
+
+                let eps = 1e-9 * greedy_makespan.max(1.0);
+                assert!(
+                    searched <= greedy_makespan + eps,
+                    "{machine_id} case {case} dyn={dynamic_bw}: search {searched} \
+                     worse than greedy {greedy_makespan}"
+                );
+                assert!(
+                    searched >= optimum - eps,
+                    "{machine_id} case {case} dyn={dynamic_bw}: search {searched} \
+                     below the enumerated optimum {optimum}"
+                );
+                assert!(
+                    optimum <= greedy_makespan + eps,
+                    "{machine_id} case {case}: greedy {greedy_makespan} below the \
+                     optimum {optimum} — the enumeration is broken"
+                );
+            }
+        }
+    }
+}
+
+/// Validity property over the WHOLE taxonomy: on every one of the 16
+/// generatable points, every policy assigns every op of a random
+/// cascade to a unit whose role accepts the op's reuse class (with the
+/// homogeneous fallback intact — when no unit accepts a class, any
+/// unit is eligible).
+#[test]
+fn every_policy_yields_valid_assignments_on_all_taxonomy_points() {
+    let params = HardwareParams::default();
+    let mapper =
+        BlackboxMapper { budget: SearchBudget { samples: 4, seed: 0x7E57 }, threads: 2 };
+    for class in HarpClass::all_points() {
+        let machine = MachineConfig::build(&class, &params).unwrap();
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let mut rng = Rng::new(0xFACE ^ machine.sub_accels.len() as u64);
+        for _ in 0..2 {
+            let g = random_cascade(&mut rng, 3 + rng.next_below(4));
+            let check = |assignment: &[usize], policy: &str| {
+                assert_eq!(assignment.len(), g.ops.len(), "{class}/{policy}");
+                for (i, &u) in assignment.iter().enumerate() {
+                    let cl = classifier.classify(&g.ops[i]);
+                    assert!(
+                        eligible_units(&machine, cl).contains(&u),
+                        "{class}/{policy}: op {i} ({cl:?}) on ineligible unit {u}"
+                    );
+                }
+            };
+            for p in [AllocPolicy::Greedy, AllocPolicy::RoundRobin, AllocPolicy::CriticalPath]
+            {
+                check(&allocate_policy(p, &g, &machine, &classifier), p.name());
+            }
+            let (a, mapped) = search_allocation(
+                &g,
+                &machine,
+                &classifier,
+                &mapper,
+                &ScheduleOptions::default(),
+            );
+            check(&a, "search");
+            for (i, mo) in mapped.iter().enumerate() {
+                assert_eq!(mo.sub_accel, a[i], "{class}: mapped ops disagree");
+            }
+        }
+    }
+}
+
+/// Determinism: every policy's full stats document is bit-identical
+/// across worker counts — the parallel cost-matrix fan-out and the
+/// serial local search cannot let `HARP_THREADS` leak into results.
+#[test]
+fn every_policy_bit_identical_across_thread_counts() {
+    let g = harp::workload::transformer::decoder_cascade(
+        &harp::workload::transformer::llama2(),
+    );
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    for policy in AllocPolicy::ALL {
+        let run = |threads: usize| {
+            let mut opts = EvalOptions { samples: 8, ..EvalOptions::default() };
+            opts.alloc = policy;
+            opts.threads = threads;
+            evaluate_cascade_on_config(&class, &HardwareParams::default(), &g, &opts)
+                .unwrap()
+                .stats
+                .to_json()
+                .to_string_pretty()
+        };
+        let serial = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                serial,
+                run(threads),
+                "{}: stats differ between 1 and {threads} threads",
+                policy.name()
+            );
+        }
+    }
+}

@@ -67,6 +67,70 @@ fn builtin_vs_json_cascades_evaluate_bit_identically() {
     }
 }
 
+/// Allocation-policy back-compat: under the default `alloc: greedy`,
+/// every registered built-in's stats document keeps the EXACT key set
+/// and order it had before the allocation-policy engine existed — no
+/// `alloc`/`assignment` keys — so the committed figure goldens and old
+/// disk-spilled caches cannot move. (The greedy assignment itself is
+/// produced by the byte-identical historical allocator; this pins the
+/// serialization half of that contract.) A non-default policy on the
+/// same point DOES carry the two extra keys, immediately after
+/// `machine`.
+#[test]
+fn greedy_stats_json_keeps_pre_policy_engine_byte_shape() {
+    const LEGACY_KEYS: [&str; 16] = [
+        "workload",
+        "machine",
+        "latency_cycles",
+        "energy_pj",
+        "mults_per_joule",
+        "macs",
+        "mac_energy_pj",
+        "noc_energy_pj",
+        "offchip_energy_pj",
+        "energy_by_level",
+        "onchip_energy_by_role",
+        "buffer_energy_by_role",
+        "energy_by_phase",
+        "busy_fraction",
+        "utilization_timeline",
+        "node_contention",
+    ];
+    let class = HarpClass::from_id("hier+xnode").expect("taxonomy id");
+    let keys_of = |j: &Json| -> Vec<String> {
+        match j {
+            Json::Obj(pairs) => pairs.iter().map(|(k, _)| k.clone()).collect(),
+            other => panic!("stats document is not an object: {other:?}"),
+        }
+    };
+    for (key, spec) in registry::all_builtins() {
+        let opts = EvalOptions { samples: 8, ..EvalOptions::default() };
+        let r = evaluate_cascade_on_config(
+            &class,
+            &HardwareParams::default(),
+            &spec.cascade(),
+            &opts,
+        )
+        .unwrap_or_else(|e| panic!("{key}: {e}"));
+        assert_eq!(r.stats.alloc_policy, "greedy", "{key}");
+        assert_eq!(keys_of(&r.stats.to_json()), LEGACY_KEYS.to_vec(), "{key}");
+    }
+    // The non-default shape, once (not per builtin — it is policy-, not
+    // workload-, dependent).
+    let mut opts = EvalOptions { samples: 8, ..EvalOptions::default() };
+    opts.alloc = harp::hhp::allocator::AllocPolicy::RoundRobin;
+    let r = evaluate_cascade_on_config(
+        &class,
+        &HardwareParams::default(),
+        &registry::by_name("bert").unwrap().cascade(),
+        &opts,
+    )
+    .unwrap();
+    let keys = keys_of(&r.stats.to_json());
+    assert_eq!(keys[..4], ["workload", "machine", "alloc", "assignment"]);
+    assert_eq!(keys.len(), LEGACY_KEYS.len() + 2);
+}
+
 /// The structural half of the contract, cheap enough to run over every
 /// field of every op: the re-parsed cascade IS the generated one.
 #[test]

@@ -106,6 +106,27 @@ fn golden_fig6_and_fig7() {
     assert_golden("fig7_energy", &fig7.join("\n"));
 }
 
+/// Allocation-policy ablation: pins every policy's speedup-over-greedy
+/// on the policy × taxonomy-point × (Table II + MoE) grid. The greedy
+/// column is definitionally 1.0 — a drift there means the baseline
+/// itself moved; the search column must never fall below 1.0 (asserted
+/// structurally here, independent of the snapshot).
+#[test]
+fn golden_fig_alloc_ablation() {
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    let fig = figures::fig_alloc_ablation(&ev);
+    let rendered = fig.render();
+    let greedy = fig.series.iter().find(|s| s.name == "greedy").expect("greedy series");
+    for (label, v) in &greedy.rows {
+        assert!((v - 1.0).abs() < 1e-9, "greedy baseline moved at {label}: {v}");
+    }
+    let search = fig.series.iter().find(|s| s.name == "search").expect("search series");
+    for (label, v) in &search.rows {
+        assert!(*v >= 1.0 - 1e-9, "search below greedy at {label}: {v}");
+    }
+    assert_golden("fig_alloc_ablation", &rendered);
+}
+
 #[test]
 fn golden_fig8_and_fig9() {
     // One evaluator shared by both drivers: fig8's points are a subset

@@ -90,6 +90,70 @@ fn eval_contention_flag_flows_to_report() {
 }
 
 #[test]
+fn eval_alloc_search_smokes_and_reports_assignment() {
+    let (ok, stdout, stderr) = harp(&[
+        "eval",
+        "--workload",
+        "llama2",
+        "--machine",
+        "hier+xnode",
+        "--samples",
+        "10",
+        "--alloc",
+        "search",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert_eq!(v.get("alloc").unwrap().as_str(), Some("search"));
+    let assignment = v.get("assignment").unwrap().as_arr().unwrap();
+    assert!(!assignment.is_empty());
+    // The default (greedy) stays byte-compatible: no alloc keys at all.
+    let (ok, stdout, stderr) = harp(&[
+        "eval", "--workload", "llama2", "--machine", "hier+xnode", "--samples", "10",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert!(v.get("alloc").is_none());
+    assert!(v.get("assignment").is_none());
+}
+
+#[test]
+fn eval_unknown_alloc_policy_lists_valid_set() {
+    let (ok, _, stderr) = harp(&[
+        "eval", "--workload", "bert", "--machine", "leaf+xnode", "--alloc", "optimal",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown allocation policy"), "{stderr}");
+    for name in ["greedy", "round_robin", "critical_path", "search"] {
+        assert!(stderr.contains(name), "valid set missing '{name}': {stderr}");
+    }
+}
+
+#[test]
+fn eval_config_rejects_cli_alloc_flag() {
+    let dir = std::env::temp_dir().join("harp_cli_config_alloc_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("cfg.json");
+    std::fs::write(
+        &cfg,
+        r#"{"workload":"bert","machine":"leaf+homo","samples":10,"alloc":"round_robin"}"#,
+    )
+    .unwrap();
+    let cfg = cfg.to_string_lossy().into_owned();
+    let (ok, _, stderr) = harp(&["eval", "--config", &cfg, "--alloc", "search"]);
+    assert!(!ok, "--alloc alongside --config must fail");
+    assert!(stderr.contains("--config supplies the evaluation options"), "{stderr}");
+    assert!(stderr.contains("\"alloc\""), "{stderr}");
+    // The config's own alloc key still drives the evaluation.
+    let (ok, stdout, stderr) = harp(&["eval", "--config", &cfg, "--json"]);
+    assert!(ok, "stderr: {stderr}");
+    let v = harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    assert_eq!(v.get("alloc").unwrap().as_str(), Some("round_robin"));
+}
+
+#[test]
 fn eval_rejects_invalid_machine() {
     let (ok, _, stderr) = harp(&["eval", "--workload", "bert", "--machine", "leaf+xdepth"]);
     assert!(!ok);

@@ -283,6 +283,18 @@ fn malformed_topologies_error_instead_of_panicking() {
          "accels":[{"name":"a","rows":4,"cols":4}]}]}}"#;
     let err = MachineTopology::from_json(&Json::parse(doc).unwrap()).unwrap_err();
     assert!(err.contains("not storage nodes"), "{err}");
+
+    // A zero-PE array: previously this could reach the allocator and
+    // panic on a NaN load ratio — it must be rejected loudly at load.
+    for (rows, cols) in [(0u64, 8u64), (8, 0)] {
+        let doc = format!(
+            r#"{{"name":"m","root":{{"bw_words_per_cycle":256,"children":[
+                {{"level":"LLB","size_words":4096,"bw_words_per_cycle":128,
+                  "accels":[{{"name":"a","rows":{rows},"cols":{cols}}}]}}]}}}}"#
+        );
+        let err = MachineTopology::from_json(&Json::parse(&doc).unwrap()).unwrap_err();
+        assert!(err.contains("empty PE array"), "rows={rows} cols={cols}: {err}");
+    }
 }
 
 /// Pinned per-edge shares change the dynamic re-grant (the recursive

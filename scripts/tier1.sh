@@ -46,6 +46,14 @@ fi
     --contention on --json > /dev/null
 "$BIN" eval --workload llama2 --samples 20 --contention on --json \
     --topology examples/topologies/hier_xnode_shared_llb.json > /dev/null
+# Allocation-policy engine: the schedule-aware search end-to-end, and
+# the loud-error paths (unknown policy; --alloc alongside --config).
+"$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --json > /dev/null
+if "$BIN" eval --workload bert --machine leaf+xnode --alloc bogus \
+    --samples 20 > /dev/null 2>&1; then
+    echo "tier1 FAIL: unknown --alloc policy should be a loud error"; exit 1
+fi
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
     --cache target/tier1-eval-cache.json > /dev/null
 # Second figures run must be served from the disk-spilled cache.

@@ -7,6 +7,10 @@
 # model change moves the numbers, run this script and commit the diff —
 # the review of that diff IS the review of the numeric change.
 #
+# Covers every snapshot in tests/golden_figures.rs: table1, the
+# workload table, fig6–fig10 (+ the MoE fig6 variant), the contention-on
+# evaluations, and the allocation-policy ablation (fig_alloc_ablation).
+#
 # Usage:
 #   scripts/update_goldens.sh          # regenerate every golden
 #   git diff rust/tests/goldens/       # inspect what moved, then commit
