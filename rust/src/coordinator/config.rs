@@ -33,6 +33,10 @@
 //! Instead of a taxonomy id, `"topology": "machine.json"` points at an
 //! explicit machine-tree description (same schema as `--topology`; see
 //! the README) — the taxonomy point is then *derived* from the tree.
+//!
+//! `"mapping_cache": "mappings.json"` points at a persistent
+//! `(shape, unit) → mapping` cache file (the CLI's `--mapping-cache`);
+//! relative paths resolve against the config file's directory.
 
 use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
@@ -53,6 +57,11 @@ pub struct ExperimentConfig {
     pub opts: EvalOptions,
     /// Path to a machine-tree JSON file (overrides `class`).
     pub topology: Option<String>,
+    /// Path to a persistent `(shape, unit) → mapping` cache file (the
+    /// CLI's `--mapping-cache`). Like `topology`, relative paths
+    /// resolve against the config file's directory. The file is opened
+    /// by the CLI driver (after the search budget is final), not here.
+    pub mapping_cache: Option<String>,
 }
 
 impl ExperimentConfig {
@@ -134,7 +143,15 @@ impl ExperimentConfig {
             }
             opts.bw_frac_low = Some(v);
         }
-        Ok(ExperimentConfig { workload, class, params, opts, topology })
+        let mapping_cache = match j.get("mapping_cache") {
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or("'mapping_cache' must be a file path")?
+                    .to_string(),
+            ),
+            None => None,
+        };
+        Ok(ExperimentConfig { workload, class, params, opts, topology, mapping_cache })
     }
 
     /// Load from a file path. Relative `topology` and `workload` file
@@ -155,6 +172,9 @@ impl ExperimentConfig {
         }
         if let WorkloadSource::File(w) = &cfg.workload {
             cfg.workload = WorkloadSource::File(resolve(w));
+        }
+        if let Some(mc) = &cfg.mapping_cache {
+            cfg.mapping_cache = Some(resolve(mc));
         }
         Ok(cfg)
     }
@@ -196,6 +216,21 @@ mod tests {
         assert_eq!(c.opts.bw_frac_low, Some(0.6));
         assert!(c.opts.dynamic_bw);
         assert!(c.topology.is_none());
+        assert!(c.mapping_cache.is_none());
+    }
+
+    #[test]
+    fn mapping_cache_key_parses_and_rejects_non_strings() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth","mapping_cache":"maps.json"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.mapping_cache.as_deref(), Some("maps.json"));
+        let err = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth","mapping_cache":7}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("mapping_cache"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,9 @@ use crate::hhp::allocator::{self, AllocPolicy};
 use crate::hhp::scheduler::{schedule, ScheduleOptions, ScheduleResult};
 use crate::hhp::stats::CascadeStats;
 use crate::mapper::blackbox::{BlackboxMapper, MappedOp};
+use crate::mapper::mapcache::MapCache;
 use crate::mapper::search::SearchBudget;
+use std::sync::Arc;
 use crate::workload::cascade::Cascade;
 use crate::workload::einsum::Phase;
 use crate::workload::intensity::Classifier;
@@ -43,6 +45,12 @@ pub struct EvalOptions {
     pub alloc: AllocPolicy,
     /// Mapper threads.
     pub threads: usize,
+    /// Persistent `(shape, unit) → mapping` cache shared by every
+    /// mapper the evaluation constructs. Excluded from
+    /// [`EvalOptions::fingerprint`]: a (validated) cache hit is bitwise
+    /// the fresh search, so cached evaluations are shareable with and
+    /// without it.
+    pub map_cache: Option<Arc<MapCache>>,
 }
 
 impl Default for EvalOptions {
@@ -58,6 +66,7 @@ impl Default for EvalOptions {
             contention: ContentionMode::Off,
             alloc: AllocPolicy::Greedy,
             threads: crate::util::threadpool::default_threads(),
+            map_cache: None,
         }
     }
 }
@@ -96,6 +105,29 @@ impl EvalOptions {
             fp.push_str(self.alloc.name());
         }
         fp
+    }
+
+    /// Search-budget fingerprint for the persistent mapping cache's
+    /// header: the knobs (beyond the per-entry key and
+    /// [`EVAL_MODEL_VERSION`]) that can move a mapping-search result.
+    pub fn mapping_search_fingerprint(&self) -> String {
+        format!("s{}|r{:#018x}", self.samples, self.seed)
+    }
+
+    /// Open (or create) the persistent mapping cache at `path`, pinned
+    /// to this binary's model version and these options' search budget,
+    /// and attach it to the evaluation. Errors are the loud
+    /// [`MapCacheError`](crate::mapper::mapcache::MapCacheError)
+    /// rejections, already formatted.
+    pub fn attach_mapping_cache(&mut self, path: &std::path::Path) -> Result<(), String> {
+        let cache = MapCache::with_file(
+            path,
+            EVAL_MODEL_VERSION as u64,
+            self.mapping_search_fingerprint(),
+        )
+        .map_err(|e| e.to_string())?;
+        self.map_cache = Some(Arc::new(cache));
+        Ok(())
     }
 }
 
@@ -160,6 +192,7 @@ pub fn evaluate_cascade_on_machine(
     let mapper = BlackboxMapper {
         budget: SearchBudget { samples: opts.samples, seed: opts.seed },
         threads: opts.threads,
+        cache: opts.map_cache.clone(),
     };
     let sched_opts = ScheduleOptions { dynamic_bw: opts.dynamic_bw };
     // `Search` co-optimises the assignment with the scheduler and hands

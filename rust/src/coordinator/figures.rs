@@ -125,8 +125,13 @@ impl Evaluator {
 
     /// Write every computed point to the spill file (no-op without one,
     /// or when nothing new was computed). Keys are sorted so the file is
-    /// byte-stable for a given entry set.
+    /// byte-stable for a given entry set. When the options carry a
+    /// file-backed mapping cache ([`EvalOptions::map_cache`]) it spills
+    /// too — one call flushes both persistence layers at end of run.
     pub fn persist(&self) -> std::io::Result<()> {
+        if let Some(mc) = &self.opts.map_cache {
+            mc.persist()?;
+        }
         let Some(path) = &self.spill else { return Ok(()) };
         if !self.dirty.load(Ordering::Acquire) {
             return Ok(());

@@ -245,6 +245,24 @@ pub fn search_allocation(
     mapper: &BlackboxMapper,
     sched_opts: &ScheduleOptions,
 ) -> (Vec<usize>, Vec<MappedOp>) {
+    search_allocation_impl(cascade, machine, classifier, mapper, sched_opts, true)
+}
+
+/// [`search_allocation`] with the replay mode exposed: `incremental`
+/// probes use [`ScheduleOracle::replay_delta`], `false` forces the
+/// historical full [`ScheduleOracle::replay`] on every probe. Both
+/// trajectories are bit-identical (each probe's makespan is, so every
+/// accept/reject decision is) — the switch exists so the regression
+/// suite can pin that equivalence; callers want [`search_allocation`].
+#[doc(hidden)]
+pub fn search_allocation_impl(
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+    mapper: &BlackboxMapper,
+    sched_opts: &ScheduleOptions,
+    incremental: bool,
+) -> (Vec<usize>, Vec<MappedOp>) {
     let n = cascade.ops.len();
     let mut assignment = allocate(cascade, machine, classifier);
     let eligible: Vec<Vec<usize>> = cascade
@@ -263,12 +281,15 @@ pub fn search_allocation(
     let budget = search_move_budget(n);
     let mut moves = 0usize;
     let mut ranked: Vec<usize> = (0..n).collect();
+    // Ranking scratch, allocated once: probing must not allocate.
+    let mut delays = vec![0.0f64; n];
+    let mut lats = vec![0.0f64; n];
     while moves < budget {
         // Rank ops by queue-delay/latency ratio under the CURRENT
         // assignment (the replay above / the accepted probe left the
         // oracle's delay and latency buffers at exactly this state).
-        let delays = oracle.queue_delays().to_vec();
-        let lats = oracle.latencies().to_vec();
+        delays.copy_from_slice(oracle.queue_delays());
+        lats.copy_from_slice(oracle.latencies());
         ranked.sort_by(|&a, &b| {
             let ra = delays[a] / lats[a].max(1e-12);
             let rb = delays[b] / lats[b].max(1e-12);
@@ -286,7 +307,15 @@ pub fn search_allocation(
                 }
                 assignment[i] = u;
                 stats_view[i] = cost_at(&costs, i, u);
-                let m = oracle.replay(&assignment, &stats_view);
+                // Probes differ from the oracle's last replay by at
+                // most two moves (this op, plus the revert of the
+                // previous rejected probe) — exactly the incremental
+                // replay's sweet spot.
+                let m = if incremental {
+                    oracle.replay_delta(&assignment, &stats_view)
+                } else {
+                    oracle.replay(&assignment, &stats_view)
+                };
                 if strictly_better(m, best) {
                     best = m;
                     moves += 1;

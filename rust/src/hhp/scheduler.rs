@@ -253,6 +253,13 @@ pub fn schedule(
 /// After a replay the oracle also exposes per-op queue delays (time an
 /// op sat ready but waiting for its assigned unit) and scheduled
 /// latencies — the signal the local search ranks its moves by.
+///
+/// For probe sequences that differ by one (or few) op moves,
+/// [`ScheduleOracle::replay_delta`] replays incrementally: the oracle
+/// records the dispatch timeline of the last replay and mechanically
+/// reuses the untouched prefix, re-deciding only from the first instant
+/// a moved op could have influenced the schedule. The result is
+/// bit-identical to a full replay (see the method's contract).
 pub struct ScheduleOracle<'a> {
     cascade: &'a Cascade,
     machine: &'a MachineConfig,
@@ -260,7 +267,7 @@ pub struct ScheduleOracle<'a> {
     adj: CascadeAdj,
     order: Vec<usize>,
     contention_ctx: Option<crate::arch::partition::ContentionCtx>,
-    // Reused per replay:
+    // Reused per replay (SoA arenas — no per-probe allocation):
     lat: Vec<f64>,
     prio: Vec<f64>,
     remaining_preds: Vec<usize>,
@@ -275,6 +282,19 @@ pub struct ScheduleOracle<'a> {
     ready_at: Vec<f64>,
     delay: Vec<f64>,
     sched_lat: Vec<f64>,
+    // Record of the LAST replay, consumed by `replay_delta`: the
+    // assignment and priorities it ran under, plus the dispatch
+    // timeline (op, dispatch-round time) in chronological order.
+    // `start`/`end`/`ready_at` above double as the recorded per-op
+    // times of that replay.
+    prev_assignment: Vec<usize>,
+    prev_prio: Vec<f64>,
+    disp_op: Vec<usize>,
+    disp_now: Vec<f64>,
+    has_timeline: bool,
+    prev_makespan: f64,
+    full_replays: usize,
+    fast_replays: usize,
 }
 
 impl<'a> ScheduleOracle<'a> {
@@ -311,6 +331,14 @@ impl<'a> ScheduleOracle<'a> {
             ready_at: vec![0.0; n],
             delay: vec![0.0; n],
             sched_lat: vec![0.0; n],
+            prev_assignment: Vec::with_capacity(n),
+            prev_prio: vec![0.0; n],
+            disp_op: Vec::with_capacity(n),
+            disp_now: Vec::with_capacity(n),
+            has_timeline: false,
+            prev_makespan: 0.0,
+            full_replays: 0,
+            fast_replays: 0,
         }
     }
 
@@ -322,19 +350,157 @@ impl<'a> ScheduleOracle<'a> {
         let n = self.cascade.ops.len();
         assert_eq!(assignment.len(), n);
         assert_eq!(stats.len(), n);
-        let nsub = self.machine.sub_accels.len();
+        self.compute_lat_prio(stats);
+        self.full_replay_from_scratch(assignment, stats)
+    }
 
+    /// Incremental replay: bit-identical to [`ScheduleOracle::replay`]
+    /// (and thus to `schedule().makespan`), but reusing the untouched
+    /// prefix of the LAST replay's timeline when only a few ops moved.
+    ///
+    /// # Caller contract
+    ///
+    /// Across consecutive calls on one oracle, `stats[i]` must be a
+    /// pure function of `(i, assignment[i])`: moving an op to a unit
+    /// and back must present bitwise-identical stats for it, and an op
+    /// whose assignment is unchanged must keep bitwise-identical stats.
+    /// The allocation search satisfies this by construction (its stats
+    /// view indexes a fixed per-(op, unit) cost matrix). Under that
+    /// contract the replay state before the first moved op becomes
+    /// ready provably coincides with the previous replay, so the
+    /// recorded prefix is replayed mechanically — no candidate scans,
+    /// no bandwidth arbitration — and the event loop only *decides*
+    /// from the first instant a changed op could participate. When a
+    /// moved op's priority change propagates to a source (a move on the
+    /// critical path), the dirty cone covers the cascade and the oracle
+    /// falls back to a full replay.
+    pub fn replay_delta(&mut self, assignment: &[usize], stats: &[&OpStats]) -> f64 {
+        let n = self.cascade.ops.len();
+        assert_eq!(assignment.len(), n);
+        assert_eq!(stats.len(), n);
+        self.compute_lat_prio(stats);
+        if !self.has_timeline {
+            return self.full_replay_from_scratch(assignment, stats);
+        }
+
+        // Dirty ops: moved, or priority changed (a moved op's latency
+        // change propagates upward exactly along max-successor paths —
+        // comparing recomputed priorities bitwise captures that cone
+        // precisely, instead of pessimistically dirtying all ancestors).
+        // The schedule provably coincides with the recorded one at
+        // every round strictly before the earliest time a dirty op
+        // became ready in the previous replay.
+        let mut t_dirty = f64::INFINITY;
+        let mut any_dirty = false;
+        for i in 0..n {
+            if assignment[i] != self.prev_assignment[i]
+                || self.prio[i].to_bits() != self.prev_prio[i].to_bits()
+            {
+                any_dirty = true;
+                if self.ready_at[i] < t_dirty {
+                    t_dirty = self.ready_at[i];
+                }
+            }
+        }
+        if !any_dirty {
+            self.fast_replays += 1;
+            return self.prev_makespan;
+        }
+        if t_dirty <= 1e-9 {
+            // A dirty op is ready at t=0 (source, or critical-path
+            // propagation reached one): no reusable prefix.
+            return self.full_replay_from_scratch(assignment, stats);
+        }
+
+        self.reset_sim();
+        let nsub = self.machine.sub_accels.len();
+        let mut now = 0.0f64;
+        let mut completed = 0usize;
+        let mut cursor = 0usize;
+        // Mechanical prefix: consume the recorded dispatches round by
+        // round (matched by bitwise round time), applying recorded
+        // start/end times. The completion epsilon lets an op join a
+        // round up to 1e-9 before its ready time, hence the guard.
+        while completed < n && now < t_dirty - 1e-9 {
+            while cursor < self.disp_op.len()
+                && self.disp_now[cursor].to_bits() == now.to_bits()
+            {
+                let i = self.disp_op[cursor];
+                let s = self.prev_assignment[i];
+                if self.running[s].is_some() {
+                    // Recorded later in this round's time but after a
+                    // completion at the same instant — next iteration.
+                    break;
+                }
+                self.running[s] = Some((i, self.end[i]));
+                self.scheduled[i] = true;
+                cursor += 1;
+            }
+            let next_end = self
+                .running
+                .iter()
+                .flatten()
+                .map(|&(_, end)| end)
+                .fold(f64::INFINITY, f64::min);
+            if !next_end.is_finite() {
+                panic!(
+                    "incremental replay diverged from recorded timeline at t={now} \
+                     (stats not a pure function of (op, assignment)?)"
+                );
+            }
+            now = next_end;
+            for s in 0..nsub {
+                if let Some((i, end)) = self.running[s] {
+                    if end <= now + 1e-9 {
+                        self.running[s] = None;
+                        self.sub_free_at[s] = end;
+                        completed += 1;
+                        for &succ in &self.adj.succs[i] {
+                            self.remaining_preds[succ] -= 1;
+                            if self.remaining_preds[succ] == 0 {
+                                self.ready.push(succ);
+                                self.ready_at[succ] = end;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Keep the consumed prefix of the record; the live loop appends
+        // its own dispatches after it.
+        self.disp_op.truncate(cursor);
+        self.disp_now.truncate(cursor);
+        let makespan = self.run_live(assignment, stats, now, completed);
+        self.record_replay(assignment, makespan);
+        self.fast_replays += 1;
+        makespan
+    }
+
+    /// (full, incremental) replay counts — incremental includes the
+    /// no-change fast path; full includes fallbacks taken by
+    /// [`ScheduleOracle::replay_delta`].
+    pub fn replay_counts(&self) -> (usize, usize) {
+        (self.full_replays, self.fast_replays)
+    }
+
+    /// Per-op latency (`stats.cycles × count`) and critical-path
+    /// priorities, identical to `priorities()` but over the stored
+    /// topological order.
+    fn compute_lat_prio(&mut self, stats: &[&OpStats]) {
+        let n = self.cascade.ops.len();
         for i in 0..n {
             self.lat[i] = stats[i].cycles * self.cascade.ops[i].count as f64;
         }
-        // Critical-path priorities, identical to `priorities()` but over
-        // the stored topological order.
         for &i in self.order.iter().rev() {
             let down =
                 self.adj.succs[i].iter().map(|&s| self.prio[s]).fold(0.0f64, f64::max);
             self.prio[i] = self.lat[i] + down;
         }
+    }
 
+    fn reset_sim(&mut self) {
+        let n = self.cascade.ops.len();
+        let nsub = self.machine.sub_accels.len();
         self.ready.clear();
         for i in 0..n {
             self.remaining_preds[i] = self.adj.preds[i].len();
@@ -348,9 +514,30 @@ impl<'a> ScheduleOracle<'a> {
             self.running[s] = None;
             self.sub_free_at[s] = 0.0;
         }
+    }
 
-        let mut now = 0.0f64;
-        let mut completed = 0usize;
+    fn full_replay_from_scratch(&mut self, assignment: &[usize], stats: &[&OpStats]) -> f64 {
+        self.reset_sim();
+        self.disp_op.clear();
+        self.disp_now.clear();
+        let makespan = self.run_live(assignment, stats, 0.0, 0);
+        self.record_replay(assignment, makespan);
+        self.full_replays += 1;
+        makespan
+    }
+
+    /// The deciding event loop, resumable from `(now, completed)` with
+    /// the simulation buffers describing that instant. Records every
+    /// dispatch into the timeline.
+    fn run_live(
+        &mut self,
+        assignment: &[usize],
+        stats: &[&OpStats],
+        mut now: f64,
+        mut completed: usize,
+    ) -> f64 {
+        let n = self.cascade.ops.len();
+        let nsub = self.machine.sub_accels.len();
         while completed < n {
             let mut dispatched_any = true;
             while dispatched_any {
@@ -392,6 +579,8 @@ impl<'a> ScheduleOracle<'a> {
                         self.scheduled[i] = true;
                         self.start[i] = start;
                         self.end[i] = end;
+                        self.disp_op.push(i);
+                        self.disp_now.push(now);
                         dispatched_any = true;
                     }
                 }
@@ -424,12 +613,22 @@ impl<'a> ScheduleOracle<'a> {
                 }
             }
         }
+        now
+    }
 
+    /// Finalise a replay: derive queue delays / scheduled latencies and
+    /// snapshot the assignment + priorities the timeline ran under.
+    fn record_replay(&mut self, assignment: &[usize], makespan: f64) {
+        let n = self.cascade.ops.len();
         for i in 0..n {
             self.delay[i] = self.start[i] - self.ready_at[i];
             self.sched_lat[i] = self.end[i] - self.start[i];
         }
-        now
+        self.prev_assignment.clear();
+        self.prev_assignment.extend_from_slice(assignment);
+        self.prev_prio.copy_from_slice(&self.prio);
+        self.prev_makespan = makespan;
+        self.has_timeline = true;
     }
 
     /// Per-op queue delay of the LAST replay: how long each op sat with

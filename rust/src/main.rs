@@ -75,8 +75,10 @@ fn usage() -> String {
        eval [--config F | --workload W|FILE (--machine M | --topology F)] [--bw BITS]\n\
                                 [--samples N] [--threads N] [--contention off|on]\n\
                                 [--alloc greedy|round_robin|critical_path|search]\n\
+                                [--mapping-cache FILE]\n\
                                 (--model NAME is the explicit built-in form of --workload)\n\
        figures [--samples N] [--threads N] [--cache FILE] [--alloc POLICY]\n\
+                                [--mapping-cache FILE]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
                                 + the allocation-policy ablation\n\
        roofline                 print the Fig 1 roofline partitioning\n\
@@ -259,6 +261,12 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             "op → sub-accelerator allocation policy: greedy (paper heuristic) | \
              round_robin | critical_path | search (schedule-aware local search)",
         )
+        .opt(
+            "mapping-cache",
+            None,
+            "persistent (shape, unit) → mapping cache JSON file, reused across runs \
+             (created when missing; version or search-budget mismatches are rejected loudly)",
+        )
         .flag("dynamic-bw", "re-grant idle units' bandwidth (ablation)")
         .flag("json", "emit machine-readable JSON");
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
@@ -282,6 +290,15 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             return Err(
                 "--config supplies the evaluation options; set \"alloc\" in the \
                  config file instead of passing --alloc"
+                    .into(),
+            );
+        }
+        // And the mapping cache: the config's "mapping_cache" key wins,
+        // so the flag alongside --config must error, not shadow it.
+        if argv.iter().any(|a| a == "--mapping-cache" || a.starts_with("--mapping-cache=")) {
+            return Err(
+                "--config supplies the evaluation options; set \"mapping_cache\" in \
+                 the config file instead of passing --mapping-cache"
                     .into(),
             );
         }
@@ -363,16 +380,31 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             params,
             opts,
             topology,
+            mapping_cache: args.get("mapping-cache").map(String::from),
         },
         json,
     ))
 }
 
 fn cmd_eval(argv: &[String]) -> Result<(), String> {
-    let (cfg, json) = parse_eval_opts(argv)?;
+    let (mut cfg, json) = parse_eval_opts(argv)?;
+    if let Some(path) = cfg.mapping_cache.clone() {
+        cfg.opts.attach_mapping_cache(Path::new(&path))?;
+        let loaded = cfg.opts.map_cache.as_ref().map_or(0, |mc| mc.len());
+        // The banner would corrupt --json output, so it stays off there
+        // (warm and cold runs then emit byte-identical JSON).
+        if loaded > 0 && !json {
+            println!("[mapping cache: {loaded} mapping(s) loaded from {path}]");
+        }
+    }
     let cascade = cfg.workload.load()?.cascade();
     let machine = cfg.build_machine(&cascade)?;
     let r = evaluate_cascade_on_machine(&machine, &cascade, &cfg.opts)?;
+    if let Some(mc) = &cfg.opts.map_cache {
+        if let Err(e) = mc.persist() {
+            eprintln!("warn: could not persist mapping cache: {e}");
+        }
+    }
     if json {
         println!("{}", r.stats.to_json().to_string_pretty());
         return Ok(());
@@ -445,6 +477,12 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
             Some("greedy"),
             "allocation policy for the paper-figure drivers (greedy reproduces the \
              paper; the ablation figure always sweeps every policy)",
+        )
+        .opt(
+            "mapping-cache",
+            None,
+            "persistent (shape, unit) → mapping cache JSON file — a finer-grained \
+             layer than --cache that stays valid across workload/machine changes",
         );
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
     let mut opts = EvalOptions {
@@ -456,6 +494,13 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     opts.alloc = harp::hhp::allocator::AllocPolicy::parse(args.get("alloc").unwrap())?;
     if let Some(n) = apply_threads(&args)? {
         opts.threads = n;
+    }
+    if let Some(path) = args.get("mapping-cache") {
+        opts.attach_mapping_cache(Path::new(path))?;
+        let loaded = opts.map_cache.as_ref().map_or(0, |mc| mc.len());
+        if loaded > 0 {
+            println!("[mapping cache: {loaded} mapping(s) loaded from {path}]");
+        }
     }
     let ev = match args.get("cache") {
         Some(path) => {

@@ -7,11 +7,17 @@
 //! per-op searches run in parallel on the thread pool.
 
 use crate::arch::partition::MachineConfig;
-use crate::mapper::search::{search_best_threaded, shape_fingerprint, SearchBudget, SearchResult};
+use crate::arch::spec::ArchSpec;
+use crate::mapper::mapcache::MapCache;
+use crate::mapper::search::{
+    search_best_threaded, shape_fingerprint, spec_fingerprint, SearchBudget, SearchResult,
+};
 use crate::model::stats::OpStats;
 use crate::util::threadpool::{default_threads, parallel_map};
 use crate::workload::cascade::Cascade;
+use crate::workload::einsum::TensorOp;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A mapped operation: which sub-accelerator it runs on and at what cost.
 #[derive(Debug, Clone)]
@@ -38,17 +44,37 @@ pub struct OpUnitCost {
 pub struct BlackboxMapper {
     pub budget: SearchBudget,
     pub threads: usize,
+    /// Optional persistent `(shape, unit) → mapping` cache. When set,
+    /// every unique-group search consults it first; a hit serves stats
+    /// bitwise identical to the search that populated it (the cache is
+    /// keyed and versioned so anything else is rejected at load).
+    pub cache: Option<Arc<MapCache>>,
 }
 
 impl Default for BlackboxMapper {
     fn default() -> BlackboxMapper {
-        BlackboxMapper { budget: SearchBudget::default(), threads: default_threads() }
+        BlackboxMapper { budget: SearchBudget::default(), threads: default_threads(), cache: None }
     }
 }
 
 impl BlackboxMapper {
     pub fn with_budget(budget: SearchBudget) -> BlackboxMapper {
-        BlackboxMapper { budget, threads: default_threads() }
+        BlackboxMapper { budget, threads: default_threads(), cache: None }
+    }
+
+    /// One unique-group search, through the persistent cache when one
+    /// is attached. Keyed by `(shape_fingerprint, spec_fingerprint)` —
+    /// everything else that can move the result (samples, seed, model
+    /// version) is pinned by the cache's header at load time.
+    fn search_unit(&self, op: &TensorOp, spec: &ArchSpec) -> SearchResult {
+        match &self.cache {
+            Some(cache) => cache
+                .get_or_compute(shape_fingerprint(op), spec_fingerprint(spec), || {
+                    search_best_threaded(op, spec, &self.budget, self.threads).into()
+                })
+                .to_search_result(),
+            None => search_best_threaded(op, spec, &self.budget, self.threads),
+        }
     }
 
     /// Map every op of `cascade` onto its assigned sub-accelerator
@@ -84,7 +110,7 @@ impl BlackboxMapper {
             let rep_op_idx = groups[&group_keys[g]][0];
             let op = &cascade.ops[rep_op_idx];
             let spec = &machine.sub_accels[sub].spec;
-            search_best_threaded(op, spec, &self.budget, self.threads)
+            self.search_unit(op, spec)
         });
         // Fan results back out to ops.
         let by_key: HashMap<(u64, usize), &SearchResult> =
@@ -138,7 +164,7 @@ impl BlackboxMapper {
         let results: Vec<SearchResult> = parallel_map(group_keys.len(), self.threads, |g| {
             let (_, sub) = group_keys[g];
             let op = &cascade.ops[group_rep[g]];
-            search_best_threaded(op, &machine.sub_accels[sub].spec, &self.budget, self.threads)
+            self.search_unit(op, &machine.sub_accels[sub].spec)
         });
         let mut out: Vec<Vec<Option<OpUnitCost>>> =
             (0..cascade.ops.len()).map(|_| vec![None; nsub]).collect();

@@ -1,0 +1,654 @@
+//! Persistent cross-process `(shape, unit) → mapping` cache.
+//!
+//! The mapper's per-(op, sub-accelerator) searches are the dominant
+//! cost of an evaluation, and they are fully deterministic in
+//! `(shape_fingerprint, spec_fingerprint, search budget, model
+//! version)` — so their results can survive across runs. This cache
+//! spills every searched [`SearchResult`] to a JSON file and serves
+//! bit-identical stats on the next run.
+//!
+//! Format: one JSON object with a header and an `entries` map,
+//!
+//! ```json
+//! {
+//!   "harp_mapping_cache": 1,
+//!   "model_version": 1,
+//!   "search": "s600|r0x0000000048415250",
+//!   "entries": { "<shape_fp>|<spec_fp>": { "mapping": …, "stats": …,
+//!                "evaluated": n, "valid": n } }
+//! }
+//! ```
+//!
+//! written compactly on spill ([`MapCache::persist`]) and
+//! pretty-printable for debugging ([`MapCache::debug_json`]); the
+//! loader accepts either. Unlike the evaluation cache (which treats an
+//! unreadable file as cold), a mapping cache that cannot be honoured is
+//! rejected **loudly** with a distinct [`MapCacheError`] per cause —
+//! serving a mapping searched under a different model version or
+//! search budget would silently change results, the one thing the
+//! repo's determinism contract forbids.
+//!
+//! Numeric exactness: every float is written with Rust's shortest
+//! round-trip `Display` and re-read with `str::parse::<f64>` (correctly
+//! rounded), so a loaded `OpStats` is bitwise the one searched —
+//! cache-hit-equals-fresh is property-tested in
+//! `tests/mapping_cache.rs`.
+
+use crate::arch::level::LevelKind;
+use crate::mapper::search::SearchResult;
+use crate::mapping::loopnest::Mapping;
+use crate::model::stats::{Bound, LevelStats, OpStats};
+use crate::util::json::Json;
+use crate::workload::einsum::Dim;
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// On-disk format revision of the cache document itself (bump when the
+/// JSON layout changes; distinct from the eval model version, which
+/// tracks the numbers).
+pub const MAPCACHE_FORMAT: u64 = 1;
+
+/// Why a mapping-cache file was rejected. Each cause is distinct so
+/// callers (and users reading stderr) can tell a corrupt file from a
+/// stale one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MapCacheError {
+    /// The file exists but cannot be read.
+    Io(String),
+    /// Not a mapping-cache document, or a structurally broken one.
+    Malformed(String),
+    /// Written by a different evaluation-model version.
+    VersionMismatch { found: u64, expected: u64 },
+    /// Written under a different mapper search budget.
+    StaleFingerprint { found: String, expected: String },
+}
+
+impl fmt::Display for MapCacheError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MapCacheError::Io(e) => write!(f, "cannot read mapping cache: {e}"),
+            MapCacheError::Malformed(d) => write!(f, "malformed mapping cache: {d}"),
+            MapCacheError::VersionMismatch { found, expected } => write!(
+                f,
+                "mapping cache version mismatch: written by eval model version {found}, \
+                 this binary is version {expected} — delete the file to regenerate it"
+            ),
+            MapCacheError::StaleFingerprint { found, expected } => write!(
+                f,
+                "stale mapping cache: searched under budget \"{found}\", this run uses \
+                 \"{expected}\" — serving it would change results; delete the file or \
+                 use a separate cache per budget"
+            ),
+        }
+    }
+}
+
+/// One cached mapping-search result (the value of an entry).
+#[derive(Debug, Clone)]
+pub struct CachedSearch {
+    pub mapping: Mapping,
+    pub stats: OpStats,
+    pub evaluated: usize,
+    pub valid: usize,
+}
+
+impl From<SearchResult> for CachedSearch {
+    fn from(r: SearchResult) -> CachedSearch {
+        CachedSearch {
+            mapping: r.mapping,
+            stats: r.stats,
+            evaluated: r.evaluated,
+            valid: r.valid,
+        }
+    }
+}
+
+impl CachedSearch {
+    pub fn to_search_result(&self) -> SearchResult {
+        SearchResult {
+            mapping: self.mapping.clone(),
+            stats: self.stats.clone(),
+            evaluated: self.evaluated,
+            valid: self.valid,
+        }
+    }
+}
+
+type Slot = Arc<OnceLock<Arc<CachedSearch>>>;
+
+/// The cache: interior-mutable (shared via `Arc` across mapper worker
+/// threads, same discipline as the coordinator's `Evaluator`), keyed by
+/// `(shape_fingerprint, spec_fingerprint)`, versioned by the eval model
+/// version and the mapper search-budget fingerprint.
+pub struct MapCache {
+    model_version: u64,
+    search_fp: String,
+    entries: Mutex<HashMap<String, Slot>>,
+    spill: Option<PathBuf>,
+    dirty: AtomicBool,
+}
+
+impl fmt::Debug for MapCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MapCache")
+            .field("model_version", &self.model_version)
+            .field("search_fp", &self.search_fp)
+            .field("entries", &self.len())
+            .field("spill", &self.spill)
+            .finish()
+    }
+}
+
+impl MapCache {
+    /// An empty in-memory cache (no spill file).
+    pub fn new(model_version: u64, search_fp: impl Into<String>) -> MapCache {
+        MapCache {
+            model_version,
+            search_fp: search_fp.into(),
+            entries: Mutex::new(HashMap::new()),
+            spill: None,
+            dirty: AtomicBool::new(false),
+        }
+    }
+
+    /// A cache bound to `path`: loads it if present (rejecting loudly a
+    /// file that cannot be honoured), starts empty if missing.
+    /// [`MapCache::persist`] writes back to the same path.
+    pub fn with_file(
+        path: impl Into<PathBuf>,
+        model_version: u64,
+        search_fp: impl Into<String>,
+    ) -> Result<MapCache, MapCacheError> {
+        let path = path.into();
+        let mut cache = MapCache::new(model_version, search_fp);
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| MapCacheError::Io(format!("{}: {e}", path.display())))?;
+            cache.load_document(&text)?;
+        }
+        cache.spill = Some(path);
+        Ok(cache)
+    }
+
+    fn load_document(&mut self, text: &str) -> Result<(), MapCacheError> {
+        let doc = Json::parse(text)
+            .map_err(|e| MapCacheError::Malformed(format!("not valid JSON: {e}")))?;
+        match doc.get("harp_mapping_cache").and_then(Json::as_u64) {
+            Some(MAPCACHE_FORMAT) => {}
+            Some(v) => {
+                return Err(MapCacheError::Malformed(format!(
+                    "unsupported cache format {v} (this binary writes {MAPCACHE_FORMAT})"
+                )))
+            }
+            None => {
+                return Err(MapCacheError::Malformed(
+                    "missing \"harp_mapping_cache\" marker — not a mapping cache".into(),
+                ))
+            }
+        }
+        let found_version = doc
+            .get("model_version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| MapCacheError::Malformed("missing \"model_version\"".into()))?;
+        if found_version != self.model_version {
+            return Err(MapCacheError::VersionMismatch {
+                found: found_version,
+                expected: self.model_version,
+            });
+        }
+        let found_fp = doc
+            .get("search")
+            .and_then(Json::as_str)
+            .ok_or_else(|| MapCacheError::Malformed("missing \"search\" fingerprint".into()))?;
+        if found_fp != self.search_fp {
+            return Err(MapCacheError::StaleFingerprint {
+                found: found_fp.to_string(),
+                expected: self.search_fp.clone(),
+            });
+        }
+        let pairs = match doc.get("entries") {
+            Some(Json::Obj(pairs)) => pairs,
+            _ => {
+                return Err(MapCacheError::Malformed(
+                    "missing or non-object \"entries\"".into(),
+                ))
+            }
+        };
+        let mut map = self.entries.lock().unwrap();
+        for (key, val) in pairs {
+            let entry = cached_search_from_json(val).map_err(|d| {
+                MapCacheError::Malformed(format!("entry \"{key}\": {d}"))
+            })?;
+            let slot: Slot = Arc::new(OnceLock::new());
+            let _ = slot.set(Arc::new(entry));
+            map.insert(key.clone(), slot);
+        }
+        Ok(())
+    }
+
+    fn key(shape_fp: u64, spec_fp: u64) -> String {
+        format!("{shape_fp:016x}|{spec_fp:016x}")
+    }
+
+    /// Number of searched entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().values().filter(|s| s.get().is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serve the cached result for `(shape_fp, spec_fp)` or run
+    /// `compute` exactly once (concurrent callers for the same key
+    /// block on the winner). A hit is bitwise the result of the search
+    /// that populated it.
+    pub fn get_or_compute(
+        &self,
+        shape_fp: u64,
+        spec_fp: u64,
+        compute: impl FnOnce() -> CachedSearch,
+    ) -> Arc<CachedSearch> {
+        let slot = {
+            let mut map = self.entries.lock().unwrap();
+            map.entry(MapCache::key(shape_fp, spec_fp))
+                .or_insert_with(|| Arc::new(OnceLock::new()))
+                .clone()
+        };
+        let mut computed = false;
+        let out = slot
+            .get_or_init(|| {
+                computed = true;
+                Arc::new(compute())
+            })
+            .clone();
+        if computed {
+            self.dirty.store(true, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// The full document, keys sorted (byte-stable across runs and
+    /// thread counts).
+    pub fn to_json(&self) -> Json {
+        let map = self.entries.lock().unwrap();
+        let mut keys: Vec<&String> = map.keys().collect();
+        keys.sort();
+        let mut entries = Json::obj();
+        for k in keys {
+            if let Some(v) = map[k].get() {
+                entries = entries.with(k, cached_search_to_json(v));
+            }
+        }
+        Json::obj()
+            .with("harp_mapping_cache", MAPCACHE_FORMAT)
+            .with("model_version", self.model_version)
+            .with("search", self.search_fp.as_str())
+            .with("entries", entries)
+    }
+
+    /// Human-readable (pretty) form of the document, for debugging.
+    pub fn debug_json(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Spill to the bound file (compact form) if any entry was computed
+    /// since load. No-op without a file or new entries.
+    pub fn persist(&self) -> std::io::Result<()> {
+        let path = match &self.spill {
+            Some(p) if self.dirty.load(Ordering::Relaxed) => p.clone(),
+            _ => return Ok(()),
+        };
+        std::fs::write(&path, self.to_json().to_string_compact())?;
+        self.dirty.store(false, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The spill path, if file-bound.
+    pub fn path(&self) -> Option<&Path> {
+        self.spill.as_deref()
+    }
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing number \"{key}\""))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key).and_then(Json::as_usize).ok_or_else(|| format!("missing count \"{key}\""))
+}
+
+fn cached_search_to_json(c: &CachedSearch) -> Json {
+    Json::obj()
+        .with("mapping", mapping_to_json(&c.mapping))
+        .with("stats", op_stats_to_json(&c.stats))
+        .with("evaluated", c.evaluated)
+        .with("valid", c.valid)
+}
+
+fn cached_search_from_json(j: &Json) -> Result<CachedSearch, String> {
+    Ok(CachedSearch {
+        mapping: mapping_from_json(j.get("mapping").ok_or("missing \"mapping\"")?)?,
+        stats: op_stats_from_json(j.get("stats").ok_or("missing \"stats\"")?)?,
+        evaluated: usize_field(j, "evaluated")?,
+        valid: usize_field(j, "valid")?,
+    })
+}
+
+fn mapping_to_json(m: &Mapping) -> Json {
+    let temporal: Vec<Json> = m
+        .temporal
+        .iter()
+        .map(|t| Json::Arr(t.iter().map(|&f| Json::from(f)).collect()))
+        .collect();
+    let perms: Vec<Json> = m
+        .perms
+        .iter()
+        .map(|p| Json::Arr(p.iter().map(|d| Json::from(d.name())).collect()))
+        .collect();
+    let spatial = |(d, f): (Dim, u64)| Json::Arr(vec![Json::from(d.name()), Json::from(f)]);
+    Json::obj()
+        .with("temporal", Json::Arr(temporal))
+        .with("perms", Json::Arr(perms))
+        .with("spatial_row", spatial(m.spatial_row))
+        .with("spatial_col", spatial(m.spatial_col))
+}
+
+fn dims4(j: &Json) -> Result<[Dim; 4], String> {
+    let arr = j.as_arr().ok_or("permutation is not an array")?;
+    if arr.len() != 4 {
+        return Err(format!("permutation has {} entries, want 4", arr.len()));
+    }
+    let mut out = [Dim::B; 4];
+    for (slot, v) in out.iter_mut().zip(arr) {
+        *slot = Dim::parse(v.as_str().ok_or("permutation entry is not a string")?)?;
+    }
+    Ok(out)
+}
+
+fn spatial_from(j: &Json) -> Result<(Dim, u64), String> {
+    let arr = j.as_arr().ok_or("spatial mapping is not an array")?;
+    match arr {
+        [d, f] => Ok((
+            Dim::parse(d.as_str().ok_or("spatial dim is not a string")?)?,
+            f.as_u64().ok_or("spatial factor is not an integer")?,
+        )),
+        _ => Err("spatial mapping wants [dim, factor]".into()),
+    }
+}
+
+fn mapping_from_json(j: &Json) -> Result<Mapping, String> {
+    let temporal = j
+        .get("temporal")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"temporal\"")?
+        .iter()
+        .map(|row| {
+            let arr = row.as_arr().ok_or("temporal block is not an array")?;
+            if arr.len() != 4 {
+                return Err(format!("temporal block has {} factors, want 4", arr.len()));
+            }
+            let mut out = [0u64; 4];
+            for (slot, v) in out.iter_mut().zip(arr) {
+                *slot = v.as_u64().ok_or("temporal factor is not an integer")?;
+            }
+            Ok(out)
+        })
+        .collect::<Result<Vec<[u64; 4]>, String>>()?;
+    let perms = j
+        .get("perms")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"perms\"")?
+        .iter()
+        .map(dims4)
+        .collect::<Result<Vec<[Dim; 4]>, String>>()?;
+    Ok(Mapping {
+        temporal,
+        perms,
+        spatial_row: spatial_from(j.get("spatial_row").ok_or("missing \"spatial_row\"")?)?,
+        spatial_col: spatial_from(j.get("spatial_col").ok_or("missing \"spatial_col\"")?)?,
+    })
+}
+
+fn op_stats_to_json(s: &OpStats) -> Json {
+    let levels: Vec<Json> = s
+        .levels
+        .iter()
+        .map(|l| {
+            Json::obj()
+                .with("kind", l.kind.name())
+                .with("reads", l.reads)
+                .with("writes", l.writes)
+                .with("energy_pj", l.energy_pj)
+        })
+        .collect();
+    let boundary: Vec<Json> = s
+        .boundary_words
+        .iter()
+        .map(|&(k, w)| Json::Arr(vec![Json::from(k.name()), Json::from(w)]))
+        .collect();
+    let bound = match s.bound {
+        Bound::Compute => "compute".to_string(),
+        Bound::Memory(k) => format!("memory:{}", k.name()),
+    };
+    Json::obj()
+        .with("cycles", s.cycles)
+        .with("compute_cycles", s.compute_cycles)
+        .with("macs", s.macs)
+        .with("energy_pj", s.energy_pj)
+        .with("mac_energy_pj", s.mac_energy_pj)
+        .with("noc_energy_pj", s.noc_energy_pj)
+        .with("levels", Json::Arr(levels))
+        .with("boundary_words", Json::Arr(boundary))
+        .with("dram_words", s.dram_words)
+        .with("utilization", s.utilization)
+        .with("bound", bound)
+        .with("onchip_bound_cycles", s.onchip_bound_cycles)
+}
+
+fn op_stats_from_json(j: &Json) -> Result<OpStats, String> {
+    let levels = j
+        .get("levels")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"levels\"")?
+        .iter()
+        .map(|l| {
+            Ok(LevelStats {
+                kind: LevelKind::named(
+                    l.get("kind").and_then(Json::as_str).ok_or("level missing \"kind\"")?,
+                ),
+                reads: f64_field(l, "reads")?,
+                writes: f64_field(l, "writes")?,
+                energy_pj: f64_field(l, "energy_pj")?,
+            })
+        })
+        .collect::<Result<Vec<LevelStats>, String>>()?;
+    let boundary_words = j
+        .get("boundary_words")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"boundary_words\"")?
+        .iter()
+        .map(|b| {
+            let arr = b.as_arr().ok_or("boundary entry is not an array")?;
+            match arr {
+                [k, w] => Ok((
+                    LevelKind::named(k.as_str().ok_or("boundary kind is not a string")?),
+                    w.as_f64().ok_or("boundary words is not a number")?,
+                )),
+                _ => Err("boundary entry wants [kind, words]".to_string()),
+            }
+        })
+        .collect::<Result<Vec<(LevelKind, f64)>, String>>()?;
+    let bound_txt = j.get("bound").and_then(Json::as_str).ok_or("missing \"bound\"")?;
+    let bound = if bound_txt == "compute" {
+        Bound::Compute
+    } else if let Some(kind) = bound_txt.strip_prefix("memory:") {
+        Bound::Memory(LevelKind::named(kind))
+    } else {
+        return Err(format!("unknown bound \"{bound_txt}\""));
+    };
+    Ok(OpStats {
+        cycles: f64_field(j, "cycles")?,
+        compute_cycles: f64_field(j, "compute_cycles")?,
+        macs: f64_field(j, "macs")?,
+        energy_pj: f64_field(j, "energy_pj")?,
+        mac_energy_pj: f64_field(j, "mac_energy_pj")?,
+        noc_energy_pj: f64_field(j, "noc_energy_pj")?,
+        levels,
+        boundary_words,
+        dram_words: f64_field(j, "dram_words")?,
+        utilization: f64_field(j, "utilization")?,
+        bound,
+        onchip_bound_cycles: f64_field(j, "onchip_bound_cycles")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entry() -> CachedSearch {
+        let mut stats = OpStats::new_empty();
+        stats.cycles = 123.456789e3;
+        stats.compute_cycles = 100.0;
+        stats.macs = 4096.0;
+        stats.energy_pj = 0.1 + 0.2; // deliberately non-representable
+        stats.mac_energy_pj = 1.5e-3;
+        stats.noc_energy_pj = 7.25;
+        stats.levels = vec![LevelStats {
+            kind: LevelKind::named("L2"),
+            reads: 3.0,
+            writes: 1.0 / 3.0,
+            energy_pj: 9.9,
+        }];
+        stats.boundary_words = vec![(LevelKind::DRAM, 512.125)];
+        stats.dram_words = 512.125;
+        stats.utilization = 0.875;
+        stats.bound = Bound::Memory(LevelKind::DRAM);
+        stats.onchip_bound_cycles = 99.0;
+        CachedSearch {
+            mapping: Mapping {
+                temporal: vec![[1, 2, 3, 4], [4, 3, 2, 1]],
+                perms: vec![
+                    [Dim::B, Dim::M, Dim::N, Dim::K],
+                    [Dim::K, Dim::N, Dim::M, Dim::B],
+                ],
+                spatial_row: (Dim::M, 8),
+                spatial_col: (Dim::N, 16),
+            },
+            stats,
+            evaluated: 42,
+            valid: 17,
+        }
+    }
+
+    /// Entry serialization round-trips bitwise, including
+    /// non-representable floats, custom level kinds, and the bound tag.
+    #[test]
+    fn entry_round_trips_bitwise() {
+        let e = sample_entry();
+        let j = cached_search_to_json(&e);
+        // Through TEXT, not just the Json tree: exactness must survive
+        // Display + parse.
+        let back = cached_search_from_json(&Json::parse(&j.to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back.mapping, e.mapping);
+        assert_eq!(back.evaluated, e.evaluated);
+        assert_eq!(back.valid, e.valid);
+        assert_eq!(back.stats.cycles.to_bits(), e.stats.cycles.to_bits());
+        assert_eq!(back.stats.energy_pj.to_bits(), e.stats.energy_pj.to_bits());
+        assert_eq!(
+            back.stats.levels[0].writes.to_bits(),
+            e.stats.levels[0].writes.to_bits()
+        );
+        assert_eq!(back.stats.levels[0].kind, LevelKind::named("L2"));
+        assert_eq!(back.stats.bound, Bound::Memory(LevelKind::DRAM));
+        assert_eq!(
+            back.stats.boundary_words[0].1.to_bits(),
+            e.stats.boundary_words[0].1.to_bits()
+        );
+    }
+
+    /// The four rejection causes are distinct errors with distinct
+    /// messages.
+    #[test]
+    fn rejection_causes_are_distinct() {
+        let dir = std::env::temp_dir().join(format!("harp-mapcache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.json");
+
+        let write_and_load = |text: &str| {
+            std::fs::write(&path, text).unwrap();
+            MapCache::with_file(&path, 1, "s4|r0x1").unwrap_err()
+        };
+
+        let garbage = write_and_load("{not json");
+        assert!(matches!(garbage, MapCacheError::Malformed(_)));
+        let not_a_cache = write_and_load("{\"samples\": 3}");
+        assert!(matches!(not_a_cache, MapCacheError::Malformed(_)));
+        let wrong_version = write_and_load(
+            "{\"harp_mapping_cache\":1,\"model_version\":999,\"search\":\"s4|r0x1\",\
+             \"entries\":{}}",
+        );
+        assert_eq!(
+            wrong_version,
+            MapCacheError::VersionMismatch { found: 999, expected: 1 }
+        );
+        let stale = write_and_load(
+            "{\"harp_mapping_cache\":1,\"model_version\":1,\"search\":\"s999|r0x2\",\
+             \"entries\":{}}",
+        );
+        assert_eq!(
+            stale,
+            MapCacheError::StaleFingerprint {
+                found: "s999|r0x2".into(),
+                expected: "s4|r0x1".into()
+            }
+        );
+        assert_ne!(wrong_version.to_string(), stale.to_string());
+        assert_ne!(garbage.to_string(), wrong_version.to_string());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Spill → load serves the identical entry; a malformed entry names
+    /// its key.
+    #[test]
+    fn spill_load_round_trip_and_entry_errors() {
+        let dir =
+            std::env::temp_dir().join(format!("harp-mapcache-rt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.json");
+
+        let cache = MapCache::with_file(&path, 1, "s4|r0x1").unwrap();
+        let e = sample_entry();
+        let stored = cache.get_or_compute(0xAB, 0xCD, || e.clone());
+        assert_eq!(cache.len(), 1);
+        cache.persist().unwrap();
+
+        let warm = MapCache::with_file(&path, 1, "s4|r0x1").unwrap();
+        assert_eq!(warm.len(), 1);
+        let mut computed = false;
+        let hit = warm.get_or_compute(0xAB, 0xCD, || {
+            computed = true;
+            sample_entry()
+        });
+        assert!(!computed, "warm cache must not recompute");
+        assert_eq!(hit.stats.cycles.to_bits(), stored.stats.cycles.to_bits());
+        assert_eq!(hit.mapping, stored.mapping);
+
+        // Corrupt one entry: the error names the key.
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let broken = doc.replace("\"evaluated\":42", "\"evaluated\":\"many\"");
+        assert_ne!(doc, broken);
+        std::fs::write(&path, broken).unwrap();
+        let err = MapCache::with_file(&path, 1, "s4|r0x1").unwrap_err();
+        match err {
+            MapCacheError::Malformed(d) => assert!(d.contains(&MapCache::key(0xAB, 0xCD))),
+            other => panic!("want Malformed, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -7,7 +7,9 @@
 
 pub mod blackbox;
 pub mod factors;
+pub mod mapcache;
 pub mod search;
 
 pub use blackbox::{BlackboxMapper, MappedOp};
+pub use mapcache::{MapCache, MapCacheError};
 pub use search::{search_best, search_best_threaded, SearchBudget};

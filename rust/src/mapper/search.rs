@@ -417,6 +417,43 @@ pub fn shape_fingerprint(op: &TensorOp) -> u64 {
     h
 }
 
+/// Deterministic fingerprint of everything about a sub-accelerator that
+/// can change a mapping-search RESULT: array geometry, every storage
+/// level (kind, capacity, bandwidth, access energy — energy feeds the
+/// `better()` tie-break), MAC energy, and the mapping constraints. The
+/// spec's `name` is deliberately excluded: renaming a unit cannot move
+/// the numbers, so it must not miss the mapping cache. Keys the
+/// persistent `(shape, unit) → mapping` cache together with
+/// [`shape_fingerprint`].
+pub fn spec_fingerprint(spec: &ArchSpec) -> u64 {
+    const P: u64 = 0x100000001b3;
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(P);
+    };
+    mix(spec.rows);
+    mix(spec.cols);
+    mix(spec.levels.len() as u64);
+    for lv in &spec.levels {
+        mix(lv.kind.name().len() as u64);
+        for b in lv.kind.name().bytes() {
+            mix(b as u64);
+        }
+        mix(lv.size_words);
+        mix(lv.bw_words_per_cycle.to_bits());
+        mix(lv.energy_pj_per_word.to_bits());
+    }
+    mix(spec.mac_energy_pj.to_bits());
+    match spec.constraints.forced_col_dim {
+        Some(d) => mix(1 + d.index() as u64),
+        None => mix(0),
+    }
+    mix(spec.constraints.forced_col_factor.map_or(0, |f| 1 + f));
+    mix(spec.constraints.no_dram_psum as u64);
+    h
+}
+
 /// Deterministic fingerprint of a whole cascade: every op's shape,
 /// kind, phase, repeat count, and name, plus the dependency edges.
 /// Unlike [`shape_fingerprint`] (deliberately name/phase-agnostic —

@@ -3,7 +3,9 @@
 //! machines small enough to enumerate (≤ 6 ops × ≤ 3 units), and every
 //! policy is property-tested for assignment validity on random
 //! cascades across ALL 16 taxonomy points. The determinism half pins
-//! each policy's full stats document across worker counts.
+//! each policy's full stats document across worker counts, and the
+//! replay-mode pin holds the incremental (`replay_delta`) search
+//! trajectory byte-identical to the historical full-replay one.
 
 use harp::arch::partition::{HardwareParams, MachineConfig};
 use harp::arch::taxonomy::HarpClass;
@@ -71,7 +73,7 @@ fn enumerate_assignments(eligible: &[Vec<usize>]) -> Vec<Vec<usize>> {
 #[test]
 fn search_bounded_by_greedy_and_enumerated_optimum() {
     let budget = SearchBudget { samples: 6, seed: 0xA110C };
-    let mapper = BlackboxMapper { budget, threads: 2 };
+    let mapper = BlackboxMapper { budget, threads: 2, ..BlackboxMapper::default() };
     // leaf+xnode is the degenerate case (one eligible unit per class —
     // search must equal greedy must equal the optimum); hier+xnode has
     // two IDENTICAL low units (symmetric choices); hier+compound has
@@ -151,7 +153,11 @@ fn search_bounded_by_greedy_and_enumerated_optimum() {
 fn every_policy_yields_valid_assignments_on_all_taxonomy_points() {
     let params = HardwareParams::default();
     let mapper =
-        BlackboxMapper { budget: SearchBudget { samples: 4, seed: 0x7E57 }, threads: 2 };
+        BlackboxMapper {
+            budget: SearchBudget { samples: 4, seed: 0x7E57 },
+            threads: 2,
+            ..BlackboxMapper::default()
+        };
     for class in HarpClass::all_points() {
         let machine = MachineConfig::build(&class, &params).unwrap();
         let classifier = Classifier::new(machine.params.tipping_ai());
@@ -182,6 +188,76 @@ fn every_policy_yields_valid_assignments_on_all_taxonomy_points() {
             check(&a, "search");
             for (i, mo) in mapped.iter().enumerate() {
                 assert_eq!(mo.sub_accel, a[i], "{class}: mapped ops disagree");
+            }
+        }
+    }
+}
+
+/// Regression pin for the incremental-replay rewrite: running the
+/// `search` policy with `replay_delta` probes (the default) and with
+/// the historical full `replay` on every probe must walk the SAME
+/// trajectory — same final assignment, and a byte-identical stats
+/// document once the winner goes through the real `schedule()`. Any
+/// divergence means an incremental probe returned a different makespan
+/// bit pattern somewhere, flipping an accept/reject decision.
+#[test]
+fn incremental_and_full_replay_search_walk_identical_trajectories() {
+    use harp::arch::topology::ContentionMode;
+    use harp::hhp::allocator::search_allocation_impl;
+    use harp::hhp::stats::CascadeStats;
+
+    let mapper = BlackboxMapper {
+        budget: SearchBudget { samples: 6, seed: 0xDE17A },
+        threads: 2,
+        ..BlackboxMapper::default()
+    };
+    // hier+xnode exercises symmetric unit choices; hier+compound makes
+    // the moves matter; Booked adds capacity slices + shared-edge
+    // arbitration to the replayed event loop.
+    for (machine_id, contention) in [
+        ("hier+xnode", ContentionMode::Off),
+        ("hier+compound", ContentionMode::Off),
+        ("hier+compound", ContentionMode::Booked),
+    ] {
+        let machine = MachineConfig::build(
+            &HarpClass::from_id(machine_id).unwrap(),
+            &HardwareParams::default(),
+        )
+        .unwrap()
+        .with_contention(contention)
+        .unwrap();
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let mut rng = Rng::new(0x1DE_17A);
+        for case in 0..3 {
+            let g = random_cascade(&mut rng, 5 + rng.next_below(4)); // 5..=8 ops
+            for dynamic_bw in [false, true] {
+                let opts = ScheduleOptions { dynamic_bw };
+                let run = |incremental: bool| {
+                    let (a, mapped) = search_allocation_impl(
+                        &g, &machine, &classifier, &mapper, &opts, incremental,
+                    );
+                    let sched = schedule(&g, &machine, &mapped, &opts);
+                    let stats = CascadeStats::aggregate(
+                        &g,
+                        &machine,
+                        &mapped,
+                        &sched,
+                        AllocPolicy::Search,
+                    );
+                    (a, stats.to_json().to_string_pretty())
+                };
+                let (a_inc, doc_inc) = run(true);
+                let (a_full, doc_full) = run(false);
+                assert_eq!(
+                    a_inc, a_full,
+                    "{machine_id}/{contention:?} case {case} dyn={dynamic_bw}: \
+                     incremental and full replay searched different assignments"
+                );
+                assert_eq!(
+                    doc_inc, doc_full,
+                    "{machine_id}/{contention:?} case {case} dyn={dynamic_bw}: \
+                     stats documents diverge between replay modes"
+                );
             }
         }
     }

@@ -1,0 +1,327 @@
+//! Differential suite for incremental schedule replay.
+//!
+//! `ScheduleOracle::replay_delta` promises bit-identity with the full
+//! `replay` — and with `schedule().makespan` — under its caller
+//! contract (stats are a pure function of `(op, unit)`). This suite
+//! drives seeded random single-op-move sequences over random DAGs on
+//! ALL 16 taxonomy points, crossed with {static, dynamic bandwidth}
+//! and {contention off, booked}, asserting the three paths agree
+//! bitwise at EVERY step — makespans and the per-op delay/latency
+//! buffers the allocation search ranks its moves by. Targeted cases
+//! pin the boundary behaviour: repeated replays on one oracle (the
+//! no-change fast path), a critical-path move (which must fall back to
+//! a full replay), a move that empties a unit's queue, and a leaf move
+//! that provably takes the mechanical-prefix path.
+
+use harp::arch::partition::{HardwareParams, MachineConfig};
+use harp::arch::spec::ArchSpec;
+use harp::arch::taxonomy::HarpClass;
+use harp::arch::topology::ContentionMode;
+use harp::hhp::scheduler::{schedule, ScheduleOptions, ScheduleOracle};
+use harp::mapper::blackbox::MappedOp;
+use harp::model::stats::OpStats;
+use harp::util::rng::Rng;
+use harp::workload::cascade::Cascade;
+use harp::workload::einsum::{Phase, TensorOp};
+
+/// Random DAG of `n` ops with forward edges at probability `edge_p`.
+fn random_cascade(rng: &mut Rng, n: usize, edge_p: f64) -> Cascade {
+    let mut g = Cascade::new("delta");
+    for i in 0..n {
+        g.push(TensorOp::gemm(&format!("o{i}"), Phase::Encoder, 8, 8, 8));
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.next_f64() < edge_p {
+                g.dep(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Synthetic per-(op, unit) stats, shaped to the unit's spec: one
+/// boundary per level pair (so the booked-contention grant vector
+/// lines up), words scaled to the spec bandwidths so the dynamic
+/// re-grant genuinely moves latencies, and small-integer compute
+/// cycles so priority ties (the `max_by` order-sensitivity) occur.
+fn synth_stats(rng: &mut Rng, spec: &ArchSpec) -> OpStats {
+    let mut s = OpStats::new_empty();
+    s.compute_cycles = (1 + rng.next_below(12)) as f64;
+    let nb = spec.levels.len() - 1;
+    let mut worst = s.compute_cycles;
+    for j in 0..nb {
+        let bw = spec.levels[j + 1].bw_words_per_cycle;
+        let words = bw * (1 + rng.next_below(20)) as f64;
+        s.boundary_words.push((spec.levels[j + 1].kind, words));
+        worst = worst.max(words / bw);
+    }
+    s.cycles = worst;
+    let mut onchip = s.compute_cycles;
+    for j in 0..nb.saturating_sub(1) {
+        let bw = spec.levels[j + 1].bw_words_per_cycle;
+        onchip = onchip.max(s.boundary_words[j].1 / bw);
+    }
+    s.onchip_bound_cycles = onchip;
+    s
+}
+
+/// The fixed cost matrix: `replay_delta`'s pure-function contract holds
+/// by construction, exactly as in the allocation search.
+fn cost_matrix(rng: &mut Rng, n: usize, machine: &MachineConfig) -> Vec<Vec<OpStats>> {
+    (0..n)
+        .map(|_| machine.sub_accels.iter().map(|su| synth_stats(rng, &su.spec)).collect())
+        .collect()
+}
+
+fn stats_view<'a>(costs: &'a [Vec<OpStats>], assignment: &[usize]) -> Vec<&'a OpStats> {
+    assignment.iter().enumerate().map(|(i, &u)| &costs[i][u]).collect()
+}
+
+fn mapped_view(costs: &[Vec<OpStats>], assignment: &[usize]) -> Vec<MappedOp> {
+    assignment
+        .iter()
+        .enumerate()
+        .map(|(i, &u)| MappedOp {
+            op_index: i,
+            sub_accel: u,
+            stats: costs[i][u].clone(),
+            evaluated: 0,
+        })
+        .collect()
+}
+
+fn assert_bits_eq(a: f64, b: f64, ctx: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: {a} vs {b}");
+}
+
+fn assert_slice_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: index {k}: {x} vs {y}");
+    }
+}
+
+/// The headline differential: on every taxonomy point × bandwidth mode
+/// × contention mode, a seeded sequence of random single-op moves keeps
+/// `replay_delta` == `replay` == `schedule().makespan` bit-exactly at
+/// every step, including the delay/latency buffers both oracles expose.
+#[test]
+fn incremental_replay_matches_full_and_schedule_on_all_taxonomy_points() {
+    let params = HardwareParams::default();
+    let mut total_incremental = 0usize;
+    for (ci, class) in HarpClass::all_points().into_iter().enumerate() {
+        for contention in [ContentionMode::Off, ContentionMode::Booked] {
+            let machine = MachineConfig::build(&class, &params)
+                .unwrap()
+                .with_contention(contention)
+                .unwrap();
+            let nsub = machine.sub_accels.len();
+            let mut rng = Rng::new(0xD1FF_0000 ^ (ci as u64) << 1 ^ (contention == ContentionMode::Booked) as u64);
+            for dynamic_bw in [false, true] {
+                let opts = ScheduleOptions { dynamic_bw };
+                let n = 8 + rng.next_below(5);
+                let g = random_cascade(&mut rng, n, 0.3);
+                let costs = cost_matrix(&mut rng, n, &machine);
+                let mut assignment: Vec<usize> =
+                    (0..n).map(|_| rng.next_below(nsub)).collect();
+                let mut inc = ScheduleOracle::new(&g, &machine, &opts);
+                let mut full = ScheduleOracle::new(&g, &machine, &opts);
+                for step in 0..10 {
+                    if step > 0 && nsub > 1 {
+                        let i = rng.next_below(n);
+                        let u = rng.next_below(nsub);
+                        assignment[i] =
+                            if u == assignment[i] { (u + 1) % nsub } else { u };
+                    }
+                    let view = stats_view(&costs, &assignment);
+                    let m_inc = inc.replay_delta(&assignment, &view);
+                    let m_full = full.replay(&assignment, &view);
+                    let m_sched =
+                        schedule(&g, &machine, &mapped_view(&costs, &assignment), &opts)
+                            .makespan;
+                    let ctx = format!(
+                        "{} {contention:?} dyn={dynamic_bw} step {step}",
+                        class.id()
+                    );
+                    assert_bits_eq(m_inc, m_full, &format!("{ctx}: delta vs full"));
+                    assert_bits_eq(m_full, m_sched, &format!("{ctx}: full vs schedule"));
+                    assert_slice_bits_eq(
+                        inc.queue_delays(),
+                        full.queue_delays(),
+                        &format!("{ctx}: queue delays"),
+                    );
+                    assert_slice_bits_eq(
+                        inc.latencies(),
+                        full.latencies(),
+                        &format!("{ctx}: latencies"),
+                    );
+                }
+                total_incremental += inc.replay_counts().1;
+            }
+        }
+    }
+    // The sweep must actually exercise the incremental machinery, not
+    // degenerate into wall-to-wall fallbacks.
+    assert!(total_incremental > 0, "no incremental replay ever ran");
+}
+
+/// Repeated replays of the SAME assignment on one oracle: the first
+/// call is the baseline full replay, every later one takes the
+/// no-change fast path and returns the identical makespan bits.
+#[test]
+fn repeated_replays_take_the_fast_path() {
+    let machine = MachineConfig::build(
+        &HarpClass::from_id("hier+xnode").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xFA57);
+    let g = random_cascade(&mut rng, 9, 0.35);
+    let costs = cost_matrix(&mut rng, 9, &machine);
+    let assignment: Vec<usize> =
+        (0..9).map(|_| rng.next_below(machine.sub_accels.len())).collect();
+    let view = stats_view(&costs, &assignment);
+    for dynamic_bw in [false, true] {
+        let opts = ScheduleOptions { dynamic_bw };
+        let mut oracle = ScheduleOracle::new(&g, &machine, &opts);
+        let first = oracle.replay_delta(&assignment, &view);
+        let second = oracle.replay_delta(&assignment, &view);
+        let third = oracle.replay_delta(&assignment, &view);
+        assert_bits_eq(first, second, "second replay");
+        assert_bits_eq(first, third, "third replay");
+        assert_eq!(
+            oracle.replay_counts(),
+            (1, 2),
+            "one baseline full replay, two fast-path hits"
+        );
+    }
+}
+
+/// A move on the critical path dirties a source op (the priority change
+/// propagates all the way up), so there is no reusable prefix: the
+/// oracle must fall back to a full replay — and still agree with
+/// `schedule()` bitwise.
+#[test]
+fn critical_path_move_falls_back_to_full_replay() {
+    let machine = MachineConfig::build(
+        &HarpClass::from_id("hier+xnode").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap();
+    let nsub = machine.sub_accels.len();
+    assert!(nsub >= 2);
+    // A pure chain: every op is on the critical path.
+    let mut g = Cascade::new("chain");
+    for i in 0..6 {
+        g.push(TensorOp::gemm(&format!("c{i}"), Phase::Encoder, 8, 8, 8));
+    }
+    for i in 0..5 {
+        g.dep(i, i + 1);
+    }
+    // Distinct cycles per (op, unit), so any move provably shifts the
+    // moved op's latency — and with it every ancestor's priority.
+    let costs: Vec<Vec<OpStats>> = (0..6)
+        .map(|i| {
+            (0..nsub)
+                .map(|u| {
+                    let mut s = OpStats::new_empty();
+                    s.cycles = (10 + i * 17 + u * 5) as f64;
+                    s.compute_cycles = s.cycles;
+                    s.onchip_bound_cycles = s.cycles;
+                    s
+                })
+                .collect()
+        })
+        .collect();
+    let opts = ScheduleOptions { dynamic_bw: true };
+    let mut oracle = ScheduleOracle::new(&g, &machine, &opts);
+    let mut assignment = vec![0usize; 6];
+    oracle.replay_delta(&assignment, &stats_view(&costs, &assignment));
+    assert_eq!(oracle.replay_counts(), (1, 0));
+    // Move a mid-chain op: its latency change shifts its own priority,
+    // which propagates through every ancestor to the source.
+    assignment[3] = 1;
+    let m = oracle.replay_delta(&assignment, &stats_view(&costs, &assignment));
+    assert_eq!(
+        oracle.replay_counts().0,
+        2,
+        "critical-path move must fall back to a full replay"
+    );
+    let m_sched = schedule(&g, &machine, &mapped_view(&costs, &assignment), &opts).makespan;
+    assert_bits_eq(m, m_sched, "fallback vs schedule");
+}
+
+/// Boundary cases around unit queues on a wide spine-and-leaves DAG:
+/// a late-leaf move has a provable reusable prefix (its priority change
+/// does not propagate past its predecessor, whose other successor
+/// dominates), and a move that empties a unit's queue entirely stays
+/// bit-identical too.
+#[test]
+fn leaf_moves_use_the_prefix_and_emptying_a_queue_stays_exact() {
+    let machine = MachineConfig::build(
+        &HarpClass::from_id("hier+xnode").unwrap(),
+        &HardwareParams::default(),
+    )
+    .unwrap();
+    let nsub = machine.sub_accels.len();
+    assert!(nsub >= 2);
+    // Spine 0→1→2→3 of heavy ops; leaves 4..7 hang off op 1. The spine
+    // dominates every priority, so leaf moves never dirty it.
+    let mut g = Cascade::new("spine");
+    for i in 0..8 {
+        g.push(TensorOp::gemm(&format!("s{i}"), Phase::Encoder, 8, 8, 8));
+    }
+    for i in 0..3 {
+        g.dep(i, i + 1);
+    }
+    for leaf in 4..8 {
+        g.dep(1, leaf);
+    }
+    // Hand-built stats: spine ops cost 1000 on any unit, leaves 3..10 —
+    // far below the downstream spine priority at their predecessor.
+    let mut costs: Vec<Vec<OpStats>> = Vec::new();
+    for i in 0..8 {
+        let mut row = Vec::new();
+        for u in 0..nsub {
+            let mut s = OpStats::new_empty();
+            s.cycles = if i < 4 { 1000.0 } else { (3 + i + u) as f64 };
+            s.compute_cycles = s.cycles;
+            s.onchip_bound_cycles = s.cycles;
+            row.push(s);
+        }
+        costs.push(row);
+    }
+    let opts = ScheduleOptions::default();
+    let mut oracle = ScheduleOracle::new(&g, &machine, &opts);
+    // Spine on unit 0, leaves on unit 1.
+    let mut assignment = vec![0, 0, 0, 0, 1, 1, 1, 1];
+    let check = |oracle: &mut ScheduleOracle, assignment: &[usize], ctx: &str| {
+        let m = oracle.replay_delta(assignment, &stats_view(&costs, assignment));
+        let m_sched =
+            schedule(&g, &machine, &mapped_view(&costs, assignment), &opts).makespan;
+        assert_bits_eq(m, m_sched, ctx);
+    };
+    check(&mut oracle, &assignment, "baseline");
+    assert_eq!(oracle.replay_counts(), (1, 0));
+
+    // Late-leaf move: ready only once op 1 completes (t = 2000 > 0), and
+    // its priority change stays below the spine's — the mechanical
+    // prefix must carry it, with no full-replay fallback.
+    assignment[6] = 0;
+    check(&mut oracle, &assignment, "leaf move");
+    assert_eq!(
+        oracle.replay_counts(),
+        (1, 1),
+        "a late-leaf move must replay incrementally, not fall back"
+    );
+
+    // Empty unit 1's queue completely: every leaf back on unit 0.
+    assignment = vec![0; 8];
+    check(&mut oracle, &assignment, "queue emptied");
+    // And repopulate it from empty.
+    assignment[5] = 1;
+    check(&mut oracle, &assignment, "queue repopulated");
+    let (_, incremental) = oracle.replay_counts();
+    assert!(incremental >= 1);
+}

@@ -154,6 +154,57 @@ fn eval_config_rejects_cli_alloc_flag() {
 }
 
 #[test]
+fn eval_mapping_cache_round_trips_and_rejections_are_loud() {
+    let dir = std::env::temp_dir().join("harp_cli_mapping_cache_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("mappings.json");
+    std::fs::remove_file(&cache).ok();
+    let cache_s = cache.to_string_lossy().into_owned();
+    let eval = |extra: &[&str]| {
+        let mut args = vec![
+            "eval", "--workload", "llama2", "--machine", "hier+xnode", "--samples", "10",
+            "--alloc", "search", "--json",
+        ];
+        args.extend_from_slice(extra);
+        harp(&args)
+    };
+    let (ok, plain, stderr) = eval(&[]);
+    assert!(ok, "stderr: {stderr}");
+    let (ok, cold, stderr) = eval(&["--mapping-cache", &cache_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(plain, cold, "a cold mapping cache changed the --json output");
+    assert!(cache.exists(), "eval must spill the mapping cache before exiting");
+    let (ok, warm, stderr) = eval(&["--mapping-cache", &cache_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(plain, warm, "a warm mapping cache changed the --json output");
+
+    // A cache searched under a different budget must be rejected, not
+    // silently served (its mappings would change results).
+    let (ok, _, stderr) = harp(&[
+        "eval", "--workload", "llama2", "--machine", "hier+xnode", "--samples", "12",
+        "--alloc", "search", "--mapping-cache", &cache_s,
+    ]);
+    assert!(!ok, "a stale-budget cache must fail the run");
+    assert!(stderr.contains("stale mapping cache"), "{stderr}");
+
+    // So must a corrupt file.
+    std::fs::write(&cache, "{ not json").unwrap();
+    let (ok, _, stderr) = eval(&["--mapping-cache", &cache_s]);
+    assert!(!ok, "a corrupt cache must fail the run");
+    assert!(stderr.contains("malformed mapping cache"), "{stderr}");
+
+    // --config supplies the evaluation options; the flag alongside it
+    // is a conflict, not a shadowing.
+    let cfg = dir.join("cfg.json");
+    std::fs::write(&cfg, r#"{"workload":"bert","machine":"leaf+homo","samples":10}"#)
+        .unwrap();
+    let cfg_s = cfg.to_string_lossy().into_owned();
+    let (ok, _, stderr) = harp(&["eval", "--config", &cfg_s, "--mapping-cache", &cache_s]);
+    assert!(!ok, "--mapping-cache alongside --config must fail");
+    assert!(stderr.contains("\"mapping_cache\""), "{stderr}");
+}
+
+#[test]
 fn eval_rejects_invalid_machine() {
     let (ok, _, stderr) = harp(&["eval", "--workload", "bert", "--machine", "leaf+xdepth"]);
     assert!(!ok);

@@ -1,0 +1,194 @@
+//! Property and robustness suite for the persistent mapping cache.
+//!
+//! The cache's contract is cache-hit-equals-fresh, **bitwise**: an
+//! evaluation served from a spilled `(shape, unit) → mapping` cache
+//! must produce the byte-identical `CascadeStats` document a fresh
+//! search produces — across processes (spill → load) and worker
+//! counts. Anything the cache cannot honour must be rejected loudly
+//! with a cause-specific error, never served quietly and never a
+//! panic: the robustness half truncates a valid spill at every 97-byte
+//! step and doctors its version/budget headers.
+
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::hhp::allocator::AllocPolicy;
+use harp::mapper::MapCache;
+use harp::workload::cascade::Cascade;
+use harp::workload::einsum::{Phase, TensorOp};
+use std::path::{Path, PathBuf};
+
+fn small_cascade() -> Cascade {
+    let mut g = Cascade::new("mapcache");
+    g.push(TensorOp::gemm("a", Phase::Encoder, 64, 128, 64));
+    g.push(TensorOp::gemm("b", Phase::Encoder, 64, 128, 64)); // same shape as a
+    g.push(TensorOp::bmm("c", Phase::Decode, 4, 64, 32, 64));
+    g.push(TensorOp::gemm("d", Phase::Prefill, 128, 64, 32));
+    g.dep(0, 2);
+    g.dep(1, 3);
+    g
+}
+
+/// Options for a quick search-policy evaluation (the policy that routes
+/// BOTH mapper entry points — the cost matrix and the final mapping —
+/// through the cache), optionally attached to a cache file.
+fn opts(threads: usize, cache: Option<&Path>) -> EvalOptions {
+    let mut o = EvalOptions { samples: 8, ..EvalOptions::default() };
+    o.alloc = AllocPolicy::Search;
+    o.threads = threads;
+    if let Some(p) = cache {
+        o.attach_mapping_cache(p).expect("cache attach must succeed");
+    }
+    o
+}
+
+fn eval_doc(o: &EvalOptions) -> String {
+    let g = small_cascade();
+    let r = evaluate_cascade_on_config(
+        &HarpClass::from_id("hier+xnode").unwrap(),
+        &HardwareParams::default(),
+        &g,
+        o,
+    )
+    .unwrap();
+    r.stats.to_json().to_string_pretty()
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("harp-mapcache-it-{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("mappings.json")
+}
+
+/// Cold-cache, warm-in-process, and warm-across-"processes" (a fresh
+/// cache loaded from the spill) evaluations all emit the byte-identical
+/// stats document a cache-less evaluation emits — and a warm run adds
+/// no entries, so re-persisting is a no-op on the file bytes.
+#[test]
+fn cached_evaluations_are_byte_identical_to_fresh() {
+    let path = temp_path("identity");
+    std::fs::remove_file(&path).ok();
+
+    let plain = eval_doc(&opts(2, None));
+
+    let cold_opts = opts(2, Some(&path));
+    let cold = eval_doc(&cold_opts);
+    assert_eq!(plain, cold, "cold cache changed the stats document");
+    let mc = cold_opts.map_cache.as_ref().unwrap();
+    assert!(mc.len() > 0, "search-policy eval must populate the cache");
+    mc.persist().unwrap();
+    let spilled = std::fs::read(&path).unwrap();
+    assert!(!spilled.is_empty());
+
+    // A second attach = a new process loading the spill.
+    let warm_opts = opts(2, Some(&path));
+    let loaded = warm_opts.map_cache.as_ref().unwrap().len();
+    assert_eq!(loaded, mc.len(), "spill → load must preserve every entry");
+    let warm = eval_doc(&warm_opts);
+    assert_eq!(plain, warm, "warm cache changed the stats document");
+    assert_eq!(
+        warm_opts.map_cache.as_ref().unwrap().len(),
+        loaded,
+        "a warm run must hit, not grow the cache"
+    );
+    warm_opts.map_cache.as_ref().unwrap().persist().unwrap();
+    assert_eq!(
+        spilled,
+        std::fs::read(&path).unwrap(),
+        "re-persisting a clean cache must not move the file"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Cache hits are worker-count invariant: serial and parallel
+/// evaluations over the same warm cache emit identical documents
+/// (and match the cache-less baseline at each count).
+#[test]
+fn warm_cache_is_bitwise_across_thread_counts() {
+    let path = temp_path("threads");
+    std::fs::remove_file(&path).ok();
+
+    let seed_opts = opts(2, Some(&path));
+    let baseline = eval_doc(&seed_opts);
+    seed_opts.map_cache.as_ref().unwrap().persist().unwrap();
+
+    for threads in [1usize, 4] {
+        let fresh = eval_doc(&opts(threads, None));
+        let cached = eval_doc(&opts(threads, Some(&path)));
+        assert_eq!(fresh, baseline, "threads={threads}: fresh eval drifted");
+        assert_eq!(cached, baseline, "threads={threads}: cached eval drifted");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Every strict prefix of a valid spill (stepped at 97 bytes so the
+/// cuts land everywhere: mid-number, mid-key, mid-structure) is
+/// rejected with an error — never a panic, never a quiet partial load.
+#[test]
+fn truncated_spills_error_at_every_cut() {
+    let path = temp_path("truncate");
+    std::fs::remove_file(&path).ok();
+
+    let seed_opts = opts(2, Some(&path));
+    let _ = eval_doc(&seed_opts);
+    seed_opts.map_cache.as_ref().unwrap().persist().unwrap();
+    let full = std::fs::read(&path).unwrap();
+    assert!(full.len() > 97, "spill too small to sweep");
+
+    let cut_path = path.with_file_name("truncated.json");
+    for cut in (0..full.len()).step_by(97) {
+        std::fs::write(&cut_path, &full[..cut]).unwrap();
+        let err = match MapCache::with_file(&cut_path, 1, "anything") {
+            Ok(_) => panic!("truncation at {cut} bytes must be rejected"),
+            Err(e) => e,
+        };
+        // Rejection must be loud AND descriptive.
+        assert!(!err.to_string().is_empty());
+    }
+    // The untruncated file still loads (with the real header values).
+    let mut reopen = opts(2, Some(&path));
+    assert!(reopen.map_cache.take().unwrap().len() > 0);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cut_path).ok();
+}
+
+/// A spill from another model version and a spill from another search
+/// budget are both rejected loudly, with DISTINCT messages naming what
+/// they found vs expected — a user can tell the two apart from stderr.
+#[test]
+fn version_and_budget_mismatches_reject_with_distinct_errors() {
+    let path = temp_path("mismatch");
+    std::fs::remove_file(&path).ok();
+
+    let seed_opts = opts(2, Some(&path));
+    let _ = eval_doc(&seed_opts);
+    seed_opts.map_cache.as_ref().unwrap().persist().unwrap();
+    let doc = std::fs::read_to_string(&path).unwrap();
+
+    // Doctor the model version.
+    let versioned = doc.replace("\"model_version\":1", "\"model_version\":4242");
+    assert_ne!(doc, versioned, "spill layout changed — update this test");
+    std::fs::write(&path, &versioned).unwrap();
+    let mut o = EvalOptions { samples: 8, ..EvalOptions::default() };
+    let version_err = o.attach_mapping_cache(&path).unwrap_err();
+    assert!(
+        version_err.contains("version mismatch") && version_err.contains("4242"),
+        "unhelpful version error: {version_err}"
+    );
+
+    // Restore, then attach under a different search budget.
+    std::fs::write(&path, &doc).unwrap();
+    let mut stale_o = EvalOptions { samples: 9, ..EvalOptions::default() };
+    let stale_err = stale_o.attach_mapping_cache(&path).unwrap_err();
+    assert!(
+        stale_err.contains("stale mapping cache"),
+        "unhelpful stale-budget error: {stale_err}"
+    );
+    assert_ne!(version_err, stale_err, "causes must be distinguishable");
+
+    // The untouched file still attaches fine under the original budget.
+    let mut ok = EvalOptions { samples: 8, ..EvalOptions::default() };
+    ok.attach_mapping_cache(&path).unwrap();
+    assert!(ok.map_cache.unwrap().len() > 0);
+    std::fs::remove_file(&path).ok();
+}

@@ -54,11 +54,37 @@ if "$BIN" eval --workload bert --machine leaf+xnode --alloc bogus \
     --samples 20 > /dev/null 2>&1; then
     echo "tier1 FAIL: unknown --alloc policy should be a loud error"; exit 1
 fi
+# Persistent mapping cache: a cold run spills it, a warm run serves
+# from it with byte-identical --json output, and --mapping-cache
+# alongside --config is a loud conflict (the config's "mapping_cache"
+# key owns that knob).
+rm -f target/tier1-mapping-cache.json
+"$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --mapping-cache target/tier1-mapping-cache.json \
+    --json > target/tier1-mapcache-cold.json
+test -s target/tier1-mapping-cache.json
+"$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --mapping-cache target/tier1-mapping-cache.json \
+    --json > target/tier1-mapcache-warm.json
+if ! cmp -s target/tier1-mapcache-cold.json target/tier1-mapcache-warm.json; then
+    echo "tier1 FAIL: warm mapping-cache run must be byte-identical"; exit 1
+fi
+printf '{"workload":"bert","machine":"leaf+homo","samples":20}' \
+    > target/tier1-eval-cfg.json
+if "$BIN" eval --config target/tier1-eval-cfg.json \
+    --mapping-cache target/tier1-mapping-cache.json > /dev/null 2>&1; then
+    echo "tier1 FAIL: --mapping-cache alongside --config should be a loud error"
+    exit 1
+fi
+rm -f target/tier1-mapping-cache-figs.json
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
-    --cache target/tier1-eval-cache.json > /dev/null
-# Second figures run must be served from the disk-spilled cache.
+    --cache target/tier1-eval-cache.json \
+    --mapping-cache target/tier1-mapping-cache-figs.json > /dev/null
+# Second figures run must be served from the disk-spilled caches (the
+# coarse per-evaluation cache AND the fine-grained mapping cache).
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
-    --cache target/tier1-eval-cache.json > /dev/null
+    --cache target/tier1-eval-cache.json \
+    --mapping-cache target/tier1-mapping-cache-figs.json > /dev/null
 
 echo "== tier1: bench smoke (compile + one iteration) =="
 # Every bench target compiles and runs exactly once, so bench drift
