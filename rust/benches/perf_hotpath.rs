@@ -8,6 +8,8 @@
 //! - incremental (`replay_delta`) vs full (`replay`) schedule replay
 //!   under a local-search-style single-op move sequence
 //! - a fig6-style multi-config sweep, serial vs the shared thread pool
+//! - result serialization: tree-build-then-write vs the streaming
+//!   `JsonStreamWriter` on a ≥100k-row synthetic sweep document
 //!
 //! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
 
@@ -328,4 +330,86 @@ fn main() {
         "fig6-style sweep: serial {t_serial:.2}s, {threads} threads {t_par:.2}s → {:.2}× speedup (byte-identical output)",
         t_serial / t_par
     );
+
+    // --- result serialization: tree build vs streaming ------------------------
+    // The acceptance metric of the streaming-serialization rewrite: a
+    // synthetic sweep document the shape a million-point DSE run emits
+    // (many series × many rows), serialized the old way — build the
+    // full `Json` tree, render one monolithic `String` — vs streamed
+    // row by row through `JsonStreamWriter`. The bytes are asserted
+    // identical on every run (the structural gate smoke mode keeps);
+    // outside smoke the streamed path must be ≥5× the tree path's
+    // throughput, and the writer's reused scratch buffer must settle
+    // (`scratch_growths` is the peak-allocation proxy: it stays a
+    // small constant while the row count scales).
+    {
+        use harp::util::benchkit::{Figure, Series};
+        use harp::util::json::{JsonStreamWriter, JsonStyle};
+
+        let (nseries, nrows) = if smoke { (4, 500) } else { (12, 10_000) };
+        let mut fig = Figure::new("synthetic sweep", "latency (cycles)");
+        for s in 0..nseries {
+            let mut series = Series::new(&format!("machine-{s} bw={}", 2048 >> (s % 3)));
+            for r in 0..nrows {
+                // Cycle counts: integral f64s, the sweep rows' real shape.
+                series.push(
+                    &format!("wl{:03}|pt{r:06}", r % 140),
+                    (r * 137 + s * 7 + 3) as f64,
+                );
+            }
+            fig.add(series);
+        }
+        let total_rows = nseries * nrows;
+
+        // Byte identity between the two pipelines, asserted always.
+        let tree_bytes = fig.to_json().to_string_compact();
+        let mut w = JsonStreamWriter::new(Vec::new(), JsonStyle::Compact);
+        fig.write_json(&mut w).unwrap();
+        let growths = w.scratch_growths();
+        let streamed = w.finish().unwrap();
+        assert_eq!(
+            tree_bytes.as_bytes(),
+            &streamed[..],
+            "streamed document diverged from the tree-built bytes"
+        );
+        assert!(
+            growths <= 16,
+            "scratch buffer grew {growths} times over {total_rows} rows — \
+             the reused row buffer is not settling"
+        );
+
+        let iters = if smoke { 1 } else { 5 };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let _ = std::hint::black_box(fig.to_json().to_string_compact());
+        }
+        let t_tree = t0.elapsed();
+        // The streamed side reuses one sink across iterations — the
+        // deployment shape, where a single `BufWriter` carries the
+        // whole document and no per-row buffer survives a row.
+        let mut sink: Vec<u8> = Vec::new();
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            sink.clear();
+            let mut w = JsonStreamWriter::new(&mut sink, JsonStyle::Compact);
+            fig.write_json(&mut w).unwrap();
+            w.finish().unwrap();
+            std::hint::black_box(&sink);
+        }
+        let t_stream = t1.elapsed();
+        let speedup = t_tree.as_secs_f64() / t_stream.as_secs_f64();
+        println!(
+            "serialization ({total_rows} rows × {iters} iters): tree {:.2} ms, \
+             streamed {:.2} ms → {speedup:.1}× ({growths} scratch growth(s); \
+             byte-identical output asserted)",
+            t_tree.as_secs_f64() * 1e3,
+            t_stream.as_secs_f64() * 1e3
+        );
+        if !smoke {
+            assert!(
+                speedup >= 5.0,
+                "streaming serialization speedup {speedup:.1}× is below the required 5×"
+            );
+        }
+    }
 }

@@ -37,11 +37,17 @@
 //! `"mapping_cache": "mappings.json"` points at a persistent
 //! `(shape, unit) → mapping` cache file (the CLI's `--mapping-cache`);
 //! relative paths resolve against the config file's directory.
+//! `"cache_format": "json" | "binary"` pins its on-disk format (the
+//! CLI's `--cache-format`); without it the file extension decides
+//! (`.bin`/`.harpbin` → binary, otherwise JSON). The key is rejected
+//! when no `"mapping_cache"` is present — a knob that silently did
+//! nothing would hide a typo.
 
 use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::MachineTopology;
 use crate::coordinator::experiment::{default_bw_frac_low, EvalOptions};
+use crate::util::binio::CacheFormat;
 use crate::util::json::Json;
 use crate::workload::cascade::Cascade;
 use crate::workload::registry::{self, WorkloadSource};
@@ -62,6 +68,10 @@ pub struct ExperimentConfig {
     /// resolve against the config file's directory. The file is opened
     /// by the CLI driver (after the search budget is final), not here.
     pub mapping_cache: Option<String>,
+    /// Explicit on-disk format for `mapping_cache` (the CLI's
+    /// `--cache-format`); `None` defers to the file extension. The
+    /// knob-vs-extension conflict check runs when the file is opened.
+    pub cache_format: Option<CacheFormat>,
 }
 
 impl ExperimentConfig {
@@ -151,7 +161,27 @@ impl ExperimentConfig {
             ),
             None => None,
         };
-        Ok(ExperimentConfig { workload, class, params, opts, topology, mapping_cache })
+        let cache_format = match j.get("cache_format") {
+            Some(v) => {
+                let s = v.as_str().ok_or("'cache_format' must be \"json\" or \"binary\"")?;
+                if mapping_cache.is_none() {
+                    return Err(
+                        "'cache_format' does nothing without 'mapping_cache'".to_string()
+                    );
+                }
+                Some(CacheFormat::parse(s)?)
+            }
+            None => None,
+        };
+        Ok(ExperimentConfig {
+            workload,
+            class,
+            params,
+            opts,
+            topology,
+            mapping_cache,
+            cache_format,
+        })
     }
 
     /// Load from a file path. Relative `topology` and `workload` file
@@ -231,6 +261,40 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.contains("mapping_cache"), "{err}");
+    }
+
+    #[test]
+    fn cache_format_key_parses_and_rejects_dead_or_bogus_knobs() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth",
+                "mapping_cache":"maps.spill","cache_format":"binary"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cache_format, Some(CacheFormat::Binary));
+        // Absent knob defers to the extension (resolved at open time).
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth","mapping_cache":"maps.json"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cache_format, None);
+        // A knob with nothing to format is a typo, not a no-op.
+        let err = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth","cache_format":"binary"}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("does nothing without 'mapping_cache'"), "{err}");
+        // Garbage values list the valid set.
+        let err = ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth",
+                "mapping_cache":"m.spill","cache_format":"msgpack"}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown cache format"), "{err}");
+        assert!(ExperimentConfig::parse(
+            r#"{"workload":"gpt3","machine":"hier+xdepth",
+                "mapping_cache":"m.spill","cache_format":7}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -116,14 +116,31 @@ impl EvalOptions {
 
     /// Open (or create) the persistent mapping cache at `path`, pinned
     /// to this binary's model version and these options' search budget,
-    /// and attach it to the evaluation. Errors are the loud
+    /// and attach it to the evaluation. The spill format follows the
+    /// path's extension (`.bin`/`.harpbin` → binary, otherwise JSON).
+    /// Errors are the loud
     /// [`MapCacheError`](crate::mapper::mapcache::MapCacheError)
     /// rejections, already formatted.
     pub fn attach_mapping_cache(&mut self, path: &std::path::Path) -> Result<(), String> {
-        let cache = MapCache::with_file(
+        let fmt = crate::util::binio::CacheFormat::resolve(path, None)
+            .expect("extension-only resolution cannot conflict");
+        self.attach_mapping_cache_format(path, fmt)
+    }
+
+    /// [`EvalOptions::attach_mapping_cache`] with the spill format
+    /// decided by the caller (who resolved the `cache_format` knob
+    /// against the extension via
+    /// [`CacheFormat::resolve`](crate::util::binio::CacheFormat::resolve)).
+    pub fn attach_mapping_cache_format(
+        &mut self,
+        path: &std::path::Path,
+        fmt: crate::util::binio::CacheFormat,
+    ) -> Result<(), String> {
+        let cache = MapCache::with_file_format(
             path,
             EVAL_MODEL_VERSION as u64,
             self.mapping_search_fingerprint(),
+            fmt,
         )
         .map_err(|e| e.to_string())?;
         self.map_cache = Some(Arc::new(cache));

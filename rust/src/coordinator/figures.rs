@@ -19,18 +19,20 @@
 
 use crate::arch::partition::HardwareParams;
 use crate::arch::taxonomy::{prior_works, HarpClass};
-use crate::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use crate::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions, EVAL_MODEL_VERSION};
 use crate::hhp::allocator::AllocPolicy;
 use crate::hhp::stats::CascadeStats;
 use crate::model::roofline::machine_rooflines;
 use crate::util::benchkit::{Figure, Series};
-use crate::util::json::Json;
+use crate::util::binio::{BinError, BinReader, BinWriter, CacheFormat};
+use crate::util::json::{Json, JsonStreamWriter, JsonStyle};
 use crate::util::table::Table;
 use crate::util::threadpool::parallel_map;
 use crate::workload::einsum::Phase;
 use crate::workload::registry::{self, WorkloadSpec};
 use crate::workload::transformer;
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -63,6 +65,50 @@ pub fn eval_key(
     format!("{workload}|{}|{dram_bw_bits}|{frac}|{}", class.id(), opts.fingerprint())
 }
 
+/// Binary eval-cache spill container kind ([`crate::util::binio`]).
+const EVALCACHE_BIN_KIND: &str = "evalcache";
+/// Revision of the binary eval-cache payload layout.
+const EVALCACHE_BIN_FORMAT: u32 = 1;
+
+/// Loud rejection of a binary eval-cache spill. The JSON spill keeps
+/// its historical leniency (an unreadable file is a cold cache — every
+/// entry is keyed by its full options fingerprint, so a stale entry
+/// simply never hits); the binary fast path instead carries a header
+/// this loader checks, and every mismatch reads differently on stderr.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EvalCacheError {
+    /// The file exists but cannot be read.
+    Io(String),
+    /// Not an eval-cache spill, or a structurally broken one.
+    Malformed(String),
+    /// Written by a different evaluation-model version.
+    VersionMismatch { found: u64, expected: u64 },
+    /// Written under different evaluation options.
+    StaleFingerprint { found: String, expected: String },
+}
+
+impl fmt::Display for EvalCacheError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalCacheError::Io(e) => write!(f, "cannot read eval cache: {e}"),
+            EvalCacheError::Malformed(d) => write!(f, "malformed eval cache: {d}"),
+            EvalCacheError::VersionMismatch { found, expected } => write!(
+                f,
+                "eval cache version mismatch: written by eval model version {found}, \
+                 this binary is version {expected} — delete the file to regenerate it"
+            ),
+            EvalCacheError::StaleFingerprint { found, expected } => write!(
+                f,
+                "stale eval cache: evaluated under options \"{found}\", this run uses \
+                 \"{expected}\" — serving it would change results; delete the file or \
+                 use a separate cache per option set"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EvalCacheError {}
+
 /// Memoising evaluator shared by the figure drivers (several figures
 /// reuse the same (workload, config, bandwidth) evaluations).
 ///
@@ -72,12 +118,24 @@ pub fn eval_key(
 /// even when looked up concurrently — latecomers block on the winner's
 /// cell instead of recomputing. Entries persist for the evaluator's
 /// lifetime (all drivers of a `figures` run share one), and optionally
-/// spill to a JSON file so later *processes* start warm too.
+/// spill to a file — pretty JSON (the debug/interchange path) or the
+/// `harp_bin` binary fast path — so later *processes* start warm too.
 pub struct Evaluator {
     pub opts: EvalOptions,
     cache: Mutex<HashMap<String, Arc<OnceLock<Arc<CascadeStats>>>>>,
     spill: Option<PathBuf>,
+    format: CacheFormat,
     dirty: AtomicBool,
+}
+
+impl fmt::Debug for Evaluator {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Evaluator")
+            .field("entries", &self.len())
+            .field("spill", &self.spill)
+            .field("format", &self.format)
+            .finish()
+    }
 }
 
 impl Evaluator {
@@ -86,6 +144,7 @@ impl Evaluator {
             opts,
             cache: Mutex::new(HashMap::new()),
             spill: None,
+            format: CacheFormat::Json,
             dirty: AtomicBool::new(false),
         }
     }
@@ -93,15 +152,58 @@ impl Evaluator {
     /// Evaluator backed by a JSON spill file: previously persisted
     /// points load on construction (unreadable files or entries are
     /// ignored — a cold cache, not an error); [`Evaluator::persist`]
-    /// writes new ones back.
+    /// writes new ones back. The historical constructor: every spill
+    /// written before the binary format existed loads through here.
+    /// Format-aware callers use [`Evaluator::with_spill`].
     pub fn with_cache_file(opts: EvalOptions, path: &Path) -> Evaluator {
         let ev = Evaluator {
             spill: Some(path.to_path_buf()),
             ..Evaluator::new(opts)
         };
+        ev.load_json_lenient(path);
+        ev
+    }
+
+    /// Evaluator backed by a spill file in an explicit format (the
+    /// caller resolved the `cache_format` knob against the extension
+    /// via [`CacheFormat::resolve`]). JSON keeps the historical
+    /// leniency of [`Evaluator::with_cache_file`]; a binary spill that
+    /// exists but will not load is a loud [`EvalCacheError`] — a fast
+    /// path that quietly recomputed a million points would defeat its
+    /// purpose.
+    pub fn with_spill(
+        opts: EvalOptions,
+        path: &Path,
+        format: CacheFormat,
+    ) -> Result<Evaluator, EvalCacheError> {
+        let ev = Evaluator {
+            spill: Some(path.to_path_buf()),
+            format,
+            ..Evaluator::new(opts)
+        };
+        match format {
+            CacheFormat::Json => ev.load_json_lenient(path),
+            CacheFormat::Binary => {
+                if path.exists() {
+                    let bytes = std::fs::read(path).map_err(|e| {
+                        EvalCacheError::Io(format!("{}: {e}", path.display()))
+                    })?;
+                    ev.load_bin(&bytes)?;
+                }
+            }
+        }
+        Ok(ev)
+    }
+
+    /// The spill format this evaluator was bound with.
+    pub fn format(&self) -> CacheFormat {
+        self.format
+    }
+
+    fn load_json_lenient(&self, path: &Path) {
         if let Ok(text) = std::fs::read_to_string(path) {
             if let Ok(Json::Obj(pairs)) = Json::parse(&text) {
-                let mut map = ev.cache.lock().unwrap();
+                let mut map = self.cache.lock().unwrap();
                 for (k, v) in pairs {
                     if let Some(stats) = CascadeStats::from_json(&v) {
                         let cell = Arc::new(OnceLock::new());
@@ -111,7 +213,44 @@ impl Evaluator {
                 }
             }
         }
-        ev
+    }
+
+    /// Binary loader: magic/kind/revision problems and truncation
+    /// surface as `Malformed` with the decoder's offset-bearing text,
+    /// then the model version and options fingerprint get their
+    /// dedicated rejections.
+    fn load_bin(&self, bytes: &[u8]) -> Result<(), EvalCacheError> {
+        let mal = |e: BinError| EvalCacheError::Malformed(e.to_string());
+        let mut r = BinReader::new(bytes);
+        r.header(EVALCACHE_BIN_KIND, EVALCACHE_BIN_FORMAT).map_err(mal)?;
+        let found_version = r.u64("model version").map_err(mal)?;
+        if found_version != EVAL_MODEL_VERSION as u64 {
+            return Err(EvalCacheError::VersionMismatch {
+                found: found_version,
+                expected: EVAL_MODEL_VERSION as u64,
+            });
+        }
+        let found_fp = r.str("options fingerprint").map_err(mal)?;
+        let expected_fp = self.opts.fingerprint();
+        if found_fp != expected_fp {
+            return Err(EvalCacheError::StaleFingerprint {
+                found: found_fp,
+                expected: expected_fp,
+            });
+        }
+        let n = r.seq_len(8, "entries").map_err(mal)?;
+        let mut map = self.cache.lock().unwrap();
+        for _ in 0..n {
+            let key = r.str("entry key").map_err(mal)?;
+            let stats = CascadeStats::read_bin(&mut r).map_err(|e| {
+                EvalCacheError::Malformed(format!("entry \"{key}\": {e}"))
+            })?;
+            let cell = Arc::new(OnceLock::new());
+            let _ = cell.set(Arc::new(stats));
+            map.insert(key, cell);
+        }
+        drop(map);
+        r.finish().map_err(mal)
     }
 
     /// Number of completed cached evaluation points.
@@ -128,6 +267,12 @@ impl Evaluator {
     /// byte-stable for a given entry set. When the options carry a
     /// file-backed mapping cache ([`EvalOptions::map_cache`]) it spills
     /// too — one call flushes both persistence layers at end of run.
+    ///
+    /// Both formats stream entry-by-entry through a `BufWriter`: peak
+    /// heap is one entry, not the whole document. The JSON bytes are
+    /// identical to the old whole-document `to_string_pretty()` path
+    /// (pinned by the unit tests), so existing spills keep diffing
+    /// clean across this change.
     pub fn persist(&self) -> std::io::Result<()> {
         if let Some(mc) = &self.opts.map_cache {
             mc.persist()?;
@@ -139,14 +284,37 @@ impl Evaluator {
         let map = self.cache.lock().unwrap();
         let mut keys: Vec<&String> = map.keys().collect();
         keys.sort();
-        let mut obj = Json::obj();
-        for k in keys {
-            if let Some(stats) = map[k.as_str()].get() {
-                obj = obj.with(k, stats.to_json());
+        let out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        match self.format {
+            CacheFormat::Json => {
+                let mut w = JsonStreamWriter::new(out, JsonStyle::Pretty);
+                w.begin_obj()?;
+                for k in keys {
+                    if let Some(stats) = map[k.as_str()].get() {
+                        w.key(k)?;
+                        stats.write_json(&mut w)?;
+                    }
+                }
+                w.end_obj()?;
+                w.finish()?;
+            }
+            CacheFormat::Binary => {
+                let mut w = BinWriter::new(out);
+                w.header(EVALCACHE_BIN_KIND, EVALCACHE_BIN_FORMAT)?;
+                w.u64(EVAL_MODEL_VERSION as u64)?;
+                w.str(&self.opts.fingerprint())?;
+                let n = keys.iter().filter(|k| map[k.as_str()].get().is_some()).count();
+                w.u64(n as u64)?;
+                for k in keys {
+                    if let Some(stats) = map[k.as_str()].get() {
+                        w.str(k)?;
+                        stats.write_bin(&mut w)?;
+                    }
+                }
+                w.finish()?;
             }
         }
-        drop(map);
-        std::fs::write(path, obj.to_string_pretty())
+        Ok(())
     }
 
     /// Evaluate (workload, class) at `dram_bw_bits`, memoised across
@@ -707,6 +875,94 @@ mod tests {
         assert_eq!(cached.latency_cycles, fresh.latency_cycles);
         assert_eq!(cached.energy_pj, fresh.energy_pj);
         assert_eq!(cached.utilization_timeline, fresh.utilization_timeline);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The streamed JSON persist path emits byte-for-byte what the old
+    /// whole-document `to_string_pretty()` path wrote, so pre-existing
+    /// spills stay diff-clean across the streaming change.
+    #[test]
+    fn streamed_persist_matches_tree_bytes() {
+        let dir = std::env::temp_dir().join("harp_evaluator_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let _ = std::fs::remove_file(&path);
+
+        let opts = EvalOptions { samples: 10, ..EvalOptions::default() };
+        let wl = WorkloadSpec::Transformer(transformer::bert_large());
+        let ev = Evaluator::with_cache_file(opts, &path);
+        for (_, class) in HarpClass::eval_points().iter().take(2) {
+            ev.eval(&wl, class, 2048.0, None);
+        }
+        ev.persist().unwrap();
+
+        let streamed = std::fs::read_to_string(&path).unwrap();
+        let map = ev.cache.lock().unwrap();
+        let mut keys: Vec<&String> = map.keys().collect();
+        keys.sort();
+        let mut obj = Json::obj();
+        for k in keys {
+            obj = obj.with(k, map[k.as_str()].get().unwrap().to_json());
+        }
+        assert_eq!(streamed, obj.to_string_pretty());
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn binary_spill_round_trips_and_rejects_mismatches() {
+        let dir = std::env::temp_dir().join("harp_evaluator_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.bin");
+        let _ = std::fs::remove_file(&path);
+
+        let opts = EvalOptions { samples: 10, ..EvalOptions::default() };
+        let wl = WorkloadSpec::Transformer(transformer::bert_large());
+        let class = HarpClass::eval_points()[0].1.clone();
+
+        let fmt = CacheFormat::resolve(&path, None).unwrap();
+        assert_eq!(fmt, CacheFormat::Binary);
+        let ev = Evaluator::with_spill(opts.clone(), &path, fmt).unwrap();
+        let fresh = ev.eval(&wl, &class, 2048.0, None);
+        ev.persist().unwrap();
+
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"harp_bin"));
+
+        // Warm start serves bit-identical numbers without recomputing:
+        // a fresh search under different samples would differ, so a
+        // matching entry must come from disk.
+        let ev2 = Evaluator::with_spill(opts.clone(), &path, fmt).unwrap();
+        assert_eq!(ev2.len(), 1);
+        let cached = ev2.eval(&wl, &class, 2048.0, None);
+        assert_eq!(cached.latency_cycles.to_bits(), fresh.latency_cycles.to_bits());
+        assert_eq!(cached.energy_pj.to_bits(), fresh.energy_pj.to_bits());
+        assert_eq!(cached.to_json().to_string_pretty(), fresh.to_json().to_string_pretty());
+
+        // Re-persisting the untouched cache is a no-op (not dirty) and
+        // the file keeps its bytes.
+        ev2.persist().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
+
+        // Different options → StaleFingerprint, not a quiet cold cache.
+        let other = EvalOptions { samples: 11, ..EvalOptions::default() };
+        let err = Evaluator::with_spill(other, &path, fmt).unwrap_err();
+        assert!(matches!(err, EvalCacheError::StaleFingerprint { .. }), "{err}");
+        assert!(err.to_string().contains("stale eval cache"), "{err}");
+
+        // Doctored magic → Malformed naming the magic.
+        let mut doctored = bytes.clone();
+        doctored[0] ^= 0xff;
+        std::fs::write(&path, &doctored).unwrap();
+        let err = Evaluator::with_spill(opts.clone(), &path, fmt).unwrap_err();
+        assert!(matches!(err, EvalCacheError::Malformed(_)), "{err}");
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // JSON text behind a .bin extension → Malformed, not a panic.
+        std::fs::write(&path, b"{\"not\": \"a spill\"}").unwrap();
+        let err = Evaluator::with_spill(opts, &path, fmt).unwrap_err();
+        assert!(matches!(err, EvalCacheError::Malformed(_)), "{err}");
 
         let _ = std::fs::remove_file(&path);
     }

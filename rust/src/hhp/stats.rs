@@ -5,10 +5,12 @@ use crate::arch::partition::{MachineConfig, Role};
 use crate::hhp::allocator::AllocPolicy;
 use crate::hhp::scheduler::ScheduleResult;
 use crate::mapper::blackbox::MappedOp;
-use crate::util::json::Json;
+use crate::util::binio::{BinError, BinReader, BinWriter};
+use crate::util::json::{Json, JsonStreamWriter};
 use crate::workload::cascade::Cascade;
 use crate::workload::einsum::Phase;
 use std::collections::HashMap;
+use std::io;
 
 /// Aggregated results for one (cascade, machine) evaluation.
 #[derive(Debug, Clone)]
@@ -236,19 +238,16 @@ impl CascadeStats {
         }
     }
 
-    /// Machine-readable report. Field order is deterministic (fixed key
-    /// lists, not hash order), so emitted caches and reports diff
-    /// cleanly; [`CascadeStats::from_json`] inverts it exactly — the
-    /// pair is what the coordinator's disk-spilled evaluation cache uses.
-    pub fn to_json(&self) -> Json {
-        let mut levels = Json::obj();
+    /// Level energies in the deterministic serialization order: the
+    /// canonical four first, then custom kinds (deeper `--topology`
+    /// hierarchies) sorted by name.
+    fn ordered_levels(&self) -> Vec<(LevelKind, f64)> {
+        let mut out = Vec::with_capacity(self.energy_by_level.len());
         for k in LevelKind::ALL {
             if let Some(e) = self.energy_by_level.get(&k) {
-                levels = levels.with(k.name(), *e);
+                out.push((k, *e));
             }
         }
-        // Custom level kinds (deeper `--topology` hierarchies) follow
-        // the canonical four, sorted by name for deterministic output.
         let mut extra: Vec<LevelKind> = self
             .energy_by_level
             .keys()
@@ -257,23 +256,46 @@ impl CascadeStats {
             .collect();
         extra.sort();
         for k in extra {
-            levels = levels.with(k.name(), self.energy_by_level[&k]);
+            out.push((k, self.energy_by_level[&k]));
+        }
+        out
+    }
+
+    /// A role-keyed map in `ROLE_NAMES` order (deterministic, and the
+    /// drift-guard test keeps the list exhaustive).
+    fn ordered_roles(map: &HashMap<&'static str, f64>) -> Vec<(&'static str, f64)> {
+        ROLE_NAMES.into_iter().filter_map(|r| map.get(r).map(|v| (r, *v))).collect()
+    }
+
+    fn ordered_phases(&self) -> Vec<(&'static str, f64)> {
+        PHASE_NAMES
+            .into_iter()
+            .filter_map(|p| self.energy_by_phase.get(p).map(|v| (p, *v)))
+            .collect()
+    }
+
+    /// Machine-readable report. Field order is deterministic (fixed key
+    /// lists, not hash order), so emitted caches and reports diff
+    /// cleanly; [`CascadeStats::from_json`] inverts it exactly — the
+    /// pair is what the coordinator's disk-spilled evaluation cache uses.
+    /// [`CascadeStats::write_json`] streams the same document without
+    /// building this tree; both feed from the same `ordered_*` helpers.
+    pub fn to_json(&self) -> Json {
+        let mut levels = Json::obj();
+        for (k, e) in self.ordered_levels() {
+            levels = levels.with(k.name(), e);
         }
         let mut roles = Json::obj();
+        for (r, v) in Self::ordered_roles(&self.onchip_energy_by_role) {
+            roles = roles.with(r, v);
+        }
         let mut buffers = Json::obj();
-        for r in ROLE_NAMES {
-            if let Some(v) = self.onchip_energy_by_role.get(r) {
-                roles = roles.with(r, *v);
-            }
-            if let Some(v) = self.buffer_energy_by_role.get(r) {
-                buffers = buffers.with(r, *v);
-            }
+        for (r, v) in Self::ordered_roles(&self.buffer_energy_by_role) {
+            buffers = buffers.with(r, v);
         }
         let mut phases = Json::obj();
-        for p in PHASE_NAMES {
-            if let Some(v) = self.energy_by_phase.get(p) {
-                phases = phases.with(p, *v);
-            }
+        for (p, v) in self.ordered_phases() {
+            phases = phases.with(p, v);
         }
         let mut j = Json::obj()
             .with("workload", self.workload.as_str())
@@ -312,6 +334,251 @@ impl CascadeStats {
                 "node_contention",
                 Json::Arr(self.node_contention.iter().map(|c| c.to_json()).collect()),
             )
+    }
+
+    /// Stream the [`CascadeStats::to_json`] document — byte-identical
+    /// in either style — without building the `Json` tree. This is the
+    /// emitter the eval-cache spill, `eval --json`, and the sweep rows
+    /// use, so serializing a million evaluations allocates one reused
+    /// row buffer instead of a million tree nodes.
+    pub fn write_json<W: io::Write>(&self, w: &mut JsonStreamWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        w.key("workload")?;
+        w.str(&self.workload)?;
+        w.key("machine")?;
+        w.str(&self.machine)?;
+        if self.alloc_policy != AllocPolicy::Greedy.name() {
+            w.key("alloc")?;
+            w.str(self.alloc_policy)?;
+            w.key("assignment")?;
+            w.begin_arr()?;
+            for &s in &self.assignment {
+                w.num(s as f64)?;
+            }
+            w.end_arr()?;
+        }
+        w.key("latency_cycles")?;
+        w.num(self.latency_cycles)?;
+        w.key("energy_pj")?;
+        w.num(self.energy_pj)?;
+        w.key("mults_per_joule")?;
+        w.num(self.mults_per_joule())?;
+        w.key("macs")?;
+        w.num(self.macs)?;
+        w.key("mac_energy_pj")?;
+        w.num(self.mac_energy_pj)?;
+        w.key("noc_energy_pj")?;
+        w.num(self.noc_energy_pj)?;
+        w.key("offchip_energy_pj")?;
+        w.num(self.offchip_energy_pj)?;
+        w.key("energy_by_level")?;
+        w.begin_obj()?;
+        for (k, e) in self.ordered_levels() {
+            w.key(k.name())?;
+            w.num(e)?;
+        }
+        w.end_obj()?;
+        w.key("onchip_energy_by_role")?;
+        w.begin_obj()?;
+        for (r, v) in Self::ordered_roles(&self.onchip_energy_by_role) {
+            w.key(r)?;
+            w.num(v)?;
+        }
+        w.end_obj()?;
+        w.key("buffer_energy_by_role")?;
+        w.begin_obj()?;
+        for (r, v) in Self::ordered_roles(&self.buffer_energy_by_role) {
+            w.key(r)?;
+            w.num(v)?;
+        }
+        w.end_obj()?;
+        w.key("energy_by_phase")?;
+        w.begin_obj()?;
+        for (p, v) in self.ordered_phases() {
+            w.key(p)?;
+            w.num(v)?;
+        }
+        w.end_obj()?;
+        w.key("busy_fraction")?;
+        w.begin_arr()?;
+        for &b in &self.busy_fraction {
+            w.num(b)?;
+        }
+        w.end_arr()?;
+        w.key("utilization_timeline")?;
+        w.begin_arr()?;
+        for &b in &self.utilization_timeline {
+            w.num(b)?;
+        }
+        w.end_arr()?;
+        w.key("node_contention")?;
+        w.begin_arr()?;
+        for c in &self.node_contention {
+            w.begin_obj()?;
+            w.key("node")?;
+            w.str(&c.node)?;
+            w.key("users")?;
+            w.num(c.users as f64)?;
+            w.key("occupied_frac")?;
+            w.num(c.occupied_frac)?;
+            w.key("contended_frac")?;
+            w.num(c.contended_frac)?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.end_obj()
+    }
+
+    /// Binary codec for the eval-cache spill's fast path: every field
+    /// in the same deterministic order as [`CascadeStats::to_json`],
+    /// floats as raw IEEE-754 bits. Unlike the greedy-elides-its-keys
+    /// JSON shape, the binary form always records the policy and
+    /// assignment — the format is new, so it has no legacy bytes to
+    /// preserve.
+    pub fn write_bin<W: io::Write>(&self, w: &mut BinWriter<W>) -> io::Result<()> {
+        w.str(&self.workload)?;
+        w.str(&self.machine)?;
+        w.str(self.alloc_policy)?;
+        w.u64(self.assignment.len() as u64)?;
+        for &s in &self.assignment {
+            w.u64(s as u64)?;
+        }
+        w.f64(self.latency_cycles)?;
+        w.f64(self.energy_pj)?;
+        w.f64(self.macs)?;
+        w.f64(self.mac_energy_pj)?;
+        w.f64(self.noc_energy_pj)?;
+        w.f64(self.offchip_energy_pj)?;
+        let levels = self.ordered_levels();
+        w.u64(levels.len() as u64)?;
+        for (k, e) in levels {
+            w.str(k.name())?;
+            w.f64(e)?;
+        }
+        for map in [&self.onchip_energy_by_role, &self.buffer_energy_by_role] {
+            let roles = Self::ordered_roles(map);
+            w.u64(roles.len() as u64)?;
+            for (r, v) in roles {
+                w.str(r)?;
+                w.f64(v)?;
+            }
+        }
+        let phases = self.ordered_phases();
+        w.u64(phases.len() as u64)?;
+        for (p, v) in phases {
+            w.str(p)?;
+            w.f64(v)?;
+        }
+        w.u64(self.busy_fraction.len() as u64)?;
+        for &b in &self.busy_fraction {
+            w.f64(b)?;
+        }
+        w.u64(self.utilization_timeline.len() as u64)?;
+        for &b in &self.utilization_timeline {
+            w.f64(b)?;
+        }
+        w.u64(self.node_contention.len() as u64)?;
+        for c in &self.node_contention {
+            w.str(&c.node)?;
+            w.u64(c.users as u64)?;
+            w.f64(c.occupied_frac)?;
+            w.f64(c.contended_frac)?;
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`CascadeStats::write_bin`]. Every malformed mode is
+    /// a distinct loud [`BinError`] — unknown policy/role/phase names
+    /// included — never a quiet partial load.
+    pub fn read_bin(r: &mut BinReader<'_>) -> Result<CascadeStats, BinError> {
+        let malformed = |offset: usize, detail: String| BinError::Malformed { offset, detail };
+
+        let workload = r.str("workload")?;
+        let machine = r.str("machine")?;
+        let policy_offset = r.offset();
+        let policy_name = r.str("alloc policy")?;
+        let alloc_policy = AllocPolicy::parse(&policy_name)
+            .map_err(|_| malformed(policy_offset, format!("unknown alloc policy \"{policy_name}\"")))?
+            .name();
+        let n = r.seq_len(8, "assignment")?;
+        let mut assignment = Vec::with_capacity(n);
+        for _ in 0..n {
+            assignment.push(r.u64("assignment slot")? as usize);
+        }
+        let latency_cycles = r.f64("latency_cycles")?;
+        let energy_pj = r.f64("energy_pj")?;
+        let macs = r.f64("macs")?;
+        let mac_energy_pj = r.f64("mac_energy_pj")?;
+        let noc_energy_pj = r.f64("noc_energy_pj")?;
+        let offchip_energy_pj = r.f64("offchip_energy_pj")?;
+        let n = r.seq_len(12, "energy_by_level")?;
+        let mut energy_by_level = HashMap::new();
+        for _ in 0..n {
+            let kind = r.str("level kind")?;
+            energy_by_level.insert(LevelKind::named(&kind), r.f64("level energy")?);
+        }
+        let mut role_maps: [HashMap<&'static str, f64>; 2] = [HashMap::new(), HashMap::new()];
+        for map in role_maps.iter_mut() {
+            let n = r.seq_len(12, "role energies")?;
+            for _ in 0..n {
+                let offset = r.offset();
+                let role = r.str("role name")?;
+                let key = ROLE_NAMES
+                    .into_iter()
+                    .find(|r| *r == role)
+                    .ok_or_else(|| malformed(offset, format!("unknown role \"{role}\"")))?;
+                map.insert(key, r.f64("role energy")?);
+            }
+        }
+        let [onchip_energy_by_role, buffer_energy_by_role] = role_maps;
+        let n = r.seq_len(12, "energy_by_phase")?;
+        let mut energy_by_phase = HashMap::new();
+        for _ in 0..n {
+            let offset = r.offset();
+            let phase = r.str("phase name")?;
+            let key = PHASE_NAMES
+                .into_iter()
+                .find(|p| *p == phase)
+                .ok_or_else(|| malformed(offset, format!("unknown phase \"{phase}\"")))?;
+            energy_by_phase.insert(key, r.f64("phase energy")?);
+        }
+        let n = r.seq_len(8, "busy_fraction")?;
+        let busy_fraction = (0..n)
+            .map(|_| r.f64("busy fraction"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let n = r.seq_len(8, "utilization_timeline")?;
+        let utilization_timeline = (0..n)
+            .map(|_| r.f64("utilization bucket"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let n = r.seq_len(28, "node_contention")?;
+        let mut node_contention = Vec::with_capacity(n);
+        for _ in 0..n {
+            node_contention.push(NodeContentionStats {
+                node: r.str("node label")?,
+                users: r.u64("node users")? as usize,
+                occupied_frac: r.f64("occupied_frac")?,
+                contended_frac: r.f64("contended_frac")?,
+            });
+        }
+        Ok(CascadeStats {
+            workload,
+            machine,
+            latency_cycles,
+            energy_pj,
+            energy_by_level,
+            mac_energy_pj,
+            noc_energy_pj,
+            offchip_energy_pj,
+            onchip_energy_by_role,
+            buffer_energy_by_role,
+            macs,
+            busy_fraction,
+            utilization_timeline,
+            energy_by_phase,
+            node_contention,
+            alloc_policy,
+            assignment,
+        })
     }
 
     /// Inverse of [`CascadeStats::to_json`]. Returns `None` on any
@@ -584,5 +851,74 @@ mod tests {
             assert!(PHASE_NAMES.contains(p), "Phase name '{p}' missing from PHASE_NAMES");
         }
         assert_eq!(phases.len(), PHASE_NAMES.len());
+    }
+
+    fn real_stats() -> CascadeStats {
+        let machine = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::LeafOnly, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::encoder_cascade(&transformer::bert_large());
+        let classifier = Classifier::new(machine.params.tipping_ai());
+        let assign = crate::hhp::allocator::allocate(&g, &machine, &classifier);
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 20, seed: 1 });
+        let mapped = mapper.map_cascade(&g, &machine, &assign);
+        let sched = schedule(&g, &machine, &mapped, &ScheduleOptions::default());
+        CascadeStats::aggregate(&g, &machine, &mapped, &sched, AllocPolicy::Greedy)
+    }
+
+    /// The streaming emitter is byte-identical to the tree path in both
+    /// styles, for both serialization shapes (greedy elides the
+    /// allocation keys; non-default policies carry them).
+    #[test]
+    fn write_json_matches_to_json_bytes() {
+        use crate::util::json::JsonStyle;
+        let stats = real_stats();
+        let mut searched = stats.clone();
+        searched.alloc_policy = AllocPolicy::Search.name();
+        for s in [&stats, &searched] {
+            for style in [JsonStyle::Compact, JsonStyle::Pretty] {
+                let mut w = JsonStreamWriter::new(Vec::new(), style);
+                s.write_json(&mut w).unwrap();
+                let streamed = w.finish().unwrap();
+                let expect = match style {
+                    JsonStyle::Compact => s.to_json().to_string_compact(),
+                    JsonStyle::Pretty => s.to_json().to_string_pretty(),
+                };
+                assert_eq!(
+                    String::from_utf8(streamed).unwrap(),
+                    expect,
+                    "{}/{style:?}: streamed stats drifted from the tree",
+                    s.alloc_policy
+                );
+            }
+        }
+    }
+
+    /// Binary codec round trip: read(write(stats)) serializes to the
+    /// byte-identical JSON document (i.e. every f64 bit pattern, map
+    /// entry, and vector survived), and the reader consumes every byte.
+    #[test]
+    fn binary_codec_round_trips_bit_exactly() {
+        let stats = real_stats();
+        let mut searched = stats.clone();
+        searched.alloc_policy = AllocPolicy::Search.name();
+        for s in [&stats, &searched] {
+            let mut w = BinWriter::new(Vec::new());
+            s.write_bin(&mut w).unwrap();
+            let bytes = w.finish().unwrap();
+            let mut r = BinReader::new(&bytes);
+            let back = CascadeStats::read_bin(&mut r).unwrap();
+            r.finish().unwrap();
+            assert_eq!(
+                back.to_json().to_string_pretty(),
+                s.to_json().to_string_pretty(),
+                "{}: binary round trip drifted",
+                s.alloc_policy
+            );
+            assert_eq!(back.assignment, s.assignment);
+            assert_eq!(back.alloc_policy, s.alloc_policy);
+        }
     }
 }

@@ -20,11 +20,13 @@ use harp::coordinator::experiment::{
 };
 use harp::coordinator::figures;
 use harp::runtime::validate::{render_reports, validate_all};
+use harp::util::binio::CacheFormat;
 use harp::util::cli::{ArgSpec, Args};
-use harp::util::json::Json;
+use harp::util::json::{Json, JsonStreamWriter, JsonStyle};
 use harp::util::table::Table;
 use harp::util::threadpool;
 use harp::workload::registry::{self, WorkloadSource};
+use std::io::Write;
 use std::path::Path;
 use std::process::ExitCode;
 
@@ -75,14 +77,14 @@ fn usage() -> String {
        eval [--config F | --workload W|FILE (--machine M | --topology F)] [--bw BITS]\n\
                                 [--samples N] [--threads N] [--contention off|on]\n\
                                 [--alloc greedy|round_robin|critical_path|search]\n\
-                                [--mapping-cache FILE]\n\
+                                [--mapping-cache FILE] [--cache-format json|binary]\n\
                                 (--model NAME is the explicit built-in form of --workload)\n\
        figures [--samples N] [--threads N] [--cache FILE] [--alloc POLICY]\n\
-                                [--mapping-cache FILE]\n\
+                                [--mapping-cache FILE] [--cache-format json|binary]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
                                 + the allocation-policy ablation\n\
        roofline                 print the Fig 1 roofline partitioning\n\
-       sweep --workload W       DRAM bandwidth × machine sweep\n\
+       sweep --workload W [--json]  DRAM bandwidth × machine sweep (NDJSON with --json)\n\
        validate [--artifacts D] execute AOT artifacts through PJRT + check numerics"
         .to_string()
 }
@@ -264,8 +266,14 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
         .opt(
             "mapping-cache",
             None,
-            "persistent (shape, unit) → mapping cache JSON file, reused across runs \
+            "persistent (shape, unit) → mapping cache file, reused across runs \
              (created when missing; version or search-budget mismatches are rejected loudly)",
+        )
+        .opt(
+            "cache-format",
+            None,
+            "on-disk format for the --mapping-cache spill: json (debug/interchange) | \
+             binary (fast path); defaults to the file extension (.bin/.harpbin → binary)",
         )
         .flag("dynamic-bw", "re-grant idle units' bandwidth (ablation)")
         .flag("json", "emit machine-readable JSON");
@@ -299,6 +307,14 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             return Err(
                 "--config supplies the evaluation options; set \"mapping_cache\" in \
                  the config file instead of passing --mapping-cache"
+                    .into(),
+            );
+        }
+        // Its format knob follows the same rule.
+        if argv.iter().any(|a| a == "--cache-format" || a.starts_with("--cache-format=")) {
+            return Err(
+                "--config supplies the evaluation options; set \"cache_format\" in \
+                 the config file instead of passing --cache-format"
                     .into(),
             );
         }
@@ -373,6 +389,16 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
     if args.get("bw-frac-low").is_some() {
         opts.bw_frac_low = Some(args.get_f64("bw-frac-low").map_err(|e| e.to_string())?);
     }
+    let mapping_cache = args.get("mapping-cache").map(String::from);
+    let cache_format = match args.get("cache-format") {
+        Some(s) => {
+            if mapping_cache.is_none() {
+                return Err("--cache-format does nothing without --mapping-cache".into());
+            }
+            Some(CacheFormat::parse(s)?)
+        }
+        None => None,
+    };
     Ok((
         ExperimentConfig {
             workload: WorkloadSource::Spec(workload),
@@ -380,7 +406,8 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             params,
             opts,
             topology,
-            mapping_cache: args.get("mapping-cache").map(String::from),
+            mapping_cache,
+            cache_format,
         },
         json,
     ))
@@ -389,7 +416,8 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
 fn cmd_eval(argv: &[String]) -> Result<(), String> {
     let (mut cfg, json) = parse_eval_opts(argv)?;
     if let Some(path) = cfg.mapping_cache.clone() {
-        cfg.opts.attach_mapping_cache(Path::new(&path))?;
+        let fmt = CacheFormat::resolve(Path::new(&path), cfg.cache_format)?;
+        cfg.opts.attach_mapping_cache_format(Path::new(&path), fmt)?;
         let loaded = cfg.opts.map_cache.as_ref().map_or(0, |mc| mc.len());
         // The banner would corrupt --json output, so it stays off there
         // (warm and cold runs then emit byte-identical JSON).
@@ -406,7 +434,15 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
         }
     }
     if json {
-        println!("{}", r.stats.to_json().to_string_pretty());
+        // Streamed straight to stdout — byte-identical to the old
+        // `println!("{}", to_json().to_string_pretty())` path without
+        // building the document tree or its String.
+        let stdout = std::io::stdout();
+        let mut w = JsonStreamWriter::new(stdout.lock(), JsonStyle::Pretty);
+        let io_err = |e: std::io::Error| format!("stdout: {e}");
+        r.stats.write_json(&mut w).map_err(io_err)?;
+        let mut out = w.finish().map_err(io_err)?;
+        writeln!(out).map_err(io_err)?;
         return Ok(());
     }
     if cfg.topology.is_some() {
@@ -481,10 +517,28 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         .opt(
             "mapping-cache",
             None,
-            "persistent (shape, unit) → mapping cache JSON file — a finer-grained \
+            "persistent (shape, unit) → mapping cache file — a finer-grained \
              layer than --cache that stays valid across workload/machine changes",
+        )
+        .opt(
+            "cache-format",
+            None,
+            "on-disk format for the --cache/--mapping-cache spills: json \
+             (debug/interchange) | binary (fast path); defaults to each file's \
+             extension (.bin/.harpbin → binary)",
         );
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let cache_fmt = match args.get("cache-format") {
+        Some(s) => {
+            if args.get("cache").is_none() && args.get("mapping-cache").is_none() {
+                return Err(
+                    "--cache-format does nothing without --cache or --mapping-cache".into(),
+                );
+            }
+            Some(CacheFormat::parse(s)?)
+        }
+        None => None,
+    };
     let mut opts = EvalOptions {
         samples: args.get_usize("samples").map_err(|e| e.to_string())?,
         ..EvalOptions::default()
@@ -496,7 +550,8 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         opts.threads = n;
     }
     if let Some(path) = args.get("mapping-cache") {
-        opts.attach_mapping_cache(Path::new(path))?;
+        let fmt = CacheFormat::resolve(Path::new(path), cache_fmt)?;
+        opts.attach_mapping_cache_format(Path::new(path), fmt)?;
         let loaded = opts.map_cache.as_ref().map_or(0, |mc| mc.len());
         if loaded > 0 {
             println!("[mapping cache: {loaded} mapping(s) loaded from {path}]");
@@ -504,7 +559,9 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     }
     let ev = match args.get("cache") {
         Some(path) => {
-            let ev = figures::Evaluator::with_cache_file(opts, Path::new(path));
+            let fmt = CacheFormat::resolve(Path::new(path), cache_fmt)?;
+            let ev = figures::Evaluator::with_spill(opts, Path::new(path), fmt)
+                .map_err(|e| e.to_string())?;
             if !ev.is_empty() {
                 println!("[evaluation cache: {} point(s) loaded from {path}]", ev.len());
             }
@@ -550,8 +607,14 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
             "alloc",
             Some("greedy"),
             "allocation policy (greedy | round_robin | critical_path | search)",
+        )
+        .flag(
+            "json",
+            "stream one compact JSON object per sweep point (NDJSON), emitted as each \
+             point completes instead of buffering the whole table",
         );
     let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let json = args.has_flag("json");
     let wl = registry::resolve(args.get("workload").unwrap())?;
     let cascade = wl.cascade();
     let mut opts = EvalOptions {
@@ -570,18 +633,54 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         for (_, class) in HarpClass::eval_points() {
             let params = HardwareParams { dram_bw_bits: bw, ..HardwareParams::default() };
             let r = evaluate_cascade_on_config(&class, &params, &cascade, &opts)?;
-            t.row(&[
-                class.id(),
-                format!("{bw}"),
-                format!("{:.3e}", r.stats.latency_cycles),
-                format!("{:.2}", r.stats.energy_pj * 1e-6),
-                format!("{:.3e}", r.stats.mults_per_joule()),
-            ]);
+            if json {
+                sweep_row_json(&wl.name(), &class.id(), bw, &r.stats)
+                    .map_err(|e| format!("stdout: {e}"))?;
+            } else {
+                t.row(&[
+                    class.id(),
+                    format!("{bw}"),
+                    format!("{:.3e}", r.stats.latency_cycles),
+                    format!("{:.2}", r.stats.energy_pj * 1e-6),
+                    format!("{:.3e}", r.stats.mults_per_joule()),
+                ]);
+            }
         }
     }
-    println!("workload: {}", wl.name());
-    println!("{}", t.render());
+    if !json {
+        println!("workload: {}", wl.name());
+        println!("{}", t.render());
+    }
     Ok(())
+}
+
+/// One NDJSON sweep row, streamed to stdout the moment its evaluation
+/// completes — a consumer piping `harp sweep --json` sees results
+/// incrementally, and no whole-sweep document is ever built in memory.
+fn sweep_row_json(
+    workload: &str,
+    machine: &str,
+    bw: f64,
+    stats: &harp::hhp::stats::CascadeStats,
+) -> std::io::Result<()> {
+    let stdout = std::io::stdout();
+    let mut w = JsonStreamWriter::new(stdout.lock(), JsonStyle::Compact);
+    w.begin_obj()?;
+    w.key("workload")?;
+    w.str(workload)?;
+    w.key("machine")?;
+    w.str(machine)?;
+    w.key("dram_bw_bits")?;
+    w.num(bw)?;
+    w.key("latency_cycles")?;
+    w.num(stats.latency_cycles)?;
+    w.key("energy_pj")?;
+    w.num(stats.energy_pj)?;
+    w.key("mults_per_joule")?;
+    w.num(stats.mults_per_joule())?;
+    w.end_obj()?;
+    let mut out = w.finish()?;
+    writeln!(out)
 }
 
 fn cmd_validate(argv: &[String]) -> Result<(), String> {

@@ -28,17 +28,25 @@
 //! search budget would silently change results, the one thing the
 //! repo's determinism contract forbids.
 //!
-//! Numeric exactness: every float is written with Rust's shortest
+//! JSON is the debug/interchange path. For million-point sweeps there
+//! is also a `harp_bin` binary spill (selected by a `.bin` extension or
+//! the `cache_format` knob, see [`CacheFormat`]): the same header
+//! checks and the same loud rejections, with floats stored as raw
+//! IEEE-754 bit patterns. Both formats stream entry-by-entry on
+//! persist, so spilling never builds a whole-document string.
+//!
+//! Numeric exactness: every JSON float is written with Rust's shortest
 //! round-trip `Display` and re-read with `str::parse::<f64>` (correctly
 //! rounded), so a loaded `OpStats` is bitwise the one searched —
 //! cache-hit-equals-fresh is property-tested in
-//! `tests/mapping_cache.rs`.
+//! `tests/mapping_cache.rs` and `tests/binary_cache.rs`.
 
 use crate::arch::level::LevelKind;
 use crate::mapper::search::SearchResult;
 use crate::mapping::loopnest::Mapping;
 use crate::model::stats::{Bound, LevelStats, OpStats};
-use crate::util::json::Json;
+use crate::util::binio::{BinError, BinReader, BinWriter, CacheFormat};
+use crate::util::json::{Json, JsonStreamWriter, JsonStyle};
 use crate::workload::einsum::Dim;
 use std::collections::HashMap;
 use std::fmt;
@@ -50,6 +58,11 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// JSON layout changes; distinct from the eval model version, which
 /// tracks the numbers).
 pub const MAPCACHE_FORMAT: u64 = 1;
+
+/// Container kind string of the binary spill.
+const BIN_KIND: &str = "mapcache";
+/// Revision of the binary payload layout (bump when it changes).
+const BIN_FORMAT: u32 = 1;
 
 /// Why a mapping-cache file was rejected. Each cause is distinct so
 /// callers (and users reading stderr) can tell a corrupt file from a
@@ -128,6 +141,7 @@ pub struct MapCache {
     search_fp: String,
     entries: Mutex<HashMap<String, Slot>>,
     spill: Option<PathBuf>,
+    format: CacheFormat,
     dirty: AtomicBool,
 }
 
@@ -150,27 +164,61 @@ impl MapCache {
             search_fp: search_fp.into(),
             entries: Mutex::new(HashMap::new()),
             spill: None,
+            format: CacheFormat::Json,
             dirty: AtomicBool::new(false),
         }
     }
 
     /// A cache bound to `path`: loads it if present (rejecting loudly a
     /// file that cannot be honoured), starts empty if missing.
-    /// [`MapCache::persist`] writes back to the same path.
+    /// [`MapCache::persist`] writes back to the same path. The spill
+    /// format follows the extension (`.bin` → binary, otherwise JSON);
+    /// use [`MapCache::with_file_format`] to pass an explicit knob.
     pub fn with_file(
         path: impl Into<PathBuf>,
         model_version: u64,
         search_fp: impl Into<String>,
     ) -> Result<MapCache, MapCacheError> {
         let path = path.into();
+        let fmt = CacheFormat::resolve(&path, None)
+            .expect("extension-only resolution cannot conflict");
+        MapCache::with_file_format(path, model_version, search_fp, fmt)
+    }
+
+    /// [`MapCache::with_file`] with the spill format decided by the
+    /// caller (who resolved the `cache_format` knob against the
+    /// extension via [`CacheFormat::resolve`] — conflicts error there,
+    /// before any file is touched).
+    pub fn with_file_format(
+        path: impl Into<PathBuf>,
+        model_version: u64,
+        search_fp: impl Into<String>,
+        fmt: CacheFormat,
+    ) -> Result<MapCache, MapCacheError> {
+        let path = path.into();
         let mut cache = MapCache::new(model_version, search_fp);
+        cache.format = fmt;
         if path.exists() {
-            let text = std::fs::read_to_string(&path)
-                .map_err(|e| MapCacheError::Io(format!("{}: {e}", path.display())))?;
-            cache.load_document(&text)?;
+            match fmt {
+                CacheFormat::Json => {
+                    let text = std::fs::read_to_string(&path)
+                        .map_err(|e| MapCacheError::Io(format!("{}: {e}", path.display())))?;
+                    cache.load_document(&text)?;
+                }
+                CacheFormat::Binary => {
+                    let bytes = std::fs::read(&path)
+                        .map_err(|e| MapCacheError::Io(format!("{}: {e}", path.display())))?;
+                    cache.load_document_bin(&bytes)?;
+                }
+            }
         }
         cache.spill = Some(path);
         Ok(cache)
+    }
+
+    /// The spill format this cache was bound with.
+    pub fn format(&self) -> CacheFormat {
+        self.format
     }
 
     fn load_document(&mut self, text: &str) -> Result<(), MapCacheError> {
@@ -227,6 +275,42 @@ impl MapCache {
             map.insert(key.clone(), slot);
         }
         Ok(())
+    }
+
+    /// Binary loader: the same honour ladder as the JSON path — magic/
+    /// kind/revision problems and truncation surface as `Malformed`
+    /// with the decoder's offset-bearing text, then model version and
+    /// search fingerprint get their dedicated rejections.
+    fn load_document_bin(&mut self, bytes: &[u8]) -> Result<(), MapCacheError> {
+        let mal = |e: BinError| MapCacheError::Malformed(e.to_string());
+        let mut r = BinReader::new(bytes);
+        r.header(BIN_KIND, BIN_FORMAT).map_err(mal)?;
+        let found_version = r.u64("model version").map_err(mal)?;
+        if found_version != self.model_version {
+            return Err(MapCacheError::VersionMismatch {
+                found: found_version,
+                expected: self.model_version,
+            });
+        }
+        let found_fp = r.str("search fingerprint").map_err(mal)?;
+        if found_fp != self.search_fp {
+            return Err(MapCacheError::StaleFingerprint {
+                found: found_fp,
+                expected: self.search_fp.clone(),
+            });
+        }
+        let n = r.seq_len(8, "entries").map_err(mal)?;
+        let mut map = self.entries.lock().unwrap();
+        for _ in 0..n {
+            let key = r.str("entry key").map_err(mal)?;
+            let entry = read_cached_search(&mut r)
+                .map_err(|e| MapCacheError::Malformed(format!("entry \"{key}\": {e}")))?;
+            let slot: Slot = Arc::new(OnceLock::new());
+            let _ = slot.set(Arc::new(entry));
+            map.insert(key, slot);
+        }
+        drop(map);
+        r.finish().map_err(mal)
     }
 
     fn key(shape_fp: u64, spec_fp: u64) -> String {
@@ -295,14 +379,59 @@ impl MapCache {
         self.to_json().to_string_pretty()
     }
 
-    /// Spill to the bound file (compact form) if any entry was computed
-    /// since load. No-op without a file or new entries.
+    /// Spill to the bound file if any entry was computed since load —
+    /// compact JSON or `harp_bin`, whichever the cache was bound with.
+    /// No-op without a file or new entries. Both formats stream
+    /// entry-by-entry through a `BufWriter`: peak heap is one entry,
+    /// not the whole document (the JSON bytes are identical to the old
+    /// `to_json().to_string_compact()` path, which the unit tests pin).
     pub fn persist(&self) -> std::io::Result<()> {
         let path = match &self.spill {
             Some(p) if self.dirty.load(Ordering::Relaxed) => p.clone(),
             _ => return Ok(()),
         };
-        std::fs::write(&path, self.to_json().to_string_compact())?;
+        let out = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        let map = self.entries.lock().unwrap();
+        let mut keys: Vec<&String> = map.keys().collect();
+        keys.sort();
+        match self.format {
+            CacheFormat::Json => {
+                let mut w = JsonStreamWriter::new(out, JsonStyle::Compact);
+                w.begin_obj()?;
+                w.key("harp_mapping_cache")?;
+                w.num(MAPCACHE_FORMAT as f64)?;
+                w.key("model_version")?;
+                w.num(self.model_version as f64)?;
+                w.key("search")?;
+                w.str(&self.search_fp)?;
+                w.key("entries")?;
+                w.begin_obj()?;
+                for k in keys {
+                    if let Some(v) = map[k].get() {
+                        w.key(k)?;
+                        w.value(&cached_search_to_json(v))?;
+                    }
+                }
+                w.end_obj()?;
+                w.end_obj()?;
+                w.finish()?;
+            }
+            CacheFormat::Binary => {
+                let mut w = BinWriter::new(out);
+                w.header(BIN_KIND, BIN_FORMAT)?;
+                w.u64(self.model_version)?;
+                w.str(&self.search_fp)?;
+                let n = keys.iter().filter(|k| map[k.as_str()].get().is_some()).count();
+                w.u64(n as u64)?;
+                for k in keys {
+                    if let Some(v) = map[k].get() {
+                        w.str(k)?;
+                        write_cached_search(&mut w, v)?;
+                    }
+                }
+                w.finish()?;
+            }
+        }
         self.dirty.store(false, Ordering::Relaxed);
         Ok(())
     }
@@ -506,6 +635,151 @@ fn op_stats_from_json(j: &Json) -> Result<OpStats, String> {
     })
 }
 
+/// Binary twin of [`cached_search_to_json`]: same field order, floats
+/// as raw bits, dim/level names as strings (self-describing, so the
+/// reader can reject unknown names loudly).
+fn write_cached_search<W: std::io::Write>(
+    w: &mut BinWriter<W>,
+    c: &CachedSearch,
+) -> std::io::Result<()> {
+    let m = &c.mapping;
+    w.u64(m.temporal.len() as u64)?;
+    for t in &m.temporal {
+        for &f in t {
+            w.u64(f)?;
+        }
+    }
+    w.u64(m.perms.len() as u64)?;
+    for p in &m.perms {
+        for d in p {
+            w.str(d.name())?;
+        }
+    }
+    for (d, f) in [m.spatial_row, m.spatial_col] {
+        w.str(d.name())?;
+        w.u64(f)?;
+    }
+    let s = &c.stats;
+    w.f64(s.cycles)?;
+    w.f64(s.compute_cycles)?;
+    w.f64(s.macs)?;
+    w.f64(s.energy_pj)?;
+    w.f64(s.mac_energy_pj)?;
+    w.f64(s.noc_energy_pj)?;
+    w.u64(s.levels.len() as u64)?;
+    for l in &s.levels {
+        w.str(l.kind.name())?;
+        w.f64(l.reads)?;
+        w.f64(l.writes)?;
+        w.f64(l.energy_pj)?;
+    }
+    w.u64(s.boundary_words.len() as u64)?;
+    for &(k, words) in &s.boundary_words {
+        w.str(k.name())?;
+        w.f64(words)?;
+    }
+    w.f64(s.dram_words)?;
+    w.f64(s.utilization)?;
+    match s.bound {
+        Bound::Compute => w.u8(0)?,
+        Bound::Memory(k) => {
+            w.u8(1)?;
+            w.str(k.name())?;
+        }
+    }
+    w.f64(s.onchip_bound_cycles)?;
+    w.u64(c.evaluated as u64)?;
+    w.u64(c.valid as u64)
+}
+
+/// Inverse of [`write_cached_search`] — every malformed mode (unknown
+/// dim name, bad bound tag, truncation) is a distinct loud [`BinError`].
+fn read_cached_search(r: &mut BinReader<'_>) -> Result<CachedSearch, BinError> {
+    fn dim(r: &mut BinReader<'_>) -> Result<Dim, BinError> {
+        let offset = r.offset();
+        let name = r.str("dim name")?;
+        Dim::parse(&name).map_err(|e| BinError::Malformed { offset, detail: e })
+    }
+
+    let n = r.seq_len(32, "temporal blocks")?;
+    let mut temporal = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut t = [0u64; 4];
+        for slot in t.iter_mut() {
+            *slot = r.u64("temporal factor")?;
+        }
+        temporal.push(t);
+    }
+    let n = r.seq_len(20, "permutations")?;
+    let mut perms = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut p = [Dim::B; 4];
+        for slot in p.iter_mut() {
+            *slot = dim(r)?;
+        }
+        perms.push(p);
+    }
+    let spatial_row = (dim(r)?, r.u64("spatial factor")?);
+    let spatial_col = (dim(r)?, r.u64("spatial factor")?);
+    let cycles = r.f64("cycles")?;
+    let compute_cycles = r.f64("compute_cycles")?;
+    let macs = r.f64("macs")?;
+    let energy_pj = r.f64("energy_pj")?;
+    let mac_energy_pj = r.f64("mac_energy_pj")?;
+    let noc_energy_pj = r.f64("noc_energy_pj")?;
+    let n = r.seq_len(28, "levels")?;
+    let mut levels = Vec::with_capacity(n);
+    for _ in 0..n {
+        levels.push(LevelStats {
+            kind: LevelKind::named(&r.str("level kind")?),
+            reads: r.f64("level reads")?,
+            writes: r.f64("level writes")?,
+            energy_pj: r.f64("level energy")?,
+        });
+    }
+    let n = r.seq_len(12, "boundary words")?;
+    let mut boundary_words = Vec::with_capacity(n);
+    for _ in 0..n {
+        boundary_words
+            .push((LevelKind::named(&r.str("boundary kind")?), r.f64("boundary words")?));
+    }
+    let dram_words = r.f64("dram_words")?;
+    let utilization = r.f64("utilization")?;
+    let tag_offset = r.offset();
+    let bound = match r.u8("bound tag")? {
+        0 => Bound::Compute,
+        1 => Bound::Memory(LevelKind::named(&r.str("bound level kind")?)),
+        t => {
+            return Err(BinError::Malformed {
+                offset: tag_offset,
+                detail: format!("unknown bound tag {t}"),
+            })
+        }
+    };
+    let onchip_bound_cycles = r.f64("onchip_bound_cycles")?;
+    let evaluated = r.u64("evaluated")? as usize;
+    let valid = r.u64("valid")? as usize;
+    Ok(CachedSearch {
+        mapping: Mapping { temporal, perms, spatial_row, spatial_col },
+        stats: OpStats {
+            cycles,
+            compute_cycles,
+            macs,
+            energy_pj,
+            mac_energy_pj,
+            noc_energy_pj,
+            levels,
+            boundary_words,
+            dram_words,
+            utilization,
+            bound,
+            onchip_bound_cycles,
+        },
+        evaluated,
+        valid,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -649,6 +923,84 @@ mod tests {
             MapCacheError::Malformed(d) => assert!(d.contains(&MapCache::key(0xAB, 0xCD))),
             other => panic!("want Malformed, got {other:?}"),
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The streaming JSON persist path writes byte-identical output to
+    /// the tree path — old spills and the warm-run `cmp` gates in
+    /// tier-1 cannot move.
+    #[test]
+    fn streamed_persist_matches_tree_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("harp-mapcache-stream-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.json");
+        std::fs::remove_file(&path).ok();
+
+        let cache = MapCache::with_file(&path, 1, "s4|r0x1").unwrap();
+        let e = sample_entry();
+        cache.get_or_compute(0xAB, 0xCD, || e.clone());
+        cache.get_or_compute(0x01, 0x02, || e.clone());
+        cache.persist().unwrap();
+        let streamed = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(streamed, cache.to_json().to_string_compact());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A `.bin` path selects the binary spill: round trip is bitwise,
+    /// and the doctored-header rejections mirror the JSON ones.
+    #[test]
+    fn binary_spill_round_trips_and_rejects_doctored_headers() {
+        let dir =
+            std::env::temp_dir().join(format!("harp-mapcache-bin-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bin");
+        std::fs::remove_file(&path).ok();
+
+        let cache = MapCache::with_file(&path, 1, "s4|r0x1").unwrap();
+        assert_eq!(cache.format(), CacheFormat::Binary);
+        let e = sample_entry();
+        let stored = cache.get_or_compute(0xAB, 0xCD, || e.clone());
+        cache.persist().unwrap();
+        let spilled = std::fs::read(&path).unwrap();
+        assert_eq!(&spilled[..8], b"harp_bin");
+
+        let warm = MapCache::with_file(&path, 1, "s4|r0x1").unwrap();
+        assert_eq!(warm.len(), 1);
+        let mut computed = false;
+        let hit = warm.get_or_compute(0xAB, 0xCD, || {
+            computed = true;
+            sample_entry()
+        });
+        assert!(!computed, "warm binary cache must not recompute");
+        assert_eq!(hit.stats.cycles.to_bits(), stored.stats.cycles.to_bits());
+        assert_eq!(hit.stats.energy_pj.to_bits(), stored.stats.energy_pj.to_bits());
+        assert_eq!(hit.mapping, stored.mapping);
+        // A clean warm cache re-persists to the identical bytes.
+        warm.persist().unwrap();
+        assert_eq!(spilled, std::fs::read(&path).unwrap());
+
+        // Version and budget mismatches get their dedicated rejections.
+        let err = MapCache::with_file(&path, 2, "s4|r0x1").unwrap_err();
+        assert_eq!(err, MapCacheError::VersionMismatch { found: 1, expected: 2 });
+        let err = MapCache::with_file(&path, 1, "s9|r0x1").unwrap_err();
+        assert!(matches!(err, MapCacheError::StaleFingerprint { .. }), "{err}");
+
+        // Doctored magic is malformed, loudly.
+        let mut bad = spilled.clone();
+        bad[0] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        let err = MapCache::with_file(&path, 1, "s4|r0x1").unwrap_err();
+        match &err {
+            MapCacheError::Malformed(d) => assert!(d.contains("magic"), "{d}"),
+            other => panic!("want Malformed, got {other:?}"),
+        }
+
+        // A JSON document behind a .bin extension is malformed too (not
+        // a quiet JSON fallback — the format knob means what it says).
+        std::fs::write(&path, cache.to_json().to_string_compact()).unwrap();
+        let err = MapCache::with_file(&path, 1, "s4|r0x1").unwrap_err();
+        assert!(matches!(err, MapCacheError::Malformed(_)), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

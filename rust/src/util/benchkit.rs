@@ -10,7 +10,8 @@
 //!    and renders them as aligned text plus machine-readable JSON, so
 //!    `cargo bench` regenerates each paper table/figure.
 
-use super::json::Json;
+use super::json::{Json, JsonStreamWriter, JsonStyle};
+use std::io;
 use std::time::{Duration, Instant};
 
 /// Result of timing one benchmark target.
@@ -216,13 +217,53 @@ impl Figure {
             .with("series", series)
     }
 
-    /// Print the figure and persist JSON under `target/figures/`.
+    /// Stream the figure document row by row — the exact bytes of
+    /// `to_json()` through the same writer, without building the tree:
+    /// peak heap is one row, however many rows the sweep produced.
+    pub fn write_json<W: io::Write>(&self, w: &mut JsonStreamWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        w.key("title")?;
+        w.str(&self.title)?;
+        w.key("value_label")?;
+        w.str(&self.value_label)?;
+        w.key("series")?;
+        w.begin_arr()?;
+        for s in &self.series {
+            w.begin_obj()?;
+            w.key("name")?;
+            w.str(&s.name)?;
+            w.key("rows")?;
+            w.begin_arr()?;
+            for (l, v) in &s.rows {
+                w.begin_obj()?;
+                w.key("label")?;
+                w.str(l)?;
+                w.key("value")?;
+                w.num(*v)?;
+                w.end_obj()?;
+            }
+            w.end_arr()?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.end_obj()
+    }
+
+    /// Print the figure and persist JSON under `target/figures/`,
+    /// streaming rows through a `BufWriter` as they serialize.
     pub fn emit(&self, file_stem: &str) {
         println!("{}", self.render());
         let dir = std::path::Path::new("target/figures");
         let _ = std::fs::create_dir_all(dir);
         let path = dir.join(format!("{file_stem}.json"));
-        if let Err(e) = std::fs::write(&path, self.to_json().to_string_pretty()) {
+        let write = || -> io::Result<()> {
+            let out = io::BufWriter::new(std::fs::File::create(&path)?);
+            let mut w = JsonStreamWriter::new(out, JsonStyle::Pretty);
+            self.write_json(&mut w)?;
+            w.finish()?;
+            Ok(())
+        };
+        if let Err(e) = write() {
             eprintln!("warn: could not write {}: {e}", path.display());
         } else {
             println!("[figure json: {}]\n", path.display());
@@ -260,5 +301,29 @@ mod tests {
         assert!(text.contains("cross-node"));
         let j = fig.to_json();
         assert_eq!(j.get("series").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// The streamed figure document is byte-for-byte the tree-built one
+    /// in both styles — `emit()`'s on-disk artifact cannot drift from
+    /// `to_json()`.
+    #[test]
+    fn streamed_figure_matches_tree_bytes() {
+        let mut fig = Figure::new("Fig Y", "energy (pJ)");
+        let mut s = Series::new("bw=\"2048\""); // exercises key escaping
+        for i in 0..40 {
+            s.push(&format!("row-{i}\n"), i as f64 * 0.3 + 0.1);
+        }
+        fig.add(s);
+        fig.add(Series::new("empty"));
+        for style in [JsonStyle::Compact, JsonStyle::Pretty] {
+            let mut w = JsonStreamWriter::new(Vec::new(), style);
+            fig.write_json(&mut w).unwrap();
+            let streamed = String::from_utf8(w.finish().unwrap()).unwrap();
+            let tree = match style {
+                JsonStyle::Compact => fig.to_json().to_string_compact(),
+                JsonStyle::Pretty => fig.to_json().to_string_pretty(),
+            };
+            assert_eq!(streamed, tree, "{style:?}");
+        }
     }
 }

@@ -1,0 +1,400 @@
+//! Binary cache-spill container (`harp_bin`): a compact, versioned,
+//! little-endian format for the eval-cache and mapping-cache spills.
+//!
+//! Layout of every spill: the 8-byte magic `harp_bin`, a length-prefixed
+//! container-kind string (`"mapcache"`, `"evalcache"`), a `u32`
+//! container-format revision — then kind-specific payload. All integers
+//! are little-endian; `f64`s are written as their raw IEEE-754 bit
+//! patterns (`to_bits`), so round trips are bit-exact by construction —
+//! the same exactness contract the JSON spills get from shortest
+//! round-trip `Display`.
+//!
+//! Reading is slice-based and fully bounds-checked: every decode failure
+//! is a distinct [`BinError`] naming the offset and what was being read.
+//! Truncation, doctored magic/kind/version bytes, implausible lengths,
+//! and trailing garbage all error loudly — never a panic, never a quiet
+//! partial load.
+
+use std::fmt;
+use std::io::{self, Write};
+use std::path::Path;
+
+/// First 8 bytes of every binary spill.
+pub const HARP_BIN_MAGIC: [u8; 8] = *b"harp_bin";
+
+/// On-disk format of a cache spill: JSON is the debug/interchange path,
+/// binary is the fast path for million-point sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheFormat {
+    Json,
+    Binary,
+}
+
+impl CacheFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheFormat::Json => "json",
+            CacheFormat::Binary => "binary",
+        }
+    }
+
+    /// Parse the `--cache-format` / `"cache_format"` knob value.
+    pub fn parse(s: &str) -> Result<CacheFormat, String> {
+        match s {
+            "json" => Ok(CacheFormat::Json),
+            "binary" | "bin" => Ok(CacheFormat::Binary),
+            other => Err(format!(
+                "unknown cache format '{other}' (expected \"json\" or \"binary\")"
+            )),
+        }
+    }
+
+    /// Format implied by a spill path's extension; `None` when the
+    /// extension says nothing either way.
+    pub fn implied_by_extension(path: &Path) -> Option<CacheFormat> {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("bin") | Some("harpbin") => Some(CacheFormat::Binary),
+            Some("json") => Some(CacheFormat::Json),
+            _ => None,
+        }
+    }
+
+    /// Resolve the format for a spill path against an optional explicit
+    /// knob. An explicit knob that contradicts the extension is a loud
+    /// error — a `.bin` file quietly written as JSON (or vice versa)
+    /// would poison every later run that trusts the extension. With no
+    /// knob the extension decides, defaulting to JSON (the historical
+    /// behaviour: every pre-existing spill is JSON).
+    pub fn resolve(path: &Path, knob: Option<CacheFormat>) -> Result<CacheFormat, String> {
+        let implied = CacheFormat::implied_by_extension(path);
+        match (knob, implied) {
+            (Some(k), Some(i)) if k != i => Err(format!(
+                "cache format conflict for {}: the knob says {} but the file \
+                 extension implies {} — rename the file or drop the knob",
+                path.display(),
+                k.name(),
+                i.name()
+            )),
+            (Some(k), _) => Ok(k),
+            (None, Some(i)) => Ok(i),
+            (None, None) => Ok(CacheFormat::Json),
+        }
+    }
+}
+
+/// Decode failure: every malformed-input mode gets its own variant with
+/// an offset-bearing message, so any two different corruptions read
+/// differently on stderr.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BinError {
+    /// The first 8 bytes are not `harp_bin`.
+    BadMagic { found: Vec<u8> },
+    /// The container kind string is not the expected one (e.g. an
+    /// eval-cache spill handed to the mapping cache).
+    WrongKind { found: String, expected: &'static str },
+    /// The container format revision is one this build cannot read.
+    UnsupportedFormat { found: u32, expected: u32 },
+    /// The file ends before a field does.
+    Truncated { offset: usize, needed: usize, available: usize, what: &'static str },
+    /// A field decoded to something impossible (bad UTF-8, implausible
+    /// length, unknown enum tag, …).
+    Malformed { offset: usize, detail: String },
+    /// Bytes remain after the document — a concatenation or overwrite
+    /// accident, not a valid spill.
+    TrailingBytes { offset: usize, remaining: usize },
+}
+
+impl fmt::Display for BinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BinError::BadMagic { found } => {
+                write!(f, "bad magic: expected \"harp_bin\", found {found:02x?}")
+            }
+            BinError::WrongKind { found, expected } => write!(
+                f,
+                "wrong container kind: expected \"{expected}\", found \"{found}\""
+            ),
+            BinError::UnsupportedFormat { found, expected } => write!(
+                f,
+                "unsupported container format {found} (this build reads {expected})"
+            ),
+            BinError::Truncated { offset, needed, available, what } => write!(
+                f,
+                "truncated: need {needed} byte(s) for {what} at offset {offset}, \
+                 only {available} left"
+            ),
+            BinError::Malformed { offset, detail } => {
+                write!(f, "malformed at offset {offset}: {detail}")
+            }
+            BinError::TrailingBytes { offset, remaining } => write!(
+                f,
+                "{remaining} trailing byte(s) after the document (offset {offset})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BinError {}
+
+/// Streaming binary encoder over any byte sink.
+pub struct BinWriter<W: Write> {
+    out: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(out: W) -> Self {
+        BinWriter { out }
+    }
+
+    /// Magic + container kind + container-format revision.
+    pub fn header(&mut self, kind: &str, format: u32) -> io::Result<()> {
+        self.out.write_all(&HARP_BIN_MAGIC)?;
+        self.str(kind)?;
+        self.u32(format)
+    }
+
+    pub fn u8(&mut self, v: u8) -> io::Result<()> {
+        self.out.write_all(&[v])
+    }
+
+    pub fn u32(&mut self, v: u32) -> io::Result<()> {
+        self.out.write_all(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.out.write_all(&v.to_le_bytes())
+    }
+
+    /// Raw IEEE-754 bits — the bit-exactness contract.
+    pub fn f64(&mut self, v: f64) -> io::Result<()> {
+        self.u64(v.to_bits())
+    }
+
+    /// Length-prefixed UTF-8.
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.u32(s.len() as u32)?;
+        self.out.write_all(s.as_bytes())
+    }
+
+    /// Flush and hand the sink back.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.out.flush()?;
+        Ok(self.out)
+    }
+}
+
+/// Bounds-checked binary decoder over an in-memory spill.
+pub struct BinReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BinReader { bytes, pos: 0 }
+    }
+
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], BinError> {
+        let available = self.bytes.len() - self.pos;
+        if n > available {
+            return Err(BinError::Truncated { offset: self.pos, needed: n, available, what });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Validate magic, container kind, and format revision — each
+    /// mismatch is its own loud error.
+    pub fn header(&mut self, kind: &'static str, format: u32) -> Result<(), BinError> {
+        let magic = self.take(HARP_BIN_MAGIC.len(), "magic")?;
+        if magic != HARP_BIN_MAGIC {
+            return Err(BinError::BadMagic { found: magic.to_vec() });
+        }
+        let found_kind = self.str("container kind")?;
+        if found_kind != kind {
+            return Err(BinError::WrongKind { found: found_kind, expected: kind });
+        }
+        let found_format = self.u32("container format")?;
+        if found_format != format {
+            return Err(BinError::UnsupportedFormat { found: found_format, expected: format });
+        }
+        Ok(())
+    }
+
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, BinError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, BinError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, BinError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, BinError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    pub fn str(&mut self, what: &'static str) -> Result<String, BinError> {
+        let offset = self.pos;
+        let len = self.u32(what)? as usize;
+        let bytes = self.take(len, what)?;
+        std::str::from_utf8(bytes)
+            .map(|s| s.to_owned())
+            .map_err(|_| BinError::Malformed { offset, detail: format!("{what} is not UTF-8") })
+    }
+
+    /// Read a sequence length and sanity-check it against the bytes
+    /// that remain (each element needs at least `min_elem_bytes`), so a
+    /// doctored count can never drive a huge pre-allocation or a long
+    /// walk off the end.
+    pub fn seq_len(
+        &mut self,
+        min_elem_bytes: usize,
+        what: &'static str,
+    ) -> Result<usize, BinError> {
+        let offset = self.pos;
+        let n = self.u64(what)?;
+        let remaining = (self.bytes.len() - self.pos) as u64;
+        let plausible = match n.checked_mul(min_elem_bytes.max(1) as u64) {
+            Some(need) => need <= remaining,
+            None => false,
+        };
+        if !plausible {
+            return Err(BinError::Malformed {
+                offset,
+                detail: format!(
+                    "implausible {what} count {n} with {remaining} byte(s) left"
+                ),
+            });
+        }
+        Ok(n as usize)
+    }
+
+    /// Assert the document consumed every byte.
+    pub fn finish(&self) -> Result<(), BinError> {
+        let remaining = self.bytes.len() - self.pos;
+        if remaining != 0 {
+            return Err(BinError::TrailingBytes { offset: self.pos, remaining });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn sample() -> Vec<u8> {
+        let mut w = BinWriter::new(Vec::new());
+        w.header("testkind", 3).unwrap();
+        w.u64(42).unwrap();
+        w.str("héllo").unwrap();
+        w.f64(0.1 + 0.2).unwrap();
+        w.u8(7).unwrap();
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn round_trips_bit_exactly() {
+        let bytes = sample();
+        let mut r = BinReader::new(&bytes);
+        r.header("testkind", 3).unwrap();
+        assert_eq!(r.u64("n").unwrap(), 42);
+        assert_eq!(r.str("s").unwrap(), "héllo");
+        assert_eq!(r.f64("f").unwrap().to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(r.u8("b").unwrap(), 7);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn every_truncation_is_a_distinct_loud_error() {
+        let bytes = sample();
+        let mut seen = std::collections::HashSet::new();
+        for cut in 0..bytes.len() {
+            let mut r = BinReader::new(&bytes[..cut]);
+            let err = (|| -> Result<(), BinError> {
+                r.header("testkind", 3)?;
+                r.u64("n")?;
+                r.str("s")?;
+                r.f64("f")?;
+                r.u8("b")?;
+                r.finish()
+            })()
+            .unwrap_err();
+            let msg = err.to_string();
+            assert!(!msg.is_empty());
+            // Distinct per cut: the message carries offset + remaining
+            // byte counts, so no two prefixes read the same.
+            assert!(seen.insert(msg.clone()), "cut {cut}: duplicate message {msg}");
+        }
+    }
+
+    #[test]
+    fn doctored_headers_reject_distinctly() {
+        let bytes = sample();
+
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xff;
+        let err = BinReader::new(&bad_magic).header("testkind", 3).unwrap_err();
+        assert!(matches!(err, BinError::BadMagic { .. }), "{err}");
+
+        let mut r = BinReader::new(&bytes);
+        let err = r.header("otherkind", 3).unwrap_err();
+        assert!(matches!(err, BinError::WrongKind { .. }), "{err}");
+
+        let mut r = BinReader::new(&bytes);
+        let err = r.header("testkind", 4).unwrap_err();
+        assert!(matches!(err, BinError::UnsupportedFormat { .. }), "{err}");
+
+        let mut extended = bytes.clone();
+        extended.push(0);
+        let mut r = BinReader::new(&extended);
+        r.header("testkind", 3).unwrap();
+        r.u64("n").unwrap();
+        r.str("s").unwrap();
+        r.f64("f").unwrap();
+        r.u8("b").unwrap();
+        let err = r.finish().unwrap_err();
+        assert!(matches!(err, BinError::TrailingBytes { .. }), "{err}");
+    }
+
+    #[test]
+    fn implausible_sequence_counts_are_malformed_not_allocated() {
+        let mut w = BinWriter::new(Vec::new());
+        w.u64(u64::MAX).unwrap();
+        let bytes = w.finish().unwrap();
+        let mut r = BinReader::new(&bytes);
+        let err = r.seq_len(16, "entries").unwrap_err();
+        assert!(matches!(err, BinError::Malformed { .. }), "{err}");
+        assert!(err.to_string().contains("implausible"));
+    }
+
+    #[test]
+    fn format_resolution_and_conflicts() {
+        let bin = PathBuf::from("cache.bin");
+        let json = PathBuf::from("cache.json");
+        let other = PathBuf::from("cache.spill");
+        assert_eq!(CacheFormat::resolve(&bin, None), Ok(CacheFormat::Binary));
+        assert_eq!(CacheFormat::resolve(&json, None), Ok(CacheFormat::Json));
+        assert_eq!(CacheFormat::resolve(&other, None), Ok(CacheFormat::Json));
+        assert_eq!(
+            CacheFormat::resolve(&other, Some(CacheFormat::Binary)),
+            Ok(CacheFormat::Binary)
+        );
+        let err = CacheFormat::resolve(&bin, Some(CacheFormat::Json)).unwrap_err();
+        assert!(err.contains("conflict"), "{err}");
+        let err = CacheFormat::resolve(&json, Some(CacheFormat::Binary)).unwrap_err();
+        assert!(err.contains("conflict"), "{err}");
+        assert!(CacheFormat::parse("bogus").is_err());
+        assert_eq!(CacheFormat::parse("binary"), Ok(CacheFormat::Binary));
+    }
+}

@@ -4,9 +4,19 @@
 //! numbers, booleans, null). Numbers are stored as `f64`; integer
 //! accessors check for exact representability. Object key order is
 //! preserved (insertion order) so emitted reports diff cleanly.
+//!
+//! Two serialization paths share one set of byte-emission rules:
+//! the tree path ([`Json::write_to`], with `to_string_compact` /
+//! `to_string_pretty` as thin wrappers) and the push path
+//! ([`JsonStreamWriter`]), which lets row-shaped hot emitters stream a
+//! document to any [`io::Write`] without ever building the `Json` tree.
+//! The byte format is pinned by goldens and parse→serialize fixpoint
+//! suites: both paths funnel through the same `emit_*` helpers so they
+//! cannot drift apart.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -16,14 +26,34 @@ pub enum Json {
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
-    /// Object: pairs in insertion order plus an index for O(log n) lookup.
+    /// Object: pairs in insertion order; `get()` is a linear scan,
+    /// which is the right trade for the small row-shaped objects this
+    /// codebase emits (no side index to keep coherent).
     Obj(Vec<(String, Json)>),
+}
+
+/// Serialization style shared by the tree and streaming writers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonStyle {
+    /// No whitespace at all.
+    Compact,
+    /// 2-space indentation, one element per line, `: ` after keys.
+    Pretty,
+}
+
+impl JsonStyle {
+    fn indent(self) -> Option<usize> {
+        match self {
+            JsonStyle::Compact => None,
+            JsonStyle::Pretty => Some(2),
+        }
+    }
 }
 
 impl Json {
     /// Parse a JSON document from text.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, scratch: String::new() };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -33,7 +63,7 @@ impl Json {
         Ok(v)
     }
 
-    /// Object field lookup.
+    /// Object field lookup (linear scan; see `Json::Obj`).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -107,64 +137,76 @@ impl Json {
         self
     }
 
-    /// Serialize compactly.
+    /// Serialize compactly. Thin wrapper over [`Json::write_to`]; the
+    /// bytes are pinned (goldens, fixpoint suites) and must not move.
     pub fn to_string_compact(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
+        self.to_string_styled(JsonStyle::Compact)
     }
 
-    /// Serialize with 2-space indentation.
+    /// Serialize with 2-space indentation. Thin wrapper over
+    /// [`Json::write_to`]; the bytes are pinned and must not move.
     pub fn to_string_pretty(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, Some(2), 0);
-        out
+        self.to_string_styled(JsonStyle::Pretty)
     }
 
-    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+    fn to_string_styled(&self, style: JsonStyle) -> String {
+        let mut out = Vec::new();
+        self.write_to(&mut out, style).expect("writing to a Vec cannot fail");
+        // The writer emits only UTF-8: ASCII structure plus `&str`
+        // content and escapes.
+        String::from_utf8(out).expect("serializer emits UTF-8")
+    }
+
+    /// Serialize into any byte sink without materializing a `String`.
+    pub fn write_to<W: io::Write>(&self, out: &mut W, style: JsonStyle) -> io::Result<()> {
+        let mut scratch = String::new();
+        self.write_value(out, style, 0, &mut scratch)
+    }
+
+    fn write_value<W: io::Write>(
+        &self,
+        out: &mut W,
+        style: JsonStyle,
+        depth: usize,
+        scratch: &mut String,
+    ) -> io::Result<()> {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
-            Json::Str(s) => write_escaped(out, s),
+            Json::Null => out.write_all(b"null"),
+            Json::Bool(b) => out.write_all(if *b { b"true" } else { b"false" }),
+            Json::Num(n) => emit_num(out, scratch, *n),
+            Json::Str(s) => emit_escaped(out, scratch, s),
             Json::Arr(items) => {
-                out.push('[');
+                out.write_all(b"[")?;
                 for (i, item) in items.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_all(b",")?;
                     }
-                    newline_indent(out, indent, depth + 1);
-                    item.write(out, indent, depth + 1);
+                    emit_newline_indent(out, style, depth + 1)?;
+                    item.write_value(out, style, depth + 1, scratch)?;
                 }
                 if !items.is_empty() {
-                    newline_indent(out, indent, depth);
+                    emit_newline_indent(out, style, depth)?;
                 }
-                out.push(']');
+                out.write_all(b"]")
             }
             Json::Obj(pairs) => {
-                out.push('{');
+                out.write_all(b"{")?;
                 for (i, (k, v)) in pairs.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_all(b",")?;
                     }
-                    newline_indent(out, indent, depth + 1);
-                    write_escaped(out, k);
-                    out.push(':');
-                    if indent.is_some() {
-                        out.push(' ');
+                    emit_newline_indent(out, style, depth + 1)?;
+                    emit_escaped(out, scratch, k)?;
+                    out.write_all(b":")?;
+                    if style.indent().is_some() {
+                        out.write_all(b" ")?;
                     }
-                    v.write(out, indent, depth + 1);
+                    v.write_value(out, style, depth + 1, scratch)?;
                 }
                 if !pairs.is_empty() {
-                    newline_indent(out, indent, depth);
+                    emit_newline_indent(out, style, depth)?;
                 }
-                out.push('}');
+                out.write_all(b"}")
             }
         }
     }
@@ -178,16 +220,46 @@ impl Json {
     }
 }
 
-fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
-    if let Some(w) = indent {
-        out.push('\n');
-        for _ in 0..w * depth {
-            out.push(' ');
+fn emit_newline_indent<W: io::Write>(
+    out: &mut W,
+    style: JsonStyle,
+    depth: usize,
+) -> io::Result<()> {
+    if let Some(w) = style.indent() {
+        const SPACES: [u8; 64] = [b' '; 64];
+        out.write_all(b"\n")?;
+        let mut n = w * depth;
+        while n > 0 {
+            let chunk = n.min(SPACES.len());
+            out.write_all(&SPACES[..chunk])?;
+            n -= chunk;
         }
     }
+    Ok(())
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Number formatting rule shared by both writers. Integer-valued f64s
+/// inside the exact range print without a fractional part; everything
+/// else uses Rust's shortest round-trip `Display`, which preserves f64
+/// bits through text.
+fn emit_num<W: io::Write>(out: &mut W, scratch: &mut String, n: f64) -> io::Result<()> {
+    use std::fmt::Write as _;
+    scratch.clear();
+    if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+        let _ = write!(scratch, "{}", n as i64);
+    } else {
+        let _ = write!(scratch, "{n}");
+    }
+    out.write_all(scratch.as_bytes())
+}
+
+fn emit_escaped<W: io::Write>(out: &mut W, scratch: &mut String, s: &str) -> io::Result<()> {
+    scratch.clear();
+    escape_into(scratch, s);
+    out.write_all(scratch.as_bytes())
+}
+
+fn escape_into(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -196,11 +268,201 @@ fn write_escaped(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }
     out.push('"');
+}
+
+/// Push-style streaming serializer: emits the exact byte format of
+/// [`Json::write_to`] without building a `Json` tree, so row-shaped hot
+/// paths (figure tables, sweep rows, cache spills) keep peak heap at
+/// one row instead of the whole document.
+///
+/// The escape/number scratch buffer is reused across values; it grows
+/// to the longest single value ever emitted and then stays put —
+/// [`JsonStreamWriter::scratch_growths`] counts the growths and serves
+/// as the bench suite's peak-allocation proxy.
+///
+/// Misuse (a bare value inside an object, unbalanced `end_*`,
+/// `finish()` mid-document) is a programmer error and panics: the
+/// writer is for emitters whose shape is static, not for reflecting
+/// untrusted data.
+pub struct JsonStreamWriter<W: io::Write> {
+    out: W,
+    style: JsonStyle,
+    /// One frame per open container: (is_object, has_items).
+    stack: Vec<(bool, bool)>,
+    /// Set between `key()` and the value that consumes it.
+    pending_value: bool,
+    /// A root value has been emitted (a second one is a misuse panic).
+    root_done: bool,
+    scratch: String,
+    scratch_growths: usize,
+}
+
+impl<W: io::Write> JsonStreamWriter<W> {
+    pub fn new(out: W, style: JsonStyle) -> Self {
+        JsonStreamWriter {
+            out,
+            style,
+            stack: Vec::new(),
+            pending_value: false,
+            root_done: false,
+            scratch: String::new(),
+            scratch_growths: 0,
+        }
+    }
+
+    /// Separator + indent owed before a value in the current context.
+    fn value_prefix(&mut self) -> io::Result<()> {
+        if self.pending_value {
+            // We are the value that follows `key()`; the separator and
+            // indent went out with the key.
+            self.pending_value = false;
+            return Ok(());
+        }
+        let first = match self.stack.last_mut() {
+            None => {
+                assert!(!self.root_done, "JsonStreamWriter: second root value");
+                self.root_done = true;
+                return Ok(());
+            }
+            Some((is_obj, has_items)) => {
+                assert!(!*is_obj, "JsonStreamWriter: value inside an object needs key()");
+                let first = !*has_items;
+                *has_items = true;
+                first
+            }
+        };
+        if !first {
+            self.out.write_all(b",")?;
+        }
+        emit_newline_indent(&mut self.out, self.style, self.stack.len())
+    }
+
+    fn escaped(&mut self, s: &str) -> io::Result<()> {
+        let cap = self.scratch.capacity();
+        self.scratch.clear();
+        escape_into(&mut self.scratch, s);
+        if self.scratch.capacity() > cap {
+            self.scratch_growths += 1;
+        }
+        self.out.write_all(self.scratch.as_bytes())
+    }
+
+    /// Emit an object key; the next call must emit its value.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        assert!(!self.pending_value, "JsonStreamWriter: key() right after key()");
+        let first = match self.stack.last_mut() {
+            Some((true, has_items)) => {
+                let first = !*has_items;
+                *has_items = true;
+                first
+            }
+            _ => panic!("JsonStreamWriter: key() outside an object"),
+        };
+        if !first {
+            self.out.write_all(b",")?;
+        }
+        emit_newline_indent(&mut self.out, self.style, self.stack.len())?;
+        self.escaped(k)?;
+        self.out.write_all(b":")?;
+        if self.style.indent().is_some() {
+            self.out.write_all(b" ")?;
+        }
+        self.pending_value = true;
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.value_prefix()?;
+        self.out.write_all(b"{")?;
+        self.stack.push((true, false));
+        Ok(())
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        self.end(true, b"}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.value_prefix()?;
+        self.out.write_all(b"[")?;
+        self.stack.push((false, false));
+        Ok(())
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        self.end(false, b"]")
+    }
+
+    fn end(&mut self, obj: bool, closer: &'static [u8]) -> io::Result<()> {
+        assert!(!self.pending_value, "JsonStreamWriter: key() without a value");
+        let (is_obj, has_items) =
+            self.stack.pop().expect("JsonStreamWriter: unbalanced end");
+        assert_eq!(is_obj, obj, "JsonStreamWriter: mismatched container end");
+        if has_items {
+            emit_newline_indent(&mut self.out, self.style, self.stack.len())?;
+        }
+        self.out.write_all(closer)
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.value_prefix()?;
+        self.out.write_all(b"null")
+    }
+
+    pub fn bool(&mut self, b: bool) -> io::Result<()> {
+        self.value_prefix()?;
+        self.out.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn num(&mut self, n: f64) -> io::Result<()> {
+        self.value_prefix()?;
+        let cap = self.scratch.capacity();
+        emit_num(&mut self.out, &mut self.scratch, n)?;
+        if self.scratch.capacity() > cap {
+            self.scratch_growths += 1;
+        }
+        Ok(())
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.value_prefix()?;
+        self.escaped(s)
+    }
+
+    /// Emit a pre-built subtree at the current position. Lets callers
+    /// stream the document skeleton while still using row-sized `Json`
+    /// trees where convenient.
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        self.value_prefix()?;
+        let depth = self.stack.len();
+        v.write_value(&mut self.out, self.style, depth, &mut self.scratch)
+    }
+
+    /// How many times the reused value buffer had to grow. A streaming
+    /// emitter settles to a small constant once the longest value has
+    /// been seen; the bench suite asserts this stays bounded while the
+    /// row count scales.
+    pub fn scratch_growths(&self) -> usize {
+        self.scratch_growths
+    }
+
+    /// Assert the document is complete, flush, and return the sink.
+    pub fn finish(mut self) -> io::Result<W> {
+        assert!(
+            self.stack.is_empty() && !self.pending_value && self.root_done,
+            "JsonStreamWriter: finish() on an incomplete document"
+        );
+        self.out.flush()?;
+        Ok(self.out)
+    }
 }
 
 impl From<f64> for Json {
@@ -261,6 +523,10 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Reused string-decode buffer; each parsed string is copied out of
+    /// it with one exact-size allocation instead of growing a fresh
+    /// `String` per string.
+    scratch: String,
 }
 
 impl<'a> Parser<'a> {
@@ -360,12 +626,19 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        let out = self.string_into(&mut scratch).map(|()| scratch.as_str().to_owned());
+        self.scratch = scratch;
+        out
+    }
+
+    fn string_into(&mut self, out: &mut String) -> Result<(), JsonError> {
         self.expect(b'"')?;
-        let mut out = String::new();
         loop {
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
-                Some(b'"') => return Ok(out),
+                Some(b'"') => return Ok(()),
                 Some(b'\\') => match self.bump() {
                     Some(b'"') => out.push('"'),
                     Some(b'\\') => out.push('\\'),
@@ -530,6 +803,182 @@ mod tests {
         assert_eq!(Json::parse("9007199254740992").unwrap().as_u64(), Some(1 << 53));
         assert_eq!(Json::Num(1.5).as_u64(), None);
         assert_eq!(Json::Num(-1.0).as_u64(), None);
+    }
+
+    /// The serialized byte format is pinned absolutely here — not just
+    /// as a fixpoint — so the `write_to` refactor (and any future one)
+    /// cannot move the bytes that goldens and disk-spilled caches
+    /// depend on: separators, indent shape, `: ` spacing, empty
+    /// containers, escapes, and the integer/float number rule.
+    #[test]
+    fn serialized_bytes_are_pinned_for_both_styles() {
+        let doc = Json::obj()
+            .with("a", 1u64)
+            .with("b", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)]))
+            .with("c", Json::obj())
+            .with("d", Json::obj().with("k", "v"))
+            .with("e", Json::Arr(vec![]));
+        assert_eq!(
+            doc.to_string_compact(),
+            r#"{"a":1,"b":[1,2.5],"c":{},"d":{"k":"v"},"e":[]}"#
+        );
+        assert_eq!(
+            doc.to_string_pretty(),
+            "{\n  \"a\": 1,\n  \"b\": [\n    1,\n    2.5\n  ],\n  \"c\": {},\n  \
+             \"d\": {\n    \"k\": \"v\"\n  },\n  \"e\": []\n}"
+        );
+
+        assert_eq!(
+            Json::Str("a\"b\\c\nd\r\te\u{1}é😀".into()).to_string_compact(),
+            "\"a\\\"b\\\\c\\nd\\r\\te\\u0001é😀\""
+        );
+        for (n, s) in [
+            (42.0, "42"),
+            (-7.0, "-7"),
+            (2.5, "2.5"),
+            (0.1, "0.1"),
+            (9007199254740992.0, "9007199254740992"),
+        ] {
+            assert_eq!(Json::Num(n).to_string_compact(), s);
+        }
+    }
+
+    /// `write_to` and the `to_string_*` wrappers emit identical bytes
+    /// for every real front-end document the repo generates (machine
+    /// trees of all 16 taxonomy points, all registered workloads) —
+    /// and streaming the same tree through `JsonStreamWriter::value`
+    /// matches too, in both styles.
+    #[test]
+    fn write_to_and_stream_value_match_strings_for_real_documents() {
+        use crate::arch::partition::{generate_topology, HardwareParams};
+        use crate::arch::taxonomy::HarpClass;
+        use crate::workload::registry;
+
+        let mut docs: Vec<(String, Json)> = Vec::new();
+        for class in HarpClass::all_points() {
+            let t = generate_topology(&class, &HardwareParams::default()).unwrap();
+            docs.push((format!("{class}"), t.to_json()));
+        }
+        for (key, spec) in registry::all_builtins() {
+            docs.push((key.to_string(), spec.to_json()));
+        }
+
+        for (tag, doc) in &docs {
+            for style in [JsonStyle::Compact, JsonStyle::Pretty] {
+                let expect = match style {
+                    JsonStyle::Compact => doc.to_string_compact(),
+                    JsonStyle::Pretty => doc.to_string_pretty(),
+                };
+                let mut direct = Vec::new();
+                doc.write_to(&mut direct, style).unwrap();
+                assert_eq!(direct, expect.as_bytes(), "{tag} ({style:?}): write_to");
+
+                let mut w = JsonStreamWriter::new(Vec::new(), style);
+                w.value(doc).unwrap();
+                let streamed = w.finish().unwrap();
+                assert_eq!(streamed, expect.as_bytes(), "{tag} ({style:?}): stream");
+
+                // Nested: a subtree emitted mid-document indents from
+                // its container's depth, exactly like the tree writer.
+                let wrapped = Json::obj().with("row", doc.clone());
+                let mut w = JsonStreamWriter::new(Vec::new(), style);
+                w.begin_obj().unwrap();
+                w.key("row").unwrap();
+                w.value(doc).unwrap();
+                w.end_obj().unwrap();
+                let streamed = w.finish().unwrap();
+                let expect = match style {
+                    JsonStyle::Compact => wrapped.to_string_compact(),
+                    JsonStyle::Pretty => wrapped.to_string_pretty(),
+                };
+                assert_eq!(streamed, expect.as_bytes(), "{tag} ({style:?}): nested");
+            }
+        }
+    }
+
+    /// Manually driving the stream writer — keys, scalars, nested
+    /// containers, empty containers, escapes — reproduces the tree
+    /// writer's bytes exactly in both styles.
+    #[test]
+    fn stream_writer_matches_tree_writer_bytes() {
+        let tree = Json::obj()
+            .with("name", "h\"arp\n")
+            .with("n", 3u64)
+            .with("f", 2.5)
+            .with("flag", true)
+            .with("none", Json::Null)
+            .with("empty_obj", Json::obj())
+            .with("empty_arr", Json::Arr(vec![]))
+            .with(
+                "rows",
+                Json::Arr(vec![
+                    Json::obj().with("label", "a").with("value", 1u64),
+                    Json::obj().with("label", "b").with("value", 0.5),
+                ]),
+            );
+        for style in [JsonStyle::Compact, JsonStyle::Pretty] {
+            let mut w = JsonStreamWriter::new(Vec::new(), style);
+            w.begin_obj().unwrap();
+            w.key("name").unwrap();
+            w.str("h\"arp\n").unwrap();
+            w.key("n").unwrap();
+            w.num(3.0).unwrap();
+            w.key("f").unwrap();
+            w.num(2.5).unwrap();
+            w.key("flag").unwrap();
+            w.bool(true).unwrap();
+            w.key("none").unwrap();
+            w.null().unwrap();
+            w.key("empty_obj").unwrap();
+            w.begin_obj().unwrap();
+            w.end_obj().unwrap();
+            w.key("empty_arr").unwrap();
+            w.begin_arr().unwrap();
+            w.end_arr().unwrap();
+            w.key("rows").unwrap();
+            w.begin_arr().unwrap();
+            for (label, value) in [("a", 1.0), ("b", 0.5)] {
+                w.begin_obj().unwrap();
+                w.key("label").unwrap();
+                w.str(label).unwrap();
+                w.key("value").unwrap();
+                w.num(value).unwrap();
+                w.end_obj().unwrap();
+            }
+            w.end_arr().unwrap();
+            w.end_obj().unwrap();
+            let bytes = w.finish().unwrap();
+            let expect = match style {
+                JsonStyle::Compact => tree.to_string_compact(),
+                JsonStyle::Pretty => tree.to_string_pretty(),
+            };
+            assert_eq!(
+                String::from_utf8(bytes).unwrap(),
+                expect,
+                "{style:?}: stream and tree writers drifted"
+            );
+        }
+    }
+
+    /// The reused scratch buffer stops growing once the longest value
+    /// has been seen: emitting the same row shape thousands of times
+    /// costs a bounded number of buffer growths, not one per row.
+    #[test]
+    fn stream_writer_scratch_growths_are_bounded() {
+        let mut w = JsonStreamWriter::new(Vec::new(), JsonStyle::Compact);
+        w.begin_arr().unwrap();
+        for i in 0..5000 {
+            w.begin_obj().unwrap();
+            w.key("label").unwrap();
+            w.str(&format!("point-{i}")).unwrap();
+            w.key("value").unwrap();
+            w.num(i as f64 * 0.125).unwrap();
+            w.end_obj().unwrap();
+        }
+        w.end_arr().unwrap();
+        let growths = w.scratch_growths();
+        assert!(growths <= 8, "scratch buffer is not being reused: {growths} growths");
+        w.finish().unwrap();
     }
 
     /// Machine-tree documents survive parse → serialize → parse for the

@@ -5,7 +5,11 @@
 //! replaces one of them with a small, tested implementation:
 //!
 //! - [`json`] — parser + serializer (replaces `serde_json`), used for
-//!   experiment configs, artifact manifests and machine-readable reports.
+//!   experiment configs, artifact manifests and machine-readable reports;
+//!   includes a push-style streaming writer for row-shaped hot paths.
+//! - [`binio`] — versioned `harp_bin` binary container (replaces
+//!   `bincode`) for the cache spills' fast path, with bounds-checked
+//!   slice decoding and offset-bearing errors.
 //! - [`error`] — string-backed error with context chaining (replaces
 //!   `anyhow`) for the runtime layer's fallible plumbing.
 //! - [`cli`] — declarative flag/positional parser (replaces `clap`).
@@ -21,6 +25,7 @@
 //! - [`table`] — fixed-width text table renderer for paper-style output.
 
 pub mod benchkit;
+pub mod binio;
 pub mod cli;
 pub mod error;
 pub mod json;

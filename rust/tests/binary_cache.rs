@@ -1,0 +1,334 @@
+//! Robustness + differential suite for the `harp_bin` binary cache
+//! spills, covering BOTH persistence layers: the mapping cache
+//! (`mapper/mapcache.rs`) and the evaluation cache
+//! (`coordinator/figures.rs`).
+//!
+//! Contract under test:
+//! - spill → load → re-evaluate is **bitwise** the fresh evaluation,
+//!   for both layers;
+//! - a truncation at ANY 97-byte step is a loud, cut-specific error —
+//!   never a panic, never a quiet partial load;
+//! - doctored magic/version/budget bytes reject with DISTINCT messages;
+//! - the same cache contents behind JSON and binary spills serve
+//!   byte-identical results (the formats are interchangeable encodings,
+//!   not different caches).
+
+use harp::arch::partition::HardwareParams;
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::{evaluate_cascade_on_config, EvalOptions};
+use harp::coordinator::figures::{EvalCacheError, Evaluator};
+use harp::hhp::allocator::AllocPolicy;
+use harp::mapper::MapCache;
+use harp::util::binio::CacheFormat;
+use harp::workload::cascade::Cascade;
+use harp::workload::einsum::{Phase, TensorOp};
+use harp::workload::registry::WorkloadSpec;
+use harp::workload::transformer;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+fn small_cascade() -> Cascade {
+    let mut g = Cascade::new("bincache");
+    g.push(TensorOp::gemm("a", Phase::Encoder, 64, 128, 64));
+    g.push(TensorOp::gemm("b", Phase::Encoder, 64, 128, 64));
+    g.push(TensorOp::bmm("c", Phase::Decode, 4, 64, 32, 64));
+    g.dep(0, 2);
+    g
+}
+
+/// Search-policy options (the policy that routes both mapper entry
+/// points through the mapping cache), optionally bound to a cache file.
+fn opts(cache: Option<&Path>) -> EvalOptions {
+    let mut o = EvalOptions { samples: 8, ..EvalOptions::default() };
+    o.alloc = AllocPolicy::Search;
+    o.threads = 2;
+    if let Some(p) = cache {
+        o.attach_mapping_cache(p).expect("cache attach must succeed");
+    }
+    o
+}
+
+fn eval_doc(o: &EvalOptions) -> String {
+    let g = small_cascade();
+    let r = evaluate_cascade_on_config(
+        &HarpClass::from_id("hier+xnode").unwrap(),
+        &HardwareParams::default(),
+        &g,
+        o,
+    )
+    .unwrap();
+    r.stats.to_json().to_string_pretty()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("harp-bincache-it-{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Mapping cache, binary spill: cold seeds the file, a fresh attach
+/// loads it, and the warm evaluation is byte-identical to both the
+/// cache-less baseline and the cold run.
+#[test]
+fn mapcache_binary_spill_serves_bitwise_results() {
+    let dir = temp_dir("mapcache-roundtrip");
+    let path = dir.join("mappings.bin");
+    std::fs::remove_file(&path).ok();
+
+    let plain = eval_doc(&opts(None));
+    let cold_opts = opts(Some(&path));
+    assert_eq!(
+        cold_opts.map_cache.as_ref().unwrap().format(),
+        CacheFormat::Binary,
+        ".bin must select the binary spill"
+    );
+    let cold = eval_doc(&cold_opts);
+    assert_eq!(plain, cold, "cold binary cache changed the stats document");
+    cold_opts.map_cache.as_ref().unwrap().persist().unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.starts_with(b"harp_bin"), "binary spill must carry the magic");
+
+    let warm_opts = opts(Some(&path));
+    assert_eq!(
+        warm_opts.map_cache.as_ref().unwrap().len(),
+        cold_opts.map_cache.as_ref().unwrap().len(),
+        "spill → load must preserve every entry"
+    );
+    let warm = eval_doc(&warm_opts);
+    assert_eq!(plain, warm, "warm binary cache changed the stats document");
+    // A pure-hit run computes nothing new; re-persisting must not move
+    // the file.
+    warm_opts.map_cache.as_ref().unwrap().persist().unwrap();
+    assert_eq!(bytes, std::fs::read(&path).unwrap());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Evaluation cache, binary spill: same contract one layer up.
+#[test]
+fn evalcache_binary_spill_serves_bitwise_results() {
+    let dir = temp_dir("evalcache-roundtrip");
+    let path = dir.join("evals.bin");
+    std::fs::remove_file(&path).ok();
+
+    let o = EvalOptions { samples: 10, ..EvalOptions::default() };
+    let wl = WorkloadSpec::Transformer(transformer::bert_large());
+    let class = HarpClass::eval_points()[0].1.clone();
+
+    let ev = Evaluator::with_spill(o.clone(), &path, CacheFormat::Binary).unwrap();
+    let fresh = ev.eval(&wl, &class, 2048.0, None);
+    ev.persist().unwrap();
+    assert!(std::fs::read(&path).unwrap().starts_with(b"harp_bin"));
+
+    let ev2 = Evaluator::with_spill(o, &path, CacheFormat::Binary).unwrap();
+    assert_eq!(ev2.len(), 1, "spill → load must preserve the entry");
+    let cached = ev2.eval(&wl, &class, 2048.0, None);
+    assert_eq!(
+        cached.to_json().to_string_pretty(),
+        fresh.to_json().to_string_pretty(),
+        "binary eval-cache round trip must be bitwise"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Every 97-byte-step truncation of a valid binary spill is rejected
+/// with a distinct, non-empty message — never a panic — for both cache
+/// layers.
+#[test]
+fn binary_truncations_error_distinctly_at_every_cut() {
+    // Mapping-cache layer.
+    let dir = temp_dir("truncate");
+    let map_path = dir.join("mappings.bin");
+    std::fs::remove_file(&map_path).ok();
+    let seed = opts(Some(&map_path));
+    let _ = eval_doc(&seed);
+    seed.map_cache.as_ref().unwrap().persist().unwrap();
+    let full = std::fs::read(&map_path).unwrap();
+    assert!(full.len() > 97, "spill too small to sweep");
+    let cut_path = dir.join("truncated.bin");
+    let mut seen = HashSet::new();
+    for cut in (0..full.len()).step_by(97) {
+        std::fs::write(&cut_path, &full[..cut]).unwrap();
+        // Honourable header values: a cut past the header must fail on
+        // the truncated PAYLOAD (a cut-specific offset), not collapse
+        // into one shared fingerprint-mismatch message.
+        let err = match MapCache::with_file(&cut_path, 1, seed.mapping_search_fingerprint()) {
+            Ok(_) => panic!("mapcache truncation at {cut} bytes must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert!(!err.is_empty());
+        assert!(seen.insert(err.clone()), "cut {cut}: duplicate message {err}");
+    }
+
+    // Eval-cache layer.
+    let eval_path = dir.join("evals.bin");
+    std::fs::remove_file(&eval_path).ok();
+    let o = EvalOptions { samples: 10, ..EvalOptions::default() };
+    let wl = WorkloadSpec::Transformer(transformer::bert_large());
+    let class = HarpClass::eval_points()[0].1.clone();
+    let ev = Evaluator::with_spill(o.clone(), &eval_path, CacheFormat::Binary).unwrap();
+    ev.eval(&wl, &class, 2048.0, None);
+    ev.persist().unwrap();
+    let full = std::fs::read(&eval_path).unwrap();
+    assert!(full.len() > 97, "spill too small to sweep");
+    let cut_path = dir.join("truncated_eval.bin");
+    let mut seen = HashSet::new();
+    for cut in (0..full.len()).step_by(97) {
+        std::fs::write(&cut_path, &full[..cut]).unwrap();
+        let err = match Evaluator::with_spill(o.clone(), &cut_path, CacheFormat::Binary) {
+            Ok(_) => panic!("evalcache truncation at {cut} bytes must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert!(!err.is_empty());
+        assert!(seen.insert(err.clone()), "cut {cut}: duplicate message {err}");
+    }
+    std::fs::remove_file(&map_path).ok();
+    std::fs::remove_file(&eval_path).ok();
+}
+
+/// Doctored magic bytes, a foreign model version, and a foreign budget
+/// fingerprint reject with three DISTINCT messages on each layer.
+#[test]
+fn doctored_binary_headers_reject_distinctly() {
+    // Mapping-cache layer.
+    let dir = temp_dir("doctored");
+    let map_path = dir.join("mappings.bin");
+    std::fs::remove_file(&map_path).ok();
+    let seed = opts(Some(&map_path));
+    let _ = eval_doc(&seed);
+    seed.map_cache.as_ref().unwrap().persist().unwrap();
+    let clean = std::fs::read(&map_path).unwrap();
+
+    let version_err = MapCache::with_file(&map_path, 4242, seed.mapping_search_fingerprint())
+        .unwrap_err()
+        .to_string();
+    assert!(version_err.contains("version mismatch"), "{version_err}");
+
+    let budget_err = MapCache::with_file(&map_path, 1, "s999|r0xsomething")
+        .unwrap_err()
+        .to_string();
+    assert!(budget_err.contains("stale mapping cache"), "{budget_err}");
+
+    let mut doctored = clean.clone();
+    doctored[0] ^= 0xff;
+    std::fs::write(&map_path, &doctored).unwrap();
+    let magic_err = MapCache::with_file(&map_path, 1, seed.mapping_search_fingerprint())
+        .unwrap_err()
+        .to_string();
+    assert!(magic_err.contains("magic"), "{magic_err}");
+
+    let distinct: HashSet<&str> =
+        [version_err.as_str(), budget_err.as_str(), magic_err.as_str()].into_iter().collect();
+    assert_eq!(distinct.len(), 3, "mapcache causes must be distinguishable");
+
+    // Eval-cache layer.
+    let eval_path = dir.join("evals.bin");
+    std::fs::remove_file(&eval_path).ok();
+    let o = EvalOptions { samples: 10, ..EvalOptions::default() };
+    let wl = WorkloadSpec::Transformer(transformer::bert_large());
+    let class = HarpClass::eval_points()[0].1.clone();
+    let ev = Evaluator::with_spill(o.clone(), &eval_path, CacheFormat::Binary).unwrap();
+    ev.eval(&wl, &class, 2048.0, None);
+    ev.persist().unwrap();
+    let clean = std::fs::read(&eval_path).unwrap();
+
+    // The model-version field sits right after the container header:
+    // magic (8) + kind ("evalcache": 4 + 9) + format u32 (4) = 25.
+    let version_off = 8 + 4 + "evalcache".len() + 4;
+    let mut doctored = clean.clone();
+    doctored[version_off] ^= 0xff;
+    std::fs::write(&eval_path, &doctored).unwrap();
+    let version_err = Evaluator::with_spill(o.clone(), &eval_path, CacheFormat::Binary)
+        .unwrap_err();
+    assert!(matches!(version_err, EvalCacheError::VersionMismatch { .. }), "{version_err}");
+    let version_err = version_err.to_string();
+
+    std::fs::write(&eval_path, &clean).unwrap();
+    let stale = EvalOptions { samples: 11, ..EvalOptions::default() };
+    let budget_err = Evaluator::with_spill(stale, &eval_path, CacheFormat::Binary)
+        .unwrap_err();
+    assert!(matches!(budget_err, EvalCacheError::StaleFingerprint { .. }), "{budget_err}");
+    let budget_err = budget_err.to_string();
+
+    let mut doctored = clean.clone();
+    doctored[0] ^= 0xff;
+    std::fs::write(&eval_path, &doctored).unwrap();
+    let magic_err =
+        Evaluator::with_spill(o.clone(), &eval_path, CacheFormat::Binary).unwrap_err();
+    assert!(matches!(magic_err, EvalCacheError::Malformed(_)), "{magic_err}");
+    let magic_err = magic_err.to_string();
+    assert!(magic_err.contains("magic"), "{magic_err}");
+
+    let distinct: HashSet<&str> =
+        [version_err.as_str(), budget_err.as_str(), magic_err.as_str()].into_iter().collect();
+    assert_eq!(distinct.len(), 3, "evalcache causes must be distinguishable");
+
+    // The untouched spill still loads.
+    std::fs::write(&eval_path, &clean).unwrap();
+    let ok = Evaluator::with_spill(o, &eval_path, CacheFormat::Binary).unwrap();
+    assert_eq!(ok.len(), 1);
+    std::fs::remove_file(&map_path).ok();
+    std::fs::remove_file(&eval_path).ok();
+}
+
+/// JSON↔binary differential: the same cache contents behind either
+/// spill format serve byte-identical evaluation documents, for both
+/// layers.
+#[test]
+fn json_and_binary_spills_serve_identical_results() {
+    // Mapping-cache layer: seed a JSON and a binary spill from the same
+    // evaluation, then warm-run from each.
+    let dir = temp_dir("differential");
+    let json_path = dir.join("mappings.json");
+    let bin_path = dir.join("mappings.bin");
+    std::fs::remove_file(&json_path).ok();
+    std::fs::remove_file(&bin_path).ok();
+
+    let plain = eval_doc(&opts(None));
+    let seed_json = opts(Some(&json_path));
+    let _ = eval_doc(&seed_json);
+    seed_json.map_cache.as_ref().unwrap().persist().unwrap();
+    let seed_bin = opts(Some(&bin_path));
+    let _ = eval_doc(&seed_bin);
+    seed_bin.map_cache.as_ref().unwrap().persist().unwrap();
+    assert_eq!(
+        seed_json.map_cache.as_ref().unwrap().len(),
+        seed_bin.map_cache.as_ref().unwrap().len(),
+        "both formats must capture the same entry set"
+    );
+
+    let warm_json = eval_doc(&opts(Some(&json_path)));
+    let warm_bin = eval_doc(&opts(Some(&bin_path)));
+    assert_eq!(warm_json, plain, "JSON-cached eval drifted from fresh");
+    assert_eq!(warm_bin, plain, "binary-cached eval drifted from fresh");
+    assert_eq!(warm_json, warm_bin);
+
+    // Eval-cache layer: same point spilled both ways, reloaded, served.
+    let o = EvalOptions { samples: 10, ..EvalOptions::default() };
+    let wl = WorkloadSpec::Transformer(transformer::bert_large());
+    let class = HarpClass::eval_points()[0].1.clone();
+    let ev_json_path = dir.join("evals.json");
+    let ev_bin_path = dir.join("evals.bin");
+    std::fs::remove_file(&ev_json_path).ok();
+    std::fs::remove_file(&ev_bin_path).ok();
+
+    let a = Evaluator::with_spill(o.clone(), &ev_json_path, CacheFormat::Json).unwrap();
+    let fresh = a.eval(&wl, &class, 2048.0, None).to_json().to_string_pretty();
+    a.persist().unwrap();
+    let b = Evaluator::with_spill(o.clone(), &ev_bin_path, CacheFormat::Binary).unwrap();
+    b.eval(&wl, &class, 2048.0, None);
+    b.persist().unwrap();
+
+    let from_json = Evaluator::with_spill(o.clone(), &ev_json_path, CacheFormat::Json).unwrap();
+    let from_bin = Evaluator::with_spill(o, &ev_bin_path, CacheFormat::Binary).unwrap();
+    assert_eq!(from_json.len(), 1);
+    assert_eq!(from_bin.len(), 1);
+    let doc_json = from_json.eval(&wl, &class, 2048.0, None).to_json().to_string_pretty();
+    let doc_bin = from_bin.eval(&wl, &class, 2048.0, None).to_json().to_string_pretty();
+    assert_eq!(doc_json, fresh, "JSON eval-cache drifted");
+    assert_eq!(doc_bin, fresh, "binary eval-cache drifted");
+    assert_eq!(doc_json, doc_bin);
+
+    for p in [&json_path, &bin_path, &ev_json_path, &ev_bin_path] {
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -205,6 +205,128 @@ fn eval_mapping_cache_round_trips_and_rejections_are_loud() {
 }
 
 #[test]
+fn eval_binary_mapping_cache_round_trips_and_knob_conflicts_are_loud() {
+    let dir = std::env::temp_dir().join("harp_cli_binary_cache_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("mappings.bin");
+    std::fs::remove_file(&cache).ok();
+    let cache_s = cache.to_string_lossy().into_owned();
+    let eval = |extra: &[&str]| {
+        let mut args = vec![
+            "eval", "--workload", "llama2", "--machine", "hier+xnode", "--samples", "10",
+            "--alloc", "search", "--json",
+        ];
+        args.extend_from_slice(extra);
+        harp(&args)
+    };
+
+    // The .bin extension alone selects the binary spill; cold and warm
+    // runs emit the byte-identical --json document.
+    let (ok, plain, stderr) = eval(&[]);
+    assert!(ok, "stderr: {stderr}");
+    let (ok, cold, stderr) = eval(&["--mapping-cache", &cache_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(plain, cold, "a cold binary cache changed the --json output");
+    let spilled = std::fs::read(&cache).expect("eval must spill the cache");
+    assert!(spilled.starts_with(b"harp_bin"), "a .bin spill must be binary");
+    let (ok, warm, stderr) = eval(&["--mapping-cache", &cache_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(plain, warm, "a warm binary cache changed the --json output");
+
+    // The explicit knob agrees with the extension — fine.
+    let (ok, agreed, stderr) =
+        eval(&["--mapping-cache", &cache_s, "--cache-format", "binary"]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(plain, agreed);
+
+    // The knob CONTRADICTING the extension is a loud conflict, before
+    // any file is touched.
+    let (ok, _, stderr) = eval(&["--mapping-cache", &cache_s, "--cache-format", "json"]);
+    assert!(!ok, "a knob/extension conflict must fail the run");
+    assert!(stderr.contains("cache format conflict"), "{stderr}");
+
+    // The knob without a cache attached does nothing — reject it.
+    let (ok, _, stderr) = eval(&["--cache-format", "binary"]);
+    assert!(!ok, "--cache-format without --mapping-cache must fail");
+    assert!(stderr.contains("does nothing without"), "{stderr}");
+
+    // A corrupt binary spill is a loud failure, not a quiet cold cache.
+    std::fs::write(&cache, b"harp_bin but then garbage").unwrap();
+    let (ok, _, stderr) = eval(&["--mapping-cache", &cache_s]);
+    assert!(!ok, "a corrupt binary cache must fail the run");
+    assert!(stderr.contains("malformed mapping cache"), "{stderr}");
+
+    // --config supplies the evaluation options; the flag alongside it
+    // is a conflict.
+    let cfg = dir.join("cfg.json");
+    std::fs::write(&cfg, r#"{"workload":"bert","machine":"leaf+homo","samples":10}"#)
+        .unwrap();
+    let cfg_s = cfg.to_string_lossy().into_owned();
+    let (ok, _, stderr) = harp(&["eval", "--config", &cfg_s, "--cache-format", "binary"]);
+    assert!(!ok, "--cache-format alongside --config must fail");
+    assert!(stderr.contains("--config supplies the evaluation options"), "{stderr}");
+    assert!(stderr.contains("cache_format"), "{stderr}");
+}
+
+#[test]
+fn config_cache_format_knob_selects_binary_spill() {
+    let dir = std::env::temp_dir().join("harp_cli_config_cache_format_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("mappings.spill");
+    std::fs::remove_file(&cache).ok();
+    let cfg = dir.join("cfg.json");
+    // A neutral extension + the config knob → binary.
+    std::fs::write(
+        &cfg,
+        format!(
+            r#"{{"workload":"bert","machine":"leaf+homo","samples":10,"alloc":"search","mapping_cache":{},"cache_format":"binary"}}"#,
+            harp::util::json::Json::Str(cache.to_string_lossy().into_owned())
+                .to_string_compact()
+        ),
+    )
+    .unwrap();
+    let cfg_s = cfg.to_string_lossy().into_owned();
+    let (ok, stdout, stderr) = harp(&["eval", "--config", &cfg_s, "--json"]);
+    assert!(ok, "stderr: {stderr}");
+    harp::util::json::Json::parse(&stdout).expect("valid JSON output");
+    let spilled = std::fs::read(&cache).expect("config-driven cache must spill");
+    assert!(spilled.starts_with(b"harp_bin"), "knob must select the binary format");
+
+    // The knob without a mapping_cache key is dead — reject it.
+    std::fs::write(
+        &cfg,
+        r#"{"workload":"bert","machine":"leaf+homo","samples":10,"cache_format":"binary"}"#,
+    )
+    .unwrap();
+    let (ok, _, stderr) = harp(&["eval", "--config", &cfg_s]);
+    assert!(!ok, "dead cache_format knob must fail");
+    assert!(stderr.contains("does nothing without"), "{stderr}");
+}
+
+#[test]
+fn sweep_json_streams_parseable_ndjson() {
+    let (ok, stdout, stderr) = harp(&[
+        "sweep", "--workload", "bert", "--samples", "5", "--threads", "2", "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.trim().is_empty()).collect();
+    // 3 bandwidths × every taxonomy eval point, one object per line.
+    assert_eq!(lines.len() % 3, 0, "unexpected row count: {}", lines.len());
+    assert!(!lines.is_empty());
+    for line in &lines {
+        let v = harp::util::json::Json::parse(line).expect("each NDJSON line parses");
+        assert_eq!(v.get("workload").unwrap().as_str(), Some("BERT-large"));
+        assert!(v.get("machine").unwrap().as_str().is_some());
+        assert!(v.get("dram_bw_bits").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("latency_cycles").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("energy_pj").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("mults_per_joule").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // The human table stays on the no-flag path, not mixed into NDJSON.
+    assert!(!stdout.contains("workload: "), "table output leaked into NDJSON");
+}
+
+#[test]
 fn eval_rejects_invalid_machine() {
     let (ok, _, stderr) = harp(&["eval", "--workload", "bert", "--machine", "leaf+xdepth"]);
     assert!(!ok);

@@ -76,6 +76,44 @@ if "$BIN" eval --config target/tier1-eval-cfg.json \
     echo "tier1 FAIL: --mapping-cache alongside --config should be a loud error"
     exit 1
 fi
+# Binary cache spill (the fast path for million-point sweeps): a .bin
+# extension selects it, cold/warm --json output stays byte-identical,
+# and the loud-error paths hold — a knob contradicting the extension, a
+# dead knob without a cache, and a corrupt binary file.
+rm -f target/tier1-mapping-cache.bin
+"$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --mapping-cache target/tier1-mapping-cache.bin \
+    --json > target/tier1-bincache-cold.json
+test -s target/tier1-mapping-cache.bin
+"$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --mapping-cache target/tier1-mapping-cache.bin \
+    --cache-format binary --json > target/tier1-bincache-warm.json
+if ! cmp -s target/tier1-bincache-cold.json target/tier1-bincache-warm.json; then
+    echo "tier1 FAIL: warm binary mapping-cache run must be byte-identical"; exit 1
+fi
+if ! cmp -s target/tier1-mapcache-cold.json target/tier1-bincache-cold.json; then
+    echo "tier1 FAIL: JSON and binary caches must serve identical results"; exit 1
+fi
+if "$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --mapping-cache target/tier1-mapping-cache.bin \
+    --cache-format json > /dev/null 2>&1; then
+    echo "tier1 FAIL: --cache-format contradicting the extension should be loud"
+    exit 1
+fi
+if "$BIN" eval --workload bert --machine leaf+homo --samples 20 \
+    --cache-format binary > /dev/null 2>&1; then
+    echo "tier1 FAIL: --cache-format without --mapping-cache should be loud"; exit 1
+fi
+printf 'harp_bin corrupted' > target/tier1-corrupt-cache.bin
+if "$BIN" eval --workload llama2 --machine hier+xnode --samples 20 \
+    --alloc search --mapping-cache target/tier1-corrupt-cache.bin \
+    > /dev/null 2>&1; then
+    echo "tier1 FAIL: a corrupt binary cache should be a loud error"; exit 1
+fi
+# NDJSON sweep streaming: every emitted line is a standalone JSON object.
+"$BIN" sweep --workload bert --samples 5 --threads "${HARP_THREADS:-4}" --json \
+    > target/tier1-sweep.ndjson
+test -s target/tier1-sweep.ndjson
 rm -f target/tier1-mapping-cache-figs.json
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
     --cache target/tier1-eval-cache.json \
@@ -85,6 +123,15 @@ rm -f target/tier1-mapping-cache-figs.json
 "$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
     --cache target/tier1-eval-cache.json \
     --mapping-cache target/tier1-mapping-cache-figs.json > /dev/null
+# And a third pair through the binary spills for BOTH cache layers.
+rm -f target/tier1-eval-cache.bin target/tier1-mapping-cache-figs.bin
+"$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
+    --cache target/tier1-eval-cache.bin \
+    --mapping-cache target/tier1-mapping-cache-figs.bin > /dev/null
+test -s target/tier1-eval-cache.bin
+"$BIN" figures --samples "$SAMPLES" --threads "${HARP_THREADS:-4}" \
+    --cache target/tier1-eval-cache.bin \
+    --mapping-cache target/tier1-mapping-cache-figs.bin > /dev/null
 
 echo "== tier1: bench smoke (compile + one iteration) =="
 # Every bench target compiles and runs exactly once, so bench drift
