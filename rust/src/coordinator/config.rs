@@ -42,15 +42,123 @@
 //! (`.bin`/`.harpbin` → binary, otherwise JSON). The key is rejected
 //! when no `"mapping_cache"` is present — a knob that silently did
 //! nothing would hide a typo.
+//!
+//! `"arrivals": {...}` describes a serving request stream (see
+//! [`ArrivalsConfig`]); it is consumed by `harp serve --config` and
+//! rejected by the eval path.
 
 use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::MachineTopology;
 use crate::coordinator::experiment::{default_bw_frac_low, EvalOptions};
+use crate::runtime::serve::DEFAULT_SLO_TTFT;
 use crate::util::binio::CacheFormat;
 use crate::util::json::Json;
+use crate::workload::arrivals::{self, ArrivalKind, RequestFamily};
 use crate::workload::cascade::Cascade;
 use crate::workload::registry::{self, WorkloadSource};
+
+/// The `"arrivals"` object of a serve config (the config-file form of
+/// `harp serve`'s stream flags):
+///
+/// ```json
+/// { "arrivals": { "process": "poisson", "mix": "llama2:3,gqa:1",
+///                 "load": 2.0, "requests": 64, "seed": 7,
+///                 "slo_ttft": 2000000 } }
+/// ```
+///
+/// With `"process": "trace"` the stream comes from a `"trace"` file
+/// (relative paths resolve against the config's directory) and the
+/// generator knobs (`mix`/`load`/`requests`/`seed`) are rejected as
+/// dead. The key only applies to `harp serve`; `harp eval` rejects it.
+#[derive(Debug, Clone)]
+pub struct ArrivalsConfig {
+    pub process: ArrivalKind,
+    pub mix: Vec<(RequestFamily, f64)>,
+    /// Offered load in requests per million cycles.
+    pub load: f64,
+    pub requests: usize,
+    pub seed: u64,
+    /// TTFT SLO in cycles (goodput counts completions under it).
+    pub slo_ttft: f64,
+    /// Trace file path (with `"process": "trace"` only).
+    pub trace: Option<String>,
+}
+
+fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
+    arrivals::reject_unknown_keys(
+        j,
+        &["process", "mix", "load", "requests", "seed", "slo_ttft", "trace"],
+        "'arrivals'",
+    )?;
+    let process = j
+        .get("process")
+        .ok_or("'arrivals' needs a \"process\" (poisson | bursty | trace)")?
+        .as_str()
+        .ok_or_else(|| "'arrivals.process' must be a string".to_string())
+        .and_then(ArrivalKind::parse)?;
+    let trace = match j.get("trace") {
+        Some(v) => Some(v.as_str().ok_or("'arrivals.trace' must be a file path")?.to_string()),
+        None => None,
+    };
+    if process == ArrivalKind::Trace {
+        // The trace fixes the stream; generator knobs would be dead.
+        for k in ["mix", "load", "requests", "seed"] {
+            if j.get(k).is_some() {
+                return Err(format!(
+                    "'arrivals.{k}' does not apply when \"process\" is \"trace\""
+                ));
+            }
+        }
+        if trace.is_none() {
+            return Err("'arrivals.process' \"trace\" requires a \"trace\" file path".into());
+        }
+    } else if trace.is_some() {
+        return Err("'arrivals.trace' does nothing unless \"process\" is \"trace\"".into());
+    }
+    let mix = match j.get("mix") {
+        Some(v) => {
+            let s = v.as_str().ok_or("'arrivals.mix' must be a string like \"llama2:3,gqa:1\"")?;
+            arrivals::parse_mix(s)?
+        }
+        None => vec![(RequestFamily::Llama2, 1.0)],
+    };
+    let load = match j.get("load") {
+        Some(v) => {
+            let l = v.as_f64().ok_or("'arrivals.load' must be a number")?;
+            if !l.is_finite() || l <= 0.0 {
+                return Err("'arrivals.load' must be finite and positive".into());
+            }
+            l
+        }
+        None => 2.0,
+    };
+    let requests = match j.get("requests") {
+        Some(v) => {
+            let n = v.as_usize().ok_or("'arrivals.requests' must be a positive integer")?;
+            if n == 0 {
+                return Err("'arrivals.requests' must be a positive integer".into());
+            }
+            n
+        }
+        None => 64,
+    };
+    let seed = match j.get("seed") {
+        Some(v) => v.as_u64().ok_or("'arrivals.seed' must be a non-negative integer")?,
+        None => 7,
+    };
+    let slo_ttft = match j.get("slo_ttft") {
+        Some(v) => {
+            let s = v.as_f64().ok_or("'arrivals.slo_ttft' must be a number of cycles")?;
+            if !s.is_finite() || s <= 0.0 {
+                return Err("'arrivals.slo_ttft' must be finite and positive".into());
+            }
+            s
+        }
+        None => DEFAULT_SLO_TTFT,
+    };
+    Ok(ArrivalsConfig { process, mix, load, requests, seed, slo_ttft, trace })
+}
 
 /// A parsed experiment configuration.
 #[derive(Debug, Clone)]
@@ -72,6 +180,9 @@ pub struct ExperimentConfig {
     /// `--cache-format`); `None` defers to the file extension. The
     /// knob-vs-extension conflict check runs when the file is opened.
     pub cache_format: Option<CacheFormat>,
+    /// Serving stream description (`harp serve --config` only; the
+    /// eval path rejects configs that carry it).
+    pub arrivals: Option<ArrivalsConfig>,
 }
 
 impl ExperimentConfig {
@@ -173,6 +284,10 @@ impl ExperimentConfig {
             }
             None => None,
         };
+        let arrivals = match j.get("arrivals") {
+            Some(a) => Some(parse_arrivals(a)?),
+            None => None,
+        };
         Ok(ExperimentConfig {
             workload,
             class,
@@ -181,6 +296,7 @@ impl ExperimentConfig {
             topology,
             mapping_cache,
             cache_format,
+            arrivals,
         })
     }
 
@@ -205,6 +321,11 @@ impl ExperimentConfig {
         }
         if let Some(mc) = &cfg.mapping_cache {
             cfg.mapping_cache = Some(resolve(mc));
+        }
+        if let Some(arr) = &mut cfg.arrivals {
+            if let Some(t) = &arr.trace {
+                arr.trace = Some(resolve(t));
+            }
         }
         Ok(cfg)
     }
@@ -438,6 +559,93 @@ mod tests {
             WorkloadSource::File(p) => assert_eq!(p, "cascades/mine.json"),
             other => panic!("expected a file source, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn arrivals_key_parses_with_defaults() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode",
+                "arrivals":{"process":"poisson"}}"#,
+        )
+        .unwrap();
+        let a = c.arrivals.unwrap();
+        assert_eq!(a.process, ArrivalKind::Poisson);
+        assert_eq!(a.mix, vec![(RequestFamily::Llama2, 1.0)]);
+        assert_eq!(a.load, 2.0);
+        assert_eq!(a.requests, 64);
+        assert_eq!(a.seed, 7);
+        assert_eq!(a.slo_ttft, DEFAULT_SLO_TTFT);
+        assert!(a.trace.is_none());
+        // Absent key stays absent — eval configs are untouched.
+        let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
+        assert!(c.arrivals.is_none());
+    }
+
+    #[test]
+    fn arrivals_key_full_form_and_trace() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode",
+                "arrivals":{"process":"bursty","mix":"llama2:3,gqa:1","load":4.5,
+                            "requests":128,"seed":11,"slo_ttft":500000}}"#,
+        )
+        .unwrap();
+        let a = c.arrivals.unwrap();
+        assert_eq!(a.process, ArrivalKind::Bursty);
+        assert_eq!(a.mix.len(), 2);
+        assert_eq!(a.load, 4.5);
+        assert_eq!(a.requests, 128);
+        assert_eq!(a.seed, 11);
+        assert_eq!(a.slo_ttft, 500000.0);
+        let c = ExperimentConfig::parse(
+            r#"{"workload":"bert","machine":"hier+xnode",
+                "arrivals":{"process":"trace","trace":"stream.json"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.arrivals.unwrap().trace.as_deref(), Some("stream.json"));
+    }
+
+    #[test]
+    fn arrivals_key_errors_are_loud_and_distinct() {
+        for (arr, want) in [
+            (r#"{"mix":"llama2"}"#, "needs a \"process\""),
+            (r#"{"process":"sinusoid"}"#, "unknown arrival process"),
+            (r#"{"process":7}"#, "'arrivals.process' must be a string"),
+            (r#"{"process":"poisson","slo":1}"#, "unknown key 'slo'"),
+            (r#"{"process":"poisson","load":0}"#, "'arrivals.load' must be finite"),
+            (r#"{"process":"poisson","load":"fast"}"#, "'arrivals.load' must be a number"),
+            (r#"{"process":"poisson","requests":0}"#, "'arrivals.requests'"),
+            (r#"{"process":"poisson","mix":"bert"}"#, "unknown request family"),
+            (r#"{"process":"poisson","slo_ttft":-1}"#, "'arrivals.slo_ttft'"),
+            (r#"{"process":"poisson","trace":"t.json"}"#, "does nothing unless"),
+            (r#"{"process":"trace"}"#, "requires a \"trace\""),
+            (r#"{"process":"trace","trace":"t.json","load":2}"#, "does not apply"),
+        ] {
+            let doc = format!(
+                r#"{{"workload":"bert","machine":"hier+xnode","arrivals":{arr}}}"#
+            );
+            let err = ExperimentConfig::parse(&doc).unwrap_err();
+            assert!(err.contains(want), "arrivals {arr}: got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
+    fn relative_trace_path_resolves_against_config_dir() {
+        let dir = std::env::temp_dir().join("harp_config_arrivals_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("cfg.json");
+        std::fs::write(
+            &cfg_path,
+            r#"{"workload":"bert","machine":"hier+xnode",
+                "arrivals":{"process":"trace","trace":"stream.json"}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::load(cfg_path.to_str().unwrap()).unwrap();
+        let trace = c.arrivals.unwrap().trace.unwrap();
+        assert!(
+            std::path::Path::new(&trace).parent() == Some(dir.as_path()),
+            "trace not resolved against config dir: {trace}"
+        );
+        let _ = std::fs::remove_file(&cfg_path);
     }
 
     /// A relative workload file in a config resolves against the

@@ -745,6 +745,62 @@ pub fn fig_alloc_ablation(ev: &Evaluator) -> Figure {
     fig
 }
 
+/// Offered-load grid (requests per Mcycle) the serving knee sweeps.
+pub const SERVING_LOAD_GRID: [f64; 5] = [0.5, 1.0, 2.0, 4.0, 8.0];
+
+/// Serving saturation knee: goodput vs offered load per taxonomy
+/// point, over a fixed seeded Poisson stream of the three request
+/// families in equal parts. One series per machine class; the grid
+/// rows carry goodput at each offered load and the final `knee` row
+/// the first load where the class stops keeping up (see
+/// [`serve::saturation_knee`]). Calibration probes fan out through
+/// [`Evaluator::warm`]; the simulation itself is single-threaded and
+/// seeded, so the figure is byte-identical for any worker count.
+pub fn fig_serving_knee(ev: &Evaluator) -> Figure {
+    use crate::runtime::serve;
+    use crate::workload::arrivals::{self, ArrivalKind, RequestFamily};
+
+    let classes = HarpClass::eval_points();
+    let families: Vec<RequestFamily> = RequestFamily::ALL.to_vec();
+    let mix: Vec<(RequestFamily, f64)> = families.iter().map(|&f| (f, 1.0)).collect();
+    let cfg = serve::ServeConfig::default();
+
+    let mut fig = Figure::new(
+        "Serving saturation knee: goodput vs offered load (per taxonomy point)",
+        "goodput (SLO-meeting completions per Mcycle)",
+    );
+    for (tag, class) in &classes {
+        let costs = serve::calibrate(ev, class, 2048.0, &families);
+        let machine = serve::build_serving_machine(class, 2048.0, ev.opts.contention)
+            .expect("taxonomy point builds");
+        let mut s = Series::new(&format!("({tag}) {}", class.id()));
+        let mut curve: Vec<(f64, f64)> = Vec::new();
+        for &load in &SERVING_LOAD_GRID {
+            let stream = arrivals::synthesize(&arrivals::StreamParams {
+                kind: ArrivalKind::Poisson,
+                mix: mix.clone(),
+                load,
+                requests: 40,
+                seed: 0x5EED ^ ev.opts.seed,
+            })
+            .expect("valid stream params");
+            let r = serve::simulate(
+                &stream,
+                &machine,
+                &costs,
+                ev.opts.dynamic_bw,
+                load,
+                &cfg,
+            );
+            s.push(&format!("load={load}"), r.report.goodput);
+            curve.push((load, r.report.goodput));
+        }
+        s.push("knee", serve::saturation_knee(&curve));
+        fig.add(s);
+    }
+    fig
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -79,7 +79,11 @@ impl ScheduleResult {
     pub fn utilization_timeline(&self, machine: &MachineConfig, buckets: usize) -> Vec<f64> {
         let total_pes: f64 = machine.total_pes() as f64;
         let mut out = vec![0.0f64; buckets];
-        if self.makespan == 0.0 {
+        // Zero buckets or a degenerate makespan (empty cascade, all
+        // zero-cost ops, or a non-finite schedule) would make `width`
+        // zero/inf/NaN and the bucket divisions below meaningless — the
+        // all-idle timeline is the only sensible answer.
+        if buckets == 0 || !self.makespan.is_finite() || self.makespan <= 0.0 {
             return out;
         }
         let width = self.makespan / buckets as f64;
@@ -167,7 +171,10 @@ pub fn schedule(
                     .iter()
                     .copied()
                     .filter(|&i| !scheduled[i] && mapped[i].sub_accel == s)
-                    .max_by(|&a, &b| prio[a].partial_cmp(&prio[b]).unwrap());
+                    // total_cmp: a degenerate (NaN) latency upstream must
+                    // not panic the dispatch loop (mirrors the allocator's
+                    // tie-break; identical ordering on non-NaN priorities).
+                    .max_by(|&a, &b| prio[a].total_cmp(&prio[b]));
                 if let Some(i) = pick {
                     let lat = if opts.dynamic_bw {
                         // Idle units' bandwidth is re-granted along the
@@ -551,7 +558,9 @@ impl<'a> ScheduleOracle<'a> {
                         .iter()
                         .copied()
                         .filter(|&i| !self.scheduled[i] && assignment[i] == s)
-                        .max_by(|&a, &b| self.prio[a].partial_cmp(&self.prio[b]).unwrap());
+                        // total_cmp, like `schedule()`: NaN-latency ops
+                        // must not panic the replay loop either.
+                        .max_by(|&a, &b| self.prio[a].total_cmp(&self.prio[b]));
                     if let Some(i) = pick {
                         let lat = if self.opts.dynamic_bw {
                             for (x, slot) in self.busy_buf.iter_mut().enumerate() {
@@ -978,6 +987,65 @@ mod tests {
         assert_eq!(d[1], 100.0); // waited for unit 0
         assert_eq!(d[2], 0.0); // alone on unit 1
         assert_eq!(oracle.latencies(), &[100.0, 50.0, 30.0]);
+    }
+
+    /// Regression: a degenerate (NaN) latency op must not panic the
+    /// dispatch loop — the old `partial_cmp(..).unwrap()` tie-break blew
+    /// up the moment two ops with a NaN priority contended for a unit.
+    /// Both the one-shot `schedule()` path and the oracle replay must
+    /// survive; the resulting makespan is garbage (NaN-poisoned), which
+    /// is fine — loud garbage beats a panic deep in a sweep.
+    #[test]
+    fn nan_latency_op_does_not_panic_dispatch() {
+        let m = machine_het();
+        let mut g = Cascade::new("nan");
+        for name in ["a", "b", "c"] {
+            g.push(TensorOp::gemm(name, Phase::Encoder, 4, 4, 4));
+        }
+        // Two NaN-priority ops contend for unit 0 (the max_by comparison
+        // actually sees NaN on both sides), plus one sane op on unit 1.
+        let mapped =
+            vec![mapped_op(0, 0, f64::NAN), mapped_op(1, 0, f64::NAN), mapped_op(2, 1, 5.0)];
+        let r = schedule(&g, &m, &mapped, &ScheduleOptions::default());
+        assert_eq!(r.intervals.len(), 3); // every op was dispatched
+        let assignment = vec![0, 0, 1];
+        let stats: Vec<&OpStats> = mapped.iter().map(|mo| &mo.stats).collect();
+        let mut oracle = ScheduleOracle::new(&g, &m, &ScheduleOptions::default());
+        let _ = oracle.replay(&assignment, &stats); // must not panic
+    }
+
+    /// Regression: utilisation bucketing on degenerate schedules. An
+    /// empty cascade and a single zero-cost op both have makespan 0 —
+    /// the old `makespan == 0.0` guard covered those, but `buckets == 0`
+    /// divided by zero (width = inf) and a NaN makespan sailed past the
+    /// equality check. All must yield an all-idle timeline, no panic.
+    #[test]
+    fn utilization_timeline_degenerate_schedules() {
+        let m = machine_het();
+        // Empty cascade: no intervals, makespan 0.
+        let empty = ScheduleResult { makespan: 0.0, intervals: Vec::new(), busy: vec![0.0; 2] };
+        assert_eq!(empty.utilization_timeline(&m, 8), vec![0.0; 8]);
+        // Single zero-cost op: an interval of zero width at t=0.
+        let mut g = Cascade::new("z");
+        g.push(TensorOp::gemm("a", Phase::Encoder, 4, 4, 4));
+        let mapped = vec![mapped_op(0, 0, 0.0)];
+        let r = schedule(&g, &m, &mapped, &ScheduleOptions::default());
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.utilization_timeline(&m, 8), vec![0.0; 8]);
+        // Zero buckets: empty timeline, never a division by zero.
+        let busy_one = ScheduleResult {
+            makespan: 100.0,
+            intervals: vec![Interval { op: 0, sub_accel: 0, start: 0.0, end: 100.0 }],
+            busy: vec![100.0, 0.0],
+        };
+        assert_eq!(busy_one.utilization_timeline(&m, 0), Vec::<f64>::new());
+        // NaN-poisoned makespan (degenerate latency upstream): all idle.
+        let poisoned = ScheduleResult {
+            makespan: f64::NAN,
+            intervals: vec![Interval { op: 0, sub_accel: 0, start: 0.0, end: f64::NAN }],
+            busy: vec![0.0; 2],
+        };
+        assert_eq!(poisoned.utilization_timeline(&m, 4), vec![0.0; 4]);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! - `topology <class|list> | --file F`  print/derive a machine memory tree
 //! - `workload <name|list> | --file F`   print/validate a workload cascade
 //! - `eval …`                         evaluate one (workload, machine) point
+//! - `serve …`                        simulate serving an arrival stream (SLO metrics)
 //! - `figures …`                      regenerate every paper figure
 //! - `roofline`                       print the Fig 1 roofline split
 //! - `sweep …`                        bandwidth/partition sweep for a workload
@@ -43,6 +44,7 @@ fn main() -> ExitCode {
         "topology" => cmd_topology(rest),
         "workload" => cmd_workload(rest),
         "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
         "figures" => cmd_figures(rest),
         "roofline" => cmd_roofline(),
         "sweep" => cmd_sweep(rest),
@@ -79,6 +81,12 @@ fn usage() -> String {
                                 [--alloc greedy|round_robin|critical_path|search]\n\
                                 [--mapping-cache FILE] [--cache-format json|binary]\n\
                                 (--model NAME is the explicit built-in form of --workload)\n\
+       serve [--config F | --workload-mix M] [--arrivals poisson|bursty|trace]\n\
+                                [--load R] [--requests N] [--seed S] [--machine M]\n\
+                                [--slo-ttft CYCLES] [--trace FILE] [--json]\n\
+                                continuous-batching serving simulator: seeded request\n\
+                                streams, admission/eviction under booked KV capacity,\n\
+                                p50/p99 TTFT + goodput (NDJSON records with --json)\n\
        figures [--samples N] [--threads N] [--cache FILE] [--alloc POLICY]\n\
                                 [--mapping-cache FILE] [--cache-format json|binary]\n\
                                 regenerate Figs 1,6,7,8,9,10 + Tables I-III\n\
@@ -329,6 +337,13 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             }
         }
         let mut cfg = ExperimentConfig::load(path)?;
+        if cfg.arrivals.is_some() {
+            return Err(
+                "'arrivals' only applies to 'harp serve' — run 'harp serve --config' \
+                 with this file, or drop the key for a static evaluation"
+                    .into(),
+            );
+        }
         if let Some(n) = threads {
             cfg.opts.threads = n;
         }
@@ -408,6 +423,7 @@ fn parse_eval_opts(argv: &[String]) -> Result<(ExperimentConfig, bool), String> 
             topology,
             mapping_cache,
             cache_format,
+            arrivals: None,
         },
         json,
     ))
@@ -498,6 +514,256 @@ fn truncate_list(names: &[&str], max: usize) -> String {
     out
 }
 
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    use harp::coordinator::config::ArrivalsConfig;
+    use harp::runtime::serve;
+    use harp::workload::arrivals::{self, ArrivalKind, RequestFamily, StreamParams};
+
+    let spec = ArgSpec::new(
+        "harp serve",
+        "simulate serving a request arrival stream with continuous batching",
+    )
+    .opt("config", None, "JSON experiment config with an \"arrivals\" object")
+    .opt(
+        "workload-mix",
+        Some("llama2"),
+        "request family mix: NAME or NAME:W,NAME:W (families: llama2 | gqa | moe)",
+    )
+    .opt("arrivals", Some("poisson"), "arrival process: poisson | bursty | trace")
+    .opt("load", Some("2"), "offered load in requests per million cycles")
+    .opt("requests", Some("64"), "stream length in requests")
+    .opt("seed", Some("7"), "stream PRNG seed")
+    .opt(
+        "machine",
+        Some("hier+xnode"),
+        "taxonomy id of the serving machine (see 'harp topology list')",
+    )
+    .opt("bw", Some("2048"), "DRAM bandwidth in bits/cycle")
+    .opt("samples", Some("60"), "mapper samples per probe shape (cost calibration)")
+    .opt("threads", None, "worker threads for calibration (default: HARP_THREADS or core count)")
+    .opt("contention", Some("off"), "shared-node contention model (off | on)")
+    .opt(
+        "slo-ttft",
+        Some("2000000"),
+        "TTFT SLO in cycles; goodput counts completions under it",
+    )
+    .opt("trace", None, "arrival trace JSON file (with --arrivals trace only)")
+    .flag(
+        "json",
+        "stream one compact JSON object per completed request (NDJSON), then a summary \
+         object, instead of the text report",
+    );
+    let args = spec.parse(argv).map_err(|e| e.to_string())?;
+    let json = args.has_flag("json");
+    let threads = apply_threads(&args)?;
+    let given =
+        |flag: &str| argv.iter().any(|a| a == flag || a.starts_with(&format!("{flag}=")));
+
+    let (arr, class, bw, opts) = if let Some(path) = args.get("config") {
+        // Every stream/machine knob has a default, so explicit use
+        // alongside --config must be a loud error (the config's
+        // "arrivals" object wins), mirroring eval's --config rule.
+        for flag in [
+            "--workload-mix",
+            "--arrivals",
+            "--load",
+            "--requests",
+            "--seed",
+            "--machine",
+            "--bw",
+            "--samples",
+            "--contention",
+            "--slo-ttft",
+            "--trace",
+        ] {
+            if given(flag) {
+                return Err(format!(
+                    "--config supplies the serving options; set \"arrivals\" keys in the \
+                     config file instead of passing {flag}"
+                ));
+            }
+        }
+        let cfg = ExperimentConfig::load(path)?;
+        let Some(arr) = cfg.arrivals else {
+            return Err(format!(
+                "{path}: serving needs an \"arrivals\" object \
+                 (process / mix / load / requests / seed / slo_ttft / trace)"
+            ));
+        };
+        if cfg.topology.is_some() {
+            return Err(
+                "serve generates its machine from the taxonomy point; drop 'topology' \
+                 and set \"machine\" instead"
+                    .into(),
+            );
+        }
+        let class = cfg.class.expect("config parse guarantees machine or topology");
+        let mut opts = cfg.opts;
+        if let Some(n) = threads {
+            opts.threads = n;
+        }
+        (arr, class, cfg.params.dram_bw_bits, opts)
+    } else {
+        let process = ArrivalKind::parse(args.get("arrivals").unwrap())?;
+        let trace = args.get("trace").map(String::from);
+        if process == ArrivalKind::Trace {
+            // The trace fixes the stream; the generator knobs (all with
+            // defaults) would be dead, so explicit use is an error.
+            for flag in ["--workload-mix", "--load", "--requests", "--seed"] {
+                if given(flag) {
+                    return Err(format!(
+                        "{flag} does not apply with --arrivals trace (the trace file \
+                         fixes the stream)"
+                    ));
+                }
+            }
+            if trace.is_none() {
+                return Err("--arrivals trace requires --trace FILE".into());
+            }
+        } else if trace.is_some() {
+            return Err("--trace does nothing without --arrivals trace".into());
+        }
+        let mix = arrivals::parse_mix(args.get("workload-mix").unwrap())?;
+        let load = args.get_f64("load").map_err(|e| e.to_string())?;
+        let requests = args.get_usize("requests").map_err(|e| e.to_string())?;
+        let seed_raw = args.get("seed").unwrap();
+        let seed: u64 = seed_raw
+            .parse()
+            .map_err(|_| format!("--seed: expected a non-negative integer, got '{seed_raw}'"))?;
+        let slo_ttft = args.get_f64("slo-ttft").map_err(|e| e.to_string())?;
+        if !slo_ttft.is_finite() || slo_ttft <= 0.0 {
+            return Err("--slo-ttft must be finite and positive".into());
+        }
+        let machine_id = args.get("machine").unwrap();
+        let class = HarpClass::from_id(machine_id)
+            .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
+        let mut opts = EvalOptions {
+            samples: args.get_usize("samples").map_err(|e| e.to_string())?,
+            ..EvalOptions::default()
+        };
+        opts.contention =
+            harp::arch::topology::ContentionMode::parse(args.get("contention").unwrap())?;
+        if let Some(n) = threads {
+            opts.threads = n;
+        }
+        let arr = ArrivalsConfig { process, mix, load, requests, seed, slo_ttft, trace };
+        (arr, class, args.get_f64("bw").map_err(|e| e.to_string())?, opts)
+    };
+
+    let stream = if arr.process == ArrivalKind::Trace {
+        let path = arr.trace.as_deref().expect("trace presence checked above");
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        arrivals::load_trace(&text).map_err(|e| format!("{path}: {e}"))?
+    } else {
+        arrivals::synthesize(&StreamParams {
+            kind: arr.process,
+            mix: arr.mix.clone(),
+            load: arr.load,
+            requests: arr.requests,
+            seed: arr.seed,
+        })?
+    };
+    // Offered load: the generator's own rate for synthetic streams;
+    // back-derived from the trace span otherwise.
+    let offered_load = if arr.process == ArrivalKind::Trace {
+        let span = stream.last().map(|r| r.arrival).unwrap_or(0.0).max(1.0);
+        stream.len() as f64 * 1.0e6 / span
+    } else {
+        arr.load
+    };
+    // Calibrate exactly the families present in the stream.
+    let mut families: Vec<RequestFamily> = stream.iter().map(|r| r.family).collect();
+    families.sort();
+    families.dedup();
+
+    let dynamic_bw = opts.dynamic_bw;
+    let contention = opts.contention;
+    let ev = figures::Evaluator::new(opts);
+    let costs = serve::calibrate(&ev, &class, bw, &families);
+    let machine = serve::build_serving_machine(&class, bw, contention)?;
+    let scfg = serve::ServeConfig { slo_ttft: arr.slo_ttft, ..serve::ServeConfig::default() };
+    let result = serve::simulate(&stream, &machine, &costs, dynamic_bw, offered_load, &scfg);
+
+    if json {
+        serve_json(&result).map_err(|e| format!("stdout: {e}"))?;
+    } else {
+        println!("machine: {}  (bw {bw} bits/cycle)", class.id());
+        print!("{}", result.report.render());
+    }
+    Ok(())
+}
+
+/// NDJSON serve output: one compact object per completed request (in
+/// completion order), then one summary object — streamed, like
+/// `sweep --json`.
+fn serve_json(result: &harp::runtime::serve::ServeResult) -> std::io::Result<()> {
+    let stdout = std::io::stdout();
+    let mut lock = stdout.lock();
+    for r in &result.records {
+        // One writer per line: a writer owns exactly one root value.
+        let mut w = JsonStreamWriter::new(&mut lock, JsonStyle::Compact);
+        w.begin_obj()?;
+        w.key("id")?;
+        w.num(r.id as f64)?;
+        w.key("family")?;
+        w.str(r.family.name())?;
+        w.key("arrival")?;
+        w.num(r.arrival)?;
+        w.key("context")?;
+        w.num(r.context as f64)?;
+        w.key("output")?;
+        w.num(r.output as f64)?;
+        w.key("admitted")?;
+        w.num(r.admitted)?;
+        w.key("ttft")?;
+        w.num(r.ttft())?;
+        w.key("per_token")?;
+        w.num(r.per_token())?;
+        w.key("completed")?;
+        w.num(r.completed)?;
+        w.key("evictions")?;
+        w.num(r.evictions as f64)?;
+        w.end_obj()?;
+        let mut out = w.finish()?;
+        writeln!(out)?;
+    }
+    let rep = &result.report;
+    let mut w = JsonStreamWriter::new(&mut lock, JsonStyle::Compact);
+    w.begin_obj()?;
+    w.key("summary")?;
+    w.begin_obj()?;
+    w.key("offered_load")?;
+    w.num(rep.offered_load)?;
+    w.key("requests")?;
+    w.num(rep.requests as f64)?;
+    w.key("completed")?;
+    w.num(rep.completed as f64)?;
+    w.key("rejected")?;
+    w.num(rep.rejected as f64)?;
+    w.key("evictions")?;
+    w.num(rep.evictions as f64)?;
+    w.key("span_cycles")?;
+    w.num(rep.span_cycles)?;
+    w.key("p50_ttft")?;
+    w.num(rep.p50_ttft)?;
+    w.key("p99_ttft")?;
+    w.num(rep.p99_ttft)?;
+    w.key("mean_per_token")?;
+    w.num(rep.mean_per_token)?;
+    w.key("throughput")?;
+    w.num(rep.throughput)?;
+    w.key("goodput")?;
+    w.num(rep.goodput)?;
+    w.key("slo_ttft")?;
+    w.num(rep.slo_ttft)?;
+    w.key("kv_capacity_words")?;
+    w.num(rep.kv_capacity_words)?;
+    w.end_obj()?;
+    w.end_obj()?;
+    let mut out = w.finish()?;
+    writeln!(out)
+}
+
 fn cmd_figures(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("harp figures", "regenerate the paper figures")
         .opt("samples", Some("400"), "mapper samples per unique shape")
@@ -582,6 +848,7 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     figures::fig9_subaccel_energy(&ev).emit("fig9_subaccel_energy");
     figures::fig10_bw_partition(&ev).emit("fig10_bw_partition");
     figures::fig_alloc_ablation(&ev).emit("fig_alloc_ablation");
+    figures::fig_serving_knee(&ev).emit("fig_serving_knee");
     if let Err(e) = ev.persist() {
         eprintln!("warn: could not persist evaluation cache: {e}");
     }

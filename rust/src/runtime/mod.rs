@@ -17,6 +17,7 @@
 //! manifests but reports the missing backend on `run`/`bench`.
 
 pub mod client;
+pub mod serve;
 pub mod validate;
 
 pub use client::{Runtime, RunOutcome, TensorSpec};

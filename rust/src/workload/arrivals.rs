@@ -1,0 +1,516 @@
+//! Arrival-process front-end for the serving simulator: deterministic,
+//! seeded request streams (synthetic Poisson and bursty processes) plus
+//! a trace-file JSON schema, with per-request context/output lengths
+//! drawn from the llama2 / GQA / MoE family shapes.
+//!
+//! Everything here is pure data generation — no threads, no clocks —
+//! so a fixed seed yields bit-identical streams on any machine and
+//! under any `HARP_THREADS`. Time is measured in cycles throughout;
+//! offered load is expressed as requests per million cycles (Mcycle).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::families::{gqa_long_decode, moe_decode};
+use crate::workload::transformer;
+
+/// Model family a request belongs to. Each family pins the KV-cache
+/// row width (`d_model`) and the base context/output lengths its
+/// requests are drawn around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RequestFamily {
+    /// Dense decoder (`transformer::llama2`).
+    Llama2,
+    /// Long-context grouped-query decoder (`families::gqa_long_decode`).
+    Gqa,
+    /// Mixture-of-experts decoder (`families::moe_decode`).
+    Moe,
+}
+
+impl RequestFamily {
+    pub const ALL: [RequestFamily; 3] =
+        [RequestFamily::Llama2, RequestFamily::Gqa, RequestFamily::Moe];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestFamily::Llama2 => "llama2",
+            RequestFamily::Gqa => "gqa",
+            RequestFamily::Moe => "moe",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RequestFamily, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "llama2" => Ok(RequestFamily::Llama2),
+            "gqa" | "gqa_decode" => Ok(RequestFamily::Gqa),
+            "moe" | "moe_decode" => Ok(RequestFamily::Moe),
+            other => Err(format!(
+                "unknown request family '{other}' (known: llama2, gqa, moe)"
+            )),
+        }
+    }
+
+    /// Model width — one KV-cache word per context position per unit of
+    /// `d_model` (K and V fold into the constant factor; what matters
+    /// for admission is that booking scales with `context × d_model`).
+    pub fn d_model(self) -> u64 {
+        match self {
+            RequestFamily::Llama2 => transformer::llama2().d_model,
+            RequestFamily::Gqa => gqa_long_decode().d_model,
+            RequestFamily::Moe => moe_decode().d_model,
+        }
+    }
+
+    pub fn heads(self) -> u64 {
+        match self {
+            RequestFamily::Llama2 => transformer::llama2().heads,
+            RequestFamily::Gqa => gqa_long_decode().heads,
+            RequestFamily::Moe => moe_decode().heads,
+        }
+    }
+
+    /// Effective FFN width (MoE counts only the `top_k` active experts).
+    pub fn d_ff_effective(self) -> u64 {
+        match self {
+            RequestFamily::Llama2 => transformer::llama2().d_ff,
+            RequestFamily::Gqa => gqa_long_decode().d_ff,
+            RequestFamily::Moe => {
+                let cfg = moe_decode();
+                cfg.d_ff * cfg.top_k
+            }
+        }
+    }
+
+    /// Base context length requests are drawn around (the family's
+    /// canonical prefill sequence length).
+    pub fn base_context(self) -> u64 {
+        match self {
+            RequestFamily::Llama2 => transformer::llama2().seq,
+            RequestFamily::Gqa => gqa_long_decode().seq,
+            RequestFamily::Moe => moe_decode().seq,
+        }
+    }
+
+    /// Base output (decode) length requests are drawn around.
+    pub fn base_output(self) -> u64 {
+        match self {
+            RequestFamily::Llama2 => transformer::llama2().decode_tokens,
+            RequestFamily::Gqa => gqa_long_decode().decode_tokens,
+            RequestFamily::Moe => moe_decode().decode_tokens,
+        }
+    }
+}
+
+/// One serving request: arrives at `arrival` (cycles), prefills
+/// `context` tokens, then decodes `output` tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Position in the arrival-sorted stream.
+    pub id: usize,
+    /// Arrival time in cycles.
+    pub arrival: f64,
+    pub family: RequestFamily,
+    /// Prompt length in tokens (KV cache booked over it).
+    pub context: u64,
+    /// Decode length in tokens.
+    pub output: u64,
+}
+
+/// Synthetic arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless: exponential inter-arrival gaps at the offered rate.
+    Poisson,
+    /// Poisson burst epochs at a quarter of the offered rate, each
+    /// releasing a geometric-ish clump (mean 4) of near-simultaneous
+    /// requests — same mean load, much uglier tail.
+    Bursty,
+    /// Requests come from a trace file, not a generator.
+    Trace,
+}
+
+impl ArrivalKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Trace => "trace",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ArrivalKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "bursty" => Ok(ArrivalKind::Bursty),
+            "trace" => Ok(ArrivalKind::Trace),
+            other => Err(format!(
+                "unknown arrival process '{other}' (known: poisson, bursty, trace)"
+            )),
+        }
+    }
+}
+
+/// Parse a workload mix: a bare family name (`llama2`) or a weighted
+/// list (`llama2:3,gqa:1,moe:1`). Weights must be finite and positive.
+pub fn parse_mix(s: &str) -> Result<Vec<(RequestFamily, f64)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            return Err(format!("workload mix '{s}': empty component"));
+        }
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => {
+                let weight: f64 = w.trim().parse().map_err(|_| {
+                    format!("workload mix component '{part}': weight '{w}' is not a number")
+                })?;
+                (n.trim(), weight)
+            }
+            None => (part, 1.0),
+        };
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(format!(
+                "workload mix component '{part}': weight must be finite and positive"
+            ));
+        }
+        let family = RequestFamily::parse(name)
+            .map_err(|e| format!("workload mix component '{part}': {e}"))?;
+        if out.iter().any(|&(f, _)| f == family) {
+            return Err(format!("workload mix '{s}': family '{name}' listed twice"));
+        }
+        out.push((family, weight));
+    }
+    Ok(out)
+}
+
+/// Parameters of a synthetic request stream.
+#[derive(Debug, Clone)]
+pub struct StreamParams {
+    pub kind: ArrivalKind,
+    pub mix: Vec<(RequestFamily, f64)>,
+    /// Offered load in requests per million cycles.
+    pub load: f64,
+    /// Stream length in requests.
+    pub requests: usize,
+    pub seed: u64,
+}
+
+/// Generate a synthetic stream. Deterministic in `seed`: one PRNG,
+/// sequential draws, no wall clock — bit-identical across runs and
+/// `HARP_THREADS`.
+pub fn synthesize(p: &StreamParams) -> Result<Vec<Request>, String> {
+    if p.kind == ArrivalKind::Trace {
+        return Err("trace streams come from a trace file, not the generator".into());
+    }
+    if !p.load.is_finite() || p.load <= 0.0 {
+        return Err(format!("offered load must be finite and positive, got {}", p.load));
+    }
+    if p.requests == 0 {
+        return Err("request count must be positive".into());
+    }
+    if p.mix.is_empty() {
+        return Err("workload mix must name at least one family".into());
+    }
+    let rate = p.load / 1.0e6; // requests per cycle
+    let mut rng = Rng::new(p.seed);
+    let mut shape_rng = rng.fork(1);
+    let mut reqs = Vec::with_capacity(p.requests);
+    let mut t = 0.0f64;
+    match p.kind {
+        ArrivalKind::Poisson => {
+            while reqs.len() < p.requests {
+                // Exponential gap; next_f64 ∈ [0,1) keeps ln(1-u) finite.
+                t += -(1.0 - rng.next_f64()).ln() / rate;
+                reqs.push(draw_request(reqs.len(), t, &p.mix, &mut shape_rng));
+            }
+        }
+        ArrivalKind::Bursty => {
+            while reqs.len() < p.requests {
+                t += -(1.0 - rng.next_f64()).ln() / (rate / 4.0);
+                let burst = 1 + rng.next_below(7); // 1..=7, mean 4
+                for i in 0..burst {
+                    if reqs.len() >= p.requests {
+                        break;
+                    }
+                    // Small fixed stagger so same-burst arrivals stay
+                    // distinct (and the sort below stays meaningful).
+                    let at = t + i as f64 * 64.0;
+                    reqs.push(draw_request(reqs.len(), at, &p.mix, &mut shape_rng));
+                }
+            }
+        }
+        ArrivalKind::Trace => unreachable!(),
+    }
+    Ok(finalize(reqs))
+}
+
+/// Draw one request: family by mix weight, context/output uniform in
+/// [base/4, base] of the family's canonical lengths.
+fn draw_request(
+    id: usize,
+    arrival: f64,
+    mix: &[(RequestFamily, f64)],
+    rng: &mut Rng,
+) -> Request {
+    let total: f64 = mix.iter().map(|&(_, w)| w).sum();
+    let mut u = rng.next_f64() * total;
+    let mut family = mix[mix.len() - 1].0;
+    for &(f, w) in mix {
+        if u < w {
+            family = f;
+            break;
+        }
+        u -= w;
+    }
+    let context = draw_len(family.base_context(), rng);
+    let output = draw_len(family.base_output(), rng);
+    Request { id, arrival, family, context, output }
+}
+
+fn draw_len(base: u64, rng: &mut Rng) -> u64 {
+    let lo = (base / 4).max(1);
+    lo + rng.next_below((base - lo + 1) as usize) as u64
+}
+
+/// Sort by arrival (total order, so degenerate floats cannot panic) and
+/// re-number so `id` is the position in arrival order.
+fn finalize(mut reqs: Vec<Request>) -> Vec<Request> {
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i;
+    }
+    reqs
+}
+
+/// Parse a trace document:
+///
+/// ```json
+/// { "requests": [
+///     { "arrival": 0.0, "family": "llama2", "context": 512, "output": 64 }
+/// ] }
+/// ```
+///
+/// `arrival` is cycles (any order — the stream is sorted), `family` is
+/// one of `llama2 | gqa | moe`, `context`/`output` are positive token
+/// counts. Every malformed field gets its own loud, distinct error.
+pub fn load_trace(text: &str) -> Result<Vec<Request>, String> {
+    let j = Json::parse(text).map_err(|e| format!("trace: {e}"))?;
+    reject_unknown_keys(&j, &["requests"], "trace")?;
+    let arr = j
+        .get("requests")
+        .ok_or("trace: missing 'requests' array")?
+        .as_arr()
+        .ok_or("trace: 'requests' must be an array")?;
+    if arr.is_empty() {
+        return Err("trace: 'requests' must be non-empty".into());
+    }
+    let mut reqs = Vec::with_capacity(arr.len());
+    for (i, r) in arr.iter().enumerate() {
+        let what = format!("trace request {i}");
+        reject_unknown_keys(r, &["arrival", "family", "context", "output"], &what)?;
+        let arrival = r
+            .get("arrival")
+            .and_then(Json::as_f64)
+            .ok_or(format!("{what}: 'arrival' must be a number"))?;
+        if !arrival.is_finite() || arrival < 0.0 {
+            return Err(format!("{what}: 'arrival' must be finite and non-negative"));
+        }
+        let family = r
+            .get("family")
+            .and_then(Json::as_str)
+            .ok_or(format!("{what}: 'family' must be a string"))
+            .and_then(|s| RequestFamily::parse(s).map_err(|e| format!("{what}: {e}")))?;
+        let context = r
+            .get("context")
+            .and_then(Json::as_u64)
+            .ok_or(format!("{what}: 'context' must be a positive integer"))?;
+        let output = r
+            .get("output")
+            .and_then(Json::as_u64)
+            .ok_or(format!("{what}: 'output' must be a positive integer"))?;
+        if context == 0 {
+            return Err(format!("{what}: 'context' must be a positive integer"));
+        }
+        if output == 0 {
+            return Err(format!("{what}: 'output' must be a positive integer"));
+        }
+        reqs.push(Request { id: i, arrival, family, context, output });
+    }
+    Ok(finalize(reqs))
+}
+
+/// Same contract as the workload schema's guard: unknown and duplicate
+/// keys are loud errors, not silent no-ops. Shared with the config
+/// parser's `"arrivals"` object.
+pub(crate) fn reject_unknown_keys(j: &Json, known: &[&str], what: &str) -> Result<(), String> {
+    if let Json::Obj(pairs) = j {
+        let mut seen: Vec<&str> = Vec::with_capacity(pairs.len());
+        for (key, _) in pairs {
+            if !known.contains(&key.as_str()) {
+                return Err(format!(
+                    "{what}: unknown key '{key}' (known: {})",
+                    known.join(", ")
+                ));
+            }
+            if seen.contains(&key.as_str()) {
+                return Err(format!("{what}: duplicate key '{key}'"));
+            }
+            seen.push(key.as_str());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(seed: u64) -> Vec<Request> {
+        synthesize(&StreamParams {
+            kind: ArrivalKind::Poisson,
+            mix: RequestFamily::ALL.iter().map(|&f| (f, 1.0)).collect(),
+            load: 2.0,
+            requests: 50,
+            seed,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn poisson_stream_is_sorted_and_sized() {
+        let reqs = poisson(7);
+        assert_eq!(reqs.len(), 50);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.context >= 1 && r.output >= 1);
+            assert!(r.context <= r.family.base_context());
+            assert!(r.output <= r.family.base_output());
+        }
+    }
+
+    #[test]
+    fn streams_bit_identical_for_seed() {
+        let (a, b) = (poisson(7), poisson(7));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!((x.family, x.context, x.output), (y.family, y.context, y.output));
+        }
+        assert_ne!(poisson(7)[0].arrival.to_bits(), poisson(8)[0].arrival.to_bits());
+    }
+
+    #[test]
+    fn bursty_differs_but_is_deterministic() {
+        let mk = |seed| {
+            synthesize(&StreamParams {
+                kind: ArrivalKind::Bursty,
+                mix: vec![(RequestFamily::Llama2, 1.0)],
+                load: 2.0,
+                requests: 50,
+                seed,
+            })
+            .unwrap()
+        };
+        let (a, b) = (mk(7), mk(7));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        }
+        let p = poisson(7);
+        assert!(a.iter().zip(&p).any(|(x, y)| x.arrival.to_bits() != y.arrival.to_bits()));
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn mix_parses_and_rejects() {
+        assert_eq!(parse_mix("llama2").unwrap(), vec![(RequestFamily::Llama2, 1.0)]);
+        let m = parse_mix("llama2:3, gqa:1").unwrap();
+        assert_eq!(m, vec![(RequestFamily::Llama2, 3.0), (RequestFamily::Gqa, 1.0)]);
+        for (s, want) in [
+            ("", "empty component"),
+            ("llama2:x", "is not a number"),
+            ("llama2:-1", "finite and positive"),
+            ("llama2:0", "finite and positive"),
+            ("bert", "unknown request family"),
+            ("llama2,llama2", "listed twice"),
+        ] {
+            let err = parse_mix(s).unwrap_err();
+            assert!(err.contains(want), "mix '{s}': got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
+    fn synthetic_param_errors_are_loud() {
+        let base = StreamParams {
+            kind: ArrivalKind::Poisson,
+            mix: vec![(RequestFamily::Llama2, 1.0)],
+            load: 2.0,
+            requests: 10,
+            seed: 1,
+        };
+        let err = synthesize(&StreamParams { load: 0.0, ..base.clone() }).unwrap_err();
+        assert!(err.contains("load"), "{err}");
+        let err = synthesize(&StreamParams { requests: 0, ..base.clone() }).unwrap_err();
+        assert!(err.contains("request count"), "{err}");
+        let err = synthesize(&StreamParams { mix: vec![], ..base.clone() }).unwrap_err();
+        assert!(err.contains("mix"), "{err}");
+        let err = synthesize(&StreamParams { kind: ArrivalKind::Trace, ..base }).unwrap_err();
+        assert!(err.contains("trace"), "{err}");
+    }
+
+    const TRACE: &str = r#"{"requests":[
+        {"arrival": 500.0, "family": "gqa", "context": 1024, "output": 32},
+        {"arrival": 0.0, "family": "llama2", "context": 256, "output": 16}
+    ]}"#;
+
+    #[test]
+    fn trace_loads_and_sorts() {
+        let reqs = load_trace(TRACE).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].family, RequestFamily::Llama2);
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[1].family, RequestFamily::Gqa);
+        assert!(reqs[0].arrival < reqs[1].arrival);
+    }
+
+    #[test]
+    fn trace_errors_are_loud_and_distinct() {
+        for (doc, want) in [
+            ("[1]", "missing 'requests'"),
+            (r#"{"requests": 3}"#, "'requests' must be an array"),
+            (r#"{"requests": []}"#, "must be non-empty"),
+            (r#"{"requests": [], "extra": 1}"#, "unknown key 'extra'"),
+            (r#"{"requests": [{"family":"llama2","context":1,"output":1}]}"#,
+             "'arrival' must be a number"),
+            (r#"{"requests": [{"arrival":-1,"family":"llama2","context":1,"output":1}]}"#,
+             "finite and non-negative"),
+            (r#"{"requests": [{"arrival":0,"family":"bert","context":1,"output":1}]}"#,
+             "unknown request family"),
+            (r#"{"requests": [{"arrival":0,"family":"llama2","output":1}]}"#,
+             "'context' must be a positive integer"),
+            (r#"{"requests": [{"arrival":0,"family":"llama2","context":0,"output":1}]}"#,
+             "'context' must be a positive integer"),
+            (r#"{"requests": [{"arrival":0,"family":"llama2","context":1,"output":0}]}"#,
+             "'output' must be a positive integer"),
+            (r#"{"requests": [{"arrival":0,"family":"llama2","context":1,"output":1,"slo":9}]}"#,
+             "unknown key 'slo'"),
+        ] {
+            let err = load_trace(doc).unwrap_err();
+            assert!(err.contains(want), "doc {doc}: got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
+    fn truncated_trace_never_panics() {
+        let mut step = 97;
+        while step < TRACE.len() {
+            let cut = &TRACE[..step];
+            // Must error (or, if the cut lands on a valid prefix, parse) —
+            // never panic. All 97-byte-step cuts of TRACE are invalid JSON.
+            assert!(load_trace(cut).is_err(), "cut at {step} unexpectedly parsed");
+            step += 97;
+        }
+    }
+}

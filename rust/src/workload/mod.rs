@@ -4,6 +4,7 @@
 //! them (`families`), the JSON cascade schema (`schema`), and the
 //! registry that fronts them all (`registry`).
 
+pub mod arrivals;
 pub mod cascade;
 pub mod einsum;
 pub mod families;

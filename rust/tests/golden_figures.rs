@@ -200,6 +200,42 @@ fn contention_off_is_bit_identical_to_legacy_path() {
     );
 }
 
+/// Serving saturation-knee figure: goodput vs offered load per
+/// taxonomy point over a fixed seeded stream, plus the detected knee.
+/// Structural invariants hold independent of the snapshot: goodput is
+/// non-negative everywhere, and every knee row lands on the load grid.
+#[test]
+fn golden_fig_serving_knee() {
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    let fig = figures::fig_serving_knee(&ev);
+    for s in &fig.series {
+        for (label, v) in &s.rows {
+            assert!(*v >= 0.0, "negative value in {} at {label}: {v}", s.name);
+            if label == "knee" {
+                assert!(
+                    figures::SERVING_LOAD_GRID.contains(v),
+                    "knee of {} off the load grid: {v}",
+                    s.name
+                );
+            }
+        }
+    }
+    assert_golden("fig_serving_knee", &fig.render());
+}
+
+/// The serving engine's thread invariance: only the calibration probes
+/// fan out across workers, so the whole figure must render
+/// byte-identically for any worker count.
+#[test]
+fn fig_serving_knee_byte_identical_across_thread_counts() {
+    let serial = figures::fig_serving_knee(&Evaluator::new(golden_opts(1))).render();
+    let par = figures::fig_serving_knee(&Evaluator::new(golden_opts(4))).render();
+    assert_eq!(
+        serial, par,
+        "serving figure must be byte-identical across worker counts"
+    );
+}
+
 #[test]
 fn fig10_byte_identical_across_thread_counts() {
     let ev_serial = Evaluator::new(golden_opts(1));

@@ -3,10 +3,16 @@
 use std::process::Command;
 
 fn harp(args: &[&str]) -> (bool, String, String) {
-    let out = Command::new(env!("CARGO_BIN_EXE_harp"))
-        .args(args)
-        .output()
-        .expect("binary runs");
+    harp_env(args, &[])
+}
+
+fn harp_env(args: &[&str], envs: &[(&str, &str)]) -> (bool, String, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_harp"));
+    cmd.args(args);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("binary runs");
     (
         out.status.success(),
         String::from_utf8_lossy(&out.stdout).into_owned(),
@@ -543,6 +549,140 @@ fn eval_workload_model_conflicts_are_loud() {
     assert!(!ok);
     assert!(stderr.contains("unknown workload"), "{stderr}");
     assert!(stderr.contains("serving_mix"), "{stderr}");
+}
+
+/// The issue's acceptance gate, at the binary level: a fixed serve
+/// invocation is byte-identical across HARP_THREADS=1 and 4 and across
+/// two consecutive runs.
+#[test]
+fn serve_byte_identical_across_thread_counts_and_runs() {
+    let args = [
+        "serve", "--arrivals", "poisson", "--seed", "7", "--requests", "8", "--samples", "8",
+    ];
+    let (ok, serial, stderr) = harp_env(&args, &[("HARP_THREADS", "1")]);
+    assert!(ok, "stderr: {stderr}");
+    let (ok, par, stderr) = harp_env(&args, &[("HARP_THREADS", "4")]);
+    assert!(ok, "stderr: {stderr}");
+    let (ok, again, stderr) = harp_env(&args, &[("HARP_THREADS", "4")]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(serial, par, "HARP_THREADS changed the serve output");
+    assert_eq!(par, again, "a repeat run changed the serve output");
+    // The text report carries the SLO metrics.
+    for needle in ["TTFT", "goodput", "throughput", "requests 8"] {
+        assert!(serial.contains(needle), "missing '{needle}':\n{serial}");
+    }
+}
+
+#[test]
+fn serve_json_streams_parseable_ndjson() {
+    let (ok, stdout, stderr) = harp(&[
+        "serve", "--arrivals", "bursty", "--seed", "3", "--requests", "6", "--samples", "8",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty());
+    for line in &lines[..lines.len() - 1] {
+        let v = harp::util::json::Json::parse(line).expect("each NDJSON line parses");
+        assert!(v.get("id").unwrap().as_usize().is_some());
+        assert!(v.get("family").unwrap().as_str().is_some());
+        assert!(v.get("ttft").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // The last line is the run summary.
+    let last = harp::util::json::Json::parse(lines[lines.len() - 1]).expect("summary parses");
+    let summary = last.get("summary").expect("summary object");
+    assert_eq!(summary.get("requests").unwrap().as_usize(), Some(6));
+    assert!(summary.get("goodput").unwrap().as_f64().is_some());
+    // No text report mixed into the NDJSON stream.
+    assert!(!stdout.contains("serving summary"), "text report leaked into NDJSON");
+}
+
+#[test]
+fn serve_config_supplies_the_options_and_conflicts_are_loud() {
+    let dir = std::env::temp_dir().join("harp_cli_serve_config_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("cfg.json");
+    std::fs::write(
+        &cfg,
+        r#"{"workload":"bert","machine":"hier+xnode","samples":8,
+            "arrivals":{"process":"poisson","load":2.0,"requests":6,"seed":7}}"#,
+    )
+    .unwrap();
+    let cfg_s = cfg.to_string_lossy().into_owned();
+    // The config alone runs.
+    let (ok, stdout, stderr) = harp(&["serve", "--config", &cfg_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("goodput"), "{stdout}");
+    // Any stream knob alongside --config is a conflict, not a shadow.
+    for extra in [
+        ["--arrivals", "bursty"],
+        ["--load", "4"],
+        ["--seed", "9"],
+        ["--machine", "leaf+homo"],
+    ] {
+        let (ok, _, stderr) = harp(&["serve", "--config", &cfg_s, extra[0], extra[1]]);
+        assert!(!ok, "{} alongside --config must fail", extra[0]);
+        assert!(stderr.contains("--config supplies the serving options"), "{stderr}");
+    }
+    // A config without an "arrivals" object cannot serve.
+    let plain = dir.join("plain.json");
+    std::fs::write(&plain, r#"{"workload":"bert","machine":"hier+xnode","samples":8}"#)
+        .unwrap();
+    let (ok, _, stderr) = harp(&["serve", "--config", &plain.to_string_lossy()]);
+    assert!(!ok, "serve without arrivals must fail");
+    assert!(stderr.contains("\"arrivals\""), "{stderr}");
+    // And eval rejects a config that has one — the key is serve-only.
+    let (ok, _, stderr) = harp(&["eval", "--config", &cfg_s]);
+    assert!(!ok, "eval with an arrivals key must fail");
+    assert!(stderr.contains("only applies to 'harp serve'"), "{stderr}");
+}
+
+#[test]
+fn serve_rejects_unknown_process_and_dead_knobs() {
+    let (ok, _, stderr) = harp(&["serve", "--arrivals", "sinusoid"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown arrival process"), "{stderr}");
+    assert!(stderr.contains("poisson, bursty, trace"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--trace", "t.json"]);
+    assert!(!ok, "--trace without --arrivals trace must fail");
+    assert!(stderr.contains("does nothing without"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--arrivals", "trace"]);
+    assert!(!ok, "--arrivals trace without --trace must fail");
+    assert!(stderr.contains("requires --trace"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--arrivals", "trace", "--trace", "t.json", "--load", "4"]);
+    assert!(!ok, "--load with a trace must fail");
+    assert!(stderr.contains("does not apply"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--workload-mix", "bert"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown request family"), "{stderr}");
+}
+
+#[test]
+fn serve_runs_a_trace_file() {
+    let dir = std::env::temp_dir().join("harp_cli_serve_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("stream.json");
+    std::fs::write(
+        &trace,
+        r#"{"requests":[
+            {"arrival": 0.0, "family": "llama2", "context": 512, "output": 16},
+            {"arrival": 90000.0, "family": "llama2", "context": 256, "output": 8}
+        ]}"#,
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = harp(&[
+        "serve", "--arrivals", "trace", "--trace", &trace.to_string_lossy(), "--samples", "8",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("requests 2"), "{stdout}");
+    assert!(stdout.contains("completed 2"), "{stdout}");
+    // A malformed trace is a loud, file-labelled error.
+    std::fs::write(&trace, r#"{"requests":[{"arrival":0}]}"#).unwrap();
+    let (ok, _, stderr) = harp(&[
+        "serve", "--arrivals", "trace", "--trace", &trace.to_string_lossy(),
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("'family' must be a string"), "{stderr}");
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! End-to-end serving-engine tests over REAL calibrated costs: the
+//! arrival generator, the calibration probes (through the shared
+//! evaluator), and the continuous-batching simulator together, at a
+//! small fixed mapper budget.
+//!
+//! The heart is the determinism contract from the issue: a fixed
+//! (stream seed, machine, bandwidth) triple must produce byte-identical
+//! serving reports whether calibration ran on one worker or many, and
+//! across repeat runs.
+
+use harp::arch::taxonomy::HarpClass;
+use harp::coordinator::experiment::EvalOptions;
+use harp::coordinator::figures::Evaluator;
+use harp::runtime::serve::{
+    self, build_serving_machine, calibrate, simulate, ServeConfig,
+};
+use harp::workload::arrivals::{synthesize, ArrivalKind, Request, RequestFamily, StreamParams};
+
+fn small_opts(threads: usize) -> EvalOptions {
+    let mut o = EvalOptions { samples: 8, ..EvalOptions::default() };
+    o.seed = 0x5E47_11CE;
+    o.threads = threads;
+    o
+}
+
+fn stream(kind: ArrivalKind, load: f64, n: usize, seed: u64) -> Vec<Request> {
+    synthesize(&StreamParams {
+        kind,
+        mix: RequestFamily::ALL.iter().map(|&f| (f, 1.0)).collect(),
+        load,
+        requests: n,
+        seed,
+    })
+    .unwrap()
+}
+
+/// One full serve run at a worker count; returns the rendered report.
+fn serve_report(threads: usize, kind: ArrivalKind, seed: u64) -> String {
+    let opts = small_opts(threads);
+    let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
+    let ev = Evaluator::new(opts);
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
+    let reqs = stream(kind, 2.0, 12, seed);
+    simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, &ServeConfig::default())
+        .report
+        .render()
+}
+
+/// The acceptance gate: byte-identical reports across HARP_THREADS-style
+/// worker counts AND across repeat runs, for both synthetic processes.
+#[test]
+fn serve_report_byte_identical_across_thread_counts_and_runs() {
+    for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty] {
+        let serial = serve_report(1, kind, 7);
+        let par = serve_report(4, kind, 7);
+        let again = serve_report(4, kind, 7);
+        assert_eq!(serial, par, "{kind:?}: worker count changed the serving report");
+        assert_eq!(par, again, "{kind:?}: repeat run changed the serving report");
+    }
+}
+
+/// Different stream seeds must actually move the report — otherwise the
+/// identity test above is vacuous.
+#[test]
+fn serve_report_depends_on_stream_seed() {
+    assert_ne!(serve_report(1, ArrivalKind::Poisson, 7), serve_report(1, ArrivalKind::Poisson, 8));
+}
+
+/// Engine invariants under real calibrated costs (not the synthetic
+/// unit-test cost table): conservation, causal timestamps, and sane
+/// aggregate metrics.
+#[test]
+fn serve_invariants_under_real_costs() {
+    let opts = small_opts(1);
+    let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
+    let ev = Evaluator::new(opts);
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
+    let reqs = stream(ArrivalKind::Poisson, 4.0, 12, 7);
+    let r = simulate(&reqs, &machine, &costs, dynamic_bw, 4.0, &ServeConfig::default());
+    assert_eq!(r.report.completed + r.report.rejected, reqs.len());
+    assert!(r.report.completed > 0, "nothing completed under real costs");
+    for rec in &r.records {
+        assert!(rec.admitted >= rec.arrival, "request {} admitted before arriving", rec.id);
+        assert!(rec.first_token > rec.admitted, "request {} produced before admission", rec.id);
+        assert!(rec.completed >= rec.first_token);
+        assert!(rec.ttft() > 0.0);
+    }
+    assert!(r.report.goodput <= r.report.throughput + 1e-12);
+    assert!(r.report.p50_ttft <= r.report.p99_ttft);
+    assert!(r.report.kv_capacity_words > 0.0);
+}
+
+/// Calibration through the shared evaluator makes the per-family cost
+/// table: prefill and decode per-token costs must be positive and
+/// finite for every family, and the decode chunk cost must grow with
+/// the KV length (the attention-scan term).
+#[test]
+fn calibrated_costs_are_positive_and_kv_sensitive() {
+    let ev = Evaluator::new(small_opts(1));
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    for f in RequestFamily::ALL {
+        let fc = costs.family(f);
+        assert!(
+            fc.prefill_per_token.is_finite() && fc.prefill_per_token > 0.0,
+            "{}: bad prefill cost {}",
+            f.name(),
+            fc.prefill_per_token
+        );
+        assert!(
+            fc.decode_per_token.is_finite() && fc.decode_per_token > 0.0,
+            "{}: bad decode cost {}",
+            f.name(),
+            fc.decode_per_token
+        );
+    }
+}
+
+/// The knee helper applied to a real (tiny) load sweep: goodput curves
+/// from the engine always yield a knee that is one of the swept loads.
+#[test]
+fn knee_lands_on_the_swept_grid() {
+    let opts = small_opts(1);
+    let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
+    let ev = Evaluator::new(opts);
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
+    let loads = [1.0, 4.0];
+    let curve: Vec<(f64, f64)> = loads
+        .iter()
+        .map(|&load| {
+            let reqs = stream(ArrivalKind::Poisson, load, 10, 7);
+            let r =
+                simulate(&reqs, &machine, &costs, dynamic_bw, load, &ServeConfig::default());
+            (load, r.report.goodput)
+        })
+        .collect();
+    let knee = serve::saturation_knee(&curve);
+    assert!(loads.contains(&knee), "knee {knee} not on the swept grid");
+}

@@ -133,6 +133,40 @@ test -s target/tier1-eval-cache.bin
     --cache target/tier1-eval-cache.bin \
     --mapping-cache target/tier1-mapping-cache-figs.bin > /dev/null
 
+# Serving simulator: a text run, the NDJSON stream, the loud-error
+# paths (--config conflict, unknown process), and the byte-identity
+# acceptance gate — one fixed invocation across HARP_THREADS=1 and 4
+# plus a repeat run must all agree byte-for-byte.
+"$BIN" serve --arrivals poisson --seed 7 --requests 8 --samples "$SAMPLES" \
+    > /dev/null
+"$BIN" serve --arrivals bursty --seed 3 --requests 6 --samples "$SAMPLES" \
+    --json > target/tier1-serve.ndjson
+test -s target/tier1-serve.ndjson
+printf '{"workload":"bert","machine":"hier+xnode","samples":8,"arrivals":{"process":"poisson","requests":6}}' \
+    > target/tier1-serve-cfg.json
+"$BIN" serve --config target/tier1-serve-cfg.json > /dev/null
+if "$BIN" serve --config target/tier1-serve-cfg.json --load 4 > /dev/null 2>&1; then
+    echo "tier1 FAIL: a stream knob alongside serve --config should be loud"; exit 1
+fi
+if "$BIN" eval --config target/tier1-serve-cfg.json > /dev/null 2>&1; then
+    echo "tier1 FAIL: eval should reject a config with an 'arrivals' key"; exit 1
+fi
+if "$BIN" serve --arrivals sinusoid > /dev/null 2>&1; then
+    echo "tier1 FAIL: an unknown arrival process should be a loud error"; exit 1
+fi
+HARP_THREADS=1 "$BIN" serve --arrivals poisson --seed 7 --requests 8 \
+    --samples "$SAMPLES" > target/tier1-serve-t1.txt
+HARP_THREADS=4 "$BIN" serve --arrivals poisson --seed 7 --requests 8 \
+    --samples "$SAMPLES" > target/tier1-serve-t4.txt
+HARP_THREADS=4 "$BIN" serve --arrivals poisson --seed 7 --requests 8 \
+    --samples "$SAMPLES" > target/tier1-serve-t4b.txt
+if ! cmp -s target/tier1-serve-t1.txt target/tier1-serve-t4.txt; then
+    echo "tier1 FAIL: serve output must be byte-identical across HARP_THREADS"; exit 1
+fi
+if ! cmp -s target/tier1-serve-t4.txt target/tier1-serve-t4b.txt; then
+    echo "tier1 FAIL: serve output must be byte-identical across runs"; exit 1
+fi
+
 echo "== tier1: bench smoke (compile + one iteration) =="
 # Every bench target compiles and runs exactly once, so bench drift
 # breaks the gate instead of rotting silently. HARP_BENCH_SMOKE skips

@@ -9,7 +9,8 @@
 #
 # Covers every snapshot in tests/golden_figures.rs: table1, the
 # workload table, fig6–fig10 (+ the MoE fig6 variant), the contention-on
-# evaluations, and the allocation-policy ablation (fig_alloc_ablation).
+# evaluations, the allocation-policy ablation (fig_alloc_ablation), and
+# the serving saturation-knee figure (fig_serving_knee).
 #
 # Usage:
 #   scripts/update_goldens.sh          # regenerate every golden
