@@ -450,22 +450,24 @@ fn main() {
         let stream = synthesize(&StreamParams {
             kind: ArrivalKind::Poisson,
             mix: RequestFamily::ALL.iter().map(|&f| (f, 1.0)).collect(),
+            classes: vec![],
             load: 4.0,
             requests: 64,
             seed: 7,
         })
         .unwrap();
         let cfg = ServeConfig::default();
-        let a = simulate(&stream, &machine, &costs, true, 4.0, &cfg);
-        let b = simulate(&stream, &machine, &costs, true, 4.0, &cfg);
+        let a = simulate(&stream, &machine, &costs, true, 4.0, &cfg).unwrap();
+        let b = simulate(&stream, &machine, &costs, true, 4.0, &cfg).unwrap();
         assert_eq!(
             a.report.render(),
             b.report.render(),
             "serving report must be byte-identical across runs"
         );
         let t = bench_fn("serving simulate (64-req Poisson stream)", budget, 50, || {
-            let _ =
-                std::hint::black_box(simulate(&stream, &machine, &costs, true, 4.0, &cfg));
+            let _ = std::hint::black_box(
+                simulate(&stream, &machine, &costs, true, 4.0, &cfg).unwrap(),
+            );
         });
         println!(
             "  → {:.1} serve runs/s ({} completed, {} evictions; byte-identical report asserted)\n",

@@ -51,10 +51,10 @@ use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::MachineTopology;
 use crate::coordinator::experiment::{default_bw_frac_low, EvalOptions};
-use crate::runtime::serve::DEFAULT_SLO_TTFT;
+use crate::runtime::serve::{PlacementPolicy, DEFAULT_SLO_TTFT};
 use crate::util::binio::CacheFormat;
 use crate::util::json::Json;
-use crate::workload::arrivals::{self, ArrivalKind, RequestFamily};
+use crate::workload::arrivals::{self, ArrivalKind, RequestClass, RequestFamily};
 use crate::workload::cascade::Cascade;
 use crate::workload::registry::{self, WorkloadSource};
 
@@ -63,24 +63,38 @@ use crate::workload::registry::{self, WorkloadSource};
 ///
 /// ```json
 /// { "arrivals": { "process": "poisson", "mix": "llama2:3,gqa:1",
+///                 "class_mix": "interactive:1,batch:3",
 ///                 "load": 2.0, "requests": 64, "seed": 7,
-///                 "slo_ttft": 2000000 } }
+///                 "slo_ttft": 2000000, "slo_ttft_batch": 8000000,
+///                 "kv_page_words": 4096, "placement": "pressure" } }
 /// ```
 ///
 /// With `"process": "trace"` the stream comes from a `"trace"` file
 /// (relative paths resolve against the config's directory) and the
-/// generator knobs (`mix`/`load`/`requests`/`seed`) are rejected as
-/// dead. The key only applies to `harp serve`; `harp eval` rejects it.
+/// generator knobs (`mix`/`class_mix`/`load`/`requests`/`seed`) are
+/// rejected as dead (a trace carries per-request classes itself). The
+/// engine knobs (`slo_ttft`, `slo_ttft_batch`, `kv_page_words`,
+/// `placement`) apply to both stream forms. The key only applies to
+/// `harp serve`; `harp eval` rejects it.
 #[derive(Debug, Clone)]
 pub struct ArrivalsConfig {
     pub process: ArrivalKind,
     pub mix: Vec<(RequestFamily, f64)>,
+    /// Latency-class mix for synthetic streams (default: everything
+    /// `interactive`, the classless-engine behavior).
+    pub class_mix: Vec<(RequestClass, f64)>,
     /// Offered load in requests per million cycles.
     pub load: f64,
     pub requests: usize,
     pub seed: u64,
     /// TTFT SLO in cycles (goodput counts completions under it).
     pub slo_ttft: f64,
+    /// TTFT SLO for `batch` requests; `None` inherits `slo_ttft`.
+    pub slo_ttft_batch: Option<f64>,
+    /// KV booking page size in words (0 = whole-request booking).
+    pub kv_page_words: u64,
+    /// Unit-placement policy for the engine's prefill/decode ops.
+    pub placement: PlacementPolicy,
     /// Trace file path (with `"process": "trace"` only).
     pub trace: Option<String>,
 }
@@ -88,7 +102,19 @@ pub struct ArrivalsConfig {
 fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
     arrivals::reject_unknown_keys(
         j,
-        &["process", "mix", "load", "requests", "seed", "slo_ttft", "trace"],
+        &[
+            "process",
+            "mix",
+            "class_mix",
+            "load",
+            "requests",
+            "seed",
+            "slo_ttft",
+            "slo_ttft_batch",
+            "kv_page_words",
+            "placement",
+            "trace",
+        ],
         "'arrivals'",
     )?;
     let process = j
@@ -102,8 +128,9 @@ fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
         None => None,
     };
     if process == ArrivalKind::Trace {
-        // The trace fixes the stream; generator knobs would be dead.
-        for k in ["mix", "load", "requests", "seed"] {
+        // The trace fixes the stream (including per-request classes);
+        // generator knobs would be dead.
+        for k in ["mix", "class_mix", "load", "requests", "seed"] {
             if j.get(k).is_some() {
                 return Err(format!(
                     "'arrivals.{k}' does not apply when \"process\" is \"trace\""
@@ -122,6 +149,15 @@ fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
             arrivals::parse_mix(s)?
         }
         None => vec![(RequestFamily::Llama2, 1.0)],
+    };
+    let class_mix = match j.get("class_mix") {
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or("'arrivals.class_mix' must be a string like \"interactive:1,batch:3\"")?;
+            arrivals::parse_class_mix(s)?
+        }
+        None => vec![(RequestClass::Interactive, 1.0)],
     };
     let load = match j.get("load") {
         Some(v) => {
@@ -157,7 +193,44 @@ fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
         }
         None => DEFAULT_SLO_TTFT,
     };
-    Ok(ArrivalsConfig { process, mix, load, requests, seed, slo_ttft, trace })
+    let slo_ttft_batch = match j.get("slo_ttft_batch") {
+        Some(v) => {
+            let s = v.as_f64().ok_or("'arrivals.slo_ttft_batch' must be a number of cycles")?;
+            if !s.is_finite() || s <= 0.0 {
+                return Err("'arrivals.slo_ttft_batch' must be finite and positive".into());
+            }
+            Some(s)
+        }
+        None => None,
+    };
+    let kv_page_words = match j.get("kv_page_words") {
+        Some(v) => v
+            .as_u64()
+            .ok_or("'arrivals.kv_page_words' must be a non-negative integer (0 = whole-request)")?,
+        None => 0,
+    };
+    let placement = match j.get("placement") {
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or("'arrivals.placement' must be a string (round_robin | pressure)")?;
+            PlacementPolicy::parse(s)?
+        }
+        None => PlacementPolicy::RoundRobin,
+    };
+    Ok(ArrivalsConfig {
+        process,
+        mix,
+        class_mix,
+        load,
+        requests,
+        seed,
+        slo_ttft,
+        slo_ttft_batch,
+        kv_page_words,
+        placement,
+        trace,
+    })
 }
 
 /// A parsed experiment configuration.
@@ -575,6 +648,10 @@ mod tests {
         assert_eq!(a.requests, 64);
         assert_eq!(a.seed, 7);
         assert_eq!(a.slo_ttft, DEFAULT_SLO_TTFT);
+        assert_eq!(a.class_mix, vec![(RequestClass::Interactive, 1.0)]);
+        assert!(a.slo_ttft_batch.is_none());
+        assert_eq!(a.kv_page_words, 0);
+        assert_eq!(a.placement, PlacementPolicy::RoundRobin);
         assert!(a.trace.is_none());
         // Absent key stays absent — eval configs are untouched.
         let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
@@ -586,22 +663,37 @@ mod tests {
         let c = ExperimentConfig::parse(
             r#"{"workload":"bert","machine":"hier+xnode",
                 "arrivals":{"process":"bursty","mix":"llama2:3,gqa:1","load":4.5,
-                            "requests":128,"seed":11,"slo_ttft":500000}}"#,
+                            "class_mix":"interactive:1,batch:3","requests":128,
+                            "seed":11,"slo_ttft":500000,"slo_ttft_batch":4000000,
+                            "kv_page_words":4096,"placement":"pressure"}}"#,
         )
         .unwrap();
         let a = c.arrivals.unwrap();
         assert_eq!(a.process, ArrivalKind::Bursty);
         assert_eq!(a.mix.len(), 2);
+        assert_eq!(
+            a.class_mix,
+            vec![(RequestClass::Interactive, 1.0), (RequestClass::Batch, 3.0)]
+        );
         assert_eq!(a.load, 4.5);
         assert_eq!(a.requests, 128);
         assert_eq!(a.seed, 11);
         assert_eq!(a.slo_ttft, 500000.0);
+        assert_eq!(a.slo_ttft_batch, Some(4000000.0));
+        assert_eq!(a.kv_page_words, 4096);
+        assert_eq!(a.placement, PlacementPolicy::Pressure);
         let c = ExperimentConfig::parse(
             r#"{"workload":"bert","machine":"hier+xnode",
-                "arrivals":{"process":"trace","trace":"stream.json"}}"#,
+                "arrivals":{"process":"trace","trace":"stream.json",
+                            "kv_page_words":512,"placement":"pressure"}}"#,
         )
         .unwrap();
-        assert_eq!(c.arrivals.unwrap().trace.as_deref(), Some("stream.json"));
+        let a = c.arrivals.unwrap();
+        // Engine knobs (pages, placement, SLOs) still apply to traces;
+        // only the stream-generator knobs are dead.
+        assert_eq!(a.trace.as_deref(), Some("stream.json"));
+        assert_eq!(a.kv_page_words, 512);
+        assert_eq!(a.placement, PlacementPolicy::Pressure);
     }
 
     #[test]
@@ -616,9 +708,15 @@ mod tests {
             (r#"{"process":"poisson","requests":0}"#, "'arrivals.requests'"),
             (r#"{"process":"poisson","mix":"bert"}"#, "unknown request family"),
             (r#"{"process":"poisson","slo_ttft":-1}"#, "'arrivals.slo_ttft'"),
+            (r#"{"process":"poisson","slo_ttft_batch":0}"#, "'arrivals.slo_ttft_batch'"),
+            (r#"{"process":"poisson","class_mix":"gold"}"#, "unknown request class"),
+            (r#"{"process":"poisson","class_mix":7}"#, "'arrivals.class_mix' must be a string"),
+            (r#"{"process":"poisson","kv_page_words":-4}"#, "'arrivals.kv_page_words'"),
+            (r#"{"process":"poisson","placement":"luck"}"#, "unknown placement policy"),
             (r#"{"process":"poisson","trace":"t.json"}"#, "does nothing unless"),
             (r#"{"process":"trace"}"#, "requires a \"trace\""),
             (r#"{"process":"trace","trace":"t.json","load":2}"#, "does not apply"),
+            (r#"{"process":"trace","trace":"t.json","class_mix":"batch"}"#, "does not apply"),
         ] {
             let doc = format!(
                 r#"{{"workload":"bert","machine":"hier+xnode","arrivals":{arr}}}"#

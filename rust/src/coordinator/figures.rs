@@ -779,6 +779,7 @@ pub fn fig_serving_knee(ev: &Evaluator) -> Figure {
             let stream = arrivals::synthesize(&arrivals::StreamParams {
                 kind: ArrivalKind::Poisson,
                 mix: mix.clone(),
+                classes: vec![],
                 load,
                 requests: 40,
                 seed: 0x5EED ^ ev.opts.seed,
@@ -791,12 +792,85 @@ pub fn fig_serving_knee(ev: &Evaluator) -> Figure {
                 ev.opts.dynamic_bw,
                 load,
                 &cfg,
-            );
+            )
+            .expect("serving machine is bounded");
             s.push(&format!("load={load}"), r.report.goodput);
             curve.push((load, r.report.goodput));
         }
         s.push("knee", serve::saturation_knee(&curve));
         fig.add(s);
+    }
+    fig
+}
+
+/// Per-class serving knee: the same saturation sweep as
+/// [`fig_serving_knee`], but over a mixed-priority stream
+/// (interactive:1, batch:3) with class-aware admission. Two series per
+/// taxonomy point — one per latency class — each carrying its own
+/// goodput curve over [`SERVING_LOAD_GRID`] and its own knee, so the
+/// figure shows how far priority admission defends interactive goodput
+/// past the aggregate knee. The arrival/shape stream is bit-identical
+/// to the classless sweep (class labels ride a separate RNG), so any
+/// divergence from [`fig_serving_knee`] is pure scheduling policy.
+pub fn fig_serving_knee_class(ev: &Evaluator) -> Figure {
+    use crate::runtime::serve;
+    use crate::workload::arrivals::{self, ArrivalKind, RequestClass, RequestFamily};
+
+    let classes = HarpClass::eval_points();
+    let families: Vec<RequestFamily> = RequestFamily::ALL.to_vec();
+    let mix: Vec<(RequestFamily, f64)> = families.iter().map(|&f| (f, 1.0)).collect();
+    let class_mix = vec![(RequestClass::Interactive, 1.0), (RequestClass::Batch, 3.0)];
+    let cfg = serve::ServeConfig::default();
+
+    let mut fig = Figure::new(
+        "Per-class serving knee: goodput vs offered load (interactive:1, batch:3)",
+        "goodput (SLO-meeting completions per Mcycle)",
+    );
+    for (tag, class) in &classes {
+        let costs = serve::calibrate(ev, class, 2048.0, &families);
+        let machine = serve::build_serving_machine(class, 2048.0, ev.opts.contention)
+            .expect("taxonomy point builds");
+        let mut series: Vec<(Series, Vec<(f64, f64)>)> = RequestClass::ALL
+            .iter()
+            .map(|c| {
+                (Series::new(&format!("({tag}) {} [{}]", class.id(), c.name())), Vec::new())
+            })
+            .collect();
+        for &load in &SERVING_LOAD_GRID {
+            let stream = arrivals::synthesize(&arrivals::StreamParams {
+                kind: ArrivalKind::Poisson,
+                mix: mix.clone(),
+                classes: class_mix.clone(),
+                load,
+                requests: 40,
+                seed: 0x5EED ^ ev.opts.seed,
+            })
+            .expect("valid stream params");
+            let r = serve::simulate(
+                &stream,
+                &machine,
+                &costs,
+                ev.opts.dynamic_bw,
+                load,
+                &cfg,
+            )
+            .expect("serving machine is bounded");
+            for (i, c) in RequestClass::ALL.iter().enumerate() {
+                let goodput = r
+                    .report
+                    .class_breakdown
+                    .iter()
+                    .find(|b| b.class == *c)
+                    .map(|b| b.goodput)
+                    .unwrap_or(0.0);
+                series[i].0.push(&format!("load={load}"), goodput);
+                series[i].1.push((load, goodput));
+            }
+        }
+        for (mut s, curve) in series {
+            s.push("knee", serve::saturation_knee(&curve));
+            fig.add(s);
+        }
     }
     fig
 }

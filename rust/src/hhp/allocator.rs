@@ -93,6 +93,24 @@ pub fn eligible_units(machine: &MachineConfig, class: ReuseClass) -> Vec<usize> 
     }
 }
 
+/// Order `units` by observed pressure (ascending, unit id as the
+/// deterministic tie-break), dropping units whose pressure exceeds
+/// twice the minimum — a serving-side feedback loop (MOSAIC-style) that
+/// steers placement toward the units the scheduler reports as least
+/// congested. With uniform pressure (e.g. all zero at start-up) every
+/// unit survives in id order, which degrades exactly to round-robin.
+/// Never returns an empty set: the minimum-pressure unit always passes
+/// its own gate.
+pub fn pressure_ordered(units: &[usize], pressure: &[f64]) -> Vec<usize> {
+    let mut ranked: Vec<usize> = units.to_vec();
+    ranked.sort_by(|&a, &b| pressure[a].total_cmp(&pressure[b]).then(a.cmp(&b)));
+    let floor = pressure[ranked[0]];
+    let gate = 2.0 * floor + 1e-12;
+    let kept: Vec<usize> =
+        ranked.iter().copied().filter(|&u| pressure[u] <= gate).collect();
+    if kept.is_empty() { ranked } else { kept }
+}
+
 /// Assign each op of `cascade` to a sub-accelerator id (the historical
 /// greedy policy — [`AllocPolicy::Greedy`]).
 pub fn allocate(cascade: &Cascade, machine: &MachineConfig, classifier: &Classifier) -> Vec<usize> {

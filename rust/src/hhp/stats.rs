@@ -105,8 +105,9 @@ fn occupancy_sweep(intervals: &[(f64, f64)], makespan: f64) -> (f64, f64) {
         events.push((end, -1));
     }
     // Ends sort before starts at equal times so touching intervals do
-    // not count as overlap.
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    // not count as overlap. total_cmp keeps the sort total (and
+    // panic-free) even if a degenerate interval ever carries a NaN.
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let (mut occupied, mut contended) = (0.0f64, 0.0f64);
     let mut depth = 0i32;
     let mut prev = events[0].0;

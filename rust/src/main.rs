@@ -529,6 +529,11 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         Some("llama2"),
         "request family mix: NAME or NAME:W,NAME:W (families: llama2 | gqa | moe)",
     )
+    .opt(
+        "class-mix",
+        Some("interactive"),
+        "latency-class mix: NAME or NAME:W,NAME:W (classes: interactive | batch)",
+    )
     .opt("arrivals", Some("poisson"), "arrival process: poisson | bursty | trace")
     .opt("load", Some("2"), "offered load in requests per million cycles")
     .opt("requests", Some("64"), "stream length in requests")
@@ -546,6 +551,21 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         "slo-ttft",
         Some("2000000"),
         "TTFT SLO in cycles; goodput counts completions under it",
+    )
+    .opt(
+        "slo-ttft-batch",
+        None,
+        "TTFT SLO in cycles for batch-class requests (default: --slo-ttft)",
+    )
+    .opt(
+        "kv-page-words",
+        Some("0"),
+        "KV booking page size in words (0 = whole-request booking)",
+    )
+    .opt(
+        "placement",
+        Some("round_robin"),
+        "unit placement for serve steps: round_robin | pressure",
     )
     .opt("trace", None, "arrival trace JSON file (with --arrivals trace only)")
     .flag(
@@ -565,6 +585,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         // "arrivals" object wins), mirroring eval's --config rule.
         for flag in [
             "--workload-mix",
+            "--class-mix",
             "--arrivals",
             "--load",
             "--requests",
@@ -574,6 +595,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             "--samples",
             "--contention",
             "--slo-ttft",
+            "--slo-ttft-batch",
+            "--kv-page-words",
+            "--placement",
             "--trace",
         ] {
             if given(flag) {
@@ -587,7 +611,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         let Some(arr) = cfg.arrivals else {
             return Err(format!(
                 "{path}: serving needs an \"arrivals\" object \
-                 (process / mix / load / requests / seed / slo_ttft / trace)"
+                 (process / mix / class_mix / load / requests / seed / slo_ttft / \
+                 slo_ttft_batch / kv_page_words / placement / trace)"
             ));
         };
         if cfg.topology.is_some() {
@@ -607,9 +632,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         let process = ArrivalKind::parse(args.get("arrivals").unwrap())?;
         let trace = args.get("trace").map(String::from);
         if process == ArrivalKind::Trace {
-            // The trace fixes the stream; the generator knobs (all with
-            // defaults) would be dead, so explicit use is an error.
-            for flag in ["--workload-mix", "--load", "--requests", "--seed"] {
+            // The trace fixes the stream (including per-request
+            // classes); the generator knobs (all with defaults) would
+            // be dead, so explicit use is an error.
+            for flag in ["--workload-mix", "--class-mix", "--load", "--requests", "--seed"] {
                 if given(flag) {
                     return Err(format!(
                         "{flag} does not apply with --arrivals trace (the trace file \
@@ -624,6 +650,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             return Err("--trace does nothing without --arrivals trace".into());
         }
         let mix = arrivals::parse_mix(args.get("workload-mix").unwrap())?;
+        let class_mix = arrivals::parse_class_mix(args.get("class-mix").unwrap())?;
         let load = args.get_f64("load").map_err(|e| e.to_string())?;
         let requests = args.get_usize("requests").map_err(|e| e.to_string())?;
         let seed_raw = args.get("seed").unwrap();
@@ -634,6 +661,17 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         if !slo_ttft.is_finite() || slo_ttft <= 0.0 {
             return Err("--slo-ttft must be finite and positive".into());
         }
+        let slo_ttft_batch = if given("--slo-ttft-batch") {
+            let v = args.get_f64("slo-ttft-batch").map_err(|e| e.to_string())?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err("--slo-ttft-batch must be finite and positive".into());
+            }
+            Some(v)
+        } else {
+            None
+        };
+        let kv_page_words = args.get_usize("kv-page-words").map_err(|e| e.to_string())? as u64;
+        let placement = serve::PlacementPolicy::parse(args.get("placement").unwrap())?;
         let machine_id = args.get("machine").unwrap();
         let class = HarpClass::from_id(machine_id)
             .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
@@ -646,7 +684,19 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         if let Some(n) = threads {
             opts.threads = n;
         }
-        let arr = ArrivalsConfig { process, mix, load, requests, seed, slo_ttft, trace };
+        let arr = ArrivalsConfig {
+            process,
+            mix,
+            class_mix,
+            load,
+            requests,
+            seed,
+            slo_ttft,
+            slo_ttft_batch,
+            kv_page_words,
+            placement,
+            trace,
+        };
         (arr, class, args.get_f64("bw").map_err(|e| e.to_string())?, opts)
     };
 
@@ -658,6 +708,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         arrivals::synthesize(&StreamParams {
             kind: arr.process,
             mix: arr.mix.clone(),
+            classes: arr.class_mix.clone(),
             load: arr.load,
             requests: arr.requests,
             seed: arr.seed,
@@ -681,8 +732,14 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let ev = figures::Evaluator::new(opts);
     let costs = serve::calibrate(&ev, &class, bw, &families);
     let machine = serve::build_serving_machine(&class, bw, contention)?;
-    let scfg = serve::ServeConfig { slo_ttft: arr.slo_ttft, ..serve::ServeConfig::default() };
-    let result = serve::simulate(&stream, &machine, &costs, dynamic_bw, offered_load, &scfg);
+    let scfg = serve::ServeConfig {
+        slo_ttft: arr.slo_ttft,
+        slo_ttft_batch: arr.slo_ttft_batch,
+        kv_page_words: arr.kv_page_words,
+        placement: arr.placement,
+        ..serve::ServeConfig::default()
+    };
+    let result = serve::simulate(&stream, &machine, &costs, dynamic_bw, offered_load, &scfg)?;
 
     if json {
         serve_json(&result).map_err(|e| format!("stdout: {e}"))?;
@@ -723,6 +780,17 @@ fn serve_json(result: &harp::runtime::serve::ServeResult) -> std::io::Result<()>
         w.num(r.completed)?;
         w.key("evictions")?;
         w.num(r.evictions as f64)?;
+        // New keys ride behind their knobs so default output stays
+        // byte-identical: "class" appears only for classed streams,
+        // "pages" only under paged booking.
+        if !result.report.class_breakdown.is_empty() {
+            w.key("class")?;
+            w.str(r.class.name())?;
+        }
+        if result.report.kv_page_words > 0 {
+            w.key("pages")?;
+            w.num(r.peak_pages as f64)?;
+        }
         w.end_obj()?;
         let mut out = w.finish()?;
         writeln!(out)?;
@@ -758,6 +826,34 @@ fn serve_json(result: &harp::runtime::serve::ServeResult) -> std::io::Result<()>
     w.num(rep.slo_ttft)?;
     w.key("kv_capacity_words")?;
     w.num(rep.kv_capacity_words)?;
+    if rep.kv_page_words > 0 {
+        w.key("kv_page_words")?;
+        w.num(rep.kv_page_words as f64)?;
+        w.key("reprefill_tokens")?;
+        w.num(rep.reprefill_tokens as f64)?;
+    }
+    if !rep.class_breakdown.is_empty() {
+        w.key("classes")?;
+        w.begin_obj()?;
+        for c in &rep.class_breakdown {
+            w.key(c.class.name())?;
+            w.begin_obj()?;
+            w.key("requests")?;
+            w.num(c.requests as f64)?;
+            w.key("completed")?;
+            w.num(c.completed as f64)?;
+            w.key("p50_ttft")?;
+            w.num(c.p50_ttft)?;
+            w.key("p99_ttft")?;
+            w.num(c.p99_ttft)?;
+            w.key("goodput")?;
+            w.num(c.goodput)?;
+            w.key("slo_ttft")?;
+            w.num(c.slo_ttft)?;
+            w.end_obj()?;
+        }
+        w.end_obj()?;
+    }
     w.end_obj()?;
     w.end_obj()?;
     let mut out = w.finish()?;
@@ -849,6 +945,7 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     figures::fig10_bw_partition(&ev).emit("fig10_bw_partition");
     figures::fig_alloc_ablation(&ev).emit("fig_alloc_ablation");
     figures::fig_serving_knee(&ev).emit("fig_serving_knee");
+    figures::fig_serving_knee_class(&ev).emit("fig_serving_knee_class");
     if let Err(e) = ev.persist() {
         eprintln!("warn: could not persist evaluation cache: {e}");
     }

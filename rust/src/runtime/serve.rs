@@ -3,13 +3,23 @@
 //!
 //! The simulator is step-based, mirroring iteration-level continuous
 //! batching: each step every in-flight request contributes exactly one
-//! op — its whole prefill, or one decode chunk — and the ops of a step
-//! are list-scheduled onto the machine through [`ScheduleOracle`]
-//! replay, so queueing delay on oversubscribed units is the *real*
-//! scheduler's arbitration, not a closed-form approximation. Requests
-//! admit FIFO under booked KV-cache capacity and the newest admission
-//! is preempted (produced tokens kept) when decode growth overflows the
-//! books.
+//! op — its whole prefill, one decode chunk, or (under paged booking) a
+//! KV re-fetch after a partial spill — and the ops of a step are
+//! list-scheduled onto the machine through [`ScheduleOracle`] replay,
+//! so queueing delay on oversubscribed units is the *real* scheduler's
+//! arbitration, not a closed-form approximation.
+//!
+//! Admission is Herald-style class-aware: the wait queue is ordered by
+//! (latency class, arrival) so every `interactive` request admits ahead
+//! of any `batch` request, each class carrying its own TTFT SLO. With
+//! the default single-class stream this degrades exactly to the
+//! historical FIFO. KV capacity is booked either whole-request (the
+//! default, byte-identical to the historical books) or in fixed-size
+//! pages ([`ServeConfig::kv_page_words`]): decode growth books pages
+//! incrementally, and preemption spills page by page from the newest
+//! admission of the lowest class — a partially spilled request stays
+//! resident and pays a measured re-prefill (KV re-fetch) op before it
+//! decodes again.
 //!
 //! Per-op costs come from a one-off calibration pass: per (family,
 //! taxonomy point, bandwidth) the real cost model evaluates a
@@ -22,8 +32,10 @@
 //! Determinism: the simulation itself is single-threaded and seeded;
 //! the only parallelism is the `Evaluator`'s calibration warm-up, whose
 //! results are bit-identical across `HARP_THREADS` by the repo-wide
-//! invariant. A fixed (stream, machine, costs) triple therefore yields
-//! byte-identical reports everywhere.
+//! invariant. A fixed (stream, machine, costs, knobs) tuple therefore
+//! yields byte-identical reports everywhere — and the default knobs
+//! (single class, whole-request booking, round-robin placement) are
+//! contractually byte-identical to the pre-class/pre-page engine.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -31,10 +43,10 @@ use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::ContentionMode;
 use crate::coordinator::figures::{EvalPoint, Evaluator};
-use crate::hhp::allocator::eligible_units;
+use crate::hhp::allocator::{eligible_units, pressure_ordered};
 use crate::hhp::scheduler::{ScheduleOptions, ScheduleOracle};
 use crate::model::stats::OpStats;
-use crate::workload::arrivals::{Request, RequestFamily};
+use crate::workload::arrivals::{Request, RequestClass, RequestFamily};
 use crate::workload::cascade::Cascade;
 use crate::workload::einsum::{Phase, TensorOp};
 use crate::workload::intensity::ReuseClass;
@@ -52,18 +64,80 @@ pub const DEFAULT_SLO_TTFT: f64 = 2_000_000.0;
 /// finite book to push against).
 const KV_DRAM_FACTOR: f64 = 64.0;
 
+/// How hi/lo placement picks among the eligible units each time a
+/// request (re-)enters a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Blind rotation over the eligible set (the historical,
+    /// byte-stable default).
+    #[default]
+    RoundRobin,
+    /// Rotate over [`pressure_ordered`] units: each step's schedule
+    /// replay feeds its queue-delay/latency ratios back per unit
+    /// (decayed ×0.5 per step), and placement skips units more than 2×
+    /// as congested as the least-loaded one.
+    Pressure,
+}
+
+impl PlacementPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round_robin",
+            PlacementPolicy::Pressure => "pressure",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PlacementPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "round_robin" | "round-robin" | "rr" => Ok(PlacementPolicy::RoundRobin),
+            "pressure" => Ok(PlacementPolicy::Pressure),
+            other => Err(format!(
+                "unknown placement policy '{other}' (known: round_robin, pressure)"
+            )),
+        }
+    }
+}
+
 /// Engine knobs.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// TTFT SLO in cycles; completions under it count toward goodput.
+    /// TTFT SLO in cycles for `interactive` requests (and the fallback
+    /// for `batch` when no per-class SLO is set); completions under
+    /// their class SLO count toward goodput.
     pub slo_ttft: f64,
+    /// TTFT SLO for `batch` requests; `None` inherits `slo_ttft`.
+    pub slo_ttft_batch: Option<f64>,
     /// Decode tokens batched per step after the first chunk.
     pub decode_chunk: u64,
+    /// KV booking granularity in words. `0` (the default) books each
+    /// request's exact KV need — byte-identical to the historical
+    /// whole-request books. A positive value books in fixed pages:
+    /// growth allocates pages incrementally, preemption spills page by
+    /// page, and spilled pages cost a measured re-prefill on return.
+    pub kv_page_words: u64,
+    /// Unit-placement policy for prefill/decode ops.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { slo_ttft: DEFAULT_SLO_TTFT, decode_chunk: DECODE_CHUNK_TOKENS }
+        ServeConfig {
+            slo_ttft: DEFAULT_SLO_TTFT,
+            slo_ttft_batch: None,
+            decode_chunk: DECODE_CHUNK_TOKENS,
+            kv_page_words: 0,
+            placement: PlacementPolicy::RoundRobin,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// TTFT SLO applying to `class`.
+    pub fn slo_for(&self, class: RequestClass) -> f64 {
+        match class {
+            RequestClass::Interactive => self.slo_ttft,
+            RequestClass::Batch => self.slo_ttft_batch.unwrap_or(self.slo_ttft),
+        }
     }
 }
 
@@ -197,6 +271,7 @@ pub fn build_serving_machine(
 pub struct RequestRecord {
     pub id: usize,
     pub family: RequestFamily,
+    pub class: RequestClass,
     pub arrival: f64,
     pub context: u64,
     pub output: u64,
@@ -208,6 +283,8 @@ pub struct RequestRecord {
     pub completed: f64,
     /// Times this request was preempted by the capacity books.
     pub evictions: u32,
+    /// Peak pages booked at once (0 under whole-request booking).
+    pub peak_pages: u64,
 }
 
 impl RequestRecord {
@@ -215,14 +292,34 @@ impl RequestRecord {
         self.first_token - self.arrival
     }
 
-    /// Mean inter-token latency after the first token.
+    /// Mean inter-token latency after the first token. Defensive: the
+    /// parse layer rejects `output == 0`, and this still never divides
+    /// by zero or leaks a non-finite value into report means.
     pub fn per_token(&self) -> f64 {
         if self.output > 1 {
-            (self.completed - self.first_token) / (self.output - 1) as f64
+            let v = (self.completed - self.first_token) / (self.output - 1) as f64;
+            if v.is_finite() { v } else { 0.0 }
         } else {
             0.0
         }
     }
+}
+
+/// Per-class slice of a serve run (only populated when the stream
+/// actually carries a non-default class, so default reports are
+/// byte-stable).
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: RequestClass,
+    /// Stream requests of this class (including rejected ones).
+    pub requests: usize,
+    pub completed: usize,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    /// Class-SLO-meeting completions of this class per Mcycle.
+    pub goodput: f64,
+    /// The TTFT SLO this class was held to.
+    pub slo_ttft: f64,
 }
 
 /// SLO summary of one serve run.
@@ -243,16 +340,24 @@ pub struct ServeReport {
     pub mean_per_token: f64,
     /// Completions per Mcycle.
     pub throughput: f64,
-    /// SLO-meeting completions per Mcycle.
+    /// SLO-meeting completions per Mcycle (each against its class SLO).
     pub goodput: f64,
     pub slo_ttft: f64,
     /// KV book the admission policy pushed against (words).
     pub kv_capacity_words: f64,
+    /// Booking granularity (0 = whole-request).
+    pub kv_page_words: u64,
+    /// Tokens re-prefetched after page spills across the run.
+    pub reprefill_tokens: u64,
+    /// Per-class breakouts; empty for single-class default streams.
+    pub class_breakdown: Vec<ClassReport>,
 }
 
 impl ServeReport {
     /// Text summary (also the byte-identity surface for the
-    /// determinism tests — keep formatting stable).
+    /// determinism tests — keep formatting stable; the class and page
+    /// lines only appear when those features are in play, so default
+    /// renders are byte-identical to the classless engine's).
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
@@ -272,6 +377,25 @@ impl ServeReport {
             "  throughput {:.4} req/Mcycle  goodput {:.4} req/Mcycle\n",
             self.throughput, self.goodput
         ));
+        for c in &self.class_breakdown {
+            s.push_str(&format!(
+                "  class {:<11}  requests {}  completed {}  TTFT p50 {:.0}  p99 {:.0}  \
+                 goodput {:.4} req/Mcycle  (SLO {:.0})\n",
+                c.class.name(),
+                c.requests,
+                c.completed,
+                c.p50_ttft,
+                c.p99_ttft,
+                c.goodput,
+                c.slo_ttft
+            ));
+        }
+        if self.kv_page_words > 0 {
+            s.push_str(&format!(
+                "  kv pages {} words each  re-prefill {} tokens\n",
+                self.kv_page_words, self.reprefill_tokens
+            ));
+        }
         s
     }
 }
@@ -299,6 +423,12 @@ struct Job {
     unit: usize,
     /// Admission sequence number — eviction preempts the newest.
     seq: usize,
+    /// Pages currently booked (paged mode only; 0 under whole-request).
+    pages: u64,
+    /// Spilled KV words awaiting re-prefill (paged mode only).
+    debt_words: u64,
+    /// High-water page booking for the record.
+    peak_pages: u64,
 }
 
 impl Job {
@@ -312,18 +442,60 @@ impl Job {
             evictions: 0,
             unit: 0,
             seq: 0,
+            pages: 0,
+            debt_words: 0,
+            peak_pages: 0,
         }
     }
 
-    /// Words this job books right now.
+    /// KV words this job's resident cache holds right now.
+    fn kv_words(&self) -> u64 {
+        (self.req.context + self.produced) * self.req.family.d_model()
+    }
+
+    /// Words this job books right now under whole-request booking.
     fn booked_words(&self) -> f64 {
         (self.req.context + self.produced) as f64 * self.req.family.d_model() as f64
     }
 
-    /// Words this job will book at completion.
+    /// Words this job will book at completion (whole-request booking).
     fn final_words(&self) -> f64 {
         (self.req.context + self.req.output) as f64 * self.req.family.d_model() as f64
     }
+
+    /// Pages needed to hold the current KV at `page` words per page.
+    fn need_pages(&self, page: u64) -> u64 {
+        div_ceil_u64(self.kv_words(), page)
+    }
+
+    /// Words currently on the books for this job.
+    fn booked_now(&self, page: u64) -> f64 {
+        if page == 0 { self.booked_words() } else { (self.pages * page) as f64 }
+    }
+
+    /// Words an admission of this job would book.
+    fn admit_words(&self, page: u64) -> f64 {
+        if page == 0 {
+            self.booked_words()
+        } else {
+            (self.need_pages(page) * page) as f64
+        }
+    }
+
+    /// Words this job will book at completion under the active
+    /// granularity — the outright-rejection bound.
+    fn final_booked(&self, page: u64) -> f64 {
+        if page == 0 {
+            self.final_words()
+        } else {
+            let words = (self.req.context + self.req.output) * self.req.family.d_model();
+            (div_ceil_u64(words, page) * page) as f64
+        }
+    }
+}
+
+fn div_ceil_u64(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
 }
 
 /// Aggregate KV book: `KV_DRAM_FACTOR` × the sum over units of their
@@ -345,91 +517,224 @@ pub fn kv_capacity_words(machine: &MachineConfig) -> f64 {
     onchip as f64 * KV_DRAM_FACTOR
 }
 
-/// Run the continuous-batching engine over an arrival-sorted stream.
-///
-/// `dynamic_bw` mirrors `EvalOptions::dynamic_bw` for the per-step
-/// schedule replays; `offered_load` is carried into the report (it is a
-/// property of the stream generator, not derivable from the requests
-/// once bursts overlap).
-pub fn simulate(
-    requests: &[Request],
-    machine: &MachineConfig,
-    costs: &ServingCosts,
-    dynamic_bw: bool,
-    offered_load: f64,
-    cfg: &ServeConfig,
-) -> ServeResult {
-    let capacity = kv_capacity_words(machine);
-    let hi_units = eligible_units(machine, ReuseClass::High);
-    let lo_units = eligible_units(machine, ReuseClass::Low);
-    let sopts = ScheduleOptions { dynamic_bw };
+/// Insert into the class-aware wait queue, ordered by (class rank,
+/// request id). For a single-class stream this is provably identical
+/// to the historical FIFO (arrivals append in id order; evictions land
+/// ahead of everything waiting because an active job's id is always
+/// below every waiting id).
+fn enqueue(waiting: &mut VecDeque<Job>, job: Job) {
+    let key = (job.req.class.rank(), job.req.id);
+    let pos = waiting.partition_point(|j| (j.req.class.rank(), j.req.id) <= key);
+    waiting.insert(pos, job);
+}
 
-    let mut waiting: VecDeque<Job> = VecDeque::new();
-    let mut active: Vec<Job> = Vec::new();
-    let mut records: Vec<RequestRecord> = Vec::new();
-    let mut booked = 0.0f64;
-    let mut rejected = 0usize;
-    let mut evictions_total = 0usize;
-    let mut next_arrival = 0usize;
-    let mut admit_seq = 0usize;
-    let (mut rr_hi, mut rr_lo) = (0usize, 0usize);
-    let mut t = 0.0f64;
+/// Pick a unit for the next op: blind rotation, or rotation over the
+/// pressure-ranked survivors. Free function (not a method) so callers
+/// can borrow disjoint engine fields.
+fn place(
+    units: &[usize],
+    ctr: &mut usize,
+    placement: PlacementPolicy,
+    pressure: &[f64],
+) -> usize {
+    let i = *ctr;
+    *ctr += 1;
+    match placement {
+        PlacementPolicy::RoundRobin => units[i % units.len()],
+        PlacementPolicy::Pressure => {
+            let ranked = pressure_ordered(units, pressure);
+            ranked[i % ranked.len()]
+        }
+    }
+}
 
-    loop {
-        // Arrivals up to the clock enter the FIFO; a request that could
-        // never fit even alone is rejected outright (otherwise it would
-        // starve the queue behind it forever).
-        while next_arrival < requests.len() && requests[next_arrival].arrival <= t {
-            let r = requests[next_arrival].clone();
-            next_arrival += 1;
-            if Job::new(r.clone()).final_words() > capacity {
-                rejected += 1;
+/// Top a paged job's booking up to its current KV need (covers decode
+/// growth, re-booking after a KV re-fetch, and prefill completion after
+/// a partial spill).
+fn top_up_pages(job: &mut Job, booked: &mut f64, page: u64) {
+    let need = job.need_pages(page);
+    if need > job.pages {
+        *booked += ((need - job.pages) * page) as f64;
+        job.pages = need;
+    }
+    job.peak_pages = job.peak_pages.max(job.pages);
+}
+
+/// What a job's op this step was — drives the post-replay advance.
+#[derive(Clone, Copy)]
+enum StepKind {
+    Prefill,
+    /// KV re-fetch of this many tokens after a page spill.
+    Refetch(u64),
+    /// Decode chunk of this many tokens.
+    Decode(u64),
+}
+
+/// The continuous-batching state machine. `simulate` drives it to
+/// completion; unit tests drive [`Engine::step`] directly to assert
+/// per-step invariants (booking conservation, eviction bookkeeping)
+/// under doctored capacities.
+struct Engine<'a> {
+    requests: &'a [Request],
+    machine: &'a MachineConfig,
+    costs: &'a ServingCosts,
+    cfg: &'a ServeConfig,
+    sopts: ScheduleOptions,
+    capacity: f64,
+    hi_units: Vec<usize>,
+    lo_units: Vec<usize>,
+    waiting: VecDeque<Job>,
+    active: Vec<Job>,
+    records: Vec<RequestRecord>,
+    booked: f64,
+    rejected: usize,
+    evictions_total: usize,
+    reprefill_tokens: u64,
+    next_arrival: usize,
+    admit_seq: usize,
+    rr_hi: usize,
+    rr_lo: usize,
+    /// Decayed queue-delay/latency ratio per unit (pressure placement).
+    unit_pressure: Vec<f64>,
+    t: f64,
+}
+
+impl<'a> Engine<'a> {
+    fn new(
+        requests: &'a [Request],
+        machine: &'a MachineConfig,
+        costs: &'a ServingCosts,
+        dynamic_bw: bool,
+        cfg: &'a ServeConfig,
+    ) -> Result<Engine<'a>, String> {
+        let capacity = kv_capacity_words(machine);
+        Engine::with_capacity(requests, machine, costs, dynamic_bw, cfg, capacity)
+    }
+
+    /// Like [`Engine::new`] but with an explicit KV book — the
+    /// forced-pressure test entry point.
+    fn with_capacity(
+        requests: &'a [Request],
+        machine: &'a MachineConfig,
+        costs: &'a ServingCosts,
+        dynamic_bw: bool,
+        cfg: &'a ServeConfig,
+        capacity: f64,
+    ) -> Result<Engine<'a>, String> {
+        if !capacity.is_finite() || capacity <= 0.0 {
+            return Err(format!(
+                "serving KV capacity is {capacity:.0} words — every on-chip level of \
+                 every sub-accelerator is unbounded, so admission would silently \
+                 reject 100% of requests; serve needs a machine with at least one \
+                 bounded buffer level"
+            ));
+        }
+        if cfg.decode_chunk == 0 {
+            return Err("decode chunk must be at least 1 token".into());
+        }
+        for r in requests {
+            if r.context == 0 || r.output == 0 {
+                return Err(format!(
+                    "request {}: context and output must both be >= 1 token (got \
+                     context {}, output {}) — zero-length requests would poison \
+                     per-token latency",
+                    r.id, r.context, r.output
+                ));
+            }
+        }
+        Ok(Engine {
+            requests,
+            machine,
+            costs,
+            cfg,
+            sopts: ScheduleOptions { dynamic_bw },
+            capacity,
+            hi_units: eligible_units(machine, ReuseClass::High),
+            lo_units: eligible_units(machine, ReuseClass::Low),
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            records: Vec::new(),
+            booked: 0.0,
+            rejected: 0,
+            evictions_total: 0,
+            reprefill_tokens: 0,
+            next_arrival: 0,
+            admit_seq: 0,
+            rr_hi: 0,
+            rr_lo: 0,
+            unit_pressure: vec![0.0; machine.sub_accels.len()],
+            t: 0.0,
+        })
+    }
+
+    /// One engine iteration: ingest arrivals, admit, schedule a step,
+    /// advance, preempt. Returns `false` once everything has drained.
+    fn step(&mut self) -> bool {
+        let page = self.cfg.kv_page_words;
+
+        // Arrivals up to the clock enter the class-aware queue; a
+        // request that could never fit even alone is rejected outright
+        // (otherwise it would starve the queue behind it forever).
+        while self.next_arrival < self.requests.len()
+            && self.requests[self.next_arrival].arrival <= self.t
+        {
+            let r = self.requests[self.next_arrival].clone();
+            self.next_arrival += 1;
+            if Job::new(r.clone()).final_booked(page) > self.capacity {
+                self.rejected += 1;
                 continue;
             }
-            waiting.push_back(Job::new(r));
+            enqueue(&mut self.waiting, Job::new(r));
         }
 
-        // FIFO admission under the books. An empty machine always
-        // admits its queue head — progress over strict accounting.
-        while let Some(front) = waiting.front() {
-            if !active.is_empty() && booked + front.booked_words() > capacity {
+        // Class-ordered admission under the books. An empty machine
+        // always admits its queue head — progress over strict
+        // accounting.
+        while let Some(front) = self.waiting.front() {
+            if !self.active.is_empty() && self.booked + front.admit_words(page) > self.capacity
+            {
                 break;
             }
-            let mut job = waiting.pop_front().unwrap();
-            booked += job.booked_words();
-            if job.admitted.is_nan() {
-                job.admitted = t;
-            }
-            job.seq = admit_seq;
-            admit_seq += 1;
-            job.unit = if job.prefilled {
-                rr_lo += 1;
-                lo_units[(rr_lo - 1) % lo_units.len()]
+            let mut job = self.waiting.pop_front().unwrap();
+            if page == 0 {
+                self.booked += job.booked_words();
             } else {
-                rr_hi += 1;
-                hi_units[(rr_hi - 1) % hi_units.len()]
+                job.pages = job.need_pages(page);
+                job.peak_pages = job.peak_pages.max(job.pages);
+                self.booked += (job.pages * page) as f64;
+            }
+            if job.admitted.is_nan() {
+                job.admitted = self.t;
+            }
+            job.seq = self.admit_seq;
+            self.admit_seq += 1;
+            job.unit = if job.prefilled {
+                place(&self.lo_units, &mut self.rr_lo, self.cfg.placement, &self.unit_pressure)
+            } else {
+                place(&self.hi_units, &mut self.rr_hi, self.cfg.placement, &self.unit_pressure)
             };
-            active.push(job);
+            self.active.push(job);
         }
 
-        if active.is_empty() {
+        if self.active.is_empty() {
             // Admission drained: nothing in flight means nothing
             // waiting either. Jump to the next arrival or finish.
-            if next_arrival < requests.len() {
-                t = t.max(requests[next_arrival].arrival);
-                continue;
+            if self.next_arrival < self.requests.len() {
+                self.t = self.t.max(self.requests[self.next_arrival].arrival);
+                return true;
             }
-            break;
+            return false;
         }
 
-        // One op per in-flight request: whole prefill, or one decode
-        // chunk (the first chunk is exactly one token so TTFT is real).
+        // One op per in-flight request: whole prefill, a KV re-fetch of
+        // spilled pages, or one decode chunk (the first chunk is
+        // exactly one token so TTFT is real).
         let mut cascade = Cascade::new("serve_step");
-        let mut stats: Vec<OpStats> = Vec::with_capacity(active.len());
-        let mut assignment: Vec<usize> = Vec::with_capacity(active.len());
-        let mut step_tokens: Vec<u64> = Vec::with_capacity(active.len());
-        for job in &active {
-            let (op, cost, tokens) = if !job.prefilled {
+        let mut stats: Vec<OpStats> = Vec::with_capacity(self.active.len());
+        let mut assignment: Vec<usize> = Vec::with_capacity(self.active.len());
+        let mut kinds: Vec<StepKind> = Vec::with_capacity(self.active.len());
+        for job in &self.active {
+            let (op, cost, kind) = if !job.prefilled {
                 let d = job.req.family.d_model();
                 (
                     TensorOp::gemm(
@@ -439,14 +744,30 @@ pub fn simulate(
                         d,
                         d,
                     ),
-                    costs.prefill_cycles(&job.req),
-                    0,
+                    self.costs.prefill_cycles(&job.req),
+                    StepKind::Prefill,
+                )
+            } else if page > 0 && job.debt_words > 0 {
+                // Re-fetch spilled KV before decoding resumes: the
+                // measured cost of a page-granular preemption.
+                let d = job.req.family.d_model();
+                let tokens = div_ceil_u64(job.debt_words, d);
+                (
+                    TensorOp::gemm(
+                        &format!("r{}.refetch", job.req.id),
+                        Phase::Prefill,
+                        tokens,
+                        d,
+                        d,
+                    ),
+                    self.costs.family(job.req.family).prefill_per_token * tokens as f64,
+                    StepKind::Refetch(tokens),
                 )
             } else {
                 let tokens = if job.produced == 0 {
                     1
                 } else {
-                    cfg.decode_chunk.min(job.req.output - job.produced)
+                    self.cfg.decode_chunk.min(job.req.output - job.produced)
                 };
                 let f = job.req.family;
                 let kv = job.req.context + job.produced;
@@ -459,8 +780,8 @@ pub fn simulate(
                         f.d_model() / f.heads(),
                         kv,
                     ),
-                    costs.decode_chunk_cycles(f, tokens, kv),
-                    tokens,
+                    self.costs.decode_chunk_cycles(f, tokens, kv),
+                    StepKind::Decode(tokens),
                 )
             };
             cascade.push(op);
@@ -468,100 +789,234 @@ pub fn simulate(
             st.cycles = cost;
             stats.push(st);
             assignment.push(job.unit);
-            step_tokens.push(tokens);
+            kinds.push(kind);
         }
 
         let refs: Vec<&OpStats> = stats.iter().collect();
-        let mut oracle = ScheduleOracle::new(&cascade, machine, &sopts);
+        let mut oracle = ScheduleOracle::new(&cascade, self.machine, &self.sopts);
         let makespan = oracle.replay(&assignment, &refs);
         let finish: Vec<f64> = oracle
             .queue_delays()
             .iter()
             .zip(oracle.latencies())
-            .map(|(d, l)| t + d + l)
+            .map(|(d, l)| self.t + d + l)
             .collect();
 
-        // Advance every in-flight request by its step op.
-        let mut still_active: Vec<Job> = Vec::with_capacity(active.len());
-        for (i, mut job) in active.drain(..).enumerate() {
-            let fin = finish[i];
-            if !job.prefilled {
-                job.prefilled = true;
-                rr_lo += 1;
-                job.unit = lo_units[(rr_lo - 1) % lo_units.len()];
-                still_active.push(job);
-                continue;
+        // Feed the replay's arbitration back into placement: each
+        // unit's pressure is its decayed queue-delay/latency ratio.
+        // Only maintained under the pressure policy, so the default
+        // path does no extra float work.
+        if self.cfg.placement == PlacementPolicy::Pressure {
+            for p in self.unit_pressure.iter_mut() {
+                *p *= 0.5;
             }
-            let tokens = step_tokens[i];
-            if job.produced == 0 {
-                job.first_token = fin;
-            }
-            job.produced += tokens;
-            booked += tokens as f64 * job.req.family.d_model() as f64;
-            if job.produced >= job.req.output {
-                booked -= job.booked_words();
-                records.push(RequestRecord {
-                    id: job.req.id,
-                    family: job.req.family,
-                    arrival: job.req.arrival,
-                    context: job.req.context,
-                    output: job.req.output,
-                    admitted: job.admitted,
-                    first_token: job.first_token,
-                    completed: fin,
-                    evictions: job.evictions,
-                });
-            } else {
-                still_active.push(job);
+            for (i, (d, l)) in
+                oracle.queue_delays().iter().zip(oracle.latencies()).enumerate()
+            {
+                self.unit_pressure[assignment[i]] += d / l.max(1e-9);
             }
         }
-        active = still_active;
 
-        // Decode growth may overflow the books: preempt the newest
-        // admission (produced tokens kept) until they balance — but
-        // never the last one, so the machine always drains.
-        while booked > capacity && active.len() > 1 {
-            let newest = active
+        // Advance every in-flight request by its step op.
+        let mut still_active: Vec<Job> = Vec::with_capacity(self.active.len());
+        for (i, mut job) in std::mem::take(&mut self.active).into_iter().enumerate() {
+            let fin = finish[i];
+            match kinds[i] {
+                StepKind::Prefill => {
+                    job.prefilled = true;
+                    job.unit = place(
+                        &self.lo_units,
+                        &mut self.rr_lo,
+                        self.cfg.placement,
+                        &self.unit_pressure,
+                    );
+                    if page > 0 {
+                        top_up_pages(&mut job, &mut self.booked, page);
+                    }
+                    still_active.push(job);
+                }
+                StepKind::Refetch(tokens) => {
+                    self.reprefill_tokens += tokens;
+                    job.debt_words = 0;
+                    top_up_pages(&mut job, &mut self.booked, page);
+                    still_active.push(job);
+                }
+                StepKind::Decode(tokens) => {
+                    if job.produced == 0 {
+                        job.first_token = fin;
+                    }
+                    job.produced += tokens;
+                    if page == 0 {
+                        self.booked += tokens as f64 * job.req.family.d_model() as f64;
+                    } else {
+                        top_up_pages(&mut job, &mut self.booked, page);
+                    }
+                    if job.produced >= job.req.output {
+                        self.booked -= job.booked_now(page);
+                        self.records.push(RequestRecord {
+                            id: job.req.id,
+                            family: job.req.family,
+                            class: job.req.class,
+                            arrival: job.req.arrival,
+                            context: job.req.context,
+                            output: job.req.output,
+                            admitted: job.admitted,
+                            first_token: job.first_token,
+                            completed: fin,
+                            evictions: job.evictions,
+                            peak_pages: job.peak_pages,
+                        });
+                    } else {
+                        still_active.push(job);
+                    }
+                }
+            }
+        }
+        self.active = still_active;
+
+        // Growth may overflow the books: preempt the newest admission
+        // of the lowest class (produced tokens kept) until they
+        // balance — but never the last one, so the machine always
+        // drains even when the lone survivor outgrows capacity. Under
+        // paged booking the preemption is page-granular: spill one
+        // page at a time, and only fully evict a request once its last
+        // page is gone; a partially spilled request stays resident and
+        // owes a re-fetch.
+        while self.booked > self.capacity && self.active.len() > 1 {
+            let victim = self
+                .active
                 .iter()
                 .enumerate()
-                .max_by_key(|(_, j)| j.seq)
+                .max_by_key(|(_, j)| (j.req.class.rank(), j.seq))
                 .map(|(i, _)| i)
                 .unwrap();
-            let mut job = active.swap_remove(newest);
-            booked -= job.booked_words();
-            job.evictions += 1;
-            evictions_total += 1;
-            waiting.push_front(job);
+            if page == 0 {
+                let mut job = self.active.swap_remove(victim);
+                self.booked -= job.booked_words();
+                job.evictions += 1;
+                self.evictions_total += 1;
+                enqueue(&mut self.waiting, job);
+            } else {
+                let job = &mut self.active[victim];
+                job.pages -= 1;
+                self.booked -= page as f64;
+                if job.prefilled {
+                    // Only resident KV needs re-fetching; an unprefilled
+                    // job's prefill rebuilds its cache anyway.
+                    job.debt_words = (job.debt_words + page).min(job.kv_words());
+                }
+                if job.pages == 0 {
+                    let mut job = self.active.swap_remove(victim);
+                    job.evictions += 1;
+                    self.evictions_total += 1;
+                    enqueue(&mut self.waiting, job);
+                }
+            }
         }
 
-        t += makespan;
+        self.t += makespan;
+        true
     }
 
-    let span = records
-        .iter()
-        .map(|r| r.completed)
-        .fold(t, f64::max)
-        .max(1.0);
-    let mut ttfts: Vec<f64> = records.iter().map(RequestRecord::ttft).collect();
-    ttfts.sort_by(f64::total_cmp);
-    let good = records.iter().filter(|r| r.ttft() <= cfg.slo_ttft).count();
-    let per_token_sum: f64 = records.iter().map(RequestRecord::per_token).sum();
-    let report = ServeReport {
-        offered_load,
-        requests: requests.len(),
-        completed: records.len(),
-        rejected,
-        evictions: evictions_total,
-        span_cycles: span,
-        p50_ttft: percentile(&ttfts, 50.0),
-        p99_ttft: percentile(&ttfts, 99.0),
-        mean_per_token: if records.is_empty() { 0.0 } else { per_token_sum / records.len() as f64 },
-        throughput: records.len() as f64 * 1.0e6 / span,
-        goodput: good as f64 * 1.0e6 / span,
-        slo_ttft: cfg.slo_ttft,
-        kv_capacity_words: capacity,
-    };
-    ServeResult { records, report }
+    /// Assemble the report. Consumes the engine.
+    fn finish(self, offered_load: f64) -> ServeResult {
+        let records = self.records;
+        let cfg = self.cfg;
+        let span = records
+            .iter()
+            .map(|r| r.completed)
+            .fold(self.t, f64::max)
+            .max(1.0);
+        let mut ttfts: Vec<f64> = records.iter().map(RequestRecord::ttft).collect();
+        ttfts.sort_by(f64::total_cmp);
+        let good = records.iter().filter(|r| r.ttft() <= cfg.slo_for(r.class)).count();
+        let per_token_sum: f64 = records.iter().map(RequestRecord::per_token).sum();
+
+        // Per-class breakouts only when the stream actually uses a
+        // non-default class — default reports stay byte-stable.
+        let mut class_breakdown = Vec::new();
+        if self.requests.iter().any(|r| r.class != RequestClass::Interactive) {
+            for class in RequestClass::ALL {
+                let total = self.requests.iter().filter(|r| r.class == class).count();
+                if total == 0 {
+                    continue;
+                }
+                let recs: Vec<&RequestRecord> =
+                    records.iter().filter(|r| r.class == class).collect();
+                let mut tt: Vec<f64> = recs.iter().map(|r| r.ttft()).collect();
+                tt.sort_by(f64::total_cmp);
+                let slo = cfg.slo_for(class);
+                let class_good = recs.iter().filter(|r| r.ttft() <= slo).count();
+                class_breakdown.push(ClassReport {
+                    class,
+                    requests: total,
+                    completed: recs.len(),
+                    p50_ttft: percentile(&tt, 50.0),
+                    p99_ttft: percentile(&tt, 99.0),
+                    goodput: class_good as f64 * 1.0e6 / span,
+                    slo_ttft: slo,
+                });
+            }
+        }
+
+        let report = ServeReport {
+            offered_load,
+            requests: self.requests.len(),
+            completed: records.len(),
+            rejected: self.rejected,
+            evictions: self.evictions_total,
+            span_cycles: span,
+            p50_ttft: percentile(&ttfts, 50.0),
+            p99_ttft: percentile(&ttfts, 99.0),
+            mean_per_token: if records.is_empty() {
+                0.0
+            } else {
+                per_token_sum / records.len() as f64
+            },
+            throughput: records.len() as f64 * 1.0e6 / span,
+            goodput: good as f64 * 1.0e6 / span,
+            slo_ttft: cfg.slo_ttft,
+            kv_capacity_words: self.capacity,
+            kv_page_words: cfg.kv_page_words,
+            reprefill_tokens: self.reprefill_tokens,
+            class_breakdown,
+        };
+        ServeResult { records, report }
+    }
+
+    /// Bitwise booking conservation: the incremental book equals the
+    /// sum over in-flight jobs of their current booking. Holds exactly
+    /// (not just approximately) because every booked quantity is an
+    /// integer-valued f64 below 2^53.
+    #[cfg(test)]
+    fn booked_matches_active(&self) -> bool {
+        let page = self.cfg.kv_page_words;
+        let sum: f64 = self.active.iter().map(|j| j.booked_now(page)).sum();
+        sum.to_bits() == self.booked.to_bits()
+    }
+}
+
+/// Run the continuous-batching engine over an arrival-sorted stream.
+///
+/// `dynamic_bw` mirrors `EvalOptions::dynamic_bw` for the per-step
+/// schedule replays; `offered_load` is carried into the report (it is a
+/// property of the stream generator, not derivable from the requests
+/// once bursts overlap).
+///
+/// Errors loudly (instead of returning an empty-but-plausible report)
+/// when the machine's KV book is zero — every on-chip level unbounded —
+/// or when a request has a zero context/output length.
+pub fn simulate(
+    requests: &[Request],
+    machine: &MachineConfig,
+    costs: &ServingCosts,
+    dynamic_bw: bool,
+    offered_load: f64,
+    cfg: &ServeConfig,
+) -> Result<ServeResult, String> {
+    let mut engine = Engine::new(requests, machine, costs, dynamic_bw, cfg)?;
+    while engine.step() {}
+    Ok(engine.finish(offered_load))
 }
 
 /// Nearest-rank percentile of an ascending-sorted slice (0.0 when
@@ -620,6 +1075,7 @@ mod tests {
         synthesize(&StreamParams {
             kind: ArrivalKind::Poisson,
             mix: RequestFamily::ALL.iter().map(|&f| (f, 1.0)).collect(),
+            classes: vec![],
             load,
             requests: n,
             seed: 7,
@@ -627,10 +1083,37 @@ mod tests {
         .unwrap()
     }
 
+    /// A small hand-built llama2 request (context 64, output 32 —
+    /// 393216 final KV words), for forced-pressure scenarios.
+    fn req(id: usize, arrival: f64, class: RequestClass) -> Request {
+        Request {
+            id,
+            arrival,
+            family: RequestFamily::Llama2,
+            context: 64,
+            output: 32,
+            class,
+        }
+    }
+
+    /// Drive an engine to completion under a doctored capacity,
+    /// asserting bitwise booking conservation after every step.
+    fn run_pressured(reqs: &[Request], capacity: f64, cfg: &ServeConfig) -> ServeResult {
+        let m = machine();
+        let costs = test_costs();
+        let mut e = Engine::with_capacity(reqs, &m, &costs, true, cfg, capacity).unwrap();
+        while e.step() {
+            assert!(e.booked_matches_active(), "booked diverged from Σ active bookings");
+        }
+        assert!(e.booked_matches_active());
+        e.finish(0.0)
+    }
+
     #[test]
     fn every_unrejected_request_completes() {
         let reqs = stream(2.0, 30);
-        let r = simulate(&reqs, &machine(), &test_costs(), true, 2.0, &ServeConfig::default());
+        let r = simulate(&reqs, &machine(), &test_costs(), true, 2.0, &ServeConfig::default())
+            .unwrap();
         assert_eq!(r.report.completed + r.report.rejected, reqs.len());
         for rec in &r.records {
             assert!(rec.ttft() >= 0.0, "request {} has negative TTFT", rec.id);
@@ -643,17 +1126,36 @@ mod tests {
     fn report_is_bit_identical_across_runs() {
         let reqs = stream(2.0, 30);
         let m = machine();
-        let a = simulate(&reqs, &m, &test_costs(), true, 2.0, &ServeConfig::default());
-        let b = simulate(&reqs, &m, &test_costs(), true, 2.0, &ServeConfig::default());
+        let a = simulate(&reqs, &m, &test_costs(), true, 2.0, &ServeConfig::default()).unwrap();
+        let b = simulate(&reqs, &m, &test_costs(), true, 2.0, &ServeConfig::default()).unwrap();
         assert_eq!(a.report.render(), b.report.render());
         assert_eq!(a.report.p99_ttft.to_bits(), b.report.p99_ttft.to_bits());
         assert_eq!(a.report.goodput.to_bits(), b.report.goodput.to_bits());
     }
 
     #[test]
+    fn default_render_shape_is_pinned() {
+        // The byte-stable-defaults contract: a classless, unpaged run
+        // renders exactly the five historical lines — no class
+        // breakdown, no page line.
+        let reqs = stream(2.0, 10);
+        let r = simulate(&reqs, &machine(), &test_costs(), true, 2.0, &ServeConfig::default())
+            .unwrap();
+        let text = r.report.render();
+        assert_eq!(text.lines().count(), 5, "default render grew lines:\n{text}");
+        assert!(!text.contains("class "), "default render leaked class lines:\n{text}");
+        assert!(!text.contains("kv pages"), "default render leaked page line:\n{text}");
+        assert!(r.report.class_breakdown.is_empty());
+        assert_eq!(r.report.kv_page_words, 0);
+        assert_eq!(r.report.reprefill_tokens, 0);
+        assert!(r.records.iter().all(|rec| rec.peak_pages == 0));
+    }
+
+    #[test]
     fn goodput_never_exceeds_throughput() {
         let reqs = stream(4.0, 40);
-        let r = simulate(&reqs, &machine(), &test_costs(), true, 4.0, &ServeConfig::default());
+        let r = simulate(&reqs, &machine(), &test_costs(), true, 4.0, &ServeConfig::default())
+            .unwrap();
         assert!(r.report.goodput <= r.report.throughput + 1e-12);
         assert!(r.report.p50_ttft <= r.report.p99_ttft);
     }
@@ -664,8 +1166,10 @@ mod tests {
         // somewhere: the run finishes sooner in absolute terms, and
         // tail TTFT cannot dip below the uncontended median.
         let m = machine();
-        let light = simulate(&stream(0.5, 30), &m, &test_costs(), true, 0.5, &ServeConfig::default());
-        let heavy = simulate(&stream(8.0, 30), &m, &test_costs(), true, 8.0, &ServeConfig::default());
+        let light = simulate(&stream(0.5, 30), &m, &test_costs(), true, 0.5, &ServeConfig::default())
+            .unwrap();
+        let heavy = simulate(&stream(8.0, 30), &m, &test_costs(), true, 8.0, &ServeConfig::default())
+            .unwrap();
         assert!(
             heavy.report.span_cycles < light.report.span_cycles,
             "heavy span {} >= light span {}",
@@ -701,7 +1205,238 @@ mod tests {
         // stream that overlaps heavily: everyone still finishes, and
         // the eviction counter moves only when capacity binds.
         let reqs = stream(8.0, 20);
-        let r = simulate(&reqs, &machine(), &test_costs(), true, 8.0, &ServeConfig::default());
+        let r = simulate(&reqs, &machine(), &test_costs(), true, 8.0, &ServeConfig::default())
+            .unwrap();
         assert_eq!(r.report.completed + r.report.rejected, reqs.len());
+    }
+
+    #[test]
+    fn zero_capacity_machine_is_a_loud_error() {
+        // Regression: a machine whose every on-chip level is unbounded
+        // has a zero KV book; the pre-fix engine silently rejected 100%
+        // of requests and reported an empty-but-plausible summary.
+        let mut m = machine();
+        for sa in &mut m.sub_accels {
+            for level in &mut sa.spec.levels {
+                level.size_words = u64::MAX;
+            }
+        }
+        assert_eq!(kv_capacity_words(&m), 0.0);
+        let err = simulate(&stream(2.0, 5), &m, &test_costs(), true, 2.0, &ServeConfig::default())
+            .unwrap_err();
+        assert!(err.contains("unbounded"), "{err}");
+        assert!(err.contains("bounded buffer level"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_requests_are_a_loud_error() {
+        // Defense in depth behind the trace loader's parse-time
+        // rejection: the engine itself refuses zero-length requests
+        // instead of dividing per-token latency by zero.
+        let mut zero_out = vec![req(0, 0.0, RequestClass::Interactive)];
+        zero_out[0].output = 0;
+        let err = simulate(&zero_out, &machine(), &test_costs(), true, 2.0, &ServeConfig::default())
+            .unwrap_err();
+        assert!(err.contains("output 0"), "{err}");
+        let mut zero_ctx = vec![req(0, 0.0, RequestClass::Interactive)];
+        zero_ctx[0].context = 0;
+        let err = simulate(&zero_ctx, &machine(), &test_costs(), true, 2.0, &ServeConfig::default())
+            .unwrap_err();
+        assert!(err.contains("context 0"), "{err}");
+    }
+
+    #[test]
+    fn booking_conserves_under_whole_request_pressure() {
+        // Two requests fit at admission but not at full growth, so the
+        // run is forced through evictions; `run_pressured` asserts the
+        // bitwise conservation invariant after every step.
+        let reqs: Vec<Request> =
+            (0..6).map(|i| req(i, i as f64 * 1000.0, RequestClass::Interactive)).collect();
+        let r = run_pressured(&reqs, 600_000.0, &ServeConfig::default());
+        assert_eq!(r.report.completed, 6);
+        assert!(r.report.evictions > 0, "scenario never exercised eviction");
+    }
+
+    #[test]
+    fn booking_conserves_under_paged_pressure() {
+        // One-token pages (4096 words for llama2) under the same
+        // squeeze: page-granular spills, re-fetch debt, and incremental
+        // growth all keep the books bitwise-consistent, and the spills
+        // show up as measured re-prefill tokens.
+        let reqs: Vec<Request> =
+            (0..6).map(|i| req(i, i as f64 * 1000.0, RequestClass::Interactive)).collect();
+        let cfg = ServeConfig { kv_page_words: 4096, ..ServeConfig::default() };
+        let r = run_pressured(&reqs, 600_000.0, &cfg);
+        assert_eq!(r.report.completed, 6);
+        assert!(r.report.evictions > 0, "scenario never exercised eviction");
+        assert!(r.report.reprefill_tokens > 0, "paged spills never charged a re-fetch");
+        assert!(r.records.iter().all(|rec| rec.peak_pages > 0));
+        assert_eq!(r.report.kv_page_words, 4096);
+        // Paged runs are deterministic too.
+        let again = run_pressured(&reqs, 600_000.0, &cfg);
+        assert_eq!(r.report.render(), again.report.render());
+    }
+
+    #[test]
+    fn eviction_keeps_admitted_time_and_produced_tokens() {
+        let reqs: Vec<Request> =
+            (0..6).map(|i| req(i, i as f64 * 1000.0, RequestClass::Interactive)).collect();
+        let m = machine();
+        let costs = test_costs();
+        let cfg = ServeConfig::default();
+        let mut e = Engine::with_capacity(&reqs, &m, &costs, true, &cfg, 600_000.0).unwrap();
+        // (id, original admitted, produced at eviction)
+        let mut observed: Option<(usize, f64, u64)> = None;
+        loop {
+            let alive = e.step();
+            if let Some((id, _, produced)) = observed {
+                // Once readmitted, the job resumes from its kept tokens.
+                if let Some(j) = e.active.iter().find(|j| j.req.id == id) {
+                    assert!(j.produced >= produced, "produced tokens were lost on eviction");
+                }
+            } else if let Some(j) =
+                e.waiting.iter().find(|j| j.evictions > 0 && j.produced > 0)
+            {
+                observed = Some((j.req.id, j.admitted, j.produced));
+            }
+            if !alive {
+                break;
+            }
+        }
+        let (id, admitted, produced) =
+            observed.expect("scenario must evict a mid-decode request");
+        assert!(produced > 0);
+        let r = e.finish(0.0);
+        let rec = r.records.iter().find(|rec| rec.id == id).unwrap();
+        assert!(rec.evictions >= 1);
+        assert_eq!(
+            rec.admitted.to_bits(),
+            admitted.to_bits(),
+            "re-admission overwrote the original admitted time"
+        );
+        assert_eq!(rec.output, 32, "request did not finish its full output");
+    }
+
+    #[test]
+    fn lone_survivor_over_capacity_still_drains() {
+        // Shrink the book out from under a lone in-flight request: the
+        // eviction loop must not spin (it never preempts the last job)
+        // and the request must still complete.
+        let reqs = vec![req(0, 0.0, RequestClass::Interactive)];
+        let m = machine();
+        let costs = test_costs();
+        let cfg = ServeConfig::default();
+        let mut e = Engine::with_capacity(&reqs, &m, &costs, true, &cfg, 500_000.0).unwrap();
+        assert!(e.step(), "first step admits and prefills");
+        // Mid-run the survivor's booking now exceeds the (shrunk) book.
+        e.capacity = 1000.0;
+        while e.step() {}
+        assert!(e.booked.to_bits() == 0.0f64.to_bits());
+        let r = e.finish(0.0);
+        assert_eq!(r.report.completed, 1);
+        assert_eq!(r.report.evictions, 0, "the lone survivor must never be preempted");
+    }
+
+    #[test]
+    fn interactive_p99_beats_fifo_under_pressure() {
+        // The pinned acceptance scenario: a KV-starved machine serving
+        // an interleaved interactive/batch stream. Class-aware
+        // admission must strictly improve interactive p99 TTFT over the
+        // classless FIFO ordering of the *same* requests.
+        let mixed: Vec<Request> = (0..12)
+            .map(|i| {
+                let class =
+                    if i % 2 == 1 { RequestClass::Interactive } else { RequestClass::Batch };
+                req(i, i as f64 * 500.0, class)
+            })
+            .collect();
+        let fifo: Vec<Request> = mixed
+            .iter()
+            .cloned()
+            .map(|mut r| {
+                r.class = RequestClass::Interactive;
+                r
+            })
+            .collect();
+        let capacity = 600_000.0; // ~1.5 requests — admission queues hard
+        let prio = run_pressured(&mixed, capacity, &ServeConfig::default());
+        let base = run_pressured(&fifo, capacity, &ServeConfig::default());
+        assert_eq!(prio.report.completed, 12);
+        assert_eq!(base.report.completed, 12);
+        let p99 = |res: &ServeResult| {
+            let mut tt: Vec<f64> = res
+                .records
+                .iter()
+                .filter(|r| r.id % 2 == 1)
+                .map(|r| r.ttft())
+                .collect();
+            tt.sort_by(f64::total_cmp);
+            percentile(&tt, 99.0)
+        };
+        assert!(
+            p99(&prio) < p99(&base),
+            "interactive p99 {} did not improve over FIFO {}",
+            p99(&prio),
+            p99(&base)
+        );
+        // And the mixed run reports per-class breakouts.
+        assert_eq!(prio.report.class_breakdown.len(), 2);
+        assert!(prio.report.render().contains("class interactive"));
+        assert!(prio.report.render().contains("class batch"));
+        assert!(base.report.class_breakdown.is_empty());
+    }
+
+    #[test]
+    fn batch_slo_feeds_goodput_and_breakdown() {
+        let mixed: Vec<Request> = (0..8)
+            .map(|i| {
+                let class =
+                    if i % 2 == 0 { RequestClass::Interactive } else { RequestClass::Batch };
+                req(i, i as f64 * 500.0, class)
+            })
+            .collect();
+        let tight = ServeConfig {
+            slo_ttft_batch: Some(1.0), // nothing meets a 1-cycle TTFT
+            ..ServeConfig::default()
+        };
+        let loose = ServeConfig::default();
+        let a = run_pressured(&mixed, 600_000.0, &tight);
+        let b = run_pressured(&mixed, 600_000.0, &loose);
+        let batch = |res: &ServeResult| {
+            res.report
+                .class_breakdown
+                .iter()
+                .find(|c| c.class == RequestClass::Batch)
+                .cloned()
+                .unwrap()
+        };
+        assert_eq!(batch(&a).goodput, 0.0);
+        assert!(batch(&b).goodput > 0.0);
+        assert_eq!(batch(&a).slo_ttft, 1.0);
+        // Overall goodput counts each class against its own SLO, so
+        // tightening the batch SLO lowers it.
+        assert!(a.report.goodput < b.report.goodput);
+    }
+
+    #[test]
+    fn pressure_placement_is_deterministic_and_complete() {
+        let reqs = stream(8.0, 20);
+        let cfg = ServeConfig { placement: PlacementPolicy::Pressure, ..ServeConfig::default() };
+        let m = machine();
+        let a = simulate(&reqs, &m, &test_costs(), true, 8.0, &cfg).unwrap();
+        let b = simulate(&reqs, &m, &test_costs(), true, 8.0, &cfg).unwrap();
+        assert_eq!(a.report.completed + a.report.rejected, reqs.len());
+        assert_eq!(a.report.render(), b.report.render());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.completed.to_bits(), y.completed.to_bits());
+        }
+    }
+
+    #[test]
+    fn placement_parse_is_loud() {
+        assert_eq!(PlacementPolicy::parse("rr").unwrap(), PlacementPolicy::RoundRobin);
+        assert_eq!(PlacementPolicy::parse("pressure").unwrap(), PlacementPolicy::Pressure);
+        let err = PlacementPolicy::parse("luck").unwrap_err();
+        assert!(err.contains("round_robin, pressure"), "{err}");
     }
 }

@@ -96,7 +96,9 @@ pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, max_iters: usize, mut 
             break;
         }
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (a zero-duration batch divided away)
+    // must not panic the whole bench run.
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     let timing = Timing {
         name: name.to_string(),

@@ -100,6 +100,49 @@ impl RequestFamily {
     }
 }
 
+/// Herald-style latency class. Admission orders the wait queue by
+/// (class, arrival): every `interactive` request is admitted before any
+/// `batch` request, and each class can carry its own TTFT SLO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum RequestClass {
+    /// Latency-sensitive traffic; admitted first. The default, so
+    /// streams that never mention classes behave exactly like the
+    /// classless FIFO engine did.
+    #[default]
+    Interactive,
+    /// Throughput traffic; yields the admission queue to interactive.
+    Batch,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 2] = [RequestClass::Interactive, RequestClass::Batch];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RequestClass, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Ok(RequestClass::Interactive),
+            "batch" => Ok(RequestClass::Batch),
+            other => Err(format!(
+                "unknown request class '{other}' (known: interactive, batch)"
+            )),
+        }
+    }
+
+    /// Admission rank: lower admits first.
+    pub fn rank(self) -> u8 {
+        match self {
+            RequestClass::Interactive => 0,
+            RequestClass::Batch => 1,
+        }
+    }
+}
+
 /// One serving request: arrives at `arrival` (cycles), prefills
 /// `context` tokens, then decodes `output` tokens.
 #[derive(Debug, Clone, PartialEq)]
@@ -113,6 +156,8 @@ pub struct Request {
     pub context: u64,
     /// Decode length in tokens.
     pub output: u64,
+    /// Latency class used for admission ordering and per-class SLOs.
+    pub class: RequestClass,
 }
 
 /// Synthetic arrival process shape.
@@ -152,16 +197,32 @@ impl ArrivalKind {
 /// Parse a workload mix: a bare family name (`llama2`) or a weighted
 /// list (`llama2:3,gqa:1,moe:1`). Weights must be finite and positive.
 pub fn parse_mix(s: &str) -> Result<Vec<(RequestFamily, f64)>, String> {
+    parse_weighted(s, "workload mix", "family", &RequestFamily::parse)
+}
+
+/// Parse a class mix: a bare class name (`interactive`) or a weighted
+/// list (`interactive:1,batch:3`). Same grammar and error shapes as the
+/// workload mix.
+pub fn parse_class_mix(s: &str) -> Result<Vec<(RequestClass, f64)>, String> {
+    parse_weighted(s, "class mix", "class", &RequestClass::parse)
+}
+
+fn parse_weighted<T: Copy + PartialEq>(
+    s: &str,
+    what: &str,
+    item: &str,
+    parse_item: &dyn Fn(&str) -> Result<T, String>,
+) -> Result<Vec<(T, f64)>, String> {
     let mut out = Vec::new();
     for part in s.split(',') {
         let part = part.trim();
         if part.is_empty() {
-            return Err(format!("workload mix '{s}': empty component"));
+            return Err(format!("{what} '{s}': empty component"));
         }
         let (name, weight) = match part.split_once(':') {
             Some((n, w)) => {
                 let weight: f64 = w.trim().parse().map_err(|_| {
-                    format!("workload mix component '{part}': weight '{w}' is not a number")
+                    format!("{what} component '{part}': weight '{w}' is not a number")
                 })?;
                 (n.trim(), weight)
             }
@@ -169,15 +230,15 @@ pub fn parse_mix(s: &str) -> Result<Vec<(RequestFamily, f64)>, String> {
         };
         if !weight.is_finite() || weight <= 0.0 {
             return Err(format!(
-                "workload mix component '{part}': weight must be finite and positive"
+                "{what} component '{part}': weight must be finite and positive"
             ));
         }
-        let family = RequestFamily::parse(name)
-            .map_err(|e| format!("workload mix component '{part}': {e}"))?;
-        if out.iter().any(|&(f, _)| f == family) {
-            return Err(format!("workload mix '{s}': family '{name}' listed twice"));
+        let parsed =
+            parse_item(name).map_err(|e| format!("{what} component '{part}': {e}"))?;
+        if out.iter().any(|&(f, _)| f == parsed) {
+            return Err(format!("{what} '{s}': {item} '{name}' listed twice"));
         }
-        out.push((family, weight));
+        out.push((parsed, weight));
     }
     Ok(out)
 }
@@ -187,6 +248,12 @@ pub fn parse_mix(s: &str) -> Result<Vec<(RequestFamily, f64)>, String> {
 pub struct StreamParams {
     pub kind: ArrivalKind,
     pub mix: Vec<(RequestFamily, f64)>,
+    /// Latency-class mix. Empty or a single `interactive` entry is the
+    /// classless default; a single non-default entry labels every
+    /// request; multiple entries draw per-request classes by weight
+    /// from a class-only RNG stream, so arrivals and lengths stay
+    /// bit-identical across class mixes.
+    pub classes: Vec<(RequestClass, f64)>,
     /// Offered load in requests per million cycles.
     pub load: f64,
     /// Stream length in requests.
@@ -209,6 +276,9 @@ pub fn synthesize(p: &StreamParams) -> Result<Vec<Request>, String> {
     }
     if p.mix.is_empty() {
         return Err("workload mix must name at least one family".into());
+    }
+    if p.classes.iter().any(|&(_, w)| !w.is_finite() || w <= 0.0) {
+        return Err("class mix weights must be finite and positive".into());
     }
     let rate = p.load / 1.0e6; // requests per cycle
     let mut rng = Rng::new(p.seed);
@@ -240,7 +310,45 @@ pub fn synthesize(p: &StreamParams) -> Result<Vec<Request>, String> {
         }
         ArrivalKind::Trace => unreachable!(),
     }
-    Ok(finalize(reqs))
+    let mut reqs = finalize(reqs);
+    assign_classes(&mut reqs, &p.classes, p.seed);
+    Ok(reqs)
+}
+
+/// Seed salt for the class-label RNG. Classes ride on their own stream
+/// (derived from the seed arithmetically, never from `Rng::fork`, which
+/// consumes parent state) so gap/shape draws — and therefore the whole
+/// default stream — are bit-identical whether or not classes are in
+/// play.
+const CLASS_SEED_SALT: u64 = 0xC1A5_5EED_BA7C_4A0B;
+
+/// Label requests with latency classes, in arrival order. An empty mix
+/// leaves the `Interactive` default untouched; a single-entry mix
+/// labels uniformly without drawing; a weighted mix draws per request.
+fn assign_classes(reqs: &mut [Request], classes: &[(RequestClass, f64)], seed: u64) {
+    match classes {
+        [] => {}
+        [(only, _)] => {
+            for r in reqs.iter_mut() {
+                r.class = *only;
+            }
+        }
+        mix => {
+            let total: f64 = mix.iter().map(|&(_, w)| w).sum();
+            let mut rng = Rng::new(seed ^ CLASS_SEED_SALT);
+            for r in reqs.iter_mut() {
+                let mut u = rng.next_f64() * total;
+                r.class = mix[mix.len() - 1].0;
+                for &(c, w) in mix {
+                    if u < w {
+                        r.class = c;
+                        break;
+                    }
+                    u -= w;
+                }
+            }
+        }
+    }
 }
 
 /// Draw one request: family by mix weight, context/output uniform in
@@ -263,7 +371,7 @@ fn draw_request(
     }
     let context = draw_len(family.base_context(), rng);
     let output = draw_len(family.base_output(), rng);
-    Request { id, arrival, family, context, output }
+    Request { id, arrival, family, context, output, class: RequestClass::Interactive }
 }
 
 fn draw_len(base: u64, rng: &mut Rng) -> u64 {
@@ -291,7 +399,10 @@ fn finalize(mut reqs: Vec<Request>) -> Vec<Request> {
 ///
 /// `arrival` is cycles (any order — the stream is sorted), `family` is
 /// one of `llama2 | gqa | moe`, `context`/`output` are positive token
-/// counts. Every malformed field gets its own loud, distinct error.
+/// counts, and the optional `class` is `interactive | batch` (default
+/// `interactive`). Every malformed field gets its own loud, distinct
+/// error — in particular `context: 0` / `output: 0` are rejected here
+/// rather than poisoning per-token latency downstream.
 pub fn load_trace(text: &str) -> Result<Vec<Request>, String> {
     let j = Json::parse(text).map_err(|e| format!("trace: {e}"))?;
     reject_unknown_keys(&j, &["requests"], "trace")?;
@@ -306,7 +417,7 @@ pub fn load_trace(text: &str) -> Result<Vec<Request>, String> {
     let mut reqs = Vec::with_capacity(arr.len());
     for (i, r) in arr.iter().enumerate() {
         let what = format!("trace request {i}");
-        reject_unknown_keys(r, &["arrival", "family", "context", "output"], &what)?;
+        reject_unknown_keys(r, &["arrival", "family", "context", "output", "class"], &what)?;
         let arrival = r
             .get("arrival")
             .and_then(Json::as_f64)
@@ -327,13 +438,29 @@ pub fn load_trace(text: &str) -> Result<Vec<Request>, String> {
             .get("output")
             .and_then(Json::as_u64)
             .ok_or(format!("{what}: 'output' must be a positive integer"))?;
+        // Zero lengths get errors distinct from missing/non-integer
+        // fields: a zero-output request would make the engine's forced
+        // first decode token divide per-token latency by zero, and a
+        // zero-context request books no KV yet still prefills.
         if context == 0 {
-            return Err(format!("{what}: 'context' must be a positive integer"));
+            return Err(format!(
+                "{what}: 'context' is 0 — a request must prefill at least one token"
+            ));
         }
         if output == 0 {
-            return Err(format!("{what}: 'output' must be a positive integer"));
+            return Err(format!(
+                "{what}: 'output' is 0 — a request must decode at least one token \
+                 (zero would poison per-token latency)"
+            ));
         }
-        reqs.push(Request { id: i, arrival, family, context, output });
+        let class = match r.get("class") {
+            None => RequestClass::Interactive,
+            Some(v) => v
+                .as_str()
+                .ok_or(format!("{what}: 'class' must be a string"))
+                .and_then(|s| RequestClass::parse(s).map_err(|e| format!("{what}: {e}")))?,
+        };
+        reqs.push(Request { id: i, arrival, family, context, output, class });
     }
     Ok(finalize(reqs))
 }
@@ -368,6 +495,7 @@ mod tests {
         synthesize(&StreamParams {
             kind: ArrivalKind::Poisson,
             mix: RequestFamily::ALL.iter().map(|&f| (f, 1.0)).collect(),
+            classes: vec![],
             load: 2.0,
             requests: 50,
             seed,
@@ -406,6 +534,7 @@ mod tests {
             synthesize(&StreamParams {
                 kind: ArrivalKind::Bursty,
                 mix: vec![(RequestFamily::Llama2, 1.0)],
+                classes: vec![],
                 load: 2.0,
                 requests: 50,
                 seed,
@@ -446,6 +575,7 @@ mod tests {
         let base = StreamParams {
             kind: ArrivalKind::Poisson,
             mix: vec![(RequestFamily::Llama2, 1.0)],
+            classes: vec![],
             load: 2.0,
             requests: 10,
             seed: 1,
@@ -456,8 +586,73 @@ mod tests {
         assert!(err.contains("request count"), "{err}");
         let err = synthesize(&StreamParams { mix: vec![], ..base.clone() }).unwrap_err();
         assert!(err.contains("mix"), "{err}");
+        let err = synthesize(&StreamParams {
+            classes: vec![(RequestClass::Batch, 0.0)],
+            ..base.clone()
+        })
+        .unwrap_err();
+        assert!(err.contains("class mix"), "{err}");
         let err = synthesize(&StreamParams { kind: ArrivalKind::Trace, ..base }).unwrap_err();
         assert!(err.contains("trace"), "{err}");
+    }
+
+    #[test]
+    fn class_mix_parses_and_rejects() {
+        assert_eq!(
+            parse_class_mix("interactive").unwrap(),
+            vec![(RequestClass::Interactive, 1.0)]
+        );
+        let m = parse_class_mix("interactive:1, batch:3").unwrap();
+        assert_eq!(m, vec![(RequestClass::Interactive, 1.0), (RequestClass::Batch, 3.0)]);
+        for (s, want) in [
+            ("", "empty component"),
+            ("batch:x", "is not a number"),
+            ("batch:0", "finite and positive"),
+            ("premium", "unknown request class"),
+            ("batch,batch", "listed twice"),
+        ] {
+            let err = parse_class_mix(s).unwrap_err();
+            assert!(err.contains(want), "class mix '{s}': got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
+    fn classes_ride_a_separate_stream() {
+        // Arrivals, families, and lengths must be bit-identical whether
+        // the stream is classless, uniformly labeled, or a weighted
+        // draw — only the class labels may differ.
+        let with = |classes: Vec<(RequestClass, f64)>| {
+            synthesize(&StreamParams {
+                kind: ArrivalKind::Poisson,
+                mix: vec![(RequestFamily::Llama2, 1.0)],
+                classes,
+                load: 2.0,
+                requests: 50,
+                seed: 7,
+            })
+            .unwrap()
+        };
+        let plain = with(vec![]);
+        let uniform = with(vec![(RequestClass::Batch, 1.0)]);
+        let mixed =
+            with(vec![(RequestClass::Interactive, 1.0), (RequestClass::Batch, 1.0)]);
+        assert!(plain.iter().all(|r| r.class == RequestClass::Interactive));
+        assert!(uniform.iter().all(|r| r.class == RequestClass::Batch));
+        assert!(mixed.iter().any(|r| r.class == RequestClass::Interactive));
+        assert!(mixed.iter().any(|r| r.class == RequestClass::Batch));
+        for ((a, b), c) in plain.iter().zip(&uniform).zip(&mixed) {
+            for r in [b, c] {
+                assert_eq!(a.arrival.to_bits(), r.arrival.to_bits());
+                assert_eq!(
+                    (a.family, a.context, a.output),
+                    (r.family, r.context, r.output)
+                );
+            }
+        }
+        // And the weighted draw itself is deterministic in the seed.
+        let again =
+            with(vec![(RequestClass::Interactive, 1.0), (RequestClass::Batch, 1.0)]);
+        assert!(mixed.iter().zip(&again).all(|(a, b)| a.class == b.class));
     }
 
     const TRACE: &str = r#"{"requests":[
@@ -473,6 +668,22 @@ mod tests {
         assert_eq!(reqs[0].id, 0);
         assert_eq!(reqs[1].family, RequestFamily::Gqa);
         assert!(reqs[0].arrival < reqs[1].arrival);
+        // No "class" key → everything defaults to interactive.
+        assert!(reqs.iter().all(|r| r.class == RequestClass::Interactive));
+    }
+
+    #[test]
+    fn trace_carries_per_request_classes() {
+        let doc = r#"{"requests":[
+            {"arrival": 0.0, "family": "llama2", "context": 8, "output": 4, "class": "batch"},
+            {"arrival": 1.0, "family": "llama2", "context": 8, "output": 4, "class": "interactive"},
+            {"arrival": 2.0, "family": "llama2", "context": 8, "output": 4}
+        ]}"#;
+        let reqs = load_trace(doc).unwrap();
+        assert_eq!(
+            reqs.iter().map(|r| r.class).collect::<Vec<_>>(),
+            vec![RequestClass::Batch, RequestClass::Interactive, RequestClass::Interactive]
+        );
     }
 
     #[test]
@@ -490,12 +701,17 @@ mod tests {
              "unknown request family"),
             (r#"{"requests": [{"arrival":0,"family":"llama2","output":1}]}"#,
              "'context' must be a positive integer"),
+            // Zero lengths are distinct from missing/non-integer fields.
             (r#"{"requests": [{"arrival":0,"family":"llama2","context":0,"output":1}]}"#,
-             "'context' must be a positive integer"),
+             "'context' is 0"),
             (r#"{"requests": [{"arrival":0,"family":"llama2","context":1,"output":0}]}"#,
-             "'output' must be a positive integer"),
+             "'output' is 0"),
             (r#"{"requests": [{"arrival":0,"family":"llama2","context":1,"output":1,"slo":9}]}"#,
              "unknown key 'slo'"),
+            (r#"{"requests": [{"arrival":0,"family":"llama2","context":1,"output":1,"class":3}]}"#,
+             "'class' must be a string"),
+            (r#"{"requests": [{"arrival":0,"family":"llama2","context":1,"output":1,"class":"gold"}]}"#,
+             "unknown request class"),
         ] {
             let err = load_trace(doc).unwrap_err();
             assert!(err.contains(want), "doc {doc}: got '{err}', want '{want}'");

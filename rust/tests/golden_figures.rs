@@ -223,6 +223,35 @@ fn golden_fig_serving_knee() {
     assert_golden("fig_serving_knee", &fig.render());
 }
 
+/// Per-class serving knee: the mixed-priority companion sweep. The
+/// structural invariants mirror the aggregate figure's (non-negative
+/// goodput, knees on the load grid), plus one figure-specific check:
+/// every taxonomy point contributes exactly one interactive and one
+/// batch series.
+#[test]
+fn golden_fig_serving_knee_class() {
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    let fig = figures::fig_serving_knee_class(&ev);
+    let interactive =
+        fig.series.iter().filter(|s| s.name.ends_with("[interactive]")).count();
+    let batch = fig.series.iter().filter(|s| s.name.ends_with("[batch]")).count();
+    assert_eq!(interactive, batch, "one series per class per taxonomy point");
+    assert_eq!(interactive + batch, fig.series.len());
+    for s in &fig.series {
+        for (label, v) in &s.rows {
+            assert!(*v >= 0.0, "negative value in {} at {label}: {v}", s.name);
+            if label == "knee" {
+                assert!(
+                    figures::SERVING_LOAD_GRID.contains(v),
+                    "knee of {} off the load grid: {v}",
+                    s.name
+                );
+            }
+        }
+    }
+    assert_golden("fig_serving_knee_class", &fig.render());
+}
+
 /// The serving engine's thread invariance: only the calibration probes
 /// fan out across workers, so the whole figure must render
 /// byte-identically for any worker count.
@@ -233,6 +262,12 @@ fn fig_serving_knee_byte_identical_across_thread_counts() {
     assert_eq!(
         serial, par,
         "serving figure must be byte-identical across worker counts"
+    );
+    let serial_c = figures::fig_serving_knee_class(&Evaluator::new(golden_opts(1))).render();
+    let par_c = figures::fig_serving_knee_class(&Evaluator::new(golden_opts(4))).render();
+    assert_eq!(
+        serial_c, par_c,
+        "per-class serving figure must be byte-identical across worker counts"
     );
 }
 

@@ -595,6 +595,116 @@ fn serve_json_streams_parseable_ndjson() {
     assert!(summary.get("goodput").unwrap().as_f64().is_some());
     // No text report mixed into the NDJSON stream.
     assert!(!stdout.contains("serving summary"), "text report leaked into NDJSON");
+    // The default schema is pinned: the new class/page keys appear ONLY
+    // behind their knobs, so default NDJSON stays byte-compatible.
+    for key in ["\"class\"", "\"pages\"", "\"kv_page_words\"", "\"classes\""] {
+        assert!(!stdout.contains(key), "default NDJSON grew {key}:\n{stdout}");
+    }
+}
+
+/// Class-mix and paged-booking knobs at the binary level: the report
+/// grows the per-class breakdown and page line, the NDJSON records the
+/// per-request class and peak pages, and the whole thing is
+/// byte-identical across HARP_THREADS and repeat runs.
+#[test]
+fn serve_classed_paged_output_is_gated_and_deterministic() {
+    let args = [
+        "serve", "--arrivals", "poisson", "--seed", "7", "--requests", "8", "--samples", "8",
+        "--class-mix", "interactive:1,batch:3", "--kv-page-words", "4096",
+        "--slo-ttft-batch", "5e6", "--placement", "pressure",
+    ];
+    let (ok, serial, stderr) = harp_env(&args, &[("HARP_THREADS", "1")]);
+    assert!(ok, "stderr: {stderr}");
+    let (ok, par, stderr) = harp_env(&args, &[("HARP_THREADS", "4")]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(serial, par, "HARP_THREADS changed the classed serve output");
+    for needle in ["class interactive", "class batch", "kv pages 4096 words each"] {
+        assert!(serial.contains(needle), "missing '{needle}':\n{serial}");
+    }
+    // The same run as NDJSON carries the gated keys.
+    let mut jargs: Vec<&str> = args.to_vec();
+    jargs.push("--json");
+    let (ok, stdout, stderr) = harp(&jargs);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.trim().is_empty()).collect();
+    for line in &lines[..lines.len() - 1] {
+        let v = harp::util::json::Json::parse(line).expect("each NDJSON line parses");
+        let class = v.get("class").unwrap().as_str().unwrap().to_owned();
+        assert!(class == "interactive" || class == "batch", "bad class {class}");
+        assert!(v.get("pages").unwrap().as_usize().is_some());
+    }
+    let last = harp::util::json::Json::parse(lines[lines.len() - 1]).unwrap();
+    let summary = last.get("summary").expect("summary object");
+    assert_eq!(summary.get("kv_page_words").unwrap().as_usize(), Some(4096));
+    assert!(summary.get("reprefill_tokens").unwrap().as_f64().is_some());
+    let classes = summary.get("classes").expect("classes object");
+    for c in ["interactive", "batch"] {
+        let b = classes.get(c).unwrap_or_else(|| panic!("missing class {c}"));
+        assert!(b.get("goodput").unwrap().as_f64().is_some());
+        assert!(b.get("slo_ttft").unwrap().as_f64().is_some());
+    }
+    // The batch SLO actually landed (5e6, vs the interactive default).
+    assert_eq!(classes.get("batch").unwrap().get("slo_ttft").unwrap().as_f64(), Some(5.0e6));
+}
+
+/// The new knobs reject bad values loudly.
+#[test]
+fn serve_class_and_page_knobs_are_validated() {
+    let (ok, _, stderr) = harp(&["serve", "--class-mix", "gold"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown request class"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--placement", "wishful"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown placement policy"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--slo-ttft-batch", "-3"]);
+    assert!(!ok);
+    assert!(stderr.contains("--slo-ttft-batch must be finite and positive"), "{stderr}");
+    // --class-mix is a stream-generator knob, dead with a trace.
+    let (ok, _, stderr) =
+        harp(&["serve", "--arrivals", "trace", "--trace", "t.json", "--class-mix", "batch"]);
+    assert!(!ok);
+    assert!(stderr.contains("does not apply"), "{stderr}");
+}
+
+/// Traces carry per-request classes; the engine knobs still apply.
+#[test]
+fn serve_trace_carries_classes() {
+    let dir = std::env::temp_dir().join("harp_cli_serve_trace_class_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("stream.json");
+    std::fs::write(
+        &trace,
+        r#"{"requests":[
+            {"arrival": 0.0, "family": "llama2", "context": 512, "output": 16, "class": "batch"},
+            {"arrival": 90000.0, "family": "llama2", "context": 256, "output": 8}
+        ]}"#,
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = harp(&[
+        "serve", "--arrivals", "trace", "--trace", &trace.to_string_lossy(), "--samples", "8",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("class interactive"), "{stdout}");
+    assert!(stdout.contains("class batch"), "{stdout}");
+    // Zero-length trace requests are a distinct, loud parse error.
+    std::fs::write(
+        &trace,
+        r#"{"requests":[{"arrival":0,"family":"llama2","context":0,"output":8}]}"#,
+    )
+    .unwrap();
+    let (ok, _, stderr) =
+        harp(&["serve", "--arrivals", "trace", "--trace", &trace.to_string_lossy()]);
+    assert!(!ok);
+    assert!(stderr.contains("'context' is 0"), "{stderr}");
+    std::fs::write(
+        &trace,
+        r#"{"requests":[{"arrival":0,"family":"llama2","context":8,"output":0}]}"#,
+    )
+    .unwrap();
+    let (ok, _, stderr) =
+        harp(&["serve", "--arrivals", "trace", "--trace", &trace.to_string_lossy()]);
+    assert!(!ok);
+    assert!(stderr.contains("'output' is 0"), "{stderr}");
 }
 
 #[test]

@@ -6,15 +6,19 @@
 //! The heart is the determinism contract from the issue: a fixed
 //! (stream seed, machine, bandwidth) triple must produce byte-identical
 //! serving reports whether calibration ran on one worker or many, and
-//! across repeat runs.
+//! across repeat runs — with the default knobs AND with every
+//! non-default knob (class mixes, paged booking, pressure placement)
+//! engaged at once.
 
 use harp::arch::taxonomy::HarpClass;
 use harp::coordinator::experiment::EvalOptions;
 use harp::coordinator::figures::Evaluator;
 use harp::runtime::serve::{
-    self, build_serving_machine, calibrate, simulate, ServeConfig,
+    self, build_serving_machine, calibrate, simulate, PlacementPolicy, ServeConfig,
 };
-use harp::workload::arrivals::{synthesize, ArrivalKind, Request, RequestFamily, StreamParams};
+use harp::workload::arrivals::{
+    synthesize, ArrivalKind, Request, RequestClass, RequestFamily, StreamParams,
+};
 
 fn small_opts(threads: usize) -> EvalOptions {
     let mut o = EvalOptions { samples: 8, ..EvalOptions::default() };
@@ -24,9 +28,20 @@ fn small_opts(threads: usize) -> EvalOptions {
 }
 
 fn stream(kind: ArrivalKind, load: f64, n: usize, seed: u64) -> Vec<Request> {
+    stream_classed(kind, load, n, seed, vec![])
+}
+
+fn stream_classed(
+    kind: ArrivalKind,
+    load: f64,
+    n: usize,
+    seed: u64,
+    classes: Vec<(RequestClass, f64)>,
+) -> Vec<Request> {
     synthesize(&StreamParams {
         kind,
         mix: RequestFamily::ALL.iter().map(|&f| (f, 1.0)).collect(),
+        classes,
         load,
         requests: n,
         seed,
@@ -36,16 +51,25 @@ fn stream(kind: ArrivalKind, load: f64, n: usize, seed: u64) -> Vec<Request> {
 
 /// One full serve run at a worker count; returns the rendered report.
 fn serve_report(threads: usize, kind: ArrivalKind, seed: u64) -> String {
+    serve_report_cfg(threads, kind, seed, vec![], &ServeConfig::default())
+}
+
+/// Same, with a class mix and non-default engine knobs.
+fn serve_report_cfg(
+    threads: usize,
+    kind: ArrivalKind,
+    seed: u64,
+    classes: Vec<(RequestClass, f64)>,
+    cfg: &ServeConfig,
+) -> String {
     let opts = small_opts(threads);
     let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
     let ev = Evaluator::new(opts);
     let class = HarpClass::from_id("hier+xnode").unwrap();
     let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
     let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
-    let reqs = stream(kind, 2.0, 12, seed);
-    simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, &ServeConfig::default())
-        .report
-        .render()
+    let reqs = stream_classed(kind, 2.0, 12, seed, classes);
+    simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, cfg).unwrap().report.render()
 }
 
 /// The acceptance gate: byte-identical reports across HARP_THREADS-style
@@ -59,6 +83,50 @@ fn serve_report_byte_identical_across_thread_counts_and_runs() {
         assert_eq!(serial, par, "{kind:?}: worker count changed the serving report");
         assert_eq!(par, again, "{kind:?}: repeat run changed the serving report");
     }
+}
+
+/// The same gate with every non-default knob engaged at once: a mixed
+/// class stream, a separate batch SLO, paged KV booking, and pressure
+/// placement. The report (including the per-class breakdown and page
+/// counters) must be byte-identical across worker counts and repeats.
+#[test]
+fn classed_paged_report_byte_identical_across_thread_counts_and_runs() {
+    let classes = vec![(RequestClass::Interactive, 1.0), (RequestClass::Batch, 3.0)];
+    let cfg = ServeConfig {
+        slo_ttft_batch: Some(5.0e6),
+        kv_page_words: 4096,
+        placement: PlacementPolicy::Pressure,
+        ..ServeConfig::default()
+    };
+    for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty] {
+        let serial = serve_report_cfg(1, kind, 7, classes.clone(), &cfg);
+        let par = serve_report_cfg(4, kind, 7, classes.clone(), &cfg);
+        let again = serve_report_cfg(4, kind, 7, classes.clone(), &cfg);
+        assert_eq!(serial, par, "{kind:?}: worker count changed the classed report");
+        assert_eq!(par, again, "{kind:?}: repeat run changed the classed report");
+        assert!(serial.contains("class interactive"), "missing breakdown:\n{serial}");
+        assert!(serial.contains("class batch"), "missing breakdown:\n{serial}");
+        assert!(serial.contains("kv pages 4096 words each"), "missing page line:\n{serial}");
+    }
+}
+
+/// A classless run and a single-class "interactive" run are the SAME
+/// stream (class labels ride a separate RNG), and with default engine
+/// knobs the single-class report must stay byte-identical to the
+/// legacy one — the byte-stable-defaults contract end to end.
+#[test]
+fn uniform_interactive_mix_matches_legacy_report() {
+    let legacy = serve_report(1, ArrivalKind::Poisson, 7);
+    let uniform = serve_report_cfg(
+        1,
+        ArrivalKind::Poisson,
+        7,
+        vec![(RequestClass::Interactive, 1.0)],
+        &ServeConfig::default(),
+    );
+    assert_eq!(legacy, uniform, "uniform interactive mix moved the default report");
+    assert!(!legacy.contains("class "), "default report grew a class breakdown");
+    assert!(!legacy.contains("kv pages"), "default report grew a page line");
 }
 
 /// Different stream seeds must actually move the report — otherwise the
@@ -80,7 +148,7 @@ fn serve_invariants_under_real_costs() {
     let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
     let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
     let reqs = stream(ArrivalKind::Poisson, 4.0, 12, 7);
-    let r = simulate(&reqs, &machine, &costs, dynamic_bw, 4.0, &ServeConfig::default());
+    let r = simulate(&reqs, &machine, &costs, dynamic_bw, 4.0, &ServeConfig::default()).unwrap();
     assert_eq!(r.report.completed + r.report.rejected, reqs.len());
     assert!(r.report.completed > 0, "nothing completed under real costs");
     for rec in &r.records {
@@ -136,7 +204,8 @@ fn knee_lands_on_the_swept_grid() {
         .map(|&load| {
             let reqs = stream(ArrivalKind::Poisson, load, 10, 7);
             let r =
-                simulate(&reqs, &machine, &costs, dynamic_bw, load, &ServeConfig::default());
+                simulate(&reqs, &machine, &costs, dynamic_bw, load, &ServeConfig::default())
+                    .unwrap();
             (load, r.report.goodput)
         })
         .collect();

@@ -8,6 +8,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== tier1: float-sort lint =="
+# NaN-hostile float sorting panics at runtime; total_cmp is total and
+# panic-free. Ban partial_cmp in library code (comment lines, which may
+# discuss the old pattern, are exempt).
+if grep -rnH 'partial_cmp' rust/src --include='*.rs' | grep -vE ':[0-9]+:\s*//'; then
+    echo "tier1 FAIL: partial_cmp in rust/src — use total_cmp for float ordering"
+    exit 1
+fi
+
 echo "== tier1: cargo build --release =="
 cargo build --release
 
@@ -165,6 +174,34 @@ if ! cmp -s target/tier1-serve-t1.txt target/tier1-serve-t4.txt; then
 fi
 if ! cmp -s target/tier1-serve-t4.txt target/tier1-serve-t4b.txt; then
     echo "tier1 FAIL: serve output must be byte-identical across runs"; exit 1
+fi
+# Class-aware admission + paged KV booking: a uniform interactive mix
+# with default engine knobs must be byte-identical to the legacy
+# invocation (byte-stable defaults), while the full knob set (mixed
+# classes, batch SLO, paged booking, pressure placement) must be
+# byte-identical across HARP_THREADS.
+"$BIN" serve --arrivals poisson --seed 7 --requests 8 --samples "$SAMPLES" \
+    --class-mix interactive > target/tier1-serve-uniform.txt
+if ! cmp -s target/tier1-serve-t4.txt target/tier1-serve-uniform.txt; then
+    echo "tier1 FAIL: uniform interactive class mix must not move the report"; exit 1
+fi
+HARP_THREADS=1 "$BIN" serve --arrivals poisson --seed 7 --requests 8 \
+    --samples "$SAMPLES" --class-mix interactive:1,batch:3 \
+    --kv-page-words 4096 --slo-ttft-batch 5e6 --placement pressure \
+    > target/tier1-serve-classed-t1.txt
+HARP_THREADS=4 "$BIN" serve --arrivals poisson --seed 7 --requests 8 \
+    --samples "$SAMPLES" --class-mix interactive:1,batch:3 \
+    --kv-page-words 4096 --slo-ttft-batch 5e6 --placement pressure \
+    > target/tier1-serve-classed-t4.txt
+if ! cmp -s target/tier1-serve-classed-t1.txt target/tier1-serve-classed-t4.txt; then
+    echo "tier1 FAIL: classed/paged serve must be byte-identical across HARP_THREADS"
+    exit 1
+fi
+grep -q 'class interactive' target/tier1-serve-classed-t1.txt
+grep -q 'class batch' target/tier1-serve-classed-t1.txt
+grep -q 'kv pages 4096 words each' target/tier1-serve-classed-t1.txt
+if "$BIN" serve --class-mix gold > /dev/null 2>&1; then
+    echo "tier1 FAIL: an unknown request class should be a loud error"; exit 1
 fi
 
 echo "== tier1: bench smoke (compile + one iteration) =="

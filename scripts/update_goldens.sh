@@ -10,7 +10,8 @@
 # Covers every snapshot in tests/golden_figures.rs: table1, the
 # workload table, fig6–fig10 (+ the MoE fig6 variant), the contention-on
 # evaluations, the allocation-policy ablation (fig_alloc_ablation), and
-# the serving saturation-knee figure (fig_serving_knee).
+# the serving saturation-knee figures (fig_serving_knee and the
+# per-class fig_serving_knee_class).
 #
 # Usage:
 #   scripts/update_goldens.sh          # regenerate every golden
