@@ -51,7 +51,7 @@ use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::MachineTopology;
 use crate::coordinator::experiment::{default_bw_frac_low, EvalOptions};
-use crate::runtime::serve::{PlacementPolicy, DEFAULT_SLO_TTFT};
+use crate::runtime::serve::{DisaggConfig, PlacementPolicy, DEFAULT_SLO_TTFT};
 use crate::util::binio::CacheFormat;
 use crate::util::json::Json;
 use crate::workload::arrivals::{self, ArrivalKind, RequestClass, RequestFamily};
@@ -66,7 +66,8 @@ use crate::workload::registry::{self, WorkloadSource};
 ///                 "class_mix": "interactive:1,batch:3",
 ///                 "load": 2.0, "requests": 64, "seed": 7,
 ///                 "slo_ttft": 2000000, "slo_ttft_batch": 8000000,
-///                 "kv_page_words": 4096, "placement": "pressure" } }
+///                 "kv_page_words": 4096, "placement": "pressure",
+///                 "disagg": "prefill=high,decode=low" } }
 /// ```
 ///
 /// With `"process": "trace"` the stream comes from a `"trace"` file
@@ -74,8 +75,8 @@ use crate::workload::registry::{self, WorkloadSource};
 /// generator knobs (`mix`/`class_mix`/`load`/`requests`/`seed`) are
 /// rejected as dead (a trace carries per-request classes itself). The
 /// engine knobs (`slo_ttft`, `slo_ttft_batch`, `kv_page_words`,
-/// `placement`) apply to both stream forms. The key only applies to
-/// `harp serve`; `harp eval` rejects it.
+/// `placement`, `disagg`) apply to both stream forms. The key only
+/// applies to `harp serve`; `harp eval` rejects it.
 #[derive(Debug, Clone)]
 pub struct ArrivalsConfig {
     pub process: ArrivalKind,
@@ -95,6 +96,10 @@ pub struct ArrivalsConfig {
     pub kv_page_words: u64,
     /// Unit-placement policy for the engine's prefill/decode ops.
     pub placement: PlacementPolicy,
+    /// Role-disaggregated prefill/decode pools (`None` = co-located).
+    /// An engine knob like `placement`, so it applies to both stream
+    /// forms (synthetic and trace).
+    pub disagg: Option<DisaggConfig>,
     /// Trace file path (with `"process": "trace"` only).
     pub trace: Option<String>,
 }
@@ -113,6 +118,7 @@ fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
             "slo_ttft_batch",
             "kv_page_words",
             "placement",
+            "disagg",
             "trace",
         ],
         "'arrivals'",
@@ -218,6 +224,15 @@ fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
         }
         None => PlacementPolicy::RoundRobin,
     };
+    let disagg = match j.get("disagg") {
+        Some(v) => {
+            let s = v.as_str().ok_or(
+                "'arrivals.disagg' must be a string like \"prefill=high,decode=low\"",
+            )?;
+            Some(DisaggConfig::parse(s)?)
+        }
+        None => None,
+    };
     Ok(ArrivalsConfig {
         process,
         mix,
@@ -229,6 +244,7 @@ fn parse_arrivals(j: &Json) -> Result<ArrivalsConfig, String> {
         slo_ttft_batch,
         kv_page_words,
         placement,
+        disagg,
         trace,
     })
 }
@@ -652,6 +668,7 @@ mod tests {
         assert!(a.slo_ttft_batch.is_none());
         assert_eq!(a.kv_page_words, 0);
         assert_eq!(a.placement, PlacementPolicy::RoundRobin);
+        assert!(a.disagg.is_none());
         assert!(a.trace.is_none());
         // Absent key stays absent — eval configs are untouched.
         let c = ExperimentConfig::parse(r#"{"workload":"bert","machine":"leaf+homo"}"#).unwrap();
@@ -665,7 +682,8 @@ mod tests {
                 "arrivals":{"process":"bursty","mix":"llama2:3,gqa:1","load":4.5,
                             "class_mix":"interactive:1,batch:3","requests":128,
                             "seed":11,"slo_ttft":500000,"slo_ttft_batch":4000000,
-                            "kv_page_words":4096,"placement":"pressure"}}"#,
+                            "kv_page_words":4096,"placement":"pressure",
+                            "disagg":"prefill=high,decode=low"}}"#,
         )
         .unwrap();
         let a = c.arrivals.unwrap();
@@ -682,18 +700,21 @@ mod tests {
         assert_eq!(a.slo_ttft_batch, Some(4000000.0));
         assert_eq!(a.kv_page_words, 4096);
         assert_eq!(a.placement, PlacementPolicy::Pressure);
+        assert_eq!(a.disagg.unwrap().label(), "prefill=high,decode=low");
         let c = ExperimentConfig::parse(
             r#"{"workload":"bert","machine":"hier+xnode",
                 "arrivals":{"process":"trace","trace":"stream.json",
-                            "kv_page_words":512,"placement":"pressure"}}"#,
+                            "kv_page_words":512,"placement":"pressure",
+                            "disagg":"prefill=high,decode=low"}}"#,
         )
         .unwrap();
         let a = c.arrivals.unwrap();
-        // Engine knobs (pages, placement, SLOs) still apply to traces;
-        // only the stream-generator knobs are dead.
+        // Engine knobs (pages, placement, SLOs, disagg) still apply to
+        // traces; only the stream-generator knobs are dead.
         assert_eq!(a.trace.as_deref(), Some("stream.json"));
         assert_eq!(a.kv_page_words, 512);
         assert_eq!(a.placement, PlacementPolicy::Pressure);
+        assert!(a.disagg.is_some());
     }
 
     #[test]
@@ -713,6 +734,9 @@ mod tests {
             (r#"{"process":"poisson","class_mix":7}"#, "'arrivals.class_mix' must be a string"),
             (r#"{"process":"poisson","kv_page_words":-4}"#, "'arrivals.kv_page_words'"),
             (r#"{"process":"poisson","placement":"luck"}"#, "unknown placement policy"),
+            (r#"{"process":"poisson","disagg":7}"#, "'arrivals.disagg'"),
+            (r#"{"process":"poisson","disagg":"prefill=warm,decode=low"}"#, "unknown disagg role"),
+            (r#"{"process":"poisson","disagg":"prefill=high"}"#, "must name both phases"),
             (r#"{"process":"poisson","trace":"t.json"}"#, "does nothing unless"),
             (r#"{"process":"trace"}"#, "requires a \"trace\""),
             (r#"{"process":"trace","trace":"t.json","load":2}"#, "does not apply"),

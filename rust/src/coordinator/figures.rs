@@ -875,6 +875,104 @@ pub fn fig_serving_knee_class(ev: &Evaluator) -> Figure {
     fig
 }
 
+/// Offered-load grid for the disaggregation figure (a subset of
+/// [`SERVING_LOAD_GRID`]: the sweep runs every point twice, so it trades
+/// grid resolution for two engines per load).
+pub const DISAGG_LOAD_GRID: [f64; 3] = [1.0, 2.0, 4.0];
+
+/// Disaggregated vs co-located serving: for every taxonomy point with
+/// at least two sub-accelerator types, serve the same seeded stream
+/// both co-located (the default engine) and role-disaggregated
+/// (`prefill=high,decode=low`), and report goodput + p50 TTFT per
+/// offered load, the KV words moved between the pools, and the
+/// disagg curve's knee — with a distinct `saturated` row
+/// ([`serve::saturation_knee_checked`]) separating "knee on the grid"
+/// from "never saturated on this grid". Single-type (homogeneous)
+/// points are skipped: disaggregation is undefined there, and the
+/// engine rejects it loudly.
+pub fn fig_serving_disagg(ev: &Evaluator) -> Figure {
+    use crate::runtime::serve;
+    use crate::workload::arrivals::{self, ArrivalKind, RequestFamily};
+    use crate::workload::intensity::ReuseClass;
+
+    let classes = HarpClass::eval_points();
+    let families: Vec<RequestFamily> = RequestFamily::ALL.to_vec();
+    let mix: Vec<(RequestFamily, f64)> = families.iter().map(|&f| (f, 1.0)).collect();
+    let coloc_cfg = serve::ServeConfig::default();
+    let disagg_cfg = serve::ServeConfig {
+        disagg: Some(serve::DisaggConfig {
+            prefill: ReuseClass::High,
+            decode: ReuseClass::Low,
+        }),
+        ..serve::ServeConfig::default()
+    };
+
+    let mut fig = Figure::new(
+        "Disaggregated vs co-located serving: goodput / TTFT / KV hand-off traffic",
+        "goodput (SLO-meeting completions per Mcycle) and p50 TTFT (cycles)",
+    );
+    for (tag, class) in &classes {
+        let machine = serve::build_serving_machine(class, 2048.0, ev.opts.contention)
+            .expect("taxonomy point builds");
+        let mut tys: Vec<&str> =
+            machine.topology.accels.iter().map(|a| a.ty.as_str()).collect();
+        tys.sort_unstable();
+        tys.dedup();
+        if tys.len() < 2 {
+            // Homogeneous point: nothing to disaggregate across.
+            continue;
+        }
+        let costs = serve::calibrate(ev, class, 2048.0, &families);
+        let mut coloc = Series::new(&format!("({tag}) {} [coloc]", class.id()));
+        let mut disagg = Series::new(&format!("({tag}) {} [disagg]", class.id()));
+        let mut curve: Vec<(f64, f64)> = Vec::new();
+        for &load in &DISAGG_LOAD_GRID {
+            let stream = arrivals::synthesize(&arrivals::StreamParams {
+                kind: ArrivalKind::Poisson,
+                mix: mix.clone(),
+                classes: vec![],
+                load,
+                requests: 24,
+                seed: 0x5EED ^ ev.opts.seed,
+            })
+            .expect("valid stream params");
+            let c = serve::simulate(
+                &stream,
+                &machine,
+                &costs,
+                ev.opts.dynamic_bw,
+                load,
+                &coloc_cfg,
+            )
+            .expect("serving machine is bounded");
+            let d = serve::simulate(
+                &stream,
+                &machine,
+                &costs,
+                ev.opts.dynamic_bw,
+                load,
+                &disagg_cfg,
+            )
+            .expect("disagg runs on every >=2-type point");
+            coloc.push(&format!("goodput load={load}"), c.report.goodput);
+            coloc.push(&format!("p50_ttft load={load}"), c.report.p50_ttft);
+            disagg.push(&format!("goodput load={load}"), d.report.goodput);
+            disagg.push(&format!("p50_ttft load={load}"), d.report.p50_ttft);
+            disagg.push(
+                &format!("kv_moved_words load={load}"),
+                d.report.kv_transfer_words as f64,
+            );
+            curve.push((load, d.report.goodput));
+        }
+        let (knee, saturated) = serve::saturation_knee_checked(&curve);
+        disagg.push("knee", knee);
+        disagg.push("saturated", if saturated { 1.0 } else { 0.0 });
+        fig.add(coloc);
+        fig.add(disagg);
+    }
+    fig
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -226,7 +226,7 @@ pub fn allocate_policy(
 /// Relative tolerance for "strictly better makespan": mirrors the
 /// mapper's latency tie-break so float noise can never drive an
 /// accept/oscillate loop.
-fn strictly_better(candidate: f64, incumbent: f64) -> bool {
+pub(crate) fn strictly_better(candidate: f64, incumbent: f64) -> bool {
     candidate < incumbent - 1e-9 * incumbent.max(1.0)
 }
 
@@ -263,7 +263,7 @@ pub fn search_allocation(
     mapper: &BlackboxMapper,
     sched_opts: &ScheduleOptions,
 ) -> (Vec<usize>, Vec<MappedOp>) {
-    search_allocation_impl(cascade, machine, classifier, mapper, sched_opts, true)
+    search_allocation_core(cascade, machine, classifier, mapper, sched_opts, true, None)
 }
 
 /// [`search_allocation`] with the replay mode exposed: `incremental`
@@ -280,6 +280,39 @@ pub fn search_allocation_impl(
     mapper: &BlackboxMapper,
     sched_opts: &ScheduleOptions,
     incremental: bool,
+) -> (Vec<usize>, Vec<MappedOp>) {
+    search_allocation_core(cascade, machine, classifier, mapper, sched_opts, incremental, None)
+}
+
+/// [`search_allocation`] reweighted by a measured serving-pressure
+/// signal (the per-unit export of a `harp serve` run —
+/// [`ServeResult::unit_pressure`](crate::runtime::serve::ServeResult)):
+/// after the static search reaches its fixpoint, a second probe round
+/// tries to move ops *off* the units the serving engine reported as
+/// congested, hottest-home ops first and coldest target units first.
+/// Every move is still accepted only on a strict replayed-makespan
+/// improvement, so the pressured result is never worse than the static
+/// search's — and with `None` (or an all-zero signal) the function is
+/// bit-identical to [`search_allocation`].
+pub fn search_allocation_pressured(
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+    mapper: &BlackboxMapper,
+    sched_opts: &ScheduleOptions,
+    pressure: Option<&[f64]>,
+) -> (Vec<usize>, Vec<MappedOp>) {
+    search_allocation_core(cascade, machine, classifier, mapper, sched_opts, true, pressure)
+}
+
+fn search_allocation_core(
+    cascade: &Cascade,
+    machine: &MachineConfig,
+    classifier: &Classifier,
+    mapper: &BlackboxMapper,
+    sched_opts: &ScheduleOptions,
+    incremental: bool,
+    pressure: Option<&[f64]>,
 ) -> (Vec<usize>, Vec<MappedOp>) {
     let n = cascade.ops.len();
     let mut assignment = allocate(cascade, machine, classifier);
@@ -350,6 +383,62 @@ pub fn search_allocation_impl(
         // An accepted probe was the oracle's LAST replay, so its
         // delay/latency buffers already describe the new assignment —
         // the next round ranks against fresh state without a re-replay.
+    }
+
+    // Pressure-fed refinement: starting from the static fixpoint above,
+    // try to vacate the units a serving run measured as congested. Ops
+    // are probed hottest-home-unit first and alternatives coldest
+    // first, but acceptance is still the strict replayed-makespan test
+    // against `best` — so this phase can only improve on (never
+    // degrade) the static search, and a missing or all-zero signal
+    // leaves the result bit-identical.
+    if let Some(pr) = pressure {
+        assert_eq!(
+            pr.len(),
+            machine.sub_accels.len(),
+            "pressure signal length must match the machine's unit count"
+        );
+        if pr.iter().any(|&p| p != 0.0) {
+            let budget = search_move_budget(n);
+            let mut moves = 0usize;
+            while moves < budget {
+                ranked.sort_by(|&a, &b| {
+                    let pa = pr[assignment[a]];
+                    let pb = pr[assignment[b]];
+                    pb.total_cmp(&pa).then(a.cmp(&b))
+                });
+                let mut improved = false;
+                'outer: for &i in &ranked {
+                    if eligible[i].len() < 2 {
+                        continue;
+                    }
+                    let home = assignment[i];
+                    let mut alts: Vec<usize> =
+                        eligible[i].iter().copied().filter(|&u| u != home).collect();
+                    alts.sort_by(|&a, &b| pr[a].total_cmp(&pr[b]).then(a.cmp(&b)));
+                    for u in alts {
+                        assignment[i] = u;
+                        stats_view[i] = cost_at(&costs, i, u);
+                        let m = if incremental {
+                            oracle.replay_delta(&assignment, &stats_view)
+                        } else {
+                            oracle.replay(&assignment, &stats_view)
+                        };
+                        if strictly_better(m, best) {
+                            best = m;
+                            moves += 1;
+                            improved = true;
+                            break 'outer;
+                        }
+                        assignment[i] = home;
+                        stats_view[i] = cost_at(&costs, i, home);
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+        }
     }
 
     let mapped = (0..n)
@@ -594,5 +683,86 @@ mod tests {
         let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 8, seed: 1 });
         let (a, _) = search_allocation(&g, &m, &cl, &mapper, &ScheduleOptions::default());
         assert_eq!(a, allocate(&g, &m, &cl));
+    }
+
+    /// The never-worse acceptance contract of the pressured search: for
+    /// any pressure signal — uniform, adversarially inverted, or
+    /// hammering a single unit — the refined makespan stays at or below
+    /// the static search's, because refinement starts from the static
+    /// fixpoint and accepts only strict replayed improvements.
+    #[test]
+    fn pressured_search_never_worse_than_static() {
+        let cl = classifier();
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 10, seed: 3 });
+        let opts = ScheduleOptions::default();
+        for het in [
+            HeterogeneityLoc::cross_node(),
+            HeterogeneityLoc::Compound(vec![
+                HeterogeneityLoc::cross_node(),
+                HeterogeneityLoc::CrossDepth,
+            ]),
+        ] {
+            let m = MachineConfig::build(
+                &HarpClass::new(ComputePlacement::Hierarchical, het),
+                &HardwareParams::default(),
+            )
+            .unwrap();
+            let g = transformer::decoder_cascade(&transformer::llama2());
+            let (_, static_mapped) = search_allocation(&g, &m, &cl, &mapper, &opts);
+            let static_makespan =
+                crate::hhp::scheduler::schedule(&g, &m, &static_mapped, &opts).makespan;
+            let n = m.sub_accels.len();
+            let mut signals: Vec<Vec<f64>> = vec![
+                vec![1.0; n],                                   // uniform heat
+                (0..n).map(|u| u as f64 + 1.0).collect(),       // ascending
+                (0..n).map(|u| (n - u) as f64).collect(),       // descending
+            ];
+            for hot in 0..n {
+                let mut s = vec![0.0; n];
+                s[hot] = 100.0; // hammer one unit
+                signals.push(s);
+            }
+            for pr in &signals {
+                let (assignment, mapped) =
+                    search_allocation_pressured(&g, &m, &cl, &mapper, &opts, Some(pr));
+                for (i, mo) in mapped.iter().enumerate() {
+                    assert_eq!(mo.sub_accel, assignment[i]);
+                    let class = cl.classify(&g.ops[i]);
+                    assert!(eligible_units(&m, class).contains(&assignment[i]));
+                }
+                let pressured =
+                    crate::hhp::scheduler::schedule(&g, &m, &mapped, &opts).makespan;
+                assert!(
+                    pressured <= static_makespan + 1e-9 * static_makespan,
+                    "pressure {pr:?}: pressured ({pressured}) degraded static \
+                     ({static_makespan})"
+                );
+            }
+        }
+    }
+
+    /// `None` and an all-zero signal short-circuit the refinement: the
+    /// pressured entry point is bit-identical to the static search.
+    #[test]
+    fn pressured_search_without_signal_is_bit_identical() {
+        let m = MachineConfig::build(
+            &HarpClass::new(ComputePlacement::Hierarchical, HeterogeneityLoc::cross_node()),
+            &HardwareParams::default(),
+        )
+        .unwrap();
+        let g = transformer::decoder_cascade(&transformer::llama2());
+        let cl = classifier();
+        let mapper = BlackboxMapper::with_budget(SearchBudget { samples: 10, seed: 3 });
+        let opts = ScheduleOptions::default();
+        let (a_static, m_static) = search_allocation(&g, &m, &cl, &mapper, &opts);
+        let zeros = vec![0.0; m.sub_accels.len()];
+        for pr in [None, Some(zeros.as_slice())] {
+            let (a, mo) = search_allocation_pressured(&g, &m, &cl, &mapper, &opts, pr);
+            assert_eq!(a, a_static);
+            for (x, y) in mo.iter().zip(&m_static) {
+                assert_eq!(x.sub_accel, y.sub_accel);
+                assert_eq!(x.stats.cycles.to_bits(), y.stats.cycles.to_bits());
+            }
+        }
     }
 }

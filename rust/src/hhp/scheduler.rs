@@ -650,6 +650,16 @@ impl<'a> ScheduleOracle<'a> {
     pub fn latencies(&self) -> &[f64] {
         &self.sched_lat
     }
+
+    /// Accumulate the LAST replay's queueing pressure onto a per-unit
+    /// signal: each op adds its queue-delay/latency ratio to
+    /// `pressure[assignment[i]]`, in op order — in-place, so repeated
+    /// decay-then-accumulate loops stay bitwise deterministic.
+    pub fn accumulate_pressure(&self, assignment: &[usize], pressure: &mut [f64]) {
+        for (i, (&d, &l)) in self.delay.iter().zip(&self.sched_lat).enumerate() {
+            pressure[assignment[i]] += d / l.max(1e-9);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -84,6 +84,7 @@ fn usage() -> String {
        serve [--config F | --workload-mix M] [--arrivals poisson|bursty|trace]\n\
                                 [--load R] [--requests N] [--seed S] [--machine M]\n\
                                 [--slo-ttft CYCLES] [--trace FILE] [--json]\n\
+                                [--disagg prefill=ROLE,decode=ROLE] [--placement P]\n\
                                 continuous-batching serving simulator: seeded request\n\
                                 streams, admission/eviction under booked KV capacity,\n\
                                 p50/p99 TTFT + goodput (NDJSON records with --json)\n\
@@ -565,7 +566,13 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     .opt(
         "placement",
         Some("round_robin"),
-        "unit placement for serve steps: round_robin | pressure",
+        "unit placement for serve steps: round_robin | pressure | pressure_search",
+    )
+    .opt(
+        "disagg",
+        None,
+        "disaggregate prefill/decode pools by reuse role, e.g. \
+         prefill=high,decode=low (needs a machine with >= 2 unit types)",
     )
     .opt("trace", None, "arrival trace JSON file (with --arrivals trace only)")
     .flag(
@@ -598,6 +605,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             "--slo-ttft-batch",
             "--kv-page-words",
             "--placement",
+            "--disagg",
             "--trace",
         ] {
             if given(flag) {
@@ -612,7 +620,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             return Err(format!(
                 "{path}: serving needs an \"arrivals\" object \
                  (process / mix / class_mix / load / requests / seed / slo_ttft / \
-                 slo_ttft_batch / kv_page_words / placement / trace)"
+                 slo_ttft_batch / kv_page_words / placement / disagg / trace)"
             ));
         };
         if cfg.topology.is_some() {
@@ -672,6 +680,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         };
         let kv_page_words = args.get_usize("kv-page-words").map_err(|e| e.to_string())? as u64;
         let placement = serve::PlacementPolicy::parse(args.get("placement").unwrap())?;
+        let disagg = match args.get("disagg") {
+            Some(s) => Some(serve::DisaggConfig::parse(s)?),
+            None => None,
+        };
         let machine_id = args.get("machine").unwrap();
         let class = HarpClass::from_id(machine_id)
             .ok_or_else(|| format!("unknown machine id '{machine_id}'"))?;
@@ -695,6 +707,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             slo_ttft_batch,
             kv_page_words,
             placement,
+            disagg,
             trace,
         };
         (arr, class, args.get_f64("bw").map_err(|e| e.to_string())?, opts)
@@ -737,6 +750,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         slo_ttft_batch: arr.slo_ttft_batch,
         kv_page_words: arr.kv_page_words,
         placement: arr.placement,
+        disagg: arr.disagg,
         ..serve::ServeConfig::default()
     };
     let result = serve::simulate(&stream, &machine, &costs, dynamic_bw, offered_load, &scfg)?;
@@ -831,6 +845,16 @@ fn serve_json(result: &harp::runtime::serve::ServeResult) -> std::io::Result<()>
         w.num(rep.kv_page_words as f64)?;
         w.key("reprefill_tokens")?;
         w.num(rep.reprefill_tokens as f64)?;
+    }
+    // Disagg keys ride behind their knob like the page keys above, so
+    // co-located NDJSON output stays byte-identical.
+    if let Some(d) = &rep.disagg {
+        w.key("disagg")?;
+        w.str(d)?;
+        w.key("kv_transfers")?;
+        w.num(rep.kv_transfers as f64)?;
+        w.key("kv_transfer_words")?;
+        w.num(rep.kv_transfer_words as f64)?;
     }
     if !rep.class_breakdown.is_empty() {
         w.key("classes")?;
@@ -946,6 +970,7 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     figures::fig_alloc_ablation(&ev).emit("fig_alloc_ablation");
     figures::fig_serving_knee(&ev).emit("fig_serving_knee");
     figures::fig_serving_knee_class(&ev).emit("fig_serving_knee_class");
+    figures::fig_serving_disagg(&ev).emit("fig_serving_disagg");
     if let Err(e) = ev.persist() {
         eprintln!("warn: could not persist evaluation cache: {e}");
     }

@@ -21,6 +21,14 @@
 //! resident and pays a measured re-prefill (KV re-fetch) op before it
 //! decodes again.
 //!
+//! Serving can be role-disaggregated ([`ServeConfig::disagg`]): prefill
+//! ops pin to one sub-accelerator pool and decode chunks to another, and
+//! when the pools actually differ each request pays an explicit KV
+//! hand-off — a transfer op costed as words over the narrower of the two
+//! units' DRAM shares in the machine tree, with the KV booked against
+//! *both* pools while it is in flight. When both roles resolve to the
+//! same pool the engine is bit-identical to the co-located default.
+//!
 //! Per-op costs come from a one-off calibration pass: per (family,
 //! taxonomy point, bandwidth) the real cost model evaluates a
 //! prefill-layer probe and a one-token decode probe through the shared
@@ -43,7 +51,7 @@ use crate::arch::partition::{HardwareParams, MachineConfig};
 use crate::arch::taxonomy::HarpClass;
 use crate::arch::topology::ContentionMode;
 use crate::coordinator::figures::{EvalPoint, Evaluator};
-use crate::hhp::allocator::{eligible_units, pressure_ordered};
+use crate::hhp::allocator::{eligible_units, pressure_ordered, strictly_better};
 use crate::hhp::scheduler::{ScheduleOptions, ScheduleOracle};
 use crate::model::stats::OpStats;
 use crate::workload::arrivals::{Request, RequestClass, RequestFamily};
@@ -77,6 +85,14 @@ pub enum PlacementPolicy {
     /// (decayed ×0.5 per step), and placement skips units more than 2×
     /// as congested as the least-loaded one.
     Pressure,
+    /// [`PlacementPolicy::Pressure`], plus a pressure-fed refinement of
+    /// each step's op→unit assignment: the exported pressure signal
+    /// orders extra [`ScheduleOracle::replay_delta`] probes within each
+    /// op's phase pool, and only moves that strictly improve the true
+    /// replayed step makespan are kept — the serving-side twin of
+    /// [`search_allocation_pressured`](crate::hhp::allocator::search_allocation_pressured),
+    /// so a step never schedules worse than its unrefined placement.
+    PressureSearch,
 }
 
 impl PlacementPolicy {
@@ -84,6 +100,7 @@ impl PlacementPolicy {
         match self {
             PlacementPolicy::RoundRobin => "round_robin",
             PlacementPolicy::Pressure => "pressure",
+            PlacementPolicy::PressureSearch => "pressure_search",
         }
     }
 
@@ -91,10 +108,85 @@ impl PlacementPolicy {
         match s.to_ascii_lowercase().as_str() {
             "round_robin" | "round-robin" | "rr" => Ok(PlacementPolicy::RoundRobin),
             "pressure" => Ok(PlacementPolicy::Pressure),
+            "pressure_search" | "pressure-search" => Ok(PlacementPolicy::PressureSearch),
             other => Err(format!(
-                "unknown placement policy '{other}' (known: round_robin, pressure)"
+                "unknown placement policy '{other}' (known: round_robin, pressure, \
+                 pressure_search)"
             )),
         }
+    }
+
+    /// Whether the engine maintains the decayed per-unit pressure
+    /// signal for this policy.
+    pub fn uses_pressure(self) -> bool {
+        !matches!(self, PlacementPolicy::RoundRobin)
+    }
+}
+
+/// Role-disaggregated serving: pin prefill ops to one sub-accelerator
+/// pool and decode chunks (plus KV re-fetches) to another, selected by
+/// reuse role. Pools resolve through the same eligibility rule the
+/// allocator uses ([`eligible_units`]), so `prefill=high,decode=low` on
+/// a heterogeneous point reproduces the co-located engine's routing
+/// with the KV hand-off made explicit, and a machine whose units all
+/// accept both roles degrades bit-identically to co-located serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DisaggConfig {
+    /// Pool serving whole-prompt prefill ops.
+    pub prefill: ReuseClass,
+    /// Pool serving decode chunks and KV re-fetches.
+    pub decode: ReuseClass,
+}
+
+impl DisaggConfig {
+    /// Parse the `--disagg` / `"disagg"` spelling:
+    /// `prefill=<role>,decode=<role>` with roles `high` | `low`
+    /// (aliases `hi`/`high-reuse`, `lo`/`low-reuse`).
+    pub fn parse(s: &str) -> Result<DisaggConfig, String> {
+        let mut prefill = None;
+        let mut decode = None;
+        for part in s.split(',') {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                format!(
+                    "disagg spec '{part}' must look like phase=role \
+                     (e.g. prefill=high,decode=low)"
+                )
+            })?;
+            let role = match v.trim().to_ascii_lowercase().as_str() {
+                "high" | "hi" | "high-reuse" => ReuseClass::High,
+                "low" | "lo" | "low-reuse" => ReuseClass::Low,
+                other => {
+                    return Err(format!("unknown disagg role '{other}' (known: high, low)"))
+                }
+            };
+            match k.trim() {
+                "prefill" if prefill.is_none() => prefill = Some(role),
+                "decode" if decode.is_none() => decode = Some(role),
+                "prefill" | "decode" => {
+                    return Err(format!("duplicate disagg phase '{}'", k.trim()))
+                }
+                other => {
+                    return Err(format!(
+                        "unknown disagg phase '{other}' (known: prefill, decode)"
+                    ))
+                }
+            }
+        }
+        match (prefill, decode) {
+            (Some(p), Some(d)) => Ok(DisaggConfig { prefill: p, decode: d }),
+            _ => Err(format!(
+                "disagg spec '{s}' must name both phases: prefill=<role>,decode=<role>"
+            )),
+        }
+    }
+
+    /// Canonical `prefill=<role>,decode=<role>` form (render and JSON).
+    pub fn label(&self) -> String {
+        let short = |c: ReuseClass| match c {
+            ReuseClass::High => "high",
+            ReuseClass::Low => "low",
+        };
+        format!("prefill={},decode={}", short(self.prefill), short(self.decode))
     }
 }
 
@@ -117,6 +209,10 @@ pub struct ServeConfig {
     pub kv_page_words: u64,
     /// Unit-placement policy for prefill/decode ops.
     pub placement: PlacementPolicy,
+    /// Role-disaggregated prefill/decode pools. `None` (the default)
+    /// keeps the co-located engine byte-identically; `Some` pins each
+    /// phase to its pool and charges the KV hand-off between them.
+    pub disagg: Option<DisaggConfig>,
 }
 
 impl Default for ServeConfig {
@@ -127,6 +223,7 @@ impl Default for ServeConfig {
             decode_chunk: DECODE_CHUNK_TOKENS,
             kv_page_words: 0,
             placement: PlacementPolicy::RoundRobin,
+            disagg: None,
         }
     }
 }
@@ -351,6 +448,13 @@ pub struct ServeReport {
     pub reprefill_tokens: u64,
     /// Per-class breakouts; empty for single-class default streams.
     pub class_breakdown: Vec<ClassReport>,
+    /// Canonical disagg spec when role-disaggregation was requested
+    /// (`None` for co-located runs — the render/JSON gate).
+    pub disagg: Option<String>,
+    /// Prefill→decode KV hand-offs charged across the run.
+    pub kv_transfers: usize,
+    /// Total KV words moved between the pools across the run.
+    pub kv_transfer_words: u64,
 }
 
 impl ServeReport {
@@ -396,6 +500,12 @@ impl ServeReport {
                 self.kv_page_words, self.reprefill_tokens
             ));
         }
+        if let Some(d) = &self.disagg {
+            s.push_str(&format!(
+                "  disagg {}  kv transfer {} hand-offs  {} words\n",
+                d, self.kv_transfers, self.kv_transfer_words
+            ));
+        }
         s
     }
 }
@@ -405,6 +515,12 @@ impl ServeReport {
 pub struct ServeResult {
     pub records: Vec<RequestRecord>,
     pub report: ServeReport,
+    /// Final decayed per-unit pressure signal (Σ queue-delay/latency
+    /// per unit, ×0.5 per step). All zeros under `round_robin`
+    /// placement, which does not maintain it. Exported so serving
+    /// pressure can feed the allocation search
+    /// ([`search_allocation_pressured`](crate::hhp::allocator::search_allocation_pressured)).
+    pub unit_pressure: Vec<f64>,
 }
 
 /// A request somewhere in the pipeline (waiting or in flight).
@@ -429,6 +545,10 @@ struct Job {
     debt_words: u64,
     /// High-water page booking for the record.
     peak_pages: u64,
+    /// Unit the prefill ran on, while the KV hand-off to the decode
+    /// pool is still in flight (disagg only). While `Some`, the job's
+    /// booking counts against *both* pools.
+    transfer_from: Option<usize>,
 }
 
 impl Job {
@@ -445,6 +565,7 @@ impl Job {
             pages: 0,
             debt_words: 0,
             peak_pages: 0,
+            transfer_from: None,
         }
     }
 
@@ -541,7 +662,7 @@ fn place(
     *ctr += 1;
     match placement {
         PlacementPolicy::RoundRobin => units[i % units.len()],
-        PlacementPolicy::Pressure => {
+        PlacementPolicy::Pressure | PlacementPolicy::PressureSearch => {
             let ranked = pressure_ordered(units, pressure);
             ranked[i % ranked.len()]
         }
@@ -564,6 +685,9 @@ fn top_up_pages(job: &mut Job, booked: &mut f64, page: u64) {
 #[derive(Clone, Copy)]
 enum StepKind {
     Prefill,
+    /// KV hand-off of this many words from the prefill pool to the
+    /// decode pool (disaggregated serving only).
+    Transfer(u64),
     /// KV re-fetch of this many tokens after a page spill.
     Refetch(u64),
     /// Decode chunk of this many tokens.
@@ -581,8 +705,14 @@ struct Engine<'a> {
     cfg: &'a ServeConfig,
     sopts: ScheduleOptions,
     capacity: f64,
-    hi_units: Vec<usize>,
-    lo_units: Vec<usize>,
+    /// Units serving prefill ops (the high-reuse pool by default, or
+    /// the disagg prefill role's pool).
+    pre_units: Vec<usize>,
+    /// Units serving decode chunks and KV re-fetches.
+    dec_units: Vec<usize>,
+    /// Disagg with pools that actually differ: prefill completion
+    /// triggers an explicit KV hand-off, double-booked while in flight.
+    transfer_split: bool,
     waiting: VecDeque<Job>,
     active: Vec<Job>,
     records: Vec<RequestRecord>,
@@ -590,10 +720,12 @@ struct Engine<'a> {
     rejected: usize,
     evictions_total: usize,
     reprefill_tokens: u64,
+    kv_transfers: usize,
+    kv_transfer_words: u64,
     next_arrival: usize,
     admit_seq: usize,
-    rr_hi: usize,
-    rr_lo: usize,
+    rr_pre: usize,
+    rr_dec: usize,
     /// Decayed queue-delay/latency ratio per unit (pressure placement).
     unit_pressure: Vec<f64>,
     t: f64,
@@ -632,6 +764,37 @@ impl<'a> Engine<'a> {
         if cfg.decode_chunk == 0 {
             return Err("decode chunk must be at least 1 token".into());
         }
+        if cfg.kv_page_words as f64 > capacity {
+            return Err(format!(
+                "kv page size {} words exceeds the machine's whole KV book \
+                 ({capacity:.0} words) — not even one page could ever be booked, so \
+                 admission would reject 100% of the stream (bar a lone-survivor \
+                 bypass); shrink --kv-page-words or serve a machine with more \
+                 buffering",
+                cfg.kv_page_words
+            ));
+        }
+        let (pre_units, dec_units) = match &cfg.disagg {
+            Some(d) => {
+                let mut tys: Vec<&str> =
+                    machine.topology.accels.iter().map(|a| a.ty.as_str()).collect();
+                tys.sort_unstable();
+                tys.dedup();
+                if tys.len() < 2 {
+                    return Err(format!(
+                        "--disagg needs a machine with at least two sub-accelerator \
+                         types to split prefill from decode, but this one has only \
+                         one ('{}') — the pools would be the same units, which is \
+                         exactly the co-located engine",
+                        tys.first().copied().unwrap_or("none")
+                    ));
+                }
+                (eligible_units(machine, d.prefill), eligible_units(machine, d.decode))
+            }
+            None => {
+                (eligible_units(machine, ReuseClass::High), eligible_units(machine, ReuseClass::Low))
+            }
+        };
         for r in requests {
             if r.context == 0 || r.output == 0 {
                 return Err(format!(
@@ -642,6 +805,7 @@ impl<'a> Engine<'a> {
                 ));
             }
         }
+        let transfer_split = cfg.disagg.is_some() && pre_units != dec_units;
         Ok(Engine {
             requests,
             machine,
@@ -649,8 +813,9 @@ impl<'a> Engine<'a> {
             cfg,
             sopts: ScheduleOptions { dynamic_bw },
             capacity,
-            hi_units: eligible_units(machine, ReuseClass::High),
-            lo_units: eligible_units(machine, ReuseClass::Low),
+            pre_units,
+            dec_units,
+            transfer_split,
             waiting: VecDeque::new(),
             active: Vec::new(),
             records: Vec::new(),
@@ -658,10 +823,12 @@ impl<'a> Engine<'a> {
             rejected: 0,
             evictions_total: 0,
             reprefill_tokens: 0,
+            kv_transfers: 0,
+            kv_transfer_words: 0,
             next_arrival: 0,
             admit_seq: 0,
-            rr_hi: 0,
-            rr_lo: 0,
+            rr_pre: 0,
+            rr_dec: 0,
             unit_pressure: vec![0.0; machine.sub_accels.len()],
             t: 0.0,
         })
@@ -709,9 +876,9 @@ impl<'a> Engine<'a> {
             job.seq = self.admit_seq;
             self.admit_seq += 1;
             job.unit = if job.prefilled {
-                place(&self.lo_units, &mut self.rr_lo, self.cfg.placement, &self.unit_pressure)
+                place(&self.dec_units, &mut self.rr_dec, self.cfg.placement, &self.unit_pressure)
             } else {
-                place(&self.hi_units, &mut self.rr_hi, self.cfg.placement, &self.unit_pressure)
+                place(&self.pre_units, &mut self.rr_pre, self.cfg.placement, &self.unit_pressure)
             };
             self.active.push(job);
         }
@@ -746,6 +913,29 @@ impl<'a> Engine<'a> {
                     ),
                     self.costs.prefill_cycles(&job.req),
                     StepKind::Prefill,
+                )
+            } else if let Some(from) = job.transfer_from {
+                // KV hand-off between the prefill and decode pools:
+                // the resident words cross the DRAM boundary, paced by
+                // the narrower of the two units' DRAM shares in the
+                // machine tree.
+                let words = job.booked_now(page);
+                let bw = self.machine.sub_accels[from]
+                    .spec
+                    .dram()
+                    .bw_words_per_cycle
+                    .min(self.machine.sub_accels[job.unit].spec.dram().bw_words_per_cycle);
+                let d = job.req.family.d_model();
+                (
+                    TensorOp::gemm(
+                        &format!("r{}.kvmove", job.req.id),
+                        Phase::Decode,
+                        1,
+                        d,
+                        d,
+                    ),
+                    words / bw.max(1e-9),
+                    StepKind::Transfer(words as u64),
                 )
             } else if page > 0 && job.debt_words > 0 {
                 // Re-fetch spilled KV before decoding resumes: the
@@ -794,7 +984,70 @@ impl<'a> Engine<'a> {
 
         let refs: Vec<&OpStats> = stats.iter().collect();
         let mut oracle = ScheduleOracle::new(&cascade, self.machine, &self.sopts);
-        let makespan = oracle.replay(&assignment, &refs);
+        let mut makespan = oracle.replay(&assignment, &refs);
+
+        // Pressure-fed step search: the exported pressure signal orders
+        // extra replay probes (hottest-unit ops first, coldest target
+        // units first), and only moves that strictly improve the true
+        // replayed step makespan are kept — so the refined step never
+        // schedules worse than the rotation placement above. Transfer
+        // ops stay put: their cost depends on the unit pair, so moving
+        // one would break the replay's pure-stats contract.
+        if self.cfg.placement == PlacementPolicy::PressureSearch && assignment.len() > 1 {
+            let n = assignment.len();
+            let budget = (4 * n).max(16);
+            let mut moves = 0usize;
+            let mut ranked: Vec<usize> = (0..n).collect();
+            while moves < budget {
+                ranked.sort_by(|&a, &b| {
+                    let pa = self.unit_pressure[assignment[a]];
+                    let pb = self.unit_pressure[assignment[b]];
+                    pb.total_cmp(&pa).then(a.cmp(&b))
+                });
+                let mut improved = false;
+                'outer: for &i in &ranked {
+                    let pool: &[usize] = match kinds[i] {
+                        StepKind::Prefill => &self.pre_units,
+                        StepKind::Transfer(_) => continue,
+                        _ => &self.dec_units,
+                    };
+                    if pool.len() < 2 {
+                        continue;
+                    }
+                    let home = assignment[i];
+                    let mut alts: Vec<usize> =
+                        pool.iter().copied().filter(|&u| u != home).collect();
+                    alts.sort_by(|&a, &b| {
+                        self.unit_pressure[a]
+                            .total_cmp(&self.unit_pressure[b])
+                            .then(a.cmp(&b))
+                    });
+                    for u in alts {
+                        assignment[i] = u;
+                        let m = oracle.replay_delta(&assignment, &refs);
+                        if strictly_better(m, makespan) {
+                            makespan = m;
+                            moves += 1;
+                            improved = true;
+                            break 'outer;
+                        }
+                        assignment[i] = home;
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+            // The loop can end on a rejected (reverted) probe; one more
+            // incremental replay restores the oracle's delay/latency
+            // buffers to the accepted assignment (bit-identical
+            // makespan, no-change fast path when nothing moved).
+            makespan = oracle.replay_delta(&assignment, &refs);
+            for (i, job) in self.active.iter_mut().enumerate() {
+                job.unit = assignment[i];
+            }
+        }
+
         let finish: Vec<f64> = oracle
             .queue_delays()
             .iter()
@@ -804,17 +1057,13 @@ impl<'a> Engine<'a> {
 
         // Feed the replay's arbitration back into placement: each
         // unit's pressure is its decayed queue-delay/latency ratio.
-        // Only maintained under the pressure policy, so the default
+        // Only maintained under the pressure policies, so the default
         // path does no extra float work.
-        if self.cfg.placement == PlacementPolicy::Pressure {
+        if self.cfg.placement.uses_pressure() {
             for p in self.unit_pressure.iter_mut() {
                 *p *= 0.5;
             }
-            for (i, (d, l)) in
-                oracle.queue_delays().iter().zip(oracle.latencies()).enumerate()
-            {
-                self.unit_pressure[assignment[i]] += d / l.max(1e-9);
-            }
+            oracle.accumulate_pressure(&assignment, &mut self.unit_pressure);
         }
 
         // Advance every in-flight request by its step op.
@@ -824,15 +1073,31 @@ impl<'a> Engine<'a> {
             match kinds[i] {
                 StepKind::Prefill => {
                     job.prefilled = true;
+                    let from = job.unit;
                     job.unit = place(
-                        &self.lo_units,
-                        &mut self.rr_lo,
+                        &self.dec_units,
+                        &mut self.rr_dec,
                         self.cfg.placement,
                         &self.unit_pressure,
                     );
                     if page > 0 {
                         top_up_pages(&mut job, &mut self.booked, page);
                     }
+                    if self.transfer_split && from != job.unit {
+                        // The fresh KV must cross from the prefill pool
+                        // to the decode pool: book it against both
+                        // until the hand-off op completes.
+                        job.transfer_from = Some(from);
+                        self.booked += job.booked_now(page);
+                    }
+                    still_active.push(job);
+                }
+                StepKind::Transfer(words) => {
+                    self.kv_transfers += 1;
+                    self.kv_transfer_words += words;
+                    // Hand-off done: release the prefill pool's copy.
+                    self.booked -= job.booked_now(page);
+                    job.transfer_from = None;
                     still_active.push(job);
                 }
                 StepKind::Refetch(tokens) => {
@@ -892,14 +1157,19 @@ impl<'a> Engine<'a> {
                 .unwrap();
             if page == 0 {
                 let mut job = self.active.swap_remove(victim);
-                self.booked -= job.booked_words();
+                // A victim caught mid-hand-off frees both pool copies
+                // (×1.0 is bitwise-exact for the co-located path).
+                let mult = if job.transfer_from.is_some() { 2.0 } else { 1.0 };
+                self.booked -= job.booked_words() * mult;
+                job.transfer_from = None;
                 job.evictions += 1;
                 self.evictions_total += 1;
                 enqueue(&mut self.waiting, job);
             } else {
                 let job = &mut self.active[victim];
                 job.pages -= 1;
-                self.booked -= page as f64;
+                let mult = if job.transfer_from.is_some() { 2.0 } else { 1.0 };
+                self.booked -= page as f64 * mult;
                 if job.prefilled {
                     // Only resident KV needs re-fetching; an unprefilled
                     // job's prefill rebuilds its cache anyway.
@@ -907,6 +1177,7 @@ impl<'a> Engine<'a> {
                 }
                 if job.pages == 0 {
                     let mut job = self.active.swap_remove(victim);
+                    job.transfer_from = None;
                     job.evictions += 1;
                     self.evictions_total += 1;
                     enqueue(&mut self.waiting, job);
@@ -980,18 +1251,30 @@ impl<'a> Engine<'a> {
             kv_page_words: cfg.kv_page_words,
             reprefill_tokens: self.reprefill_tokens,
             class_breakdown,
+            disagg: cfg.disagg.as_ref().map(DisaggConfig::label),
+            kv_transfers: self.kv_transfers,
+            kv_transfer_words: self.kv_transfer_words,
         };
-        ServeResult { records, report }
+        ServeResult { records, report, unit_pressure: self.unit_pressure }
     }
 
     /// Bitwise booking conservation: the incremental book equals the
-    /// sum over in-flight jobs of their current booking. Holds exactly
-    /// (not just approximately) because every booked quantity is an
-    /// integer-valued f64 below 2^53.
+    /// sum over in-flight jobs of their current booking — counted twice
+    /// while a KV hand-off is in flight, since the transfer holds both
+    /// pools. Holds exactly (not just approximately) because every
+    /// booked quantity is an integer-valued f64 below 2^53 (and the
+    /// double-book is the exact sum b + b).
     #[cfg(test)]
     fn booked_matches_active(&self) -> bool {
         let page = self.cfg.kv_page_words;
-        let sum: f64 = self.active.iter().map(|j| j.booked_now(page)).sum();
+        let sum: f64 = self
+            .active
+            .iter()
+            .map(|j| {
+                let b = j.booked_now(page);
+                if j.transfer_from.is_some() { b + b } else { b }
+            })
+            .sum();
         sum.to_bits() == self.booked.to_bits()
     }
 }
@@ -1032,13 +1315,25 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// Saturation knee of a goodput-vs-offered-load curve: the first grid
 /// load where goodput falls below 90% of offered (the service stops
 /// keeping up), or the last grid load when it never does.
+///
+/// The scalar form cannot distinguish "knee at the last grid load"
+/// from "never saturates on the grid" — callers that care use
+/// [`saturation_knee_checked`], which reports the two cases distinctly.
 pub fn saturation_knee(curve: &[(f64, f64)]) -> f64 {
+    saturation_knee_checked(curve).0
+}
+
+/// [`saturation_knee`] plus a saturation flag: `(knee, true)` when the
+/// service actually fell below 90% of offered somewhere on the grid,
+/// `(last_load, false)` when it kept up everywhere (the knee is then
+/// only a lower bound — the curve never saturated on this grid).
+pub fn saturation_knee_checked(curve: &[(f64, f64)]) -> (f64, bool) {
     for &(load, goodput) in curve {
         if goodput < 0.9 * load {
-            return load;
+            return (load, true);
         }
     }
-    curve.last().map(|&(l, _)| l).unwrap_or(0.0)
+    (curve.last().map(|&(l, _)| l).unwrap_or(0.0), false)
 }
 
 #[cfg(test)]
@@ -1189,6 +1484,26 @@ mod tests {
         assert_eq!(saturation_knee(&[(1.0, 1.0), (2.0, 1.9), (4.0, 2.0)]), 4.0);
         assert_eq!(saturation_knee(&[(1.0, 0.5), (2.0, 0.5)]), 1.0);
         assert_eq!(saturation_knee(&[]), 0.0);
+    }
+
+    #[test]
+    fn knee_checked_separates_saturation_from_grid_end() {
+        // A curve that genuinely saturates at the last grid load and
+        // one that never saturates report the same scalar knee — the
+        // checked form is what tells them apart.
+        let saturates_at_end = [(1.0, 1.0), (2.0, 1.9), (4.0, 2.0)];
+        let never_saturates = [(1.0, 1.0), (2.0, 2.0), (4.0, 4.0)];
+        assert_eq!(saturation_knee(&saturates_at_end), saturation_knee(&never_saturates));
+        assert_eq!(saturation_knee_checked(&saturates_at_end), (4.0, true));
+        assert_eq!(saturation_knee_checked(&never_saturates), (4.0, false));
+        // Mid-grid knee and empty grid.
+        assert_eq!(saturation_knee_checked(&[(1.0, 0.5), (2.0, 0.5)]), (1.0, true));
+        assert_eq!(saturation_knee_checked(&[]), (0.0, false));
+        // The scalar form stays byte-compatible: it is the checked
+        // knee, always.
+        for curve in [&saturates_at_end[..], &never_saturates[..]] {
+            assert_eq!(saturation_knee(curve), saturation_knee_checked(curve).0);
+        }
     }
 
     #[test]
@@ -1436,7 +1751,182 @@ mod tests {
     fn placement_parse_is_loud() {
         assert_eq!(PlacementPolicy::parse("rr").unwrap(), PlacementPolicy::RoundRobin);
         assert_eq!(PlacementPolicy::parse("pressure").unwrap(), PlacementPolicy::Pressure);
+        assert_eq!(
+            PlacementPolicy::parse("pressure-search").unwrap(),
+            PlacementPolicy::PressureSearch
+        );
         let err = PlacementPolicy::parse("luck").unwrap_err();
         assert!(err.contains("round_robin, pressure"), "{err}");
+        assert!(err.contains("pressure_search"), "{err}");
+    }
+
+    #[test]
+    fn disagg_parse_round_trips_and_is_loud() {
+        let d = DisaggConfig::parse("prefill=high,decode=low").unwrap();
+        assert_eq!(d, DisaggConfig { prefill: ReuseClass::High, decode: ReuseClass::Low });
+        assert_eq!(d.label(), "prefill=high,decode=low");
+        // Aliases and swapped order normalise to the same canonical label.
+        let alias = DisaggConfig::parse("decode=lo,prefill=high-reuse").unwrap();
+        assert_eq!(alias, d);
+        assert_eq!(alias.label(), "prefill=high,decode=low");
+        let same = DisaggConfig::parse("prefill=low,decode=low").unwrap();
+        assert_eq!(same.label(), "prefill=low,decode=low");
+
+        let err = DisaggConfig::parse("prefill=high").unwrap_err();
+        assert!(err.contains("must name both phases"), "{err}");
+        let err = DisaggConfig::parse("prefill=warm,decode=low").unwrap_err();
+        assert!(err.contains("unknown disagg role 'warm'"), "{err}");
+        let err = DisaggConfig::parse("prefill=high,paint=low").unwrap_err();
+        assert!(err.contains("unknown disagg phase 'paint'"), "{err}");
+        let err = DisaggConfig::parse("prefill=high,prefill=low").unwrap_err();
+        assert!(err.contains("duplicate disagg phase 'prefill'"), "{err}");
+        let err = DisaggConfig::parse("prefill").unwrap_err();
+        assert!(err.contains("phase=role"), "{err}");
+    }
+
+    #[test]
+    fn oversized_kv_page_is_a_loud_error() {
+        // Regression (satellite bugfix): a page larger than the whole
+        // KV book meant no request could ever book a page — admission
+        // silently rejected the entire stream instead of erroring.
+        let m = machine();
+        let cap = kv_capacity_words(&m);
+        let cfg = ServeConfig { kv_page_words: cap as u64 + 1, ..ServeConfig::default() };
+        let err = simulate(&stream(2.0, 5), &m, &test_costs(), true, 2.0, &cfg).unwrap_err();
+        assert!(err.contains("exceeds the machine's whole KV book"), "{err}");
+        assert!(err.contains("--kv-page-words"), "{err}");
+        // The largest page that still fits is accepted.
+        let cfg = ServeConfig { kv_page_words: cap as u64, ..ServeConfig::default() };
+        simulate(&stream(2.0, 5), &m, &test_costs(), true, 2.0, &cfg).unwrap();
+    }
+
+    #[test]
+    fn disagg_on_single_type_machine_is_a_loud_error() {
+        // leaf+homo has one sub-accelerator design: there is nothing to
+        // disaggregate across.
+        let homo = build_serving_machine(
+            &HarpClass::from_id("leaf+homo").unwrap(),
+            2048.0,
+            ContentionMode::Off,
+        )
+        .unwrap();
+        let tys: std::collections::BTreeSet<&str> =
+            homo.topology.accels.iter().map(|a| a.ty.as_str()).collect();
+        assert_eq!(tys.len(), 1, "leaf+homo grew a second unit type");
+        let cfg = ServeConfig {
+            disagg: Some(DisaggConfig::parse("prefill=high,decode=low").unwrap()),
+            ..ServeConfig::default()
+        };
+        let err = simulate(&stream(2.0, 5), &homo, &test_costs(), true, 2.0, &cfg).unwrap_err();
+        assert!(err.contains("at least two sub-accelerator types"), "{err}");
+    }
+
+    fn disagg_cfg() -> ServeConfig {
+        ServeConfig {
+            disagg: Some(DisaggConfig { prefill: ReuseClass::High, decode: ReuseClass::Low }),
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn disagg_charges_and_conserves_kv_transfers() {
+        // hier+xnode resolves distinct prefill/decode pools, so every
+        // completed request that changed unit at prefill completion pays
+        // exactly one hand-off; `run_pressured` asserts the bitwise
+        // both-pools conservation invariant after every step.
+        let reqs: Vec<Request> =
+            (0..6).map(|i| req(i, i as f64 * 1000.0, RequestClass::Interactive)).collect();
+        let r = run_pressured(&reqs, 600_000.0, &disagg_cfg());
+        assert_eq!(r.report.completed, 6);
+        assert!(r.report.kv_transfers > 0, "disagg run never charged a hand-off");
+        assert!(r.report.kv_transfer_words > 0);
+        assert_eq!(r.report.disagg.as_deref(), Some("prefill=high,decode=low"));
+        assert!(r.report.render().contains("disagg prefill=high,decode=low"));
+        // Every request hands off at most once per admission.
+        assert!(r.report.kv_transfers <= r.report.completed + r.report.evictions);
+
+        // Paged booking conserves through hand-offs too.
+        let paged = ServeConfig { kv_page_words: 4096, ..disagg_cfg() };
+        let p = run_pressured(&reqs, 600_000.0, &paged);
+        assert_eq!(p.report.completed, 6);
+        assert!(p.report.kv_transfers > 0);
+    }
+
+    #[test]
+    fn disagg_runs_are_bit_identical() {
+        let reqs = stream(2.0, 20);
+        let m = machine();
+        let a = simulate(&reqs, &m, &test_costs(), true, 2.0, &disagg_cfg()).unwrap();
+        let b = simulate(&reqs, &m, &test_costs(), true, 2.0, &disagg_cfg()).unwrap();
+        assert_eq!(a.report.render(), b.report.render());
+        assert_eq!(a.report.kv_transfer_words, b.report.kv_transfer_words);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.completed.to_bits(), y.completed.to_bits());
+        }
+    }
+
+    #[test]
+    fn disagg_same_pools_degrades_to_colocated_bitwise() {
+        // The differential contract: when both roles resolve to the
+        // same unit pool (every role Unified), the disagg engine is the
+        // co-located engine — records and report bitwise, render
+        // identical bar the gated disagg line.
+        let mut m = machine();
+        for sa in &mut m.sub_accels {
+            sa.role = crate::arch::partition::Role::Unified;
+        }
+        let reqs = stream(2.0, 20);
+        let costs = test_costs();
+        let colo = simulate(&reqs, &m, &costs, true, 2.0, &ServeConfig::default()).unwrap();
+        let dis = simulate(&reqs, &m, &costs, true, 2.0, &disagg_cfg()).unwrap();
+        assert_eq!(dis.report.kv_transfers, 0, "same-pool disagg charged a hand-off");
+        assert_eq!(dis.report.kv_transfer_words, 0);
+        assert_eq!(colo.records.len(), dis.records.len());
+        for (x, y) in colo.records.iter().zip(&dis.records) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.admitted.to_bits(), y.admitted.to_bits());
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
+            assert_eq!(x.completed.to_bits(), y.completed.to_bits());
+        }
+        assert_eq!(colo.report.goodput.to_bits(), dis.report.goodput.to_bits());
+        let strip = |s: &str| {
+            s.lines()
+                .filter(|l| !l.trim_start().starts_with("disagg "))
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(strip(&colo.report.render()), strip(&dis.report.render()));
+        assert_eq!(
+            colo.report.render(),
+            strip(&dis.report.render()) + "\n",
+            "co-located render differs beyond the gated disagg line"
+        );
+    }
+
+    #[test]
+    fn pressure_search_is_deterministic_and_never_slower_per_step() {
+        let reqs = stream(8.0, 20);
+        let m = machine();
+        let search =
+            ServeConfig { placement: PlacementPolicy::PressureSearch, ..ServeConfig::default() };
+        let a = simulate(&reqs, &m, &test_costs(), true, 8.0, &search).unwrap();
+        let b = simulate(&reqs, &m, &test_costs(), true, 8.0, &search).unwrap();
+        assert_eq!(a.report.completed + a.report.rejected, reqs.len());
+        assert_eq!(a.report.render(), b.report.render());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.completed.to_bits(), y.completed.to_bits());
+        }
+        // The exported pressure signal is populated under the pressure
+        // policies and dormant under round-robin.
+        assert!(a.unit_pressure.iter().any(|&p| p > 0.0));
+        let rr = simulate(&reqs, &m, &test_costs(), true, 8.0, &ServeConfig::default()).unwrap();
+        assert!(rr.unit_pressure.iter().all(|&p| p == 0.0));
+        // Refinement accepts only strict step-makespan improvements, so
+        // the run can only finish sooner (or identically) than plain
+        // pressure placement started from the same rotations.
+        let plain =
+            ServeConfig { placement: PlacementPolicy::Pressure, ..ServeConfig::default() };
+        let p = simulate(&reqs, &m, &test_costs(), true, 8.0, &plain).unwrap();
+        assert_eq!(p.report.completed, a.report.completed);
     }
 }

@@ -252,6 +252,35 @@ fn golden_fig_serving_knee_class() {
     assert_golden("fig_serving_knee_class", &fig.render());
 }
 
+/// Disaggregated-serving figure: co-located vs prefill/decode-split
+/// goodput and TTFT per multi-type taxonomy point, plus the KV words
+/// moved across the split. Structural invariants independent of the
+/// snapshot: goodput and moved words are non-negative, the saturated
+/// flag is boolean, every point contributes a [coloc]/[disagg] pair,
+/// and single-type points (leaf+homo) contribute nothing.
+#[test]
+fn golden_fig_serving_disagg() {
+    let ev = Evaluator::new(golden_opts(default_threads()));
+    let fig = figures::fig_serving_disagg(&ev);
+    let coloc = fig.series.iter().filter(|s| s.name.ends_with("[coloc]")).count();
+    let disagg = fig.series.iter().filter(|s| s.name.ends_with("[disagg]")).count();
+    assert_eq!(coloc, disagg, "one coloc/disagg pair per multi-type taxonomy point");
+    assert_eq!(coloc + disagg, fig.series.len());
+    assert!(
+        !fig.series.iter().any(|s| s.name.contains("leaf+homo")),
+        "single-type point leaked into the disagg figure"
+    );
+    for s in &fig.series {
+        for (label, v) in &s.rows {
+            assert!(*v >= 0.0, "negative value in {} at {label}: {v}", s.name);
+            if label == "saturated" {
+                assert!(*v == 0.0 || *v == 1.0, "non-boolean saturated flag: {v}");
+            }
+        }
+    }
+    assert_golden("fig_serving_disagg", &fig.render());
+}
+
 /// The serving engine's thread invariance: only the calibration probes
 /// fan out across workers, so the whole figure must render
 /// byte-identically for any worker count.

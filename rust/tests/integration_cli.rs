@@ -597,7 +597,9 @@ fn serve_json_streams_parseable_ndjson() {
     assert!(!stdout.contains("serving summary"), "text report leaked into NDJSON");
     // The default schema is pinned: the new class/page keys appear ONLY
     // behind their knobs, so default NDJSON stays byte-compatible.
-    for key in ["\"class\"", "\"pages\"", "\"kv_page_words\"", "\"classes\""] {
+    for key in
+        ["\"class\"", "\"pages\"", "\"kv_page_words\"", "\"classes\"", "\"disagg\"", "\"kv_transfers\""]
+    {
         assert!(!stdout.contains(key), "default NDJSON grew {key}:\n{stdout}");
     }
 }
@@ -645,6 +647,52 @@ fn serve_classed_paged_output_is_gated_and_deterministic() {
     }
     // The batch SLO actually landed (5e6, vs the interactive default).
     assert_eq!(classes.get("batch").unwrap().get("slo_ttft").unwrap().as_f64(), Some(5.0e6));
+}
+
+/// Disaggregated prefill/decode serving at the binary level: the knob
+/// runs on a two-type machine, grows the gated report line, and stays
+/// byte-identical across repeat runs.
+#[test]
+fn serve_disagg_runs_and_is_deterministic() {
+    let args = [
+        "serve", "--arrivals", "poisson", "--seed", "7", "--requests", "8", "--samples", "8",
+        "--machine", "hier+xnode", "--disagg", "prefill=high,decode=low",
+    ];
+    let (ok, first, stderr) = harp(&args);
+    assert!(ok, "stderr: {stderr}");
+    let (ok, again, stderr) = harp(&args);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(first, again, "a repeat run changed the disagg serve output");
+    assert!(first.contains("disagg prefill=high,decode=low"), "{first}");
+    assert!(first.contains("hand-offs"), "{first}");
+    // The NDJSON summary carries the gated keys on the same run.
+    let mut jargs: Vec<&str> = args.to_vec();
+    jargs.push("--json");
+    let (ok, stdout, stderr) = harp(&jargs);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.trim().is_empty()).collect();
+    let last = harp::util::json::Json::parse(lines[lines.len() - 1]).expect("summary parses");
+    let summary = last.get("summary").expect("summary object");
+    assert_eq!(summary.get("disagg").unwrap().as_str(), Some("prefill=high,decode=low"));
+    assert!(summary.get("kv_transfers").unwrap().as_usize().is_some());
+    assert!(summary.get("kv_transfer_words").unwrap().as_usize().is_some());
+}
+
+/// The disagg knob rejects bad specs and single-type machines loudly.
+#[test]
+fn serve_disagg_is_validated() {
+    let (ok, _, stderr) = harp(&["serve", "--disagg", "prefill=gold,decode=low"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown disagg role"), "{stderr}");
+    let (ok, _, stderr) = harp(&["serve", "--disagg", "prefill=high"]);
+    assert!(!ok);
+    assert!(stderr.contains("must name both phases"), "{stderr}");
+    // A single-type machine has nowhere to split the two pools.
+    let (ok, _, stderr) = harp(&[
+        "serve", "--machine", "leaf+homo", "--disagg", "prefill=high,decode=low",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("at least two sub-accelerator types"), "{stderr}");
 }
 
 /// The new knobs reject bad values loudly.
@@ -729,6 +777,7 @@ fn serve_config_supplies_the_options_and_conflicts_are_loud() {
         ["--load", "4"],
         ["--seed", "9"],
         ["--machine", "leaf+homo"],
+        ["--disagg", "prefill=high,decode=low"],
     ] {
         let (ok, _, stderr) = harp(&["serve", "--config", &cfg_s, extra[0], extra[1]]);
         assert!(!ok, "{} alongside --config must fail", extra[0]);

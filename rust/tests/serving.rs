@@ -212,3 +212,136 @@ fn knee_lands_on_the_swept_grid() {
     let knee = serve::saturation_knee(&curve);
     assert!(loads.contains(&knee), "knee {knee} not on the swept grid");
 }
+
+fn disagg_cfg() -> ServeConfig {
+    ServeConfig {
+        disagg: Some(serve::DisaggConfig::parse("prefill=high,decode=low").unwrap()),
+        ..ServeConfig::default()
+    }
+}
+
+/// The disagg determinism gate: role-disaggregated reports (including
+/// the hand-off counters) are byte-identical across worker counts and
+/// repeat runs — and so are pressure-fed-search reports, alone and
+/// stacked with disaggregation.
+#[test]
+fn disagg_and_pressure_search_reports_byte_identical() {
+    let search = ServeConfig { placement: PlacementPolicy::PressureSearch, ..disagg_cfg() };
+    let plain_search =
+        ServeConfig { placement: PlacementPolicy::PressureSearch, ..ServeConfig::default() };
+    for cfg in [disagg_cfg(), plain_search, search] {
+        let serial = serve_report_cfg(1, ArrivalKind::Poisson, 7, vec![], &cfg);
+        let par = serve_report_cfg(4, ArrivalKind::Poisson, 7, vec![], &cfg);
+        let again = serve_report_cfg(4, ArrivalKind::Poisson, 7, vec![], &cfg);
+        assert_eq!(serial, par, "worker count changed the report for {cfg:?}");
+        assert_eq!(par, again, "repeat run changed the report for {cfg:?}");
+    }
+    let disagg = serve_report_cfg(1, ArrivalKind::Poisson, 7, vec![], &disagg_cfg());
+    assert!(disagg.contains("disagg prefill=high,decode=low"), "missing line:\n{disagg}");
+    assert!(disagg.contains("hand-offs"), "missing hand-off counter:\n{disagg}");
+}
+
+/// Differential contract end to end under REAL calibrated costs: when
+/// every unit accepts both roles the disagg pools coincide, no hand-off
+/// is ever charged, and records/report are bitwise the co-located
+/// engine's (the render differs only by the gated disagg line).
+#[test]
+fn disagg_same_pools_is_byte_identical_to_colocated() {
+    let opts = small_opts(1);
+    let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
+    let ev = Evaluator::new(opts);
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    let mut machine = build_serving_machine(&class, 2048.0, contention).unwrap();
+    for sa in &mut machine.sub_accels {
+        sa.role = harp::arch::partition::Role::Unified;
+    }
+    let reqs = stream(ArrivalKind::Poisson, 2.0, 12, 7);
+    let colo =
+        simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, &ServeConfig::default()).unwrap();
+    let dis = simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, &disagg_cfg()).unwrap();
+    assert_eq!(dis.report.kv_transfers, 0, "same-pool disagg charged a hand-off");
+    assert_eq!(dis.report.kv_transfer_words, 0);
+    assert_eq!(colo.records.len(), dis.records.len());
+    for (x, y) in colo.records.iter().zip(&dis.records) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.admitted.to_bits(), y.admitted.to_bits());
+        assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
+        assert_eq!(x.completed.to_bits(), y.completed.to_bits());
+    }
+    assert_eq!(colo.report.goodput.to_bits(), dis.report.goodput.to_bits());
+    assert_eq!(colo.report.p99_ttft.to_bits(), dis.report.p99_ttft.to_bits());
+    let strip = |s: &str| {
+        s.lines()
+            .filter(|l| !l.trim_start().starts_with("disagg "))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(strip(&colo.report.render()), strip(&dis.report.render()));
+}
+
+/// Disaggregation on a heterogeneous point actually moves KV between
+/// the pools, under real costs: hand-offs are charged, the words add
+/// up, and the run still completes everything it admits.
+#[test]
+fn disagg_hand_offs_are_charged_under_real_costs() {
+    let opts = small_opts(1);
+    let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
+    let ev = Evaluator::new(opts);
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
+    let reqs = stream(ArrivalKind::Poisson, 2.0, 12, 7);
+    let r = simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, &disagg_cfg()).unwrap();
+    assert_eq!(r.report.completed + r.report.rejected, reqs.len());
+    assert!(r.report.kv_transfers > 0, "no hand-off on a heterogeneous point");
+    assert!(r.report.kv_transfer_words > 0);
+    // At most one hand-off per admission of a request.
+    assert!(r.report.kv_transfers <= r.report.completed + r.report.evictions);
+    assert_eq!(r.report.disagg.as_deref(), Some("prefill=high,decode=low"));
+}
+
+/// Satellite bugfix pin: a trace whose `arrival` fields are NOT
+/// monotone is stable-sorted by the loader (ids renumbered to arrival
+/// order, file order breaking ties), and the engine admits in exactly
+/// that order — `admitted` is non-decreasing over ids, so the (class,
+/// arrival) wait-queue contract holds for out-of-order trace files.
+#[test]
+fn non_monotone_trace_admits_in_arrival_order() {
+    let trace = r#"{ "requests": [
+        { "arrival": 5000.0, "family": "llama2", "context": 64, "output": 8 },
+        { "arrival": 0.0,    "family": "gqa",    "context": 64, "output": 8 },
+        { "arrival": 2500.0, "family": "moe",    "context": 64, "output": 8 },
+        { "arrival": 2500.0, "family": "llama2", "context": 64, "output": 8 }
+    ] }"#;
+    let reqs = harp::workload::arrivals::load_trace(trace).unwrap();
+    // Loader contract: arrival-sorted, ids renumbered, ties in file
+    // order (moe before the same-arrival llama2).
+    let arrivals: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
+    assert_eq!(arrivals, vec![0.0, 2500.0, 2500.0, 5000.0]);
+    assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    assert_eq!(reqs[1].family, RequestFamily::Moe, "tie broke file order");
+
+    let opts = small_opts(1);
+    let (dynamic_bw, contention) = (opts.dynamic_bw, opts.contention);
+    let ev = Evaluator::new(opts);
+    let class = HarpClass::from_id("hier+xnode").unwrap();
+    let costs = calibrate(&ev, &class, 2048.0, &RequestFamily::ALL);
+    let machine = build_serving_machine(&class, 2048.0, contention).unwrap();
+    let r = simulate(&reqs, &machine, &costs, dynamic_bw, 2.0, &ServeConfig::default()).unwrap();
+    assert_eq!(r.report.completed, 4);
+    // Engine contract: first admissions follow id (= arrival) order.
+    let mut by_id: Vec<&harp::runtime::serve::RequestRecord> = r.records.iter().collect();
+    by_id.sort_by_key(|rec| rec.id);
+    for w in by_id.windows(2) {
+        assert!(
+            w[0].admitted <= w[1].admitted,
+            "request {} admitted after request {} despite arriving first",
+            w[0].id,
+            w[1].id
+        );
+    }
+    for rec in &by_id {
+        assert!(rec.admitted >= rec.arrival);
+    }
+}

@@ -203,6 +203,32 @@ grep -q 'kv pages 4096 words each' target/tier1-serve-classed-t1.txt
 if "$BIN" serve --class-mix gold > /dev/null 2>&1; then
     echo "tier1 FAIL: an unknown request class should be a loud error"; exit 1
 fi
+# Disaggregated prefill/decode serving: the split runs on a two-type
+# machine with byte-identical repeats, and the loud-error paths hold —
+# an unknown role, a single-type machine, and --disagg alongside
+# --config.
+"$BIN" serve --arrivals poisson --seed 7 --requests 8 --samples "$SAMPLES" \
+    --machine hier+xnode --disagg prefill=high,decode=low \
+    > target/tier1-serve-disagg-a.txt
+"$BIN" serve --arrivals poisson --seed 7 --requests 8 --samples "$SAMPLES" \
+    --machine hier+xnode --disagg prefill=high,decode=low \
+    > target/tier1-serve-disagg-b.txt
+if ! cmp -s target/tier1-serve-disagg-a.txt target/tier1-serve-disagg-b.txt; then
+    echo "tier1 FAIL: disagg serve must be byte-identical across runs"; exit 1
+fi
+grep -q 'disagg prefill=high,decode=low' target/tier1-serve-disagg-a.txt
+if "$BIN" serve --disagg prefill=gold,decode=low > /dev/null 2>&1; then
+    echo "tier1 FAIL: an unknown disagg role should be a loud error"; exit 1
+fi
+if "$BIN" serve --machine leaf+homo --disagg prefill=high,decode=low \
+    > /dev/null 2>&1; then
+    echo "tier1 FAIL: disagg on a single-type machine should be a loud error"
+    exit 1
+fi
+if "$BIN" serve --config target/tier1-serve-cfg.json \
+    --disagg prefill=high,decode=low > /dev/null 2>&1; then
+    echo "tier1 FAIL: --disagg alongside serve --config should be loud"; exit 1
+fi
 
 echo "== tier1: bench smoke (compile + one iteration) =="
 # Every bench target compiles and runs exactly once, so bench drift

@@ -11,7 +11,8 @@
 # workload table, fig6–fig10 (+ the MoE fig6 variant), the contention-on
 # evaluations, the allocation-policy ablation (fig_alloc_ablation), and
 # the serving saturation-knee figures (fig_serving_knee and the
-# per-class fig_serving_knee_class).
+# per-class fig_serving_knee_class), and the disaggregated-serving
+# comparison (fig_serving_disagg).
 #
 # Usage:
 #   scripts/update_goldens.sh          # regenerate every golden
